@@ -1,0 +1,79 @@
+"""Framework-level checkpoint benchmark (the operational pattern of §3.1.3
+applied to training state): shard archive throughput per backend, async
+overlap, and field-codec compression ratio/effect."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import FDBConfig, GLOBAL_METER, Meter, PROFILES, model_run, \
+    reset_engines
+from repro.models import lm
+from repro.configs import get_smoke_config
+from repro.train.checkpoint import FDBCheckpointer
+from .common import Row
+
+
+def run(profile: str = "gcp") -> List[Row]:
+    rows: List[Row] = []
+    cfg = get_smoke_config("tinyllama-1.1b").scaled(
+        d_model=256, d_ff=704, n_layers=4, vocab_size=4096)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    nbytes = sum(a.size * a.dtype.itemsize for a in jax.tree.leaves(params))
+    n_tensors = len(jax.tree.leaves(params))
+
+    for backend in ("daos", "rados", "posix", "s3"):
+        reset_engines()
+        meter = Meter()
+        root = f"/tmp/ckpt-bench-{backend}"
+        import shutil
+        shutil.rmtree(root, ignore_errors=True)
+        ck = FDBCheckpointer(
+            "bench", FDBConfig(backend=backend, root=root), n_shards=2)
+        ck.fdb.meter = meter
+        ck.fdb.store, ck.fdb.catalogue = ck.fdb._build_backends()
+        t0 = time.perf_counter()
+        ck.save(1, params)
+        wall = time.perf_counter() - t0
+        m = model_run(meter.snapshot(), PROFILES[profile], server_nodes=4)
+        rows.append(Row(
+            f"ckpt/{backend}/save", wall / n_tensors * 1e6,
+            f"payload={nbytes/2**20:.1f}MiB"
+            f" modeled={m.write_bw/2**30:.2f}GiB/s"))
+        t0 = time.perf_counter()
+        restored = ck.restore(1, params)
+        wall_r = time.perf_counter() - t0
+        del restored
+        rows.append(Row(f"ckpt/{backend}/restore",
+                        wall_r / n_tensors * 1e6, "ok"))
+
+    # async overlap: archive from background thread while "training"
+    reset_engines()
+    ck = FDBCheckpointer("bench-async", FDBConfig(backend="daos"),
+                         asynchronous=True)
+    t0 = time.perf_counter()
+    ck.save(1, params)
+    foreground = time.perf_counter() - t0       # returns ~immediately
+    ck.wait()
+    total = time.perf_counter() - t0
+    rows.append(Row("ckpt/daos/async_save_foreground", foreground * 1e6,
+                    f"total={total*1e3:.1f}ms overlap="
+                    f"{(1 - foreground/max(total,1e-9))*100:.0f}%"))
+
+    # compression
+    reset_engines()
+    meter = Meter()
+    ck = FDBCheckpointer("bench-comp", FDBConfig(backend="daos"),
+                         compress=True)
+    ck.fdb.meter = meter
+    ck.fdb.store, ck.fdb.catalogue = ck.fdb._build_backends()
+    ck.save(1, params)
+    stored = sum(op.nbytes for op in meter.snapshot()
+                 if op.kind == "array_write")
+    rows.append(Row("ckpt/daos/compressed_save", 0.0,
+                    f"ratio={nbytes/max(stored,1):.2f}x"
+                    f" ({nbytes/2**20:.1f}->{stored/2**20:.1f}MiB)"))
+    return rows

@@ -1,0 +1,34 @@
+"""Field-I/O benchmark with object sharding sweep — thesis Figs. 4.8–4.11:
+DAOS array object classes (S1/S2/S4/SX striping) across field sizes.
+
+Validates the thesis finding that *unsharded* (OC_S1) objects win for the
+many-small-fields NWP pattern because parallelism comes from spreading many
+arrays across targets, not from striping each array."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import Meter, PROFILES, model_run
+from .common import MiB, Row, fresh_fdb, hammer_read, hammer_write
+
+CLIENTS, SERVERS, PROCS, STEPS, PARAMS = 8, 4, 4, 2, 8
+
+
+def run(profile: str = "gcp") -> List[Row]:
+    rows: List[Row] = []
+    for field_mib in (1, 8):
+        for oclass in ("OC_S1", "OC_S2", "OC_S4", "OC_SX"):
+            meter = Meter()
+            fdb = fresh_fdb("daos", meter, f"fio-{oclass}-{field_mib}",
+                            daos_oclass=oclass)
+            wall_w, _ = hammer_write(fdb, CLIENTS, PROCS, STEPS, PARAMS,
+                                     field_mib * MiB)
+            mw = model_run(meter.snapshot(), PROFILES[profile],
+                           server_nodes=SERVERS)
+            calls = CLIENTS * PROCS * STEPS * PARAMS
+            rows.append(Row(
+                f"fieldio/daos/{oclass}/{field_mib}MiB/write",
+                wall_w / calls * 1e6,
+                f"modeled={mw.write_bw/2**30:.2f}GiB/s"
+                f" dominant={mw.dominant}"))
+    return rows

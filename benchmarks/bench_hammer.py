@@ -1,0 +1,94 @@
+"""fdb-hammer scaling benchmark — thesis Figs. 4.12–4.13 (NEXTGenIO) and
+4.21–4.22 (GCP): write/read bandwidth vs deployment size, with and without
+write+read contention, for DAOS-like / Ceph-like / Lustre-POSIX backends."""
+from __future__ import annotations
+
+import threading
+from typing import List
+
+from repro.core import Meter, PROFILES, model_run
+from .common import MiB, Row, fresh_fdb, hammer_read, hammer_write
+
+#: scaled-down in-process run; the cost model extrapolates steady state.
+STEPS, PARAMS, FIELD = 4, 8, 1 * MiB
+BACKENDS = ("daos", "rados", "posix")
+SCALE_POINTS = ((4, 2), (8, 4), (16, 8), (32, 16))   # (client nodes, servers)
+PROCS = 4
+
+
+def run(profile: str = "gcp") -> List[Row]:
+    rows: List[Row] = []
+    for backend in BACKENDS:
+        for clients, servers in SCALE_POINTS:
+            # -- no-contention: write phase, then read phase ----------------
+            meter = Meter()
+            fdb = fresh_fdb(backend, meter, f"h-{backend}-{clients}")
+            wall_w, nbytes = hammer_write(fdb, clients, PROCS, STEPS, PARAMS,
+                                          FIELD)
+            mw = model_run(meter.snapshot(), PROFILES[profile],
+                           server_nodes=servers)
+            meter.reset()
+            # reuse the same engines for the read phase (no engine reset)
+            from repro.core import FDB, FDBConfig
+            reader = FDB(FDBConfig(
+                backend=backend,
+                schema="nwp-posix" if backend == "posix" else "nwp-object",
+                root=fdb.config.root), meter=meter)
+            wall_r, rbytes = hammer_read(reader, clients, PROCS, STEPS,
+                                         PARAMS, FIELD, verify=True)
+            mr = model_run(meter.snapshot(), PROFILES[profile],
+                           server_nodes=servers)
+            calls = clients * PROCS * STEPS * PARAMS
+            rows.append(Row(
+                f"hammer/{backend}/c{clients}s{servers}/write",
+                wall_w / calls * 1e6,
+                f"modeled={mw.write_bw/2**30:.2f}GiB/s"
+                f" dominant={mw.dominant}"))
+            rows.append(Row(
+                f"hammer/{backend}/c{clients}s{servers}/read",
+                wall_r / calls * 1e6,
+                f"modeled={mr.read_bw/2**30:.2f}GiB/s"
+                f" dominant={mr.dominant}"))
+    # -- contention runs (write+read concurrent), mid scale point ------------
+    for backend in BACKENDS:
+        clients, servers = 8, 4
+        meter = Meter()
+        fdb = fresh_fdb(backend, meter, f"hc-{backend}")
+        hammer_write(fdb, clients, PROCS, STEPS, PARAMS, FIELD)  # seed data
+        from repro.core import FDB, FDBConfig
+        meter.reset()
+        schema = "nwp-posix" if backend == "posix" else "nwp-object"
+        writer = FDB(FDBConfig(backend=backend, schema=schema,
+                               root=fdb.config.root), meter=meter)
+        reader = FDB(FDBConfig(backend=backend, schema=schema,
+                               root=fdb.config.root), meter=meter)
+        errs: List[BaseException] = []
+
+        def w():
+            try:
+                hammer_write(writer, clients, PROCS, STEPS, PARAMS, FIELD)
+            except BaseException as e:  # noqa: BLE001
+                errs.append(e)
+
+        def r():
+            try:
+                hammer_read(reader, clients, PROCS, STEPS, PARAMS, FIELD,
+                            verify=True)
+            except BaseException as e:  # noqa: BLE001
+                errs.append(e)
+
+        t1, t2 = threading.Thread(target=w), threading.Thread(target=r)
+        import time
+        t0 = time.perf_counter()
+        t1.start(); t2.start(); t1.join(); t2.join()
+        wall = time.perf_counter() - t0
+        assert not errs, errs
+        m = model_run(meter.snapshot(), PROFILES[profile],
+                      server_nodes=servers)
+        calls = 2 * clients * PROCS * STEPS * PARAMS
+        rows.append(Row(
+            f"hammer/{backend}/c{clients}s{servers}/contended",
+            wall / calls * 1e6,
+            f"modeled_w={m.write_bw/2**30:.2f}GiB/s"
+            f"+r={m.read_bw/2**30:.2f}GiB/s dominant={m.dominant}"))
+    return rows

@@ -1,0 +1,90 @@
+"""IOR-analogue raw engine benchmark — thesis Figs. 4.5–4.7 / 4.19–4.20:
+per-process independent object streams (no index), write and read bandwidth
+vs deployment size.  Probes the storage engines below the FDB layer."""
+from __future__ import annotations
+
+import os
+import time
+from typing import List
+
+from repro.core import Meter, PROFILES, client_context, model_run, \
+    reset_engines
+from repro.core.engine.daos import DaosEngine
+from repro.core.engine.rados import RadosEngine
+from .common import MiB, Row
+
+N_OPS = 64
+FIELD = 1 * MiB
+SCALE = ((4, 2), (8, 4), (16, 8))
+PROCS = 4
+
+
+def _daos_stream(engine, meter, clients):
+    engine.pool_create("ior")
+    engine.cont_create_with_label("ior", "c")
+    data = os.urandom(FIELD)
+    oid = engine.cont_alloc_oids("ior", "c", clients * PROCS * N_OPS)
+    t0 = time.perf_counter()
+    for node in range(clients):
+        for proc in range(PROCS):
+            with client_context(f"p{proc}@n{node}"):
+                for i in range(N_OPS):
+                    engine.array_write("ior", "c", oid, 0, data)
+                    oid += 1
+    return time.perf_counter() - t0
+
+
+def _rados_stream(engine, meter, clients):
+    engine.pool_create("ior", pg_count=512)
+    data = os.urandom(FIELD)
+    t0 = time.perf_counter()
+    for node in range(clients):
+        for proc in range(PROCS):
+            with client_context(f"p{proc}@n{node}"):
+                for i in range(N_OPS):
+                    engine.write_full("ior", "ns", f"o{node}.{proc}.{i}",
+                                      data)
+    return time.perf_counter() - t0
+
+
+def _posix_stream(meter, clients, root):
+    from repro.core.backends.posix import LustreSim
+    sim = LustreSim(root, meter=meter)
+    data = os.urandom(FIELD)
+    t0 = time.perf_counter()
+    for node in range(clients):
+        for proc in range(PROCS):
+            with client_context(f"p{proc}@n{node}"):
+                path = os.path.join(root, f"f{node}.{proc}")
+                with open(path, "wb") as f:
+                    for i in range(N_OPS):
+                        f.write(data)
+                sim.data_io(path, N_OPS * FIELD, "write")
+                sim.fsync(path)
+                sim.meta(2)
+    return time.perf_counter() - t0
+
+
+def run(profile: str = "gcp") -> List[Row]:
+    rows: List[Row] = []
+    for clients, servers in SCALE:
+        for backend in ("daos", "rados", "posix"):
+            reset_engines()
+            meter = Meter()
+            if backend == "daos":
+                wall = _daos_stream(DaosEngine(meter=meter), meter, clients)
+            elif backend == "rados":
+                wall = _rados_stream(RadosEngine(meter=meter), meter, clients)
+            else:
+                root = f"/tmp/ior-{os.getpid()}-{clients}"
+                import shutil
+                shutil.rmtree(root, ignore_errors=True)
+                wall = _posix_stream(meter, clients, root)
+            m = model_run(meter.snapshot(), PROFILES[profile],
+                          server_nodes=servers)
+            calls = clients * PROCS * N_OPS
+            rows.append(Row(
+                f"ior/{backend}/c{clients}s{servers}/write",
+                wall / calls * 1e6,
+                f"modeled={m.write_bw/2**30:.2f}GiB/s dominant={m.dominant}"))
+    return rows

@@ -1,0 +1,59 @@
+"""Ceph/RADOS backend design-option sweep — thesis Fig. 3.5:
+namespace-vs-pool encapsulation, object modes (multi-field span / single
+large / per-field), immediate vs on-flush persistence."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import Meter, PROFILES, model_run
+from .common import MiB, Row, fresh_fdb, hammer_read, hammer_write
+
+CLIENTS, SERVERS, PROCS, STEPS, PARAMS = 8, 4, 4, 4, 8
+FIELD = 1 * MiB
+
+CONFIGS = [
+    ("ns+span+immediate", dict(rados_encapsulation="namespace",
+                               rados_object_mode="span",
+                               rados_persistence="immediate")),
+    ("pool+span+immediate", dict(rados_encapsulation="pool",
+                                 rados_object_mode="span",
+                                 rados_persistence="immediate")),
+    ("ns+single_large", dict(rados_encapsulation="namespace",
+                             rados_object_mode="single_large",
+                             rados_max_object_size=1 << 40)),
+    ("ns+per_field+immediate", dict(rados_encapsulation="namespace",
+                                    rados_object_mode="per_field",
+                                    rados_persistence="immediate")),
+    ("ns+per_field+large_max", dict(rados_encapsulation="namespace",
+                                    rados_object_mode="per_field",
+                                    rados_max_object_size=1024 * MiB)),
+    ("ns+span+on_flush", dict(rados_encapsulation="namespace",
+                              rados_object_mode="span",
+                              rados_persistence="on_flush")),
+]
+
+
+def run(profile: str = "gcp") -> List[Row]:
+    rows: List[Row] = []
+    for name, kw in CONFIGS:
+        meter = Meter()
+        fdb = fresh_fdb("rados", meter, f"ro-{name}", **kw)
+        wall_w, _ = hammer_write(fdb, CLIENTS, PROCS, STEPS, PARAMS, FIELD)
+        mw = model_run(meter.snapshot(), PROFILES[profile],
+                       server_nodes=SERVERS)
+        meter.reset()
+        from repro.core import FDB, FDBConfig
+        reader = FDB(FDBConfig(backend="rados", schema="nwp-object",
+                               **kw), meter=meter)
+        wall_r, _ = hammer_read(reader, CLIENTS, PROCS, STEPS, PARAMS,
+                                FIELD, verify=True)
+        mr = model_run(meter.snapshot(), PROFILES[profile],
+                       server_nodes=SERVERS)
+        calls = CLIENTS * PROCS * STEPS * PARAMS
+        rows.append(Row(f"rados_options/{name}/write",
+                        wall_w / calls * 1e6,
+                        f"modeled={mw.write_bw/2**30:.2f}GiB/s"))
+        rows.append(Row(f"rados_options/{name}/read",
+                        wall_r / calls * 1e6,
+                        f"modeled={mr.read_bw/2**30:.2f}GiB/s"))
+    return rows

@@ -1,0 +1,35 @@
+"""Data-redundancy cost — thesis Figs. 4.27–4.28: replication 2× and 2+1
+erasure coding on the DAOS-like and Ceph-like backends."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import Meter, PROFILES, model_run
+from .common import MiB, Row, fresh_fdb, hammer_write
+
+CLIENTS, SERVERS, PROCS, STEPS, PARAMS = 8, 4, 4, 4, 8
+FIELD = 1 * MiB
+
+VARIANTS = [
+    ("daos/plain", "daos", {}),
+    ("daos/rp2", "daos", {"daos_oclass": "OC_RP_2G1"}),
+    ("daos/ec2p1", "daos", {"daos_oclass": "OC_EC_2P1G1"}),
+    ("rados/plain", "rados", {}),
+    ("rados/rp2", "rados", {"rados_replication": 2}),
+    ("rados/ec2p1", "rados", {"rados_ec": (2, 1)}),
+]
+
+
+def run(profile: str = "gcp") -> List[Row]:
+    rows: List[Row] = []
+    for name, backend, kw in VARIANTS:
+        meter = Meter()
+        fdb = fresh_fdb(backend, meter, f"red-{name.replace('/', '-')}", **kw)
+        wall, _ = hammer_write(fdb, CLIENTS, PROCS, STEPS, PARAMS, FIELD)
+        m = model_run(meter.snapshot(), PROFILES[profile],
+                      server_nodes=SERVERS)
+        calls = CLIENTS * PROCS * STEPS * PARAMS
+        rows.append(Row(f"redundancy/{name}/write", wall / calls * 1e6,
+                        f"modeled={m.write_bw/2**30:.2f}GiB/s"
+                        f" dominant={m.dominant}"))
+    return rows

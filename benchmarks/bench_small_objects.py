@@ -1,0 +1,40 @@
+"""Small-object (1 KiB) performance — thesis Fig. 4.26: DAOS sustains high
+op rates; Ceph and Lustre collapse to latency/op-rate bounds."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.core import Meter, PROFILES, model_run
+from .common import Row, fresh_fdb, hammer_read, hammer_write
+
+CLIENTS, SERVERS, PROCS, STEPS, PARAMS = 8, 4, 4, 4, 16
+FIELD = 1024   # 1 KiB
+
+
+def run(profile: str = "gcp") -> List[Row]:
+    rows: List[Row] = []
+    for backend in ("daos", "rados", "posix"):
+        meter = Meter()
+        fdb = fresh_fdb(backend, meter, f"so-{backend}")
+        wall_w, _ = hammer_write(fdb, CLIENTS, PROCS, STEPS, PARAMS, FIELD)
+        mw = model_run(meter.snapshot(), PROFILES[profile],
+                       server_nodes=SERVERS)
+        meter.reset()
+        from repro.core import FDB, FDBConfig
+        schema = "nwp-posix" if backend == "posix" else "nwp-object"
+        reader = FDB(FDBConfig(backend=backend, schema=schema,
+                               root=fdb.config.root), meter=meter)
+        wall_r, _ = hammer_read(reader, CLIENTS, PROCS, STEPS, PARAMS, FIELD,
+                                verify=True)
+        mr = model_run(meter.snapshot(), PROFILES[profile],
+                       server_nodes=SERVERS)
+        calls = CLIENTS * PROCS * STEPS * PARAMS
+        wkops = calls / max(mw.wall_time, 1e-9) / 1e3
+        rkops = calls / max(mr.wall_time, 1e-9) / 1e3
+        rows.append(Row(f"small_objects/{backend}/write",
+                        wall_w / calls * 1e6,
+                        f"modeled={wkops:.1f}kops/s dominant={mw.dominant}"))
+        rows.append(Row(f"small_objects/{backend}/read",
+                        wall_r / calls * 1e6,
+                        f"modeled={rkops:.1f}kops/s dominant={mr.dominant}"))
+    return rows

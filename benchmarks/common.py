@@ -1,0 +1,95 @@
+"""Shared benchmark harness: virtual-client workload generators + reporting.
+
+Every benchmark does two things, mirroring the thesis methodology (§4.1):
+  1. measures the *in-process* throughput of the real backend implementation
+     (us_per_call — functional cost of the software layer), and
+  2. feeds the op trace through the calibrated cluster cost model to report
+     *modeled at-scale bandwidth* on the thesis's hardware profiles
+     (GiB/s — the numbers comparable to the thesis figures).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core import (FDB, FDBConfig, Meter, PROFILES, client_context,
+                        model_run, reset_engines)
+
+MiB = 1024 * 1024
+
+NWP_DIMS = {"class": "od", "expver": "0001", "stream": "oper",
+            "date": "20240101", "time": "0000", "type": "fc",
+            "levtype": "sfc"}
+
+
+def ident(node: int, proc: int, step: int, param: int) -> Dict[str, str]:
+    return {**NWP_DIMS, "number": str(node), "levelist": str(proc),
+            "step": str(step), "param": f"p{param}"}
+
+
+def hammer_write(fdb: FDB, n_nodes: int, procs_per_node: int, n_steps: int,
+                 n_params: int, field_bytes: int) -> Tuple[float, int]:
+    """fdb-hammer write phase (§2.7.2): returns (seconds, payload bytes)."""
+    data = os.urandom(field_bytes)
+    t0 = time.perf_counter()
+    for node in range(n_nodes):
+        for proc in range(procs_per_node):
+            with client_context(f"proc{proc}@node{node}"):
+                for step in range(n_steps):
+                    for param in range(n_params):
+                        fdb.archive(ident(node, proc, step, param), data)
+                    fdb.flush()
+    fdb.close()
+    dt = time.perf_counter() - t0
+    return dt, n_nodes * procs_per_node * n_steps * n_params * field_bytes
+
+
+def hammer_read(fdb: FDB, n_nodes: int, procs_per_node: int, n_steps: int,
+                n_params: int, field_bytes: int,
+                verify: bool = False) -> Tuple[float, int]:
+    """fdb-hammer read phase: every reader retrieves its writer's fields."""
+    t0 = time.perf_counter()
+    total = 0
+    for node in range(n_nodes):
+        for proc in range(procs_per_node):
+            with client_context(f"rproc{proc}@rnode{node}"):
+                ids = [ident(node, proc, s, p) for s in range(n_steps)
+                       for p in range(n_params)]
+                handle = fdb.retrieve(ids)
+                blob = handle.read()
+                total += len(blob)
+                if verify:
+                    assert len(blob) == n_steps * n_params * field_bytes, \
+                        "fdb-hammer consistency check failed"
+    dt = time.perf_counter() - t0
+    return dt, total
+
+
+def fresh_fdb(backend: str, meter: Meter, tmp_tag: str, **kw) -> FDB:
+    reset_engines()
+    schema = kw.pop("schema", "nwp-posix" if backend == "posix"
+                    else "nwp-object")
+    root = f"/tmp/fdb-bench-{tmp_tag}-{os.getpid()}"
+    import shutil
+    shutil.rmtree(root, ignore_errors=True)
+    return FDB(FDBConfig(backend=backend, schema=schema, root=root, **kw),
+               meter=meter)
+
+
+class Row:
+    """One CSV output row: name,us_per_call,derived."""
+
+    def __init__(self, name: str, us_per_call: float, derived: str):
+        self.name = name
+        self.us_per_call = us_per_call
+        self.derived = derived
+
+    def line(self) -> str:
+        return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+
+def modeled_bw(meter: Meter, profile: str, servers: int) -> Dict[str, float]:
+    r = model_run(meter.snapshot(), PROFILES[profile], server_nodes=servers)
+    return {"write_gib": r.write_bw / 2**30, "read_gib": r.read_bw / 2**30,
+            "dominant": r.dominant, "wall": r.wall_time}

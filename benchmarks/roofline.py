@@ -1,0 +1,75 @@
+"""Roofline report: aggregates the dry-run artifacts into the per-(arch ×
+shape × mesh) table for EXPERIMENTS.md §Roofline."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+ARTIFACT_DIR = os.environ.get("DRYRUN_ARTIFACTS",
+                              os.path.join(os.path.dirname(__file__), "..",
+                                           "dryrun_artifacts"))
+
+
+def load_cells(artifact_dir: Optional[str] = None,
+               include_opt: bool = False) -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(artifact_dir or ARTIFACT_DIR,
+                                              "*.json"))):
+        if not include_opt and "__opt" in os.path.basename(path):
+            continue        # hillclimb variants live in EXPERIMENTS.md §Perf
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def table(cells: List[Dict], mesh: str = "single") -> List[str]:
+    lines = ["arch,shape,mesh,status,compute_ms,memory_ms(adj),collective_ms,"
+             "dominant,useful_ratio,roofline_frac,peak_GiB(est)"]
+    for c in cells:
+        if c.get("mesh") != mesh:
+            continue
+        if c.get("status") != "ok":
+            lines.append(f"{c['arch']},{c['shape']},{c['mesh']},"
+                         f"{c['status']},,,,,,,")
+            continue
+        r = c["roofline_adjusted"]
+        lines.append(
+            f"{c['arch']},{c['shape']},{c['mesh']},ok,"
+            f"{r['compute_s']*1e3:.2f},{r['memory_s']*1e3:.2f},"
+            f"{r['collective_s']*1e3:.2f},{c['dominant_term_adjusted']},"
+            f"{c['useful_flops_ratio']:.3f},{c['roofline_fraction']:.3f},"
+            f"{c['tpu_peak_estimate']['total']/2**30:.2f}")
+    return lines
+
+
+def run(profile: str = "gcp"):
+    from .common import Row
+    rows: List[Row] = []
+    cells = load_cells()
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skipped"]
+    errors = [c for c in cells if c.get("status") == "error"]
+    rows.append(Row("roofline/cells",
+                    0.0, f"ok={len(ok)} skipped={len(skipped)} "
+                    f"errors={len(errors)}"))
+    for c in ok:
+        if c["mesh"] != "single":
+            continue
+        r = c["roofline_adjusted"]
+        rows.append(Row(
+            f"roofline/{c['arch']}/{c['shape']}",
+            max(r.values()) * 1e6,
+            f"dominant={c['dominant_term_adjusted']}"
+            f" frac={c['roofline_fraction']:.3f}"
+            f" useful={c['useful_flops_ratio']:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    for line in table(load_cells(), "single"):
+        print(line)
+    print()
+    for line in table(load_cells(), "multi"):
+        print(line)

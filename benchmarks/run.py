@@ -1,0 +1,38 @@
+"""Benchmark runner: one function per thesis table/figure.
+Prints ``name,us_per_call,derived`` CSV rows."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from . import (bench_ckpt, bench_fieldio, bench_hammer, bench_ior,
+                   bench_rados_options, bench_redundancy,
+                   bench_small_objects, roofline)
+    suites = [
+        ("ior", bench_ior),                     # Figs. 4.5-4.7 / 4.19-4.20
+        ("fieldio", bench_fieldio),             # Figs. 4.8-4.11
+        ("hammer", bench_hammer),               # Figs. 4.12-4.13 / 4.21-4.25
+        ("rados_options", bench_rados_options), # Fig. 3.5
+        ("small_objects", bench_small_objects), # Fig. 4.26
+        ("redundancy", bench_redundancy),       # Figs. 4.27-4.28
+        ("ckpt", bench_ckpt),                   # §3.1.3 operational pattern
+        ("roofline", roofline),                 # §Roofline deliverable
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in suites:
+        try:
+            for row in mod.run():
+                print(row.line(), flush=True)
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"{name},,ERROR", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

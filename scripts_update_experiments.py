@@ -1,0 +1,24 @@
+"""Regenerate the §Roofline table inside EXPERIMENTS.md from artifacts."""
+import sys
+sys.path.insert(0, "src")
+import glob, json
+from benchmarks.roofline import table
+
+cells = [json.load(open(f)) for f in sorted(glob.glob(
+    "dryrun_artifacts/*.json")) if "__opt" not in f]
+lines = ["", "### Single-pod (16×16 = 256 chips) baseline", "", "```"]
+lines += table(cells, "single")
+lines += ["```", "", "### Multi-pod (2×16×16 = 512 chips) baseline", "", "```"]
+lines += table(cells, "multi")
+lines += ["```", ""]
+block = "\n".join(lines)
+
+src = open("EXPERIMENTS.md").read()
+marker = "<!-- ROOFLINE_TABLE -->"
+assert marker in src
+pre, rest = src.split(marker, 1)
+# drop any previously generated table (up to the next ### Reading heading)
+tail_key = "### Reading of the baseline table"
+tail = rest[rest.index(tail_key):] if tail_key in rest else rest
+open("EXPERIMENTS.md", "w").write(pre + marker + "\n" + block + "\n" + tail)
+print("table updated:", len(cells), "artifacts")

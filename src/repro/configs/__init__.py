@@ -1,0 +1,41 @@
+"""Architecture registry: the 10 assigned configs + reduced smoke variants."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.config import ArchConfig
+from .shapes import SHAPES, ShapeConfig, eligible_shapes, skip_reason
+
+_MODULES: Dict[str, str] = {
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "olmoe-1b-7b": "olmoe_1b_7b",
+    "whisper-base": "whisper_base",
+    "qwen2.5-3b": "qwen2_5_3b",
+    "internlm2-20b": "internlm2_20b",
+    "deepseek-coder-33b": "deepseek_coder_33b",
+    "tinyllama-1.1b": "tinyllama_1_1b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "jamba-v0.1-52b": "jamba_v0_1_52b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+}
+
+ARCH_NAMES: List[str] = list(_MODULES.keys())
+
+
+def _module(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_NAMES}")
+    return importlib.import_module(f"repro.configs.{_MODULES[name]}")
+
+
+def get_config(name: str) -> ArchConfig:
+    return _module(name).CONFIG
+
+
+def get_smoke_config(name: str) -> ArchConfig:
+    return _module(name).SMOKE
+
+
+__all__ = ["ARCH_NAMES", "get_config", "get_smoke_config", "SHAPES",
+           "ShapeConfig", "eligible_shapes", "skip_reason"]

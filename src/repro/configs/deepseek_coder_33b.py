@@ -1,0 +1,16 @@
+"""deepseek-coder-33b: 62L d=7168 56H(kv8) d_ff=19200 vocab=32256,
+llama-arch [arXiv:2401.14196; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-coder-33b", family="dense",
+    n_layers=62, d_model=7168, n_heads=56, n_kv_heads=8,
+    d_ff=19200, vocab_size=32256,
+    rope_theta=1e5,
+)
+
+SMOKE = ArchConfig(
+    name="deepseek-coder-33b-smoke", family="dense",
+    n_layers=2, d_model=112, n_heads=7, n_kv_heads=1,
+    d_ff=224, vocab_size=512,
+)

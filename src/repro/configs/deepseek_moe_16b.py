@@ -1,0 +1,18 @@
+"""deepseek-moe-16b: 28L d=2048 16H(kv16) d_ff=1408 vocab=102400,
+2 shared + 64 routed top-6 fine-grained experts [arXiv:2401.06066; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-moe-16b", family="moe",
+    n_layers=28, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1408, vocab_size=102400,
+    n_experts=64, n_shared_experts=2, top_k=6, moe_every=1,
+    rope_theta=1e4,
+)
+
+SMOKE = ArchConfig(
+    name="deepseek-moe-16b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=32, vocab_size=512,
+    n_experts=8, n_shared_experts=2, top_k=2, moe_every=1,
+)

@@ -1,0 +1,16 @@
+"""internlm2-20b: 48L d=6144 48H(kv8) d_ff=16384 vocab=92544, GQA
+[arXiv:2403.17297; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="internlm2-20b", family="dense",
+    n_layers=48, d_model=6144, n_heads=48, n_kv_heads=8,
+    d_ff=16384, vocab_size=92544,
+    rope_theta=1e6,
+)
+
+SMOKE = ArchConfig(
+    name="internlm2-20b-smoke", family="dense",
+    n_layers=2, d_model=96, n_heads=6, n_kv_heads=2,
+    d_ff=192, vocab_size=512,
+)

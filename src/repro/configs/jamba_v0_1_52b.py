@@ -1,0 +1,24 @@
+"""jamba-v0.1-52b: 32L d=4096 32H(kv8) d_ff=14336, Mamba+attn 1:7
+interleave (1 attention per 8-layer block), MoE 16e top-2 every other
+layer, vocab=65536 [arXiv:2403.19887; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=65536,
+    n_experts=16, n_shared_experts=0, top_k=2, moe_every=2,
+    block_pattern=("mamba", "mamba", "mamba", "mamba",
+                   "attn", "mamba", "mamba", "mamba"),
+    ssm_state_dim=16, ssm_conv_dim=4, ssm_expand=2,
+)
+
+SMOKE = ArchConfig(
+    name="jamba-v0.1-52b-smoke", family="hybrid",
+    n_layers=8, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=512,
+    n_experts=4, n_shared_experts=0, top_k=2, moe_every=2,
+    block_pattern=("mamba", "mamba", "mamba", "mamba",
+                   "attn", "mamba", "mamba", "mamba"),
+    ssm_state_dim=4, ssm_conv_dim=4, ssm_expand=2,
+)

@@ -1,0 +1,18 @@
+"""llava-next-mistral-7b: mistral-7B backbone, 32L d=4096 32H(kv8)
+d_ff=14336 vocab=32000; anyres vision frontend STUBBED — input_specs()
+supplies patch embeddings [hf:llava-hf/llava-v1.6-mistral-7b-hf;
+unverified]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llava-next-mistral-7b", family="vlm",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    d_ff=14336, vocab_size=32000,
+    rope_theta=1e6, frontend="vision", n_patches=1152,
+)
+
+SMOKE = ArchConfig(
+    name="llava-next-mistral-7b-smoke", family="vlm",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=512, frontend="vision", n_patches=8,
+)

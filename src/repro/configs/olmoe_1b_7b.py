@@ -1,0 +1,18 @@
+"""olmoe-1b-7b: 16L d=2048 16H(kv16) d_ff=1024 vocab=50304,
+64 routed experts top-8 [arXiv:2409.02060; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    d_ff=1024, vocab_size=50304,
+    n_experts=64, n_shared_experts=0, top_k=8, moe_every=1,
+    rope_theta=1e4,
+)
+
+SMOKE = ArchConfig(
+    name="olmoe-1b-7b-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=32, vocab_size=512,
+    n_experts=8, n_shared_experts=0, top_k=2, moe_every=1,
+)

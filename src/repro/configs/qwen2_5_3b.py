@@ -1,0 +1,16 @@
+"""qwen2.5-3b: 36L d=2048 16H(kv2) d_ff=11008 vocab=151936, QKV bias
+[hf:Qwen/Qwen2.5 family; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen2.5-3b", family="dense",
+    n_layers=36, d_model=2048, n_heads=16, n_kv_heads=2,
+    d_ff=11008, vocab_size=151936,
+    qkv_bias=True, rope_theta=1e6,
+)
+
+SMOKE = ArchConfig(
+    name="qwen2.5-3b-smoke", family="dense",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+    d_ff=128, vocab_size=512, qkv_bias=True,
+)

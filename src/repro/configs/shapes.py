@@ -1,0 +1,39 @@
+"""Assigned input shapes and (arch × shape) cell eligibility."""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def eligible_shapes(cfg: ArchConfig) -> List[ShapeConfig]:
+    """long_500k needs sub-quadratic decode state: SSM/hybrid only
+    (skip rationale recorded in DESIGN.md §4)."""
+    out = [SHAPES["train_4k"], SHAPES["prefill_32k"], SHAPES["decode_32k"]]
+    if cfg.supports_long_context:
+        out.append(SHAPES["long_500k"])
+    return out
+
+
+def skip_reason(cfg: ArchConfig, shape_name: str) -> str:
+    if shape_name == "long_500k" and not cfg.supports_long_context:
+        return ("SKIP: pure full-attention architecture — a 524k dense "
+                "KV cache has no sub-quadratic path (DESIGN.md §4)")
+    return ""

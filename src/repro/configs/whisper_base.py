@@ -1,0 +1,18 @@
+"""whisper-base: 6L enc + 6L dec, d=512 8H(kv8) d_ff=2048 vocab=51865;
+conv frontend STUBBED — input_specs() supplies frame embeddings
+[arXiv:2212.04356; unverified]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-base", family="audio",
+    n_layers=6, d_model=512, n_heads=8, n_kv_heads=8,
+    d_ff=2048, vocab_size=51865,
+    encoder_layers=6, frontend="audio",
+)
+
+SMOKE = ArchConfig(
+    name="whisper-base-smoke", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=128, vocab_size=512,
+    encoder_layers=2, frontend="audio",
+)

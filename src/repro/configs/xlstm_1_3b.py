@@ -1,0 +1,19 @@
+"""xlstm-1.3b: 48L d=2048 4H, sLSTM + mLSTM blocks (7:1 ratio), d_ff=0
+(projections live inside the blocks) vocab=50304 [arXiv:2405.04517;
+unverified]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b", family="ssm",
+    n_layers=48, d_model=2048, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=50304,
+    block_pattern=("mlstm",) * 7 + ("slstm",),
+    mlstm_proj_factor=2.0,
+)
+
+SMOKE = ArchConfig(
+    name="xlstm-1.3b-smoke", family="ssm",
+    n_layers=4, d_model=64, n_heads=4, n_kv_heads=4,
+    d_ff=0, vocab_size=512,
+    block_pattern=("mlstm", "mlstm", "mlstm", "slstm"),
+)

@@ -1,0 +1,28 @@
+"""FDB-X core: the paper's domain-specific object store, in Python/JAX land.
+
+Public surface:
+
+>>> from repro.core import FDB, FDBConfig, Identifier
+>>> fdb = FDB(FDBConfig(backend="daos", schema="nwp-object"))
+>>> fdb.archive({...identifier...}, field_bytes)
+>>> fdb.flush()
+>>> data = fdb.retrieve({...identifier...}).read()
+"""
+from .fdb import FDB, FDBConfig, reset_engines, shared_engine
+from .handle import DataHandle, FieldLocation, MultiHandle
+from .interfaces import Catalogue, Store
+from .schema import (CHECKPOINT_SCHEMA, DATA_SCHEMA, Identifier,
+                     NWP_OBJECT_SCHEMA, NWP_POSIX_SCHEMA, SCHEMAS, Schema)
+from .engine.meter import GLOBAL_METER, Meter, client_context
+from .engine.costmodel import PROFILES, HardwareProfile, model_run
+
+__all__ = [
+    "FDB", "FDBConfig", "reset_engines", "shared_engine",
+    "DataHandle", "FieldLocation", "MultiHandle",
+    "Catalogue", "Store",
+    "Identifier", "Schema", "SCHEMAS",
+    "NWP_OBJECT_SCHEMA", "NWP_POSIX_SCHEMA", "CHECKPOINT_SCHEMA",
+    "DATA_SCHEMA",
+    "GLOBAL_METER", "Meter", "client_context",
+    "PROFILES", "HardwareProfile", "model_run",
+]

@@ -1,0 +1,276 @@
+"""FDB DAOS backends (thesis §3.1).
+
+Store:   one DAOS array per archived field, OC_S1 by default (no sharding —
+         saturation comes from many arrays spread across targets, §3.1),
+         OIDs pre-allocated in batches, immediate persistence, no-op flush.
+Catalogue: root KV → dataset KV → index KVs + axis KVs (Figs. 3.1/3.2);
+         contention on index KVs is avoided by schema choice (the collocation
+         key varies across writer processes), not by locking.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from typing import Dict, Iterator, Mapping, Optional, Set, Tuple
+
+from ..engine.daos import DaosEngine
+from ..handle import DataHandle, FieldLocation, LazyHandle
+from ..interfaces import Catalogue, Store
+from ..schema import Identifier, Schema
+from ..util import stable_hash
+
+ROOT_KV_OID = 0
+#: Index/axis KV OIDs live far above the allocated-array OID space.
+_IDX_BASE = 1 << 48
+
+
+def _index_kv_oid(collocation: Identifier) -> int:
+    return _IDX_BASE + stable_hash("idx:" + collocation.canonical())
+
+
+def _axis_kv_oid(collocation: Identifier, dim: str) -> int:
+    return _IDX_BASE + stable_hash(f"axis:{collocation.canonical()}:{dim}")
+
+
+class DaosStore(Store):
+    scheme = "daos"
+
+    def __init__(self, engine: DaosEngine, pool: str = "fdb",
+                 oid_batch: int = 256, oclass: str = "OC_S1"):
+        self.engine = engine
+        self.pool = pool
+        self.oclass = oclass
+        self.oid_batch = oid_batch
+        engine.pool_create(pool)
+        engine.pool_connect(pool)
+        self._known_conts: Set[str] = set()
+        self._oid_cache: Dict[str, Tuple[int, int]] = {}  # label -> (next, left)
+        self._lock = threading.Lock()
+
+    def _ensure_container(self, label: str) -> None:
+        if label not in self._known_conts:
+            self.engine.cont_create_with_label(self.pool, label)
+            self.engine.cont_open(self.pool, label)
+            with self._lock:
+                self._known_conts.add(label)
+
+    def _next_oid(self, label: str) -> int:
+        with self._lock:
+            nxt, left = self._oid_cache.get(label, (0, 0))
+            if left == 0:
+                nxt = self.engine.cont_alloc_oids(self.pool, label,
+                                                  self.oid_batch)
+                left = self.oid_batch
+            self._oid_cache[label] = (nxt + 1, left - 1)
+            return nxt
+
+    def archive(self, data: bytes, dataset: Identifier,
+                collocation: Identifier) -> FieldLocation:
+        # NOTE: the collocation key does not drive placement on DAOS (§3.1.1);
+        # all fields of a dataset share one container.
+        label = dataset.canonical()
+        self._ensure_container(label)
+        oid = self._next_oid(label)
+        self.engine.array_open_with_attr(self.pool, label, oid, self.oclass)
+        self.engine.array_write(self.pool, label, oid, 0, data)
+        return FieldLocation(self.scheme, label, str(oid), 0, len(data),
+                             pool=self.pool)
+
+    def flush(self) -> None:
+        # DAOS persists and publishes on archive(); nothing to do (§3.1.1).
+        return
+
+    def retrieve(self, location: FieldLocation) -> DataHandle:
+        eng, pool = self.engine, self.pool
+        label, oid = location.container, int(location.unit)
+        off, length = location.offset, location.length
+        # The object length is encoded in the location descriptor, so no
+        # daos_array_get_size round-trip is needed (§3.1.1 optimisation).
+        return LazyHandle(lambda: eng.array_read(pool, label, oid, off, length),
+                          length)
+
+    def wipe(self, dataset: Identifier) -> None:
+        label = dataset.canonical()
+        self.engine.cont_destroy(self.pool, label)
+        with self._lock:
+            self._known_conts.discard(label)
+            self._oid_cache.pop(label, None)
+
+
+class DaosCatalogue(Catalogue):
+    scheme = "daos"
+
+    def __init__(self, engine: DaosEngine, schema: Schema, pool: str = "fdb",
+                 root_cont: str = "fdb_root"):
+        self.engine = engine
+        self.schema = schema
+        self.pool = pool
+        self.root_cont = root_cont
+        engine.pool_create(pool)
+        engine.pool_connect(pool)
+        engine.cont_create_with_label(pool, root_cont)
+        self._known_datasets: Set[str] = set()
+        self._known_indexes: Set[Tuple[str, str]] = set()
+        #: in-memory history of values already inserted into axis KVs (§3.1.2)
+        self._axis_seen: Set[Tuple[str, str, str, str]] = set()
+        #: pre-loaded axes per (dataset, collocation) (§3.1.2 axis pre-loading)
+        self._axes_cache: Dict[Tuple[str, str], Dict[str, frozenset]] = {}
+        self._lock = threading.Lock()
+
+    # -- helpers ---------------------------------------------------------------
+    def _ensure_dataset(self, dataset: Identifier) -> str:
+        label = dataset.canonical()
+        if label in self._known_datasets:
+            return label
+        existing = self.engine.kv_get(self.pool, self.root_cont, ROOT_KV_OID,
+                                      label)
+        if existing is None:
+            self.engine.cont_create_with_label(self.pool, label)
+            self.engine.kv_put(self.pool, label, ROOT_KV_OID, "key",
+                               label.encode())
+            self.engine.kv_put(self.pool, label, ROOT_KV_OID, "schema",
+                               self.schema.name.encode())
+            self.engine.kv_put(self.pool, self.root_cont, ROOT_KV_OID, label,
+                               json.dumps({"cont": label}).encode())
+        with self._lock:
+            self._known_datasets.add(label)
+        return label
+
+    def _ensure_index(self, label: str, collocation: Identifier) -> int:
+        ckey = collocation.canonical()
+        oid = _index_kv_oid(collocation)
+        if (label, ckey) in self._known_indexes:
+            return oid
+        if self.engine.kv_get(self.pool, label, ROOT_KV_OID, ckey) is None:
+            self.engine.kv_put(self.pool, label, oid, "key", ckey.encode())
+            self.engine.kv_put(
+                self.pool, label, oid, "axes",
+                json.dumps(list(self.schema.element_dims)).encode())
+            self.engine.kv_put(self.pool, label, ROOT_KV_OID, ckey,
+                               json.dumps({"oid": oid}).encode())
+        with self._lock:
+            self._known_indexes.add((label, ckey))
+        return oid
+
+    # -- Catalogue interface ---------------------------------------------------
+    def archive(self, dataset: Identifier, collocation: Identifier,
+                element: Identifier, location: FieldLocation) -> None:
+        label = self._ensure_dataset(dataset)
+        oid = self._ensure_index(label, collocation)
+        self.engine.kv_put(self.pool, label, oid, element.canonical(),
+                           location.to_bytes())
+        ckey = collocation.canonical()
+        for dim in self.schema.element_dims:
+            val = element[dim]
+            seen_key = (label, ckey, dim, val)
+            if seen_key in self._axis_seen:
+                continue
+            self.engine.kv_put(self.pool, label,
+                               _axis_kv_oid(collocation, dim), val, b"1")
+            with self._lock:
+                self._axis_seen.add(seen_key)
+
+    def flush(self) -> None:
+        # kv_put is immediately persistent and visible (§3.1.2).
+        return
+
+    def close(self) -> None:
+        # No full-index finalisation step on DAOS (§3.1.2 close()):
+        # consumers use the same structures whether producers live or not.
+        return
+
+    def _load_axes(self, label: str, collocation: Identifier,
+                   refresh: bool = False) -> Optional[Dict[str, frozenset]]:
+        key = (label, collocation.canonical())
+        if not refresh and key in self._axes_cache:
+            return self._axes_cache[key]
+        ptr = self.engine.kv_get(self.pool, label, ROOT_KV_OID,
+                                 collocation.canonical())
+        if ptr is None:
+            return None
+        oid = json.loads(ptr.decode())["oid"]
+        axes_raw = self.engine.kv_get(self.pool, label, oid, "axes")
+        dims = json.loads(axes_raw.decode()) if axes_raw else []
+        axes = {dim: frozenset(self.engine.kv_list(
+            self.pool, label, _axis_kv_oid(collocation, dim)))
+            for dim in dims}
+        with self._lock:
+            self._axes_cache[key] = axes
+        return axes
+
+    def refresh_axes(self) -> None:
+        """Drop pre-loaded axis summaries (for long-lived consumers that must
+        see objects archived after their first retrieve — §3.1.2 caveat)."""
+        with self._lock:
+            self._axes_cache.clear()
+
+    def axes(self, dataset: Identifier, collocation: Identifier,
+             dim: str) -> frozenset:
+        label = dataset.canonical()
+        if self.engine.kv_get(self.pool, self.root_cont, ROOT_KV_OID,
+                              label) is None:
+            return frozenset()
+        ax = self._load_axes(label, collocation)
+        return ax.get(dim, frozenset()) if ax else frozenset()
+
+    def retrieve(self, dataset: Identifier, collocation: Identifier,
+                 element: Identifier) -> Optional[FieldLocation]:
+        label = dataset.canonical()
+        axes = self._load_axes(label, collocation)
+        if axes is None:
+            return None
+        for dim, val in element.items():
+            if dim in axes and val not in axes[dim]:
+                return None          # axis summary proves absence (fast path)
+        raw = self.engine.kv_get(self.pool, label,
+                                 _index_kv_oid(collocation),
+                                 element.canonical())
+        return None if raw is None else FieldLocation.from_bytes(raw)
+
+    def list(self, dataset: Identifier, partial: Mapping[str, object]
+             ) -> Iterator[Tuple[Identifier, FieldLocation]]:
+        label = dataset.canonical()
+        if self.engine.kv_get(self.pool, self.root_cont, ROOT_KV_OID,
+                              label) is None:
+            return
+        # kv_list + one kv_get per entry: DAOS cannot fetch keys+values in a
+        # single op (§3.1.2 list()) — this is the Ceph omap advantage.
+        for ckey_str in self.engine.kv_list(self.pool, label, ROOT_KV_OID):
+            if ckey_str in ("key", "schema"):
+                continue
+            collocation = Identifier.from_canonical(ckey_str)
+            if not collocation.matches({k: v for k, v in partial.items()
+                                        if k in collocation}):
+                continue
+            oid_raw = self.engine.kv_get(self.pool, label, ROOT_KV_OID,
+                                         ckey_str)
+            if oid_raw is None:
+                continue
+            oid = json.loads(oid_raw.decode())["oid"]
+            for ekey_str in self.engine.kv_list(self.pool, label, oid):
+                if ekey_str in ("key", "axes"):
+                    continue
+                element = Identifier.from_canonical(ekey_str)
+                ident = self.schema.join(dataset, collocation, element)
+                if not ident.matches(partial):
+                    continue
+                raw = self.engine.kv_get(self.pool, label, oid, ekey_str)
+                if raw is not None:
+                    yield ident, FieldLocation.from_bytes(raw)
+
+    def datasets(self) -> Iterator[Identifier]:
+        for label in self.engine.kv_list(self.pool, self.root_cont,
+                                         ROOT_KV_OID):
+            yield Identifier.from_canonical(label)
+
+    def wipe(self, dataset: Identifier) -> None:
+        label = dataset.canonical()
+        self.engine.cont_destroy(self.pool, label)
+        self.engine.kv_remove(self.pool, self.root_cont, ROOT_KV_OID, label)
+        with self._lock:
+            self._known_datasets.discard(label)
+            self._axes_cache = {k: v for k, v in self._axes_cache.items()
+                                if k[0] != label}
+
+    # NOTE on wipe(): a dataset container destroy removes data+index in one
+    # administrative op — the reason for container-per-dataset (§3.1).

@@ -1,0 +1,515 @@
+"""FDB POSIX I/O backends on a real filesystem (thesis §2.7.2).
+
+Faithful implementation of the Lustre-era design:
+
+* one **directory per dataset key**; atomic ``mkdir`` initialisation;
+* per-(process, collocation-key) **data file**, opened in append mode and
+  *buffered* — data is only guaranteed persistent on ``flush()`` (fflush +
+  fdatasync);
+* per-(process, collocation-key) **partial index file** (one serialized index
+  blob appended per flush) and **full index file** (single blob at close);
+* per-process **sub-TOC file** carrying axes + URI stores + index locations;
+* a shared **TOC file**, appended with O_APPEND single-write records (atomic
+  under the POSIX small-write guarantee), including ``TOC_MASK`` entries that
+  obsolete sub-TOCs once full indexes land at ``close()``;
+* **TOC pre-loading**: first retrieve/list reads the whole TOC + all unmasked
+  sub-TOCs, rebuilding axes and URI stores in memory;
+* URI stores: data-file URIs interned to integers inside index entries.
+
+A shared :class:`LustreSim` meters every filesystem touch onto simulated
+OSTs/MDS (striping: default 8 × 8 MiB) and distributed-lock traffic under
+write+read contention, feeding the cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import itertools
+import os
+import socket
+import struct
+import threading
+import time
+from typing import Dict, Iterator, List, Mapping, Optional, Set, Tuple
+
+import msgpack
+
+from ..engine.meter import GLOBAL_METER, Meter
+from ..handle import DataHandle, FieldLocation, FileRangeHandle
+from ..interfaces import Catalogue, Store
+from ..schema import Identifier, Schema
+from ..util import stable_hash
+
+MiB = 1024 ** 2
+_uniq = itertools.count()
+
+TOC_FILE = "toc"
+SCHEMA_FILE = "schema"
+
+
+def _unique_stem(tag: str) -> str:
+    return (f"{stable_hash(tag):08x}.{time.time_ns()}."
+            f"{socket.gethostname()}.{os.getpid()}.{next(_uniq)}")
+
+
+class LustreSim:
+    """Shared metering context mapping file ops onto a simulated Lustre
+    deployment (OSTs + MDS + LDLM lock traffic)."""
+
+    def __init__(self, root: str, n_osts: int = 16, stripe_count: int = 8,
+                 stripe_size: int = 8 * MiB,
+                 meter: Optional[Meter] = None):
+        self.root = os.path.abspath(root)
+        os.makedirs(self.root, exist_ok=True)
+        self.n_osts = n_osts
+        self.stripe_count = stripe_count
+        self.stripe_size = stripe_size
+        self.meter = meter or GLOBAL_METER
+        self._write_open: Set[str] = set()   # files open by active writers
+        self._lock = threading.Lock()
+
+    # -- op metering --------------------------------------------------------
+    def meta(self, nops: int = 1) -> None:
+        for _ in range(nops):
+            self.meter.record("mds", "meta", 0)
+
+    def _ost(self, path: str, stripe: int) -> str:
+        return f"ost:{(stable_hash(path) + stripe) % self.n_osts}"
+
+    def data_io(self, path: str, nbytes: int, kind: str,
+                unit: str = "") -> None:
+        """Meter a bulk read/write split across the file's stripes."""
+        stripes = min(self.stripe_count, self.n_osts)
+        per = (nbytes + stripes - 1) // stripes if nbytes else 0
+        done = 0
+        for s in range(stripes):
+            part = min(per, nbytes - done)
+            if part <= 0 and s > 0:
+                break
+            self.meter.record(self._ost(path, s), kind, max(part, 0),
+                              unit=unit)
+            done += part
+
+    def fsync(self, path: str) -> None:
+        self.meter.record(self._ost(path, 0), "fsync", 0)
+
+    # -- write-read contention tracking --------------------------------------
+    def writer_opens(self, path: str) -> None:
+        with self._lock:
+            self._write_open.add(path)
+
+    def writer_closes(self, path: str) -> None:
+        with self._lock:
+            self._write_open.discard(path)
+
+    def read_with_locks(self, path: str, nbytes: int) -> None:
+        """A read conflicting with an active writer costs LDLM round-trips
+        (§2.2: distributed locking under write+read contention)."""
+        with self._lock:
+            contended = path in self._write_open
+        if contended:
+            self.meter.record("ldlm", "lock", 0, unit=path)
+        self.data_io(path, nbytes, "read")
+
+
+def _append_record(path: str, payload: dict, sim: LustreSim,
+                   unit: str = "") -> None:
+    """Atomic O_APPEND record append (length-prefixed msgpack)."""
+    blob = msgpack.packb(payload, use_bin_type=True)
+    rec = struct.pack("<I", len(blob)) + blob
+    fd = os.open(path, os.O_WRONLY | os.O_CREAT | os.O_APPEND, 0o644)
+    try:
+        os.write(fd, rec)           # single write → POSIX-atomic append
+    finally:
+        os.close(fd)
+    sim.meter.record(sim._ost(path, 0), "append", len(rec),
+                     unit=unit or path)
+
+
+def _read_records(path: str, sim: Optional[LustreSim] = None) -> List[dict]:
+    """Read a whole record file with one read call (TOC pre-loading)."""
+    if not os.path.exists(path):
+        return []
+    with open(path, "rb") as f:
+        blob = f.read()
+    if sim is not None:
+        sim.read_with_locks(path, len(blob))
+    out, pos = [], 0
+    while pos + 4 <= len(blob):
+        (n,) = struct.unpack_from("<I", blob, pos)
+        pos += 4
+        if pos + n > len(blob):
+            break                   # torn tail record (crash mid-append)
+        out.append(msgpack.unpackb(blob[pos:pos + n], raw=False))
+        pos += n
+    return out
+
+
+class PosixStore(Store):
+    scheme = "posix"
+
+    def __init__(self, sim: LustreSim, buffer_size: int = 4 * MiB):
+        self.sim = sim
+        self.buffer_size = buffer_size
+        # (dataset, ckey) -> (path, fileobj, offset, unsynced_bytes)
+        self._files: Dict[Tuple[str, str], List] = {}
+        self._lock = threading.Lock()
+
+    def _dataset_dir(self, dataset: Identifier) -> str:
+        d = os.path.join(self.sim.root, dataset.canonical())
+        try:
+            os.mkdir(d)             # atomic even under contention (§2.7.2)
+            self.sim.meta()
+        except FileExistsError:
+            pass
+        return d
+
+    def archive(self, data: bytes, dataset: Identifier,
+                collocation: Identifier) -> FieldLocation:
+        key = (dataset.canonical(), collocation.canonical())
+        with self._lock:
+            ent = self._files.get(key)
+            if ent is None:
+                d = self._dataset_dir(dataset)
+                stem = _unique_stem(collocation.canonical())
+                path = os.path.join(d, stem + ".data")
+                f = open(path, "ab", buffering=self.buffer_size)
+                self.sim.meta()                      # file create
+                self.sim.writer_opens(path)
+                ent = [path, f, 0, 0]
+                self._files[key] = ent
+            path, f, offset, unsynced = ent
+            f.write(data)
+            ent[2] = offset + len(data)
+            ent[3] = unsynced + len(data)
+        return FieldLocation(self.scheme, dataset.canonical(), path,
+                             offset, len(data))
+
+    def flush(self) -> None:
+        with self._lock:
+            items = list(self._files.values())
+        for ent in items:
+            path, f, _off, unsynced = ent
+            f.flush()
+            os.fsync(f.fileno())
+            if unsynced:
+                self.sim.data_io(path, unsynced, "write")
+            self.sim.fsync(path)
+            ent[3] = 0
+
+    def retrieve(self, location: FieldLocation) -> DataHandle:
+        sim = self.sim
+
+        def reader(unit: str, offset: int, length: int) -> bytes:
+            with open(unit, "rb") as f:
+                f.seek(offset)
+                data = f.read(length)
+            sim.read_with_locks(unit, len(data))
+            sim.meta()              # open
+            return data
+
+        return FileRangeHandle.single(reader, location.unit,
+                                      location.offset, location.length)
+
+    def close(self) -> None:
+        with self._lock:
+            items = list(self._files.items())
+            self._files.clear()
+        for _key, (path, f, _off, unsynced) in items:
+            f.flush()
+            os.fsync(f.fileno())
+            f.close()
+            if unsynced:
+                self.sim.data_io(path, unsynced, "write")
+            self.sim.writer_closes(path)
+
+    def wipe(self, dataset: Identifier) -> None:
+        d = os.path.join(self.sim.root, dataset.canonical())
+        if os.path.isdir(d):
+            for name in os.listdir(d):
+                os.unlink(os.path.join(d, name))
+                self.sim.meta()
+            os.rmdir(d)
+            self.sim.meta()
+
+
+@dataclasses.dataclass
+class _PerKeyIndex:
+    """In-memory indexing state for one (dataset, collocation) pair
+    (thesis Fig. 2.6): partial + full B*-tree stand-ins, URI store, axes."""
+    partial: Dict[str, Tuple[int, int, int]]
+    full: Dict[str, Tuple[int, int, int]]
+    uris: List[str]
+    uri_ids: Dict[str, int]
+    axes: Dict[str, Set[str]]
+    pindex_path: str
+    findex_path: str
+
+    def intern(self, uri: str) -> int:
+        i = self.uri_ids.get(uri)
+        if i is None:
+            i = len(self.uris)
+            self.uris.append(uri)
+            self.uri_ids[uri] = i
+        return i
+
+
+class PosixCatalogue(Catalogue):
+    scheme = "posix"
+
+    def __init__(self, sim: LustreSim, schema: Schema):
+        self.sim = sim
+        self.schema = schema
+        self._mem: Dict[Tuple[str, str], _PerKeyIndex] = {}
+        self._subtoc_path: Dict[str, str] = {}       # dataset -> sub-TOC file
+        self._preloaded: Dict[str, List[dict]] = {}  # dataset -> index entries
+        self._index_cache: Dict[Tuple[str, int, int], Dict] = {}
+        self._lock = threading.Lock()
+        self._closed = False
+
+    # -- write path --------------------------------------------------------------
+    def _dataset_dir(self, dataset: Identifier, create: bool = True) -> str:
+        d = os.path.join(self.sim.root, dataset.canonical())
+        if create and not os.path.isdir(d):
+            try:
+                os.mkdir(d)
+                self.sim.meta()
+            except FileExistsError:
+                pass
+        if create:
+            toc = os.path.join(d, TOC_FILE)
+            if not os.path.exists(toc):
+                _append_record(toc, {"type": "TOC_INIT",
+                                     "schema": self.schema.name}, self.sim,
+                               unit=toc)
+                with open(os.path.join(d, SCHEMA_FILE), "w") as f:
+                    f.write(self.schema.name)
+                self.sim.meta(2)
+        return d
+
+    def _mem_index(self, dataset: Identifier, collocation: Identifier
+                   ) -> _PerKeyIndex:
+        key = (dataset.canonical(), collocation.canonical())
+        with self._lock:
+            mi = self._mem.get(key)
+            if mi is None:
+                d = self._dataset_dir(dataset)
+                stem = _unique_stem(collocation.canonical())
+                mi = _PerKeyIndex(
+                    partial={}, full={}, uris=[], uri_ids={},
+                    axes={dim: set() for dim in self.schema.element_dims},
+                    pindex_path=os.path.join(d, stem + ".pindex"),
+                    findex_path=os.path.join(d, stem + ".findex"))
+                self.sim.meta(2)     # two index file creates
+                self._mem[key] = mi
+            return mi
+
+    def archive(self, dataset: Identifier, collocation: Identifier,
+                element: Identifier, location: FieldLocation) -> None:
+        mi = self._mem_index(dataset, collocation)
+        uri_id = mi.intern(location.unit)
+        entry = (uri_id, location.offset, location.length)
+        ekey = element.canonical()
+        with self._lock:
+            mi.partial[ekey] = entry
+            mi.full[ekey] = entry
+            for dim in self.schema.element_dims:
+                mi.axes[dim].add(element[dim])
+        # purely in-memory: no I/O until flush() (§2.7.2)
+
+    def _subtoc_for(self, dataset_dir: str, dataset_label: str) -> str:
+        with self._lock:
+            st = self._subtoc_path.get(dataset_label)
+        if st is None:
+            st = os.path.join(dataset_dir,
+                              _unique_stem(dataset_label) + ".subtoc")
+            # creation registers a pointer in the shared TOC (§2.7.2 flush)
+            toc = os.path.join(dataset_dir, TOC_FILE)
+            _append_record(toc, {"type": "TOC_SUBTOC", "path": st}, self.sim,
+                           unit=toc)
+            self.sim.meta()
+            with self._lock:
+                self._subtoc_path[dataset_label] = st
+        return st
+
+    def flush(self) -> None:
+        with self._lock:
+            items = list(self._mem.items())
+        for (dlabel, clabel), mi in items:
+            with self._lock:
+                if not mi.partial:
+                    continue
+                partial = dict(mi.partial)
+                mi.partial.clear()
+                uris = list(mi.uris)
+                axes = {d: sorted(v) for d, v in mi.axes.items()}
+            blob = msgpack.packb({"entries": partial}, use_bin_type=True)
+            offset = (os.path.getsize(mi.pindex_path)
+                      if os.path.exists(mi.pindex_path) else 0)
+            with open(mi.pindex_path, "ab") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+            self.sim.data_io(mi.pindex_path, len(blob), "write")
+            self.sim.fsync(mi.pindex_path)
+            ddir = os.path.dirname(mi.pindex_path)
+            st = self._subtoc_for(ddir, dlabel)
+            _append_record(st, {
+                "type": "INDEX", "ckey": clabel,
+                "index": {"path": mi.pindex_path, "offset": offset,
+                          "length": len(blob)},
+                "uris": uris, "axes": axes}, self.sim, unit=st)
+
+    def close(self) -> None:
+        """Write full indexes, point the TOC at them, mask our sub-TOCs."""
+        if self._closed:
+            return
+        with self._lock:
+            items = list(self._mem.items())
+        masked_datasets: Set[str] = set()
+        for (dlabel, clabel), mi in items:
+            with self._lock:
+                full = dict(mi.full)
+                uris = list(mi.uris)
+                axes = {d: sorted(v) for d, v in mi.axes.items()}
+            if not full:
+                continue
+            blob = msgpack.packb({"entries": full}, use_bin_type=True)
+            with open(mi.findex_path, "wb") as f:
+                f.write(blob)
+                f.flush()
+                os.fsync(f.fileno())
+            self.sim.data_io(mi.findex_path, len(blob), "write")
+            self.sim.fsync(mi.findex_path)
+            ddir = os.path.dirname(mi.findex_path)
+            toc = os.path.join(ddir, TOC_FILE)
+            _append_record(toc, {
+                "type": "TOC_INDEX", "ckey": clabel,
+                "index": {"path": mi.findex_path, "offset": 0,
+                          "length": len(blob)},
+                "uris": uris, "axes": axes}, self.sim, unit=toc)
+            masked_datasets.add(dlabel)
+        for dlabel in masked_datasets:
+            st = self._subtoc_path.get(dlabel)
+            if st:
+                toc = os.path.join(os.path.dirname(st), TOC_FILE)
+                _append_record(toc, {"type": "TOC_MASK", "path": st},
+                               self.sim, unit=toc)
+        self._closed = True
+
+    # -- read path -----------------------------------------------------------------
+    def _preload(self, dataset: Identifier, force: bool = False) -> List[dict]:
+        """TOC pre-loading (§2.7.2): read TOC + unmasked sub-TOCs entirely."""
+        label = dataset.canonical()
+        if not force and label in self._preloaded:
+            return self._preloaded[label]
+        d = os.path.join(self.sim.root, label)
+        toc = os.path.join(d, TOC_FILE)
+        records = _read_records(toc, self.sim)
+        self.sim.meta()             # TOC open
+        masked: Set[str] = set()
+        entries: List[dict] = []
+        for rec in reversed(records):           # reverse scan: masks first
+            if rec.get("type") == "TOC_MASK":
+                masked.add(rec["path"])
+            elif rec.get("type") == "TOC_INDEX":
+                entries.append(rec)
+            elif rec.get("type") == "TOC_SUBTOC":
+                if rec["path"] in masked:
+                    continue
+                sub = _read_records(rec["path"], self.sim)
+                self.sim.meta()
+                entries.extend(reversed(sub))   # newest flush first
+        with self._lock:
+            self._preloaded[label] = entries
+        return entries
+
+    def refresh(self) -> None:
+        with self._lock:
+            self._preloaded.clear()
+            self._index_cache.clear()
+
+    def _load_index(self, ref: dict) -> Dict[str, Tuple[int, int, int]]:
+        key = (ref["path"], ref["offset"], ref["length"])
+        with self._lock:
+            cached = self._index_cache.get(key)
+        if cached is not None:
+            return cached
+        with open(ref["path"], "rb") as f:
+            f.seek(ref["offset"])
+            blob = f.read(ref["length"])
+        # B*-tree loads issue several reads (§2.7.2 retrieve())
+        chunk = 64 * 1024
+        for off in range(0, max(len(blob), 1), chunk):
+            self.sim.read_with_locks(ref["path"],
+                                     min(chunk, len(blob) - off))
+        idx = {k: tuple(v) for k, v in
+               msgpack.unpackb(blob, raw=False)["entries"].items()}
+        with self._lock:
+            self._index_cache[key] = idx
+        return idx
+
+    def axes(self, dataset: Identifier, collocation: Identifier,
+             dim: str) -> frozenset:
+        out: Set[str] = set()
+        for e in self._preload(dataset):
+            if e.get("ckey") == collocation.canonical():
+                out.update(e.get("axes", {}).get(dim, []))
+        return frozenset(out)
+
+    def retrieve(self, dataset: Identifier, collocation: Identifier,
+                 element: Identifier) -> Optional[FieldLocation]:
+        ckey = collocation.canonical()
+        ekey = element.canonical()
+        for e in self._preload(dataset):        # newest-first ⇒ replace wins
+            if e.get("ckey") != ckey:
+                continue
+            ax = e.get("axes", {})
+            if any(dim in ax and element[dim] not in ax[dim]
+                   for dim in element):
+                continue                        # axis summary: skip index
+            idx = self._load_index(e["index"])
+            hit = idx.get(ekey)
+            if hit is not None:
+                uri_id, off, length = hit
+                return FieldLocation("posix", dataset.canonical(),
+                                     e["uris"][uri_id], off, length)
+        return None
+
+    def list(self, dataset: Identifier, partial: Mapping[str, object]
+             ) -> Iterator[Tuple[Identifier, FieldLocation]]:
+        seen: Set[str] = set()
+        for e in self._preload(dataset):
+            ckey = e.get("ckey")
+            if ckey is None:
+                continue
+            collocation = Identifier.from_canonical(ckey)
+            if not collocation.matches({k: v for k, v in partial.items()
+                                        if k in collocation}):
+                continue
+            idx = self._load_index(e["index"])
+            for ekey, (uri_id, off, length) in idx.items():
+                full_key = ckey + "|" + ekey
+                if full_key in seen:
+                    continue        # an older (masked/partial) duplicate
+                seen.add(full_key)
+                element = Identifier.from_canonical(ekey)
+                ident = self.schema.join(dataset, collocation, element)
+                if ident.matches(partial):
+                    yield ident, FieldLocation(
+                        "posix", dataset.canonical(), e["uris"][uri_id],
+                        off, length)
+
+    def datasets(self) -> Iterator[Identifier]:
+        if not os.path.isdir(self.sim.root):
+            return
+        for name in sorted(os.listdir(self.sim.root)):
+            if os.path.isdir(os.path.join(self.sim.root, name)):
+                yield Identifier.from_canonical(name)
+
+    def wipe(self, dataset: Identifier) -> None:
+        label = dataset.canonical()
+        with self._lock:
+            self._preloaded.pop(label, None)
+            self._mem = {k: v for k, v in self._mem.items() if k[0] != label}
+            self._subtoc_path.pop(label, None)

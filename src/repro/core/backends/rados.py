@@ -1,0 +1,344 @@
+"""FDB Ceph/RADOS backends (thesis §3.2).
+
+Design options evaluated in the thesis (Fig. 3.5) are all implemented and
+selectable, with the thesis's winning configuration as the default:
+
+* ``encapsulation``: ``"namespace"`` per dataset (default) or ``"pool"`` per
+  dataset (slower: doubles PG count — second test set of Fig. 3.5).
+* ``object_mode``: ``"per_field"`` (default, best balance), ``"span"``
+  (multi-field objects per process+collocation spanning the 128 MiB limit,
+  first test set) or ``"single_large"`` (one object per process+collocation,
+  requires a raised ``max_object_size``; best reads, halved writes).
+* ``persistence``: ``"immediate"`` (default; blocking ops, §3.2 consistency
+  requirement) or ``"on_flush"`` (async writes persisted at flush; the thesis
+  found librados misbehaving in one combination — our implementation keeps the
+  FDB contract: data invisible until flush, then fully visible).
+
+Field object names are MD5 hashes of unique strings so that name prefixes do
+not skew placement (§3.2.1).
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import json
+import os
+import socket
+import threading
+import time
+from typing import Dict, Iterator, List, Mapping, Optional, Set, Tuple
+
+from ..engine.rados import RadosEngine
+from ..handle import DataHandle, FieldLocation, LazyHandle
+from ..interfaces import Catalogue, Store
+from ..schema import Identifier, Schema
+
+MiB = 1024 ** 2
+_uniq_counter = itertools.count()
+
+
+def _unique_name(tag: str) -> str:
+    raw = f"{tag}.{time.time_ns()}.{socket.gethostname()}.{os.getpid()}." \
+          f"{next(_uniq_counter)}"
+    return hashlib.md5(raw.encode()).hexdigest()
+
+
+class RadosStore(Store):
+    scheme = "rados"
+
+    def __init__(self, engine: RadosEngine, pool: str = "fdb",
+                 encapsulation: str = "namespace",
+                 object_mode: str = "per_field",
+                 persistence: str = "immediate",
+                 pg_count: int = 512,
+                 replication: int = 1,
+                 ec: Optional[Tuple[int, int]] = None):
+        assert encapsulation in ("namespace", "pool")
+        assert object_mode in ("per_field", "span", "single_large")
+        assert persistence in ("immediate", "on_flush")
+        self.engine = engine
+        self.base_pool = pool
+        self.encapsulation = encapsulation
+        self.object_mode = object_mode
+        self.persistence = persistence
+        self.pg_count = pg_count
+        self.replication = replication
+        self.ec = ec
+        engine.pool_create(pool, pg_count=pg_count, replication=replication,
+                           ec=ec)
+        self._known_pools: Set[str] = {pool}
+        # span/single_large state: (ns, ckey) -> (object name, next offset, part)
+        self._spans: Dict[Tuple[str, str], Tuple[str, int, int]] = {}
+        self._pending: List[Tuple[str, str, str, int, bytes]] = []
+        self._lock = threading.Lock()
+
+    # -- placement of datasets --------------------------------------------------
+    def _locate(self, dataset: Identifier) -> Tuple[str, str]:
+        """Returns (pool, namespace) for a dataset key."""
+        label = dataset.canonical()
+        if self.encapsulation == "namespace":
+            return self.base_pool, label
+        pool = "fdb." + hashlib.md5(label.encode()).hexdigest()[:8]
+        if pool not in self._known_pools:
+            self.engine.pool_create(pool, pg_count=self.pg_count,
+                                    replication=self.replication, ec=self.ec)
+            with self._lock:
+                self._known_pools.add(pool)
+        return pool, label
+
+    # -- Store interface -----------------------------------------------------------
+    def archive(self, data: bytes, dataset: Identifier,
+                collocation: Identifier) -> FieldLocation:
+        pool, ns = self._locate(dataset)
+        if self.object_mode == "per_field":
+            name = _unique_name(collocation.canonical())
+            if self.persistence == "immediate":
+                self.engine.write_full(pool, ns, name, data)
+            else:
+                with self._lock:
+                    self._pending.append((pool, ns, name, 0, bytes(data)))
+            return FieldLocation(self.scheme, ns, name, 0, len(data),
+                                 pool=pool)
+        # span / single_large: append into a shared per-(proc, ckey) object
+        limit = (self.engine.max_object_size if self.object_mode == "span"
+                 else (1 << 62))
+        key = (ns, collocation.canonical())
+        with self._lock:
+            name, off, part = self._spans.get(key, (None, 0, 0))
+            if name is None or off + len(data) > limit:
+                part = part + 1 if name is not None else 0
+                name = _unique_name(f"{collocation.canonical()}.part{part}")
+                off = 0
+            self._spans[key] = (name, off + len(data), part)
+        if self.persistence == "immediate":
+            self.engine.append(pool, ns, name, data)
+        else:
+            with self._lock:
+                self._pending.append((pool, ns, name, off, bytes(data)))
+        return FieldLocation(self.scheme, ns, name, off, len(data), pool=pool)
+
+    def flush(self) -> None:
+        if self.persistence != "on_flush":
+            return
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for pool, ns, name, off, data in pending:
+            if self.object_mode == "per_field":
+                self.engine.write_full(pool, ns, name, data)
+            else:
+                self.engine.append(pool, ns, name, data)
+
+    def retrieve(self, location: FieldLocation) -> DataHandle:
+        eng = self.engine
+        pool, ns, name = location.pool, location.container, location.unit
+        off, length = location.offset, location.length
+        return LazyHandle(lambda: eng.read(pool, ns, name, off, length),
+                          length)
+
+    def wipe(self, dataset: Identifier) -> None:
+        pool, ns = self._locate(dataset)
+        if self.encapsulation == "pool":
+            self.engine.pool_delete(pool)
+        else:
+            for name in self.engine.list_objects(pool, ns):
+                self.engine.remove(pool, ns, name)
+
+
+def _idx_name(collocation: Identifier) -> str:
+    return "idx." + hashlib.md5(collocation.canonical().encode()).hexdigest()
+
+
+def _axis_name(collocation: Identifier, dim: str) -> str:
+    raw = f"{collocation.canonical()}:{dim}"
+    return "axis." + hashlib.md5(raw.encode()).hexdigest()
+
+
+class RadosCatalogue(Catalogue):
+    """Omap-based catalogue, mirroring the DAOS KV design (§3.2.1), with the
+    one structural improvement RADOS allows: ``list()`` fetches whole omaps
+    (keys *and* values) in single RPCs."""
+
+    scheme = "rados"
+    ROOT_NS = "_fdb_root"
+    ROOT_OBJ = "root_kv"
+    DATASET_OBJ = "dataset_kv"
+
+    def __init__(self, engine: RadosEngine, schema: Schema, pool: str = "fdb",
+                 persistence: str = "immediate"):
+        assert persistence in ("immediate", "on_flush")
+        self.engine = engine
+        self.schema = schema
+        self.pool = pool
+        self.persistence = persistence
+        engine.pool_create(pool)
+        engine.omap_create(pool, self.ROOT_NS, self.ROOT_OBJ)
+        self._known_datasets: Set[str] = set()
+        self._known_indexes: Set[Tuple[str, str]] = set()
+        self._axis_seen: Set[Tuple[str, str, str, str]] = set()
+        self._axes_cache: Dict[Tuple[str, str], Dict[str, frozenset]] = {}
+        self._pending: List[Tuple[str, str, Dict[str, bytes]]] = []
+        self._lock = threading.Lock()
+
+    def _omap_set(self, ns: str, obj: str, kvs: Dict[str, bytes],
+                  defer: bool = True) -> None:
+        if self.persistence == "on_flush" and defer:
+            with self._lock:
+                self._pending.append((ns, obj, kvs))
+        else:
+            self.engine.omap_set(self.pool, ns, obj, kvs)
+
+    def _ensure_dataset(self, dataset: Identifier) -> str:
+        label = dataset.canonical()
+        if label in self._known_datasets:
+            return label
+        root = self.engine.omap_get_vals_by_keys(
+            self.pool, self.ROOT_NS, self.ROOT_OBJ, [label])
+        if label not in root:
+            self._omap_set(label, self.DATASET_OBJ,
+                           {"key": label.encode(),
+                            "schema": self.schema.name.encode()}, defer=False)
+            self._omap_set(self.ROOT_NS, self.ROOT_OBJ,
+                           {label: json.dumps({"ns": label}).encode()},
+                           defer=False)
+        with self._lock:
+            self._known_datasets.add(label)
+        return label
+
+    def _ensure_index(self, label: str, collocation: Identifier) -> str:
+        ckey = collocation.canonical()
+        name = _idx_name(collocation)
+        if (label, ckey) in self._known_indexes:
+            return name
+        have = self.engine.omap_get_vals_by_keys(self.pool, label,
+                                                 self.DATASET_OBJ, [ckey])
+        if ckey not in have:
+            self._omap_set(label, name,
+                           {"key": ckey.encode(),
+                            "axes": json.dumps(
+                                list(self.schema.element_dims)).encode()},
+                           defer=False)
+            self._omap_set(label, self.DATASET_OBJ,
+                           {ckey: json.dumps({"obj": name}).encode()},
+                           defer=False)
+        with self._lock:
+            self._known_indexes.add((label, ckey))
+        return name
+
+    def archive(self, dataset: Identifier, collocation: Identifier,
+                element: Identifier, location: FieldLocation) -> None:
+        label = self._ensure_dataset(dataset)
+        idx = self._ensure_index(label, collocation)
+        self._omap_set(label, idx, {element.canonical(): location.to_bytes()})
+        ckey = collocation.canonical()
+        axis_updates: Dict[str, Dict[str, bytes]] = {}
+        for dim in self.schema.element_dims:
+            val = element[dim]
+            seen = (label, ckey, dim, val)
+            if seen in self._axis_seen:
+                continue
+            axis_updates.setdefault(_axis_name(collocation, dim), {})[val] = b"1"
+            with self._lock:
+                self._axis_seen.add(seen)
+        for obj, kvs in axis_updates.items():
+            self._omap_set(label, obj, kvs)
+
+    def flush(self) -> None:
+        if self.persistence != "on_flush":
+            return
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for ns, obj, kvs in pending:
+            self.engine.omap_set(self.pool, ns, obj, kvs)
+
+    def close(self) -> None:
+        self.flush()
+
+    def _load_axes(self, label: str, collocation: Identifier
+                   ) -> Optional[Dict[str, frozenset]]:
+        key = (label, collocation.canonical())
+        if key in self._axes_cache:
+            return self._axes_cache[key]
+        ptr = self.engine.omap_get_vals_by_keys(
+            self.pool, label, self.DATASET_OBJ, [collocation.canonical()])
+        if collocation.canonical() not in ptr:
+            return None
+        idx = json.loads(ptr[collocation.canonical()].decode())["obj"]
+        meta = self.engine.omap_get_vals_by_keys(self.pool, label, idx,
+                                                 ["axes"])
+        dims = json.loads(meta["axes"].decode()) if "axes" in meta else []
+        axes = {d: frozenset(self.engine.omap_list_keys(
+            self.pool, label, _axis_name(collocation, d))) for d in dims}
+        with self._lock:
+            self._axes_cache[key] = axes
+        return axes
+
+    def refresh_axes(self) -> None:
+        with self._lock:
+            self._axes_cache.clear()
+
+    def axes(self, dataset: Identifier, collocation: Identifier,
+             dim: str) -> frozenset:
+        ax = self._load_axes(dataset.canonical(), collocation)
+        return ax.get(dim, frozenset()) if ax else frozenset()
+
+    def retrieve(self, dataset: Identifier, collocation: Identifier,
+                 element: Identifier) -> Optional[FieldLocation]:
+        label = dataset.canonical()
+        axes = self._load_axes(label, collocation)
+        if axes is None:
+            return None
+        for dim, val in element.items():
+            if dim in axes and val not in axes[dim]:
+                return None
+        got = self.engine.omap_get_vals_by_keys(
+            self.pool, label, _idx_name(collocation), [element.canonical()])
+        raw = got.get(element.canonical())
+        return None if raw is None else FieldLocation.from_bytes(raw)
+
+    def list(self, dataset: Identifier, partial: Mapping[str, object]
+             ) -> Iterator[Tuple[Identifier, FieldLocation]]:
+        label = dataset.canonical()
+        root = self.engine.omap_get_vals_by_keys(
+            self.pool, self.ROOT_NS, self.ROOT_OBJ, [label])
+        if label not in root:
+            return
+        # One RPC for the whole dataset omap, one per matching index omap
+        # (rados_read_op_omap_get_vals_by_keys2 advantage — §3.2.1).
+        dataset_kv = self.engine.omap_get_all(self.pool, label,
+                                              self.DATASET_OBJ)
+        for ckey_str, ptr in dataset_kv.items():
+            if ckey_str in ("key", "schema"):
+                continue
+            collocation = Identifier.from_canonical(ckey_str)
+            if not collocation.matches({k: v for k, v in partial.items()
+                                        if k in collocation}):
+                continue
+            idx = json.loads(ptr.decode())["obj"]
+            entries = self.engine.omap_get_all(self.pool, label, idx)
+            for ekey_str, raw in entries.items():
+                if ekey_str in ("key", "axes"):
+                    continue
+                element = Identifier.from_canonical(ekey_str)
+                ident = self.schema.join(dataset, collocation, element)
+                if ident.matches(partial):
+                    yield ident, FieldLocation.from_bytes(raw)
+
+    def datasets(self) -> Iterator[Identifier]:
+        for label in self.engine.omap_list_keys(self.pool, self.ROOT_NS,
+                                                self.ROOT_OBJ):
+            yield Identifier.from_canonical(label)
+
+    def wipe(self, dataset: Identifier) -> None:
+        label = dataset.canonical()
+        for name in self.engine.list_objects(self.pool, label):
+            self.engine.remove(self.pool, label, name)
+        # remove from root omap by re-publishing without the key
+        root = self.engine.omap_get_all(self.pool, self.ROOT_NS, self.ROOT_OBJ)
+        root.pop(label, None)
+        p = self.engine._pool(self.pool)
+        with p.lock:
+            p.omaps[(self.ROOT_NS, self.ROOT_OBJ)] = root
+        with self._lock:
+            self._known_datasets.discard(label)
+            self._axes_cache = {k: v for k, v in self._axes_cache.items()
+                                if k[0] != label}

@@ -1,0 +1,101 @@
+"""FDB S3 Store backend (thesis §3.3).
+
+Store-only: S3 lacks atomic append and KV primitives, so no conforming
+Catalogue is implementable (the thesis drafts and rejects one); an S3 Store
+pairs with any conforming Catalogue (we default to the DAOS catalogue).
+
+Design choices follow the thesis: bucket-per-dataset (cleaner wipes), object
+per field keyed by a unique time/host/pid string, persist-on-PUT (flush is a
+no-op).  The multipart-upload span mode is drafted in the engine and can be
+enabled with ``object_mode="multipart"``.
+"""
+from __future__ import annotations
+
+import hashlib
+import itertools
+import os
+import socket
+import threading
+import time
+from typing import Dict, Optional, Set, Tuple
+
+from ..engine.s3 import S3Engine
+from ..handle import DataHandle, FieldLocation, LazyHandle
+from ..interfaces import Store
+from ..schema import Identifier
+
+_uniq = itertools.count()
+
+
+def _bucket_name(dataset: Identifier) -> str:
+    return "fdb-" + hashlib.md5(dataset.canonical().encode()).hexdigest()[:16]
+
+
+class S3Store(Store):
+    scheme = "s3"
+
+    def __init__(self, engine: S3Engine, object_mode: str = "per_field",
+                 part_size: int = 8 * 1024 * 1024):
+        assert object_mode in ("per_field", "multipart")
+        self.engine = engine
+        self.object_mode = object_mode
+        self.part_size = part_size
+        self._known_buckets: Set[str] = set()
+        # multipart state: (bucket, ckey) -> (upload_id, key, offset, part_no)
+        self._mpu: Dict[Tuple[str, str], list] = {}
+        self._lock = threading.Lock()
+
+    def _bucket(self, dataset: Identifier) -> str:
+        b = _bucket_name(dataset)
+        if b not in self._known_buckets:
+            self.engine.create_bucket(b)
+            with self._lock:
+                self._known_buckets.add(b)
+        return b
+
+    def archive(self, data: bytes, dataset: Identifier,
+                collocation: Identifier) -> FieldLocation:
+        bucket = self._bucket(dataset)
+        if self.object_mode == "per_field":
+            key = (f"{collocation.canonical()}/"
+                   f"{time.time_ns()}.{socket.gethostname()}.{os.getpid()}."
+                   f"{next(_uniq)}")
+            self.engine.put_object(bucket, key, data)   # visible on return
+            return FieldLocation(self.scheme, bucket, key, 0, len(data))
+        # multipart span mode: parts accumulate, object visible on flush()
+        ckey = collocation.canonical()
+        with self._lock:
+            st = self._mpu.get((bucket, ckey))
+            if st is None:
+                key = f"{ckey}/span.{time.time_ns()}.{os.getpid()}"
+                upload = self.engine.create_multipart_upload(bucket, key)
+                st = [upload, key, 0, 0]
+                self._mpu[(bucket, ckey)] = st
+            upload, key, offset, part_no = st
+            st[2] = offset + len(data)
+            st[3] = part_no + 1
+        self.engine.upload_part(upload, part_no + 1, data)
+        return FieldLocation(self.scheme, bucket, key, offset, len(data))
+
+    def flush(self) -> None:
+        if self.object_mode != "multipart":
+            return
+        with self._lock:
+            mpu, self._mpu = self._mpu, {}
+        for upload, _key, _off, _parts in mpu.values():
+            self.engine.complete_multipart_upload(upload)
+
+    def retrieve(self, location: FieldLocation) -> DataHandle:
+        eng = self.engine
+        bucket, key = location.container, location.unit
+        off, length = location.offset, location.length
+        return LazyHandle(
+            lambda: eng.get_object(bucket, key, (off, off + length - 1)),
+            length)
+
+    def wipe(self, dataset: Identifier) -> None:
+        bucket = _bucket_name(dataset)
+        if bucket in self.engine.buckets:
+            self.engine.delete_bucket(bucket)
+        with self._lock:
+            self._known_buckets.discard(bucket)

@@ -1,0 +1,11 @@
+from .meter import Meter, Op, client_context, current_client
+from .costmodel import HardwareProfile, PROFILES, model_run
+from .daos import DaosEngine
+from .rados import RadosEngine
+from .s3 import S3Engine
+
+__all__ = [
+    "Meter", "Op", "client_context", "current_client",
+    "HardwareProfile", "PROFILES", "model_run",
+    "DaosEngine", "RadosEngine", "S3Engine",
+]

@@ -1,0 +1,244 @@
+"""Analytic cluster cost model (DESIGN.md §3.2).
+
+Converts an in-process op trace (:class:`..meter.Op`) into a modeled
+wall-time / aggregate bandwidth for a *target cluster* described by a
+:class:`HardwareProfile`.  The model is a bottleneck-max over five terms:
+
+  T = max( T_latency,      per-client serial op latency (clients parallel)
+           T_client_net,   per-client-node NIC bytes / bandwidth
+           T_server,       per-server-resource storage bytes (w + r serialized)
+           T_server_net,   per-server-node NIC bytes / bandwidth
+           T_op_rate,      per-resource op-count / service rate
+           T_meta,         centralized metadata service (Lustre MDS, Ceph Mon)
+           T_hotspot )     per-unit serialized commits (contended KV keys)
+
+This reproduces the paper's qualitative scaling behaviour: DAOS is
+network/storage-bound and scales with targets (C1); Ceph pays TCP latency and
+per-op CPU (C2, C6); Lustre pays MDS + distributed-lock terms under
+contention (C1); redundancy multiplies server-side bytes (C5); hot-spotted
+index keys serialize (C7).
+
+Latency/bandwidth parameters are calibrated from the thesis's own hardware
+sections (§4.2.2 NEXTGenIO ideal-node figures, §4.3.2 GCP ideal-node figures,
+Table 4.1 PSM2/TCP rates) — see PROFILES.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import Counter, defaultdict
+from typing import Dict, Iterable, List, Mapping, Optional
+
+from .meter import Op
+from ..util import stable_hash
+
+MiB = 1024 ** 2
+GiB = 1024 ** 3
+
+#: op kinds that move payload bytes to/from storage
+WRITE_KINDS = frozenset({"array_write", "write", "append", "http_put",
+                         "repl_write", "omap_set", "kv_put"})
+READ_KINDS = frozenset({"array_read", "read", "http_get", "kv_get",
+                        "omap_get", "kv_list", "omap_list"})
+#: kinds counted as *payload* for bandwidth reporting (index/meta excluded)
+PAYLOAD_W = frozenset({"array_write", "write", "append", "http_put"})
+PAYLOAD_R = frozenset({"array_read", "read", "http_get"})
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendParams:
+    """Per-backend service parameters."""
+    lat: Mapping[str, float]        # client-observed latency per op kind (s)
+    default_lat: float              # fallback latency
+    op_rate: float                  # ops/s per data resource (target/OSD/OST)
+    meta_rate: float                # ops/s of centralized meta service
+    key_serial_rate: float          # serialized commits/s on one hot unit
+    lock_latency: float             # distributed-lock round trip (s)
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    client_link_bw: float           # B/s per client node NIC
+    server_link_bw: float           # B/s per server node NIC
+    storage_w: float                # B/s per server node, writes
+    storage_r: float                # B/s per server node, reads
+    backends: Mapping[str, BackendParams]
+
+    def backend_for(self, resource: str) -> str:
+        if resource.startswith("target"):
+            return "daos"
+        if resource.startswith(("osd", "mon", "pg")):
+            return "rados"
+        if resource.startswith(("ost", "mds", "ldlm")):
+            return "posix"
+        return "s3"
+
+
+def _daos_params(rpc: float) -> BackendParams:
+    return BackendParams(
+        lat={"kv_put": rpc, "kv_get": rpc, "kv_list": 2 * rpc,
+             "array_write": rpc, "array_read": rpc, "meta": 8 * rpc,
+             "oid_alloc": rpc, "repl_write": rpc},
+        default_lat=rpc, op_rate=200_000.0, meta_rate=float("inf"),
+        key_serial_rate=30_000.0, lock_latency=0.0)
+
+
+def _rados_params(rpc: float) -> BackendParams:
+    return BackendParams(
+        lat={"omap_set": rpc, "omap_get": rpc, "omap_list": rpc,
+             "write": rpc, "read": rpc, "meta": 4 * rpc,
+             "repl_write": rpc},
+        default_lat=rpc, op_rate=15_000.0, meta_rate=30_000.0,
+        key_serial_rate=8_000.0, lock_latency=0.0)
+
+
+def _posix_params(rpc: float, lock: float) -> BackendParams:
+    return BackendParams(
+        lat={"write": rpc, "read": rpc, "append": rpc, "meta": 4 * rpc,
+             "fsync": 20 * rpc, "lock": lock},
+        default_lat=rpc, op_rate=50_000.0, meta_rate=40_000.0,
+        key_serial_rate=20_000.0, lock_latency=lock)
+
+
+def _s3_params() -> BackendParams:
+    http = 800e-6
+    return BackendParams(
+        lat={"http_put": http, "http_get": http, "http_list": 2 * http,
+             "meta": 2 * http},
+        default_lat=http, op_rate=8_000.0, meta_rate=10_000.0,
+        key_serial_rate=5_000.0, lock_latency=0.0)
+
+
+PROFILES: Dict[str, HardwareProfile] = {
+    # NEXTGenIO: 3D XPoint SCM servers, 100 Gb/s Omni-Path (PSM2), §4.2.
+    "nextgenio": HardwareProfile(
+        name="nextgenio",
+        client_link_bw=11.0 * GiB, server_link_bw=11.0 * GiB,
+        storage_w=8.0 * GiB, storage_r=10.0 * GiB,
+        backends={
+            "daos": _daos_params(rpc=25e-6),
+            "rados": _rados_params(rpc=300e-6),   # Ceph = TCP even here
+            "posix": _posix_params(rpc=80e-6, lock=700e-6),
+            "s3": _s3_params(),
+        }),
+    # GCP: n2-custom-36 VMs, 6 TiB local NVMe, 32 Gb/s VM NICs, §4.3.
+    "gcp": HardwareProfile(
+        name="gcp",
+        client_link_bw=4.0 * GiB, server_link_bw=4.0 * GiB,
+        storage_w=3.2 * GiB, storage_r=6.6 * GiB,
+        backends={
+            "daos": _daos_params(rpc=60e-6),      # OFI/tcp provider on GCP
+            "rados": _rados_params(rpc=350e-6),
+            "posix": _posix_params(rpc=120e-6, lock=900e-6),
+            "s3": _s3_params(),
+        }),
+}
+
+
+@dataclasses.dataclass
+class ModelResult:
+    wall_time: float
+    write_bw: float                 # modeled aggregate payload write B/s
+    read_bw: float
+    terms: Dict[str, float]
+    dominant: str
+    payload_w: int
+    payload_r: int
+
+    def as_dict(self) -> Dict[str, object]:
+        return {
+            "wall_time_s": self.wall_time,
+            "write_bw_GiBps": self.write_bw / GiB,
+            "read_bw_GiBps": self.read_bw / GiB,
+            "dominant": self.dominant,
+            **{f"T_{k}": v for k, v in self.terms.items()},
+        }
+
+
+def _node_of(client: str) -> str:
+    return client.split("@", 1)[1] if "@" in client else "node0"
+
+
+def model_run(ops: Iterable[Op], profile: HardwareProfile,
+              server_nodes: int, targets_per_node: int = 1,
+              op_scale: float = 1.0) -> ModelResult:
+    """Model the wall time of the traced run on ``profile`` hardware.
+
+    ``server_nodes`` — number of storage server nodes in the modeled cluster;
+    engine resources are folded onto them round-robin.
+    ``op_scale`` — multiply op counts/bytes (to extrapolate a short in-process
+    run to the paper's per-process field counts; bandwidth is steady-state so
+    this only matters for fixed-cost amortisation).
+    """
+    ops = list(ops)
+    lat_per_client: Counter = Counter()
+    bytes_per_cnode: Counter = Counter()
+    storage_w_per_snode: Counter = Counter()
+    storage_r_per_snode: Counter = Counter()
+    net_per_snode: Counter = Counter()
+    ops_per_resource: Counter = Counter()
+    resource_backend: Dict[str, str] = {}
+    meta_ops: Counter = Counter()           # backend -> centralized meta ops
+    hot_puts: Counter = Counter()           # (backend, unit) -> serialized ops
+    payload_w = payload_r = 0
+
+    for op in ops:
+        be = profile.backend_for(op.resource)
+        params = profile.backends[be]
+        lat = params.lat.get(op.kind, params.default_lat)
+        lat_per_client[op.client] += lat
+        if op.resource in ("mds", "mon"):
+            meta_ops[be] += 1
+            continue
+        resource_backend[op.resource] = be
+        ops_per_resource[op.resource] += 1
+        snode = f"snode{stable_hash(op.resource) % max(server_nodes, 1)}"
+        if op.kind in WRITE_KINDS:
+            storage_w_per_snode[snode] += op.nbytes
+            net_per_snode[snode] += op.nbytes
+            bytes_per_cnode[_node_of(op.client)] += op.nbytes
+        elif op.kind in READ_KINDS:
+            storage_r_per_snode[snode] += op.nbytes
+            net_per_snode[snode] += op.nbytes
+            bytes_per_cnode[_node_of(op.client)] += op.nbytes
+        if op.kind in PAYLOAD_W:
+            payload_w += op.nbytes
+        elif op.kind in PAYLOAD_R:
+            payload_r += op.nbytes
+        if op.unit and op.kind in ("kv_put", "omap_set", "append"):
+            hot_puts[(be, op.unit)] += 1
+
+    s = op_scale
+    terms: Dict[str, float] = {}
+    terms["latency"] = max(lat_per_client.values(), default=0.0) * s
+    terms["client_net"] = max(
+        (b / profile.client_link_bw for b in bytes_per_cnode.values()),
+        default=0.0) * s
+    terms["server_storage"] = max(
+        ((storage_w_per_snode[n] / profile.storage_w)
+         + (storage_r_per_snode[n] / profile.storage_r)
+         for n in set(storage_w_per_snode) | set(storage_r_per_snode)),
+        default=0.0) * s
+    terms["server_net"] = max(
+        (b / profile.server_link_bw for b in net_per_snode.values()),
+        default=0.0) * s
+    terms["op_rate"] = max(
+        (c / profile.backends[resource_backend[r]].op_rate
+         for r, c in ops_per_resource.items()),
+        default=0.0) * s
+    terms["meta"] = max(
+        (c / profile.backends[be].meta_rate for be, c in meta_ops.items()),
+        default=0.0) * s
+    terms["hotspot"] = max(
+        (c / profile.backends[be].key_serial_rate
+         for (be, _u), c in hot_puts.items()),
+        default=0.0) * s
+
+    wall = max(terms.values()) if terms else 0.0
+    dominant = max(terms, key=lambda k: terms[k]) if terms else "none"
+    pw, pr = int(payload_w * s), int(payload_r * s)
+    return ModelResult(
+        wall_time=wall,
+        write_bw=(pw / wall) if wall > 0 and pw else 0.0,
+        read_bw=(pr / wall) if wall > 0 and pr else 0.0,
+        terms=terms, dominant=dominant, payload_w=pw, payload_r=pr)

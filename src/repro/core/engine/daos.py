@@ -1,0 +1,295 @@
+"""In-process DAOS-like object engine (thesis §2.3).
+
+Implements the libdaos surface the FDB DAOS backends need — pools,
+containers, OID allocation, high-level key-value and array objects — with the
+semantics that matter:
+
+* **Immediate persistence**: every put/write is durable-and-visible on return.
+* **MVCC, no client locks**: writes create a new version; readers always see
+  the latest *complete* version; writers never block readers.
+* **Algorithmic placement**: target = stable_hash(oid) % n_targets; no
+  centralized metadata servers.
+* **Object classes**: OC_S1 (one target), OC_S2/OC_SX (striped), OC_RP_2G1
+  (2-way replication), OC_EC_2P1G1 (2+1 erasure coding).  Redundancy is
+  modeled by metering replica/parity traffic to secondary targets.
+* **OID batching**: ``cont_alloc_oids`` reserves ranges in one RPC (§3.1.1).
+
+Every API call meters an :class:`..meter.Op` for the cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from .meter import GLOBAL_METER, Meter
+from ..util import stable_hash
+
+MiB = 1024 ** 2
+
+OBJECT_CLASSES = ("OC_S1", "OC_S2", "OC_S4", "OC_SX", "OC_RP_2G1",
+                  "OC_RP_3G1", "OC_EC_2P1G1")
+
+
+class DaosApiError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class _KVEntry:
+    version: int
+    value: bytes
+
+
+class _KVObject:
+    """A DAOS high-level key-value object with MVCC puts."""
+
+    __slots__ = ("entries", "oclass", "_version")
+
+    def __init__(self, oclass: str = "OC_S1"):
+        self.entries: Dict[str, _KVEntry] = {}
+        self.oclass = oclass
+        self._version = 0
+
+    def put(self, key: str, value: bytes) -> None:
+        # MVCC: build the new immutable entry first, then publish atomically
+        # (single dict slot assignment — readers see old or new, never partial).
+        self._version += 1
+        self.entries[key] = _KVEntry(self._version, bytes(value))
+
+    def get(self, key: str) -> Optional[bytes]:
+        e = self.entries.get(key)
+        return None if e is None else e.value
+
+    def keys(self) -> List[str]:
+        return list(self.entries.keys())
+
+
+class _ArrayObject:
+    """A DAOS array object: byte-addressable 1-D array.
+
+    Visibility follows DAOS semantics: a write's extent becomes readable once
+    the write returns (we publish the committed size last).
+    """
+
+    __slots__ = ("chunks", "committed_size", "oclass")
+
+    def __init__(self, oclass: str = "OC_S1"):
+        self.chunks: Dict[int, bytes] = {}      # offset -> bytes
+        self.committed_size = 0
+        self.oclass = oclass
+
+    def write(self, offset: int, data: bytes) -> None:
+        self.chunks[offset] = bytes(data)
+        new_end = offset + len(data)
+        if new_end > self.committed_size:
+            self.committed_size = new_end       # publish last (atomic int set)
+
+    def read(self, offset: int, length: int) -> bytes:
+        end = min(offset + length, self.committed_size)
+        if end <= offset:
+            return b""
+        buf = bytearray(end - offset)
+        for coff, cdata in self.chunks.items():
+            lo = max(offset, coff)
+            hi = min(end, coff + len(cdata))
+            if lo < hi:
+                buf[lo - offset:hi - offset] = cdata[lo - coff:hi - coff]
+        return bytes(buf)
+
+    def size(self) -> int:
+        return self.committed_size
+
+
+class _Container:
+    def __init__(self, label: str):
+        self.label = label
+        self.kvs: Dict[int, _KVObject] = {}
+        self.arrays: Dict[int, _ArrayObject] = {}
+        self.next_oid = 1
+        self.lock = threading.Lock()
+
+
+class _Pool:
+    def __init__(self, name: str):
+        self.name = name
+        self.containers: Dict[str, _Container] = {}
+        self.lock = threading.Lock()
+
+
+class DaosEngine:
+    """Engine state shared by all clients of one simulated DAOS system."""
+
+    def __init__(self, n_targets: int = 16, meter: Optional[Meter] = None):
+        self.n_targets = n_targets
+        self.meter = meter or GLOBAL_METER
+        self.pools: Dict[str, _Pool] = {}
+        self._lock = threading.Lock()
+
+    # -- placement -----------------------------------------------------------
+    def _target(self, oid: int, shard: int = 0) -> str:
+        return f"target:{(stable_hash(str(oid)) + shard) % self.n_targets}"
+
+    def _stripes(self, oclass: str) -> int:
+        if oclass == "OC_S2":
+            return 2
+        if oclass == "OC_S4":
+            return 4
+        if oclass == "OC_SX":
+            return self.n_targets
+        return 1
+
+    def _replicas(self, oclass: str) -> Tuple[int, float]:
+        """(extra full replicas, parity fraction) for redundancy classes."""
+        if oclass == "OC_RP_2G1":
+            return 1, 0.0
+        if oclass == "OC_RP_3G1":
+            return 2, 0.0
+        if oclass == "OC_EC_2P1G1":
+            return 0, 0.5            # 2 data + 1 parity cells
+        return 0, 0.0
+
+    # -- pool / container management ------------------------------------------
+    def pool_create(self, name: str) -> None:
+        with self._lock:
+            self.pools.setdefault(name, _Pool(name))
+
+    def pool_connect(self, name: str) -> str:
+        self.meter.record("target:0", "meta", 0, unit=f"pool:{name}")
+        if name not in self.pools:
+            raise DaosApiError(f"no such pool {name!r}")
+        return name
+
+    def cont_create_with_label(self, pool: str, label: str) -> None:
+        """Atomic create-if-absent (daos_cont_create_with_label, §3.1.1)."""
+        p = self.pools[pool]
+        with p.lock:
+            if label not in p.containers:
+                p.containers[label] = _Container(label)
+        self.meter.record("target:0", "meta", 0, unit=f"cont:{label}")
+
+    def cont_open(self, pool: str, label: str) -> _Container:
+        p = self.pools[pool]
+        c = p.containers.get(label)
+        if c is None:
+            raise DaosApiError(f"no such container {label!r} in pool {pool!r}")
+        self.meter.record("target:0", "meta", 0, unit=f"cont:{label}")
+        return c
+
+    def cont_destroy(self, pool: str, label: str) -> None:
+        p = self.pools[pool]
+        with p.lock:
+            p.containers.pop(label, None)
+        self.meter.record("target:0", "meta", 0)
+
+    def cont_list(self, pool: str) -> List[str]:
+        self.meter.record("target:0", "meta", 0)
+        return list(self.pools[pool].containers.keys())
+
+    def cont_alloc_oids(self, pool: str, label: str, count: int) -> int:
+        """Reserve ``count`` OIDs; returns the first.  One RPC per batch."""
+        c = self.cont_open(pool, label)
+        with c.lock:
+            first = c.next_oid
+            c.next_oid += count
+        self.meter.record("target:0", "oid_alloc", 0)
+        return first
+
+    # -- key-value API ---------------------------------------------------------
+    def _kv(self, pool: str, label: str, oid: int, create: bool = True
+            ) -> _KVObject:
+        c = self.pools[pool].containers[label]
+        kv = c.kvs.get(oid)
+        if kv is None:
+            if not create:
+                raise DaosApiError(f"kv {oid} absent")
+            with c.lock:
+                kv = c.kvs.setdefault(oid, _KVObject())
+        return kv
+
+    def kv_put(self, pool: str, label: str, oid: int, key: str,
+               value: bytes) -> None:
+        kv = self._kv(pool, label, oid)
+        kv.put(key, value)
+        self.meter.record(self._target(oid), "kv_put", len(value),
+                          unit=f"{label}/kv{oid}")
+
+    def kv_get(self, pool: str, label: str, oid: int, key: str
+               ) -> Optional[bytes]:
+        c = self.pools[pool].containers.get(label)
+        kv = c.kvs.get(oid) if c else None
+        val = kv.get(key) if kv else None
+        self.meter.record(self._target(oid), "kv_get",
+                          len(val) if val else 0, unit=f"{label}/kv{oid}")
+        return val
+
+    def kv_remove(self, pool: str, label: str, oid: int, key: str) -> None:
+        c = self.pools[pool].containers.get(label)
+        kv = c.kvs.get(oid) if c else None
+        if kv is not None:
+            kv.entries.pop(key, None)
+        self.meter.record(self._target(oid), "kv_put", 0,
+                          unit=f"{label}/kv{oid}")
+
+    def kv_list(self, pool: str, label: str, oid: int) -> List[str]:
+        c = self.pools[pool].containers.get(label)
+        kv = c.kvs.get(oid) if c else None
+        keys = kv.keys() if kv else []
+        self.meter.record(self._target(oid), "kv_list",
+                          sum(len(k) for k in keys), unit=f"{label}/kv{oid}")
+        return keys
+
+    # -- array API --------------------------------------------------------------
+    def array_open_with_attr(self, pool: str, label: str, oid: int,
+                             oclass: str = "OC_S1") -> int:
+        """No-RPC open/create (daos_array_open_with_attr, §3.1.1)."""
+        c = self.pools[pool].containers[label]
+        if oid not in c.arrays:
+            with c.lock:
+                c.arrays.setdefault(oid, _ArrayObject(oclass))
+        return oid
+
+    def array_write(self, pool: str, label: str, oid: int, offset: int,
+                    data: bytes) -> None:
+        c = self.pools[pool].containers[label]
+        arr = c.arrays.get(oid)
+        if arr is None:
+            self.array_open_with_attr(pool, label, oid)
+            arr = c.arrays[oid]
+        arr.write(offset, data)
+        stripes = self._stripes(arr.oclass)
+        cell = max(1, (len(data) + stripes - 1) // stripes)
+        for s in range(stripes):
+            part = data[s * cell:(s + 1) * cell]
+            if part:
+                self.meter.record(self._target(oid, s), "array_write",
+                                  len(part))
+        replicas, parity = self._replicas(arr.oclass)
+        for r in range(replicas):
+            self.meter.record(self._target(oid, stripes + r), "repl_write",
+                              len(data))
+        if parity:
+            self.meter.record(self._target(oid, stripes + replicas),
+                              "repl_write", int(len(data) * parity))
+
+    def array_read(self, pool: str, label: str, oid: int, offset: int,
+                   length: int) -> bytes:
+        c = self.pools[pool].containers[label]
+        arr = c.arrays.get(oid)
+        data = arr.read(offset, length) if arr else b""
+        stripes = self._stripes(arr.oclass) if arr else 1
+        cell = max(1, (len(data) + stripes - 1) // stripes)
+        for s in range(stripes):
+            part = data[s * cell:(s + 1) * cell]
+            if part:
+                self.meter.record(self._target(oid, s), "array_read",
+                                  len(part))
+        if not data:
+            self.meter.record(self._target(oid), "array_read", 0)
+        return data
+
+    def array_get_size(self, pool: str, label: str, oid: int) -> int:
+        c = self.pools[pool].containers[label]
+        arr = c.arrays.get(oid)
+        self.meter.record(self._target(oid), "kv_get", 8)
+        return arr.size() if arr else 0

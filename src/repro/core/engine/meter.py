@@ -1,0 +1,93 @@
+"""Operation metering for storage engines.
+
+Every engine API call records an :class:`Op` describing *who* (client
+process), *where* (server-side resource: DAOS target, Ceph OSD, Lustre
+OST/MDS), *what* (op kind), and *how much* (payload bytes).  The trace feeds
+the analytic cost model (:mod:`.costmodel`) that converts in-process runs into
+modeled at-scale cluster bandwidth — the hardware-gate simulation strategy
+described in DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import threading
+from collections import Counter
+from typing import Dict, Iterator, List, Optional
+
+_client_var: contextvars.ContextVar[str] = contextvars.ContextVar(
+    "fdbx_client", default="proc0@node0")
+
+
+def current_client() -> str:
+    return _client_var.get()
+
+
+@contextlib.contextmanager
+def client_context(client: str) -> Iterator[None]:
+    """Tag engine ops issued in this context as coming from ``client``.
+
+    Client ids follow ``procN@nodeM`` so the cost model can aggregate
+    per-node network usage.
+    """
+    tok = _client_var.set(client)
+    try:
+        yield
+    finally:
+        _client_var.reset(tok)
+
+
+@dataclasses.dataclass(frozen=True)
+class Op:
+    client: str      # "proc3@node1"
+    resource: str    # "target:5" | "osd:2" | "ost:7" | "mds" | "mon" | "s3"
+    kind: str        # kv_put|kv_get|kv_list|array_write|array_read|meta|lock|
+                     # fsync|append|write|read|omap_set|omap_get|http_put|...
+    nbytes: int
+    unit: str = ""   # hot-spot unit (e.g. a KV object key) for contention model
+
+
+class Meter:
+    """Thread-safe op trace + rollup counters."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self.ops: List[Op] = []
+        self.enabled = True
+
+    def record(self, resource: str, kind: str, nbytes: int = 0,
+               unit: str = "") -> None:
+        if not self.enabled:
+            return
+        op = Op(current_client(), resource, kind, nbytes, unit)
+        with self._lock:
+            self.ops.append(op)
+
+    def reset(self) -> None:
+        with self._lock:
+            self.ops = []
+
+    # Rollups ----------------------------------------------------------------
+    def summary(self) -> Dict[str, object]:
+        with self._lock:
+            ops = list(self.ops)
+        kinds = Counter(op.kind for op in ops)
+        bytes_by_kind: Counter = Counter()
+        for op in ops:
+            bytes_by_kind[op.kind] += op.nbytes
+        return {
+            "total_ops": len(ops),
+            "ops_by_kind": dict(kinds),
+            "bytes_by_kind": dict(bytes_by_kind),
+            "clients": len({op.client for op in ops}),
+            "resources": len({op.resource for op in ops}),
+        }
+
+    def snapshot(self) -> List[Op]:
+        with self._lock:
+            return list(self.ops)
+
+
+#: A process-global default meter — backends use it unless given their own.
+GLOBAL_METER = Meter()

@@ -1,0 +1,196 @@
+"""In-process Ceph/RADOS-like object engine (thesis §2.4).
+
+Implements the librados surface the FDB Ceph backends need:
+
+* **Pools** with configurable **placement-group** counts, replication factor
+  or 2+1 erasure coding (redundancy is a *pool* property, unlike DAOS);
+* **Namespaces** inside pools (lightweight, no create/open RPC — §3.2.1);
+* regular objects (``write_full``/``read``/``stat``) with the RADOS
+  **object-size limit** (128 MiB default) enforced;
+* **Omap** key-value objects, including the single-RPC full read
+  (``omap_get_all`` ≈ rados_read_op_omap_get_vals_by_keys2) that makes the
+  Ceph ``list()`` implementation more efficient than DAOS's (§3.2.1);
+* algorithmic placement: pg = stable_hash(name) % pg_count, osd = pg % n_osds
+  — *PG count caps effective parallelism*, reproducing the PG sensitivity of
+  §3.2 (Fig. 3.5, second test set).
+
+MVCC-style consistency: the primary OSD persists, replicas follow, and the
+index (our dict slot) is published last — readers always see complete
+versions (§2.4).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from .meter import GLOBAL_METER, Meter
+from ..util import stable_hash
+
+MiB = 1024 ** 2
+
+
+class RadosApiError(RuntimeError):
+    pass
+
+
+class _Pool:
+    def __init__(self, name: str, pg_count: int, replication: int = 1,
+                 ec: Optional[Tuple[int, int]] = None):
+        self.name = name
+        self.pg_count = pg_count
+        self.replication = replication      # 1 = none
+        self.ec = ec                        # (k, m) e.g. (2, 1)
+        self.objects: Dict[Tuple[str, str], bytes] = {}
+        self.omaps: Dict[Tuple[str, str], Dict[str, bytes]] = {}
+        self.lock = threading.Lock()
+
+
+class RadosEngine:
+    def __init__(self, n_osds: int = 16, max_object_size: int = 128 * MiB,
+                 meter: Optional[Meter] = None):
+        self.n_osds = n_osds
+        self.max_object_size = max_object_size
+        self.meter = meter or GLOBAL_METER
+        self.pools: Dict[str, _Pool] = {}
+        self._lock = threading.Lock()
+
+    # -- placement -------------------------------------------------------------
+    def _osd(self, pool: _Pool, name: str, shift: int = 0) -> str:
+        pg = stable_hash(name) % pool.pg_count
+        return f"osd:{(pg + shift) % self.n_osds}|pg:{pg % pool.pg_count}"
+
+    # -- pool management ---------------------------------------------------------
+    def pool_create(self, name: str, pg_count: int = 512, replication: int = 1,
+                    ec: Optional[Tuple[int, int]] = None) -> None:
+        with self._lock:
+            if name not in self.pools:
+                self.pools[name] = _Pool(name, pg_count, replication, ec)
+        self.meter.record("mon", "meta", 0)
+
+    def pool_delete(self, name: str) -> None:
+        with self._lock:
+            self.pools.pop(name, None)
+        self.meter.record("mon", "meta", 0)
+
+    def _pool(self, name: str) -> _Pool:
+        p = self.pools.get(name)
+        if p is None:
+            raise RadosApiError(f"no such pool {name!r}")
+        return p
+
+    # -- regular objects -----------------------------------------------------------
+    def _redundancy_meter(self, pool: _Pool, name: str, nbytes: int) -> None:
+        for r in range(pool.replication - 1):
+            self.meter.record(self._osd(pool, name, shift=1 + r),
+                              "repl_write", nbytes)
+        if pool.ec:
+            k, m = pool.ec
+            for j in range(m):
+                self.meter.record(self._osd(pool, name, shift=1 + j),
+                                  "repl_write", nbytes * m // k)
+
+    def write_full(self, pool: str, ns: str, name: str, data: bytes) -> None:
+        p = self._pool(pool)
+        if len(data) > self.max_object_size:
+            raise RadosApiError(
+                f"object {name!r} size {len(data)} exceeds RADOS limit "
+                f"{self.max_object_size} (thesis §2.4: split large elements)")
+        p.objects[(ns, name)] = bytes(data)   # publish atomically
+        self.meter.record(self._osd(p, name), "write", len(data))
+        self._redundancy_meter(p, name, len(data))
+
+    def append(self, pool: str, ns: str, name: str, data: bytes) -> int:
+        """RADOS append (used by the multi-field-object store mode)."""
+        p = self._pool(pool)
+        with p.lock:
+            cur = p.objects.get((ns, name), b"")
+            if len(cur) + len(data) > self.max_object_size:
+                raise RadosApiError("append exceeds object size limit")
+            p.objects[(ns, name)] = cur + bytes(data)
+            off = len(cur)
+        self.meter.record(self._osd(p, name), "write", len(data))
+        self._redundancy_meter(p, name, len(data))
+        return off
+
+    def read(self, pool: str, ns: str, name: str, offset: int = 0,
+             length: int = -1) -> bytes:
+        p = self._pool(pool)
+        data = p.objects.get((ns, name))
+        if data is None:
+            self.meter.record(self._osd(p, name), "read", 0)
+            return b""
+        if p.ec:
+            # EC pools fetch the full object extent even for partial reads (§2.5)
+            fetched = len(data)
+        else:
+            fetched = len(data[offset:offset + length if length >= 0 else None])
+        out = data[offset:] if length < 0 else data[offset:offset + length]
+        self.meter.record(self._osd(p, name), "read", fetched)
+        return out
+
+    def stat(self, pool: str, ns: str, name: str) -> Optional[int]:
+        p = self._pool(pool)
+        data = p.objects.get((ns, name))
+        self.meter.record(self._osd(p, name), "meta", 0)
+        return None if data is None else len(data)
+
+    def remove(self, pool: str, ns: str, name: str) -> None:
+        p = self._pool(pool)
+        with p.lock:
+            p.objects.pop((ns, name), None)
+            p.omaps.pop((ns, name), None)
+        self.meter.record(self._osd(p, name), "meta", 0)
+
+    def list_objects(self, pool: str, ns: str) -> List[str]:
+        p = self._pool(pool)
+        names = [n for (s, n) in list(p.objects) if s == ns] + \
+                [n for (s, n) in list(p.omaps) if s == ns and (s, n) not in p.objects]
+        self.meter.record("mon", "meta", 0)
+        return names
+
+    # -- omaps ---------------------------------------------------------------------
+    def omap_create(self, pool: str, ns: str, name: str) -> None:
+        p = self._pool(pool)
+        with p.lock:
+            p.omaps.setdefault((ns, name), {})
+        self.meter.record(self._osd(p, name), "meta", 0)
+
+    def omap_set(self, pool: str, ns: str, name: str,
+                 kvs: Dict[str, bytes]) -> None:
+        p = self._pool(pool)
+        with p.lock:
+            omap = p.omaps.setdefault((ns, name), {})
+            new = dict(omap)
+            for k, v in kvs.items():
+                new[k] = bytes(v)
+            p.omaps[(ns, name)] = new          # publish atomically
+        nbytes = sum(len(k) + len(v) for k, v in kvs.items())
+        self.meter.record(self._osd(p, name), "omap_set", nbytes,
+                          unit=f"{ns}/{name}")
+        self._redundancy_meter(p, name, nbytes)
+
+    def omap_get_vals_by_keys(self, pool: str, ns: str, name: str,
+                              keys: List[str]) -> Dict[str, bytes]:
+        p = self._pool(pool)
+        omap = p.omaps.get((ns, name), {})
+        out = {k: omap[k] for k in keys if k in omap}
+        self.meter.record(self._osd(p, name), "omap_get",
+                          sum(len(v) for v in out.values()),
+                          unit=f"{ns}/{name}")
+        return out
+
+    def omap_get_all(self, pool: str, ns: str, name: str) -> Dict[str, bytes]:
+        """Full keys+values in a single RPC (unavailable in DAOS — §3.2.1)."""
+        p = self._pool(pool)
+        omap = dict(p.omaps.get((ns, name), {}))
+        self.meter.record(self._osd(p, name), "omap_get",
+                          sum(len(k) + len(v) for k, v in omap.items()),
+                          unit=f"{ns}/{name}")
+        return omap
+
+    def omap_list_keys(self, pool: str, ns: str, name: str) -> List[str]:
+        p = self._pool(pool)
+        keys = list(p.omaps.get((ns, name), {}).keys())
+        self.meter.record(self._osd(p, name), "omap_list",
+                          sum(len(k) for k in keys), unit=f"{ns}/{name}")
+        return keys

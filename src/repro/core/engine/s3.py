@@ -1,0 +1,105 @@
+"""In-process S3-like engine (thesis §3.3).
+
+REST-over-HTTP object semantics: buckets, PUT-replaces-whole-object,
+GET with optional byte range, listing with prefix, and multipart uploads
+(drafted in the thesis; implemented here).  No atomic append, no KV objects —
+which is exactly why no conforming S3 Catalogue exists (§3.3).
+"""
+from __future__ import annotations
+
+import threading
+from typing import Dict, List, Optional, Tuple
+
+from .meter import GLOBAL_METER, Meter
+
+
+class S3ApiError(RuntimeError):
+    pass
+
+
+class S3Engine:
+    def __init__(self, meter: Optional[Meter] = None):
+        self.meter = meter or GLOBAL_METER
+        self.buckets: Dict[str, Dict[str, bytes]] = {}
+        self._mpu: Dict[str, Tuple[str, str, Dict[int, bytes]]] = {}
+        self._mpu_seq = 0
+        self._lock = threading.Lock()
+
+    def create_bucket(self, bucket: str) -> None:
+        with self._lock:
+            self.buckets.setdefault(bucket, {})
+        self.meter.record("s3", "meta", 0)
+
+    def delete_bucket(self, bucket: str) -> None:
+        with self._lock:
+            self.buckets.pop(bucket, None)
+        self.meter.record("s3", "meta", 0)
+
+    def _bucket(self, bucket: str) -> Dict[str, bytes]:
+        b = self.buckets.get(bucket)
+        if b is None:
+            raise S3ApiError(f"NoSuchBucket: {bucket}")
+        return b
+
+    def put_object(self, bucket: str, key: str, data: bytes) -> None:
+        """PUT: fully written or failed; last racing PUT prevails (§3.3)."""
+        b = self._bucket(bucket)
+        b[key] = bytes(data)                 # atomic publish
+        self.meter.record("s3", "http_put", len(data))
+
+    def get_object(self, bucket: str, key: str,
+                   byte_range: Optional[Tuple[int, int]] = None) -> bytes:
+        b = self._bucket(bucket)
+        if key not in b:
+            self.meter.record("s3", "http_get", 0)
+            raise S3ApiError(f"NoSuchKey: {key}")
+        data = b[key]
+        if byte_range is not None:
+            lo, hi = byte_range
+            data = data[lo:hi + 1]           # HTTP Range is inclusive
+        self.meter.record("s3", "http_get", len(data))
+        return data
+
+    def head_object(self, bucket: str, key: str) -> Optional[int]:
+        b = self._bucket(bucket)
+        self.meter.record("s3", "meta", 0)
+        return len(b[key]) if key in b else None
+
+    def delete_object(self, bucket: str, key: str) -> None:
+        b = self._bucket(bucket)
+        b.pop(key, None)
+        self.meter.record("s3", "meta", 0)
+
+    def list_objects(self, bucket: str, prefix: str = "") -> List[str]:
+        b = self._bucket(bucket)
+        keys = sorted(k for k in b if k.startswith(prefix))
+        self.meter.record("s3", "http_list", sum(len(k) for k in keys))
+        return keys
+
+    # -- multipart uploads ------------------------------------------------------
+    def create_multipart_upload(self, bucket: str, key: str) -> str:
+        self._bucket(bucket)
+        with self._lock:
+            self._mpu_seq += 1
+            upload_id = f"mpu-{self._mpu_seq}"
+            self._mpu[upload_id] = (bucket, key, {})
+        self.meter.record("s3", "meta", 0)
+        return upload_id
+
+    def upload_part(self, upload_id: str, part_number: int,
+                    data: bytes) -> int:
+        if upload_id not in self._mpu:
+            raise S3ApiError(f"NoSuchUpload: {upload_id}")
+        self._mpu[upload_id][2][part_number] = bytes(data)
+        self.meter.record("s3", "http_put", len(data))
+        return part_number
+
+    def complete_multipart_upload(self, upload_id: str) -> None:
+        with self._lock:
+            entry = self._mpu.pop(upload_id, None)
+        if entry is None:
+            raise S3ApiError(f"NoSuchUpload: {upload_id}")
+        bucket, key, parts = entry
+        blob = b"".join(parts[i] for i in sorted(parts))
+        self._bucket(bucket)[key] = blob     # assembled object published
+        self.meter.record("s3", "meta", 0)

@@ -1,0 +1,261 @@
+"""The FDB facade (thesis §2.7): archive / flush / retrieve / list / axes.
+
+Backend-agnostic: pairs any conforming Catalogue with any conforming Store
+(``FDBConfig``), enforcing the API semantics:
+
+1. data is visible-and-indexed or not (ACID);
+2. ``archive()`` blocks until the FDB controls (a copy of) the data;
+3. ``flush()`` blocks until all archived data is persistent + visible;
+4. visible data is immutable;
+5. re-archiving an identifier transactionally replaces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .engine.daos import DaosEngine
+from .engine.meter import GLOBAL_METER, Meter
+from .engine.rados import RadosEngine
+from .engine.s3 import S3Engine
+from .handle import DataHandle, FieldLocation, MultiHandle
+from .interfaces import Catalogue, Store
+from .schema import (CHECKPOINT_SCHEMA, Identifier, NWP_OBJECT_SCHEMA,
+                     NWP_POSIX_SCHEMA, SCHEMAS, Schema)
+
+BytesLike = Union[bytes, bytearray, memoryview, np.ndarray]
+
+
+def _as_bytes(data: BytesLike) -> bytes:
+    if isinstance(data, np.ndarray):
+        return data.tobytes()
+    return bytes(data)
+
+
+@dataclasses.dataclass
+class FDBConfig:
+    """Deployment-time configuration (the FDB administrator's file)."""
+    backend: str = "daos"                 # daos | rados | posix | s3
+    schema: Union[str, Schema] = "nwp-object"
+    root: str = "/tmp/fdb"                # posix backend root dir
+    pool: str = "fdb"
+    # engine sizing (per simulated deployment)
+    daos_targets: int = 16
+    rados_osds: int = 16
+    rados_pg_count: int = 512
+    rados_max_object_size: int = 128 * 1024 * 1024
+    lustre_osts: int = 16
+    lustre_stripe_count: int = 8
+    lustre_stripe_size: int = 8 * 1024 * 1024
+    # backend design options (thesis Fig. 3.5 sweeps)
+    rados_encapsulation: str = "namespace"
+    rados_object_mode: str = "per_field"
+    rados_persistence: str = "immediate"
+    rados_replication: int = 1
+    rados_ec: Optional[Tuple[int, int]] = None
+    daos_oclass: str = "OC_S1"
+    s3_object_mode: str = "per_field"
+    # catalogue/store cross-pairing: e.g. s3 store needs another catalogue
+    catalogue_backend: Optional[str] = None
+
+    def resolved_schema(self) -> Schema:
+        if isinstance(self.schema, Schema):
+            return self.schema
+        return SCHEMAS[self.schema]
+
+
+#: process-global shared engines, keyed by config identity — multiple FDB
+#: instances (writer + reader "processes") hit the same simulated cluster.
+_ENGINES: Dict[Tuple, object] = {}
+_ENGINES_LOCK = threading.Lock()
+
+
+def shared_engine(kind: str, cfg: FDBConfig, meter: Optional[Meter] = None):
+    key = (kind, cfg.pool, cfg.daos_targets, cfg.rados_osds,
+           cfg.rados_pg_count, cfg.rados_max_object_size, id(meter))
+    with _ENGINES_LOCK:
+        eng = _ENGINES.get(key)
+        if eng is None:
+            if kind == "daos":
+                eng = DaosEngine(n_targets=cfg.daos_targets, meter=meter)
+            elif kind == "rados":
+                eng = RadosEngine(n_osds=cfg.rados_osds,
+                                  max_object_size=cfg.rados_max_object_size,
+                                  meter=meter)
+            elif kind == "s3":
+                eng = S3Engine(meter=meter)
+            else:
+                raise ValueError(kind)
+            _ENGINES[key] = eng
+        return eng
+
+
+def reset_engines() -> None:
+    with _ENGINES_LOCK:
+        _ENGINES.clear()
+
+
+class FDB:
+    """One FDB client instance ≈ one producer/consumer process."""
+
+    def __init__(self, config: Optional[FDBConfig] = None,
+                 meter: Optional[Meter] = None, **overrides):
+        if config is None:
+            config = FDBConfig(**overrides)
+        elif overrides:
+            config = dataclasses.replace(config, **overrides)
+        self.config = config
+        self.schema = config.resolved_schema()
+        self.meter = meter or GLOBAL_METER
+        self.store, self.catalogue = self._build_backends()
+        self._closed = False
+
+    # -- backend wiring ------------------------------------------------------
+    def _build_backends(self) -> Tuple[Store, Catalogue]:
+        cfg = self.config
+        cat_kind = cfg.catalogue_backend or cfg.backend
+        store: Store
+        catalogue: Catalogue
+        if cfg.backend == "daos":
+            eng = shared_engine("daos", cfg, self.meter)
+            store = DaosStore(eng, pool=cfg.pool, oclass=cfg.daos_oclass)
+        elif cfg.backend == "rados":
+            eng = shared_engine("rados", cfg, self.meter)
+            store = RadosStore(eng, pool=cfg.pool,
+                               encapsulation=cfg.rados_encapsulation,
+                               object_mode=cfg.rados_object_mode,
+                               persistence=cfg.rados_persistence,
+                               pg_count=cfg.rados_pg_count,
+                               replication=cfg.rados_replication,
+                               ec=cfg.rados_ec)
+        elif cfg.backend == "posix":
+            sim = self._shared_lustre(cfg)
+            store = PosixStore(sim)
+        elif cfg.backend == "s3":
+            eng = shared_engine("s3", cfg, self.meter)
+            store = S3Store(eng, object_mode=cfg.s3_object_mode)
+            if cfg.catalogue_backend is None:
+                cat_kind = "daos"   # S3 has no conforming catalogue (§3.3)
+        else:
+            raise ValueError(f"unknown backend {cfg.backend!r}")
+
+        if cat_kind == "daos":
+            eng = shared_engine("daos", cfg, self.meter)
+            catalogue = DaosCatalogue(eng, self.schema, pool=cfg.pool)
+        elif cat_kind == "rados":
+            eng = shared_engine("rados", cfg, self.meter)
+            catalogue = RadosCatalogue(eng, self.schema, pool=cfg.pool,
+                                       persistence=cfg.rados_persistence)
+        elif cat_kind == "posix":
+            catalogue = PosixCatalogue(self._shared_lustre(cfg), self.schema)
+        else:
+            raise ValueError(f"no conforming catalogue for {cat_kind!r}")
+        return store, catalogue
+
+    def _shared_lustre(self, cfg: FDBConfig) -> "LustreSim":
+        key = ("lustre", cfg.root, id(self.meter))
+        with _ENGINES_LOCK:
+            sim = _ENGINES.get(key)
+            if sim is None:
+                sim = LustreSim(cfg.root, n_osts=cfg.lustre_osts,
+                                stripe_count=cfg.lustre_stripe_count,
+                                stripe_size=cfg.lustre_stripe_size,
+                                meter=self.meter)
+                _ENGINES[key] = sim
+        return sim
+
+    # -- the four primary API methods (Listing 2.2) -----------------------------
+    def archive(self, identifier: Union[Identifier, Mapping[str, object]],
+                data: BytesLike) -> FieldLocation:
+        ident = identifier if isinstance(identifier, Identifier) \
+            else Identifier(identifier)
+        dataset, collocation, element = self.schema.split(ident)
+        loc = self.store.archive(_as_bytes(data), dataset, collocation)
+        self.catalogue.archive(dataset, collocation, element, loc)
+        return loc
+
+    def archive_many(self, items: Sequence[Tuple[Mapping[str, object],
+                                                 BytesLike]]) -> None:
+        """The thesis's efficient multi-object archive() variant."""
+        for ident, data in items:
+            self.archive(ident, data)
+
+    def flush(self) -> None:
+        self.store.flush()
+        self.catalogue.flush()
+
+    def retrieve(self, identifiers: Union[Identifier, Mapping[str, object],
+                                          Sequence]) -> MultiHandle:
+        if isinstance(identifiers, (Identifier, Mapping)):
+            identifiers = [identifiers]
+        handles: List[DataHandle] = []
+        for ident in identifiers:
+            ident = ident if isinstance(ident, Identifier) \
+                else Identifier(ident)
+            expanded = self._expand(ident)
+            for e in expanded:
+                dataset, collocation, element = self.schema.split(e)
+                loc = self.catalogue.retrieve(dataset, collocation, element)
+                if loc is not None:   # absence is not an error (§2.7.1)
+                    handles.append(self.store.retrieve(loc))
+        return MultiHandle(handles)
+
+    def _expand(self, ident: Identifier) -> List[Identifier]:
+        """Expand multi-value expressions (lists) via axes (§2.7.1 axis())."""
+        multi = {k: v for k, v in dict(ident).items() if "/" in v}
+        if not multi:
+            return [ident]
+        out = [dict(ident)]
+        for dim, expr in multi.items():
+            values = expr.split("/")
+            out = [dict(d, **{dim: v}) for d in out for v in values]
+        return [Identifier(d) for d in out]
+
+    def list(self, partial: Mapping[str, object]
+             ) -> Iterator[Tuple[Identifier, FieldLocation]]:
+        partial = dict(partial)
+        dataset_part = {k: v for k, v in partial.items()
+                        if k in self.schema.dataset_dims}
+        for dataset in self._matching_datasets(dataset_part):
+            yield from self.catalogue.list(dataset, partial)
+
+    def _matching_datasets(self, dataset_part: Mapping[str, object]
+                           ) -> List[Identifier]:
+        if set(dataset_part) == set(self.schema.dataset_dims):
+            return [Identifier(dataset_part)]
+        return [d for d in self.catalogue.datasets()
+                if d.matches(dataset_part)]
+
+    def axes(self, identifier: Mapping[str, object], dim: str) -> frozenset:
+        ident = Identifier({k: str(v) for k, v in identifier.items()})
+        dataset = ident.subset(self.schema.dataset_dims)
+        collocation = ident.subset(self.schema.collocation_dims)
+        return self.catalogue.axes(dataset, collocation, dim)
+
+    def wipe(self, dataset_part: Mapping[str, object]) -> None:
+        for dataset in self._matching_datasets(dict(dataset_part)):
+            self.store.wipe(dataset)
+            self.catalogue.wipe(dataset)
+
+    def close(self) -> None:
+        if not self._closed:
+            self.flush()
+            self.catalogue.close()
+            self.store.close()
+            self._closed = True
+
+    def __enter__(self) -> "FDB":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# late imports to avoid cycles
+from .backends.daos import DaosCatalogue, DaosStore          # noqa: E402
+from .backends.posix import LustreSim, PosixCatalogue, PosixStore  # noqa: E402
+from .backends.rados import RadosCatalogue, RadosStore       # noqa: E402
+from .backends.s3 import S3Store                             # noqa: E402

@@ -1,0 +1,205 @@
+"""DataHandles: backend-specific readers with merge support (thesis §2.7.1).
+
+A ``Store.retrieve()`` returns a :class:`DataHandle` without performing I/O;
+data is only read when the handle is consumed.  Handles from the same backend
+may support *merging*, so that a multi-object ``FDB.retrieve()`` issues as few
+I/O operations as possible (adjacent file ranges coalesce into single reads —
+the POSIX backend's key read optimisation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Callable, List, Optional, Sequence
+
+
+@dataclasses.dataclass(frozen=True)
+class FieldLocation:
+    """A URI-like descriptor of where an object's bytes live.
+
+    ``scheme`` identifies the backend family ("posix", "daos", "rados", "s3");
+    the remaining parts are backend-interpreted.
+    """
+
+    scheme: str
+    container: str          # dataset dir / DAOS container / RADOS namespace / bucket
+    unit: str               # file path / array OID / object name / S3 key
+    offset: int
+    length: int
+    pool: str = ""          # DAOS pool / RADOS pool ("" where n/a)
+
+    def uri(self) -> str:
+        return (f"{self.scheme}://{self.pool}/{self.container}/{self.unit}"
+                f"?offset={self.offset}&length={self.length}")
+
+    def to_bytes(self) -> bytes:
+        return json.dumps(dataclasses.asdict(self), separators=(",", ":")
+                          ).encode()
+
+    @staticmethod
+    def from_bytes(b: bytes) -> "FieldLocation":
+        return FieldLocation(**json.loads(b.decode()))
+
+
+class DataHandle:
+    """Abstract reader.  ``read()`` returns the full payload bytes."""
+
+    def read(self) -> bytes:
+        raise NotImplementedError
+
+    def length(self) -> int:
+        raise NotImplementedError
+
+    # Merging protocol ------------------------------------------------------
+    def mergeable_with(self, other: "DataHandle") -> bool:
+        return False
+
+    def merged(self, other: "DataHandle") -> "DataHandle":
+        raise NotImplementedError("handle does not support merging")
+
+
+class MemoryHandle(DataHandle):
+    def __init__(self, payload: bytes):
+        self._payload = payload
+
+    def read(self) -> bytes:
+        return self._payload
+
+    def length(self) -> int:
+        return len(self._payload)
+
+
+class LazyHandle(DataHandle):
+    """Reads via a thunk; used by object-store backends (one object = one
+    read op, no merging benefit — thesis §3.1.1 retrieve())."""
+
+    def __init__(self, thunk: Callable[[], bytes], nbytes: int):
+        self._thunk = thunk
+        self._nbytes = nbytes
+
+    def read(self) -> bytes:
+        return self._thunk()
+
+    def length(self) -> int:
+        return self._nbytes
+
+
+@dataclasses.dataclass(frozen=True)
+class _Range:
+    offset: int
+    length: int
+
+
+class FileRangeHandle(DataHandle):
+    """Handle over one or more byte ranges of a single storage unit (file).
+
+    Supports merging: handles over the same unit coalesce; adjacent ranges
+    collapse into single larger reads.  ``reader(unit, offset, length)`` is
+    supplied by the backend.
+    """
+
+    def __init__(self, reader: Callable[[str, int, int], bytes], unit: str,
+                 ranges: Sequence[_Range]):
+        self._reader = reader
+        self._unit = unit
+        self._ranges: List[_Range] = list(ranges)
+
+    @classmethod
+    def single(cls, reader: Callable[[str, int, int], bytes], unit: str,
+               offset: int, length: int) -> "FileRangeHandle":
+        return cls(reader, unit, [_Range(offset, length)])
+
+    @property
+    def unit(self) -> str:
+        return self._unit
+
+    @property
+    def ranges(self) -> List[_Range]:
+        return list(self._ranges)
+
+    def length(self) -> int:
+        return sum(r.length for r in self._ranges)
+
+    def read(self) -> bytes:
+        # Issue coalesced I/O, but return bytes in *request* order.
+        segments = {}
+        for r in self._coalesced():
+            segments[r.offset] = self._reader(self._unit, r.offset, r.length)
+        out = bytearray()
+        for r in self._ranges:
+            for seg_off in segments:
+                seg = segments[seg_off]
+                if seg_off <= r.offset and r.offset + r.length \
+                        <= seg_off + len(seg):
+                    lo = r.offset - seg_off
+                    out += seg[lo:lo + r.length]
+                    break
+        return bytes(out)
+
+    def read_ops(self) -> int:
+        """Number of I/O operations a read() will issue (for benchmarks)."""
+        return len(self._coalesced())
+
+    def _coalesced(self) -> List[_Range]:
+        rs = sorted(self._ranges, key=lambda r: r.offset)
+        out: List[_Range] = []
+        for r in rs:
+            if out and out[-1].offset + out[-1].length >= r.offset:
+                end = max(out[-1].offset + out[-1].length,
+                          r.offset + r.length)
+                out[-1] = _Range(out[-1].offset, end - out[-1].offset)
+            else:
+                out.append(r)
+        return out
+
+    def mergeable_with(self, other: DataHandle) -> bool:
+        return isinstance(other, FileRangeHandle) and other._unit == self._unit
+
+    def merged(self, other: DataHandle) -> "FileRangeHandle":
+        assert isinstance(other, FileRangeHandle) and other._unit == self._unit
+        return FileRangeHandle(self._reader, self._unit,
+                               self._ranges + other._ranges)
+
+
+class MultiHandle(DataHandle):
+    """Concatenation of several handles, merging mergeable neighbours.
+
+    This is what the top-level ``FDB.retrieve()`` returns for multi-object
+    requests.  Per-object boundaries are preserved via :meth:`parts`.
+    """
+
+    def __init__(self, handles: Sequence[DataHandle]):
+        self._parts: List[DataHandle] = list(handles)
+        # Build the merged I/O plan: group consecutive mergeable handles.
+        plan: List[DataHandle] = []
+        for h in self._parts:
+            if plan and plan[-1].mergeable_with(h):
+                plan[-1] = plan[-1].merged(h)
+            else:
+                plan.append(h)
+        self._plan = plan
+
+    def parts(self) -> List[DataHandle]:
+        return list(self._parts)
+
+    def length(self) -> int:
+        return sum(h.length() for h in self._parts)
+
+    def read(self) -> bytes:
+        return b"".join(h.read() for h in self._plan)
+
+    def read_parts(self) -> List[bytes]:
+        """Read and split back into per-object payloads."""
+        blob = self.read()
+        out, pos = [], 0
+        for h in self._parts:
+            n = h.length()
+            out.append(blob[pos:pos + n])
+            pos += n
+        return out
+
+    def read_ops(self) -> int:
+        ops = 0
+        for h in self._plan:
+            ops += h.read_ops() if isinstance(h, FileRangeHandle) else 1
+        return ops

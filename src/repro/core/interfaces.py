@@ -1,0 +1,83 @@
+"""Store and Catalogue backend interfaces (thesis §2.7.1).
+
+Any conforming Catalogue can be paired with any conforming Store; the FDB
+facade guarantees the external API semantics if the backends honour these
+contracts:
+
+Store
+  * ``archive`` takes control of the data and returns a unique, collision-free
+    :class:`FieldLocation`; data need not be persistent yet.
+  * ``flush`` blocks until all data archived by this process is persistent and
+    readable by external processes.
+  * ``retrieve`` builds a :class:`DataHandle` without performing I/O.
+
+Catalogue
+  * ``archive`` indexes element-key → location; may be in-memory only.
+  * ``flush`` blocks until all indexed entries are persistent & visible.
+  * ``close`` finalises process-lifetime structures (e.g. full indexes).
+  * ``retrieve`` returns the location for an exact key triple (None = absent —
+    not an error: the FDB may be a cache in a larger infrastructure).
+  * ``list`` yields (identifier, location) for all indexed objects matching a
+    partial identifier.
+  * ``axes`` returns all values indexed along one element dimension for a
+    (dataset, collocation) pair, served from summaries, not index scans.
+"""
+from __future__ import annotations
+
+from typing import Iterator, Mapping, Optional, Tuple
+
+from .handle import DataHandle, FieldLocation
+from .schema import Identifier
+
+
+class Store:
+    scheme: str = "?"
+
+    def archive(self, data: bytes, dataset: Identifier,
+                collocation: Identifier) -> FieldLocation:
+        raise NotImplementedError
+
+    def flush(self) -> None:
+        raise NotImplementedError
+
+    def retrieve(self, location: FieldLocation) -> DataHandle:
+        raise NotImplementedError
+
+    def close(self) -> None:  # release process-lifetime resources
+        pass
+
+    def wipe(self, dataset: Identifier) -> None:
+        raise NotImplementedError
+
+
+class Catalogue:
+    scheme: str = "?"
+
+    def archive(self, dataset: Identifier, collocation: Identifier,
+                element: Identifier, location: FieldLocation) -> None:
+        raise NotImplementedError
+
+    def flush(self) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+    def retrieve(self, dataset: Identifier, collocation: Identifier,
+                 element: Identifier) -> Optional[FieldLocation]:
+        raise NotImplementedError
+
+    def list(self, dataset: Identifier, partial: Mapping[str, object]
+             ) -> Iterator[Tuple[Identifier, FieldLocation]]:
+        raise NotImplementedError
+
+    def axes(self, dataset: Identifier, collocation: Identifier,
+             dim: str) -> frozenset:
+        raise NotImplementedError
+
+    def datasets(self) -> Iterator[Identifier]:
+        """All dataset keys known to this catalogue (the thesis's registry)."""
+        raise NotImplementedError
+
+    def wipe(self, dataset: Identifier) -> None:
+        raise NotImplementedError

@@ -1,0 +1,197 @@
+"""Metadata identifiers and schema-driven key splitting (thesis §2.7).
+
+Every FDB object is identified by a globally unique *metadata identifier*: a
+set of key=value pairs conforming to a user-defined :class:`Schema`.  The
+schema splits an identifier into three sub-keys which drive data placement:
+
+* **dataset key** — the dataset an object belongs to (one storage container /
+  directory per dataset key);
+* **collocation key** — objects sharing it are collocated in storage (and
+  share an index structure — the contention domain);
+* **element key** — identifies the object within a collocated dataset.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterable, Iterator, Mapping, Optional, Tuple
+
+
+class Identifier(Mapping[str, str]):
+    """An immutable, hashable mapping of metadata dimensions to values.
+
+    Values are canonicalised to strings.  Ordering of keys is canonical
+    (sorted) for hashing/serialisation so that logically equal identifiers
+    compare equal regardless of construction order.
+    """
+
+    __slots__ = ("_items", "_hash")
+
+    def __init__(self, mapping: Optional[Mapping[str, object]] = None, **kw: object):
+        merged: Dict[str, str] = {}
+        if mapping:
+            for k, v in mapping.items():
+                merged[str(k)] = str(v)
+        for k, v in kw.items():
+            merged[str(k)] = str(v)
+        self._items: Tuple[Tuple[str, str], ...] = tuple(sorted(merged.items()))
+        self._hash = hash(self._items)
+
+    # Mapping protocol -----------------------------------------------------
+    def __getitem__(self, key: str) -> str:
+        for k, v in self._items:
+            if k == key:
+                return v
+        raise KeyError(key)
+
+    def __iter__(self) -> Iterator[str]:
+        return (k for k, _ in self._items)
+
+    def __len__(self) -> int:
+        return len(self._items)
+
+    def __hash__(self) -> int:
+        return self._hash
+
+    def __eq__(self, other: object) -> bool:
+        if isinstance(other, Identifier):
+            return self._items == other._items
+        if isinstance(other, Mapping):
+            return dict(self._items) == dict(other)
+        return NotImplemented
+
+    def __repr__(self) -> str:
+        return "Identifier(%s)" % ", ".join(f"{k}={v}" for k, v in self._items)
+
+    # FDB-specific helpers ---------------------------------------------------
+    def canonical(self) -> str:
+        """Canonical string form, usable as a storage-unit name."""
+        return ",".join(f"{k}={v}" for k, v in self._items)
+
+    @staticmethod
+    def from_canonical(s: str) -> "Identifier":
+        if not s:
+            return Identifier()
+        parts = dict(p.split("=", 1) for p in s.split(","))
+        return Identifier(parts)
+
+    def subset(self, keys: Iterable[str]) -> "Identifier":
+        return Identifier({k: v for k, v in self._items if k in set(keys)})
+
+    def merged(self, other: Mapping[str, str]) -> "Identifier":
+        d = dict(self._items)
+        d.update(other)
+        return Identifier(d)
+
+    def matches(self, partial: Mapping[str, object]) -> bool:
+        """True if this identifier matches a *partial identifier*.
+
+        Partial values may be a plain value or an iterable of allowed values
+        (the thesis's multi-object request expressions).
+        """
+        for k, want in partial.items():
+            if k not in self:
+                return False
+            have = self[k]
+            if isinstance(want, (list, tuple, set, frozenset)):
+                if have not in {str(w) for w in want}:
+                    return False
+            elif have != str(want):
+                return False
+        return True
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    """Defines the valid identifier dimensions and their split into
+    dataset / collocation / element keys (thesis §2.7, Listing 2.1)."""
+
+    name: str
+    dataset_dims: Tuple[str, ...]
+    collocation_dims: Tuple[str, ...]
+    element_dims: Tuple[str, ...]
+
+    def __post_init__(self) -> None:
+        overlap = (set(self.dataset_dims) & set(self.collocation_dims)) | (
+            set(self.dataset_dims) & set(self.element_dims)
+        ) | (set(self.collocation_dims) & set(self.element_dims))
+        if overlap:
+            raise ValueError(f"schema dims appear in multiple keys: {overlap}")
+
+    @property
+    def all_dims(self) -> Tuple[str, ...]:
+        return self.dataset_dims + self.collocation_dims + self.element_dims
+
+    def validate(self, identifier: Identifier) -> None:
+        missing = [d for d in self.all_dims if d not in identifier]
+        if missing:
+            raise KeyError(
+                f"identifier {identifier!r} missing dims {missing} required by "
+                f"schema {self.name!r}"
+            )
+        extra = [k for k in identifier if k not in self.all_dims]
+        if extra:
+            raise KeyError(
+                f"identifier {identifier!r} has dims {extra} not in schema "
+                f"{self.name!r}"
+            )
+
+    def split(self, identifier: Identifier) -> Tuple[Identifier, Identifier, Identifier]:
+        """Split an identifier into (dataset, collocation, element) keys."""
+        self.validate(identifier)
+        return (
+            identifier.subset(self.dataset_dims),
+            identifier.subset(self.collocation_dims),
+            identifier.subset(self.element_dims),
+        )
+
+    def join(self, dataset: Identifier, collocation: Identifier,
+             element: Identifier) -> Identifier:
+        return Identifier({**dict(dataset), **dict(collocation), **dict(element)})
+
+
+# ---------------------------------------------------------------------------
+# Standard schemas
+# ---------------------------------------------------------------------------
+
+#: The operational NWP schema used with the POSIX backends (thesis Listing 2.1):
+#: many parallel writers share the same collocation key — fine for per-process
+#: files, hostile to shared KV indexes.
+NWP_POSIX_SCHEMA = Schema(
+    name="nwp-posix",
+    dataset_dims=("class", "expver", "stream", "date", "time"),
+    collocation_dims=("type", "levtype"),
+    element_dims=("step", "number", "levelist", "param"),
+)
+
+#: The modified schema used with the object-store backends (thesis §3.1):
+#: ``number`` and ``levelist`` are promoted into the collocation key so that
+#: concurrent writer processes never contend on the same index KV object.
+NWP_OBJECT_SCHEMA = Schema(
+    name="nwp-object",
+    dataset_dims=("class", "expver", "stream", "date", "time"),
+    collocation_dims=("type", "levtype", "number", "levelist"),
+    element_dims=("step", "param"),
+)
+
+#: Schema for training-framework checkpoints: one dataset per (run, step) —
+#: wiping a step is a container destroy; one collocation key per writing host
+#: (contention-free index, the paper's C7 lever); element = tensor shard.
+CHECKPOINT_SCHEMA = Schema(
+    name="ckpt",
+    dataset_dims=("run", "kind", "step"),
+    collocation_dims=("host",),
+    element_dims=("tensor", "shard"),
+)
+
+#: Schema for the FDB-backed training-data pipeline.
+DATA_SCHEMA = Schema(
+    name="data",
+    dataset_dims=("corpus", "split"),
+    collocation_dims=("producer",),
+    element_dims=("shard", "batch"),
+)
+
+SCHEMAS: Dict[str, Schema] = {
+    s.name: s
+    for s in (NWP_POSIX_SCHEMA, NWP_OBJECT_SCHEMA, CHECKPOINT_SCHEMA, DATA_SCHEMA)
+}

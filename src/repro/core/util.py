@@ -1,0 +1,14 @@
+"""Small shared utilities for the core storage layer."""
+from __future__ import annotations
+
+import zlib
+
+
+def stable_hash(s: str) -> int:
+    """Deterministic (process-independent) non-negative hash of a string.
+
+    Python's builtin ``hash`` is salted per process (PYTHONHASHSEED) which
+    would make object placement non-reproducible across runs; algorithmic
+    placement (thesis §2.3/§2.4) must be deterministic.
+    """
+    return zlib.crc32(s.encode("utf-8")) & 0xFFFFFFFF

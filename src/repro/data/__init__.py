@@ -1,0 +1,3 @@
+from .pipeline import FDBDataPipeline, SyntheticTokens
+
+__all__ = ["FDBDataPipeline", "SyntheticTokens"]

@@ -1,0 +1,108 @@
+"""FDB-backed training-data pipeline (the paper's producer/consumer pattern).
+
+Producers (tokenizer jobs / NWP field generators) archive sample shards;
+training readers retrieve per-step batches while producers may still be
+writing — the thesis's operational write+read contention pattern, running on
+whichever FDB backend is configured.  A background prefetch thread overlaps
+retrieval with compute (I/O-forwarding analogue).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.core import FDB, FDBConfig, Identifier
+from repro.core.schema import DATA_SCHEMA
+
+
+class SyntheticTokens:
+    """Deterministic synthetic LM data (no external corpora in-container)."""
+
+    def __init__(self, vocab_size: int, seq_len: int, seed: int = 0):
+        self.vocab_size = vocab_size
+        self.seq_len = seq_len
+        self.seed = seed
+
+    def batch(self, step: int, batch_size: int) -> Dict[str, np.ndarray]:
+        rng = np.random.default_rng(self.seed + step)
+        toks = rng.integers(0, self.vocab_size,
+                            (batch_size, self.seq_len + 1), dtype=np.int32)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class FDBDataPipeline:
+    def __init__(self, corpus: str, split: str = "train",
+                 fdb_config: Optional[FDBConfig] = None,
+                 producer: str = "prod0", prefetch: int = 2):
+        cfg = fdb_config or FDBConfig(backend="daos")
+        if cfg.resolved_schema().name != "data":
+            import dataclasses
+            cfg = dataclasses.replace(cfg, schema=DATA_SCHEMA)
+        self.fdb = FDB(cfg)
+        self.corpus = corpus
+        self.split = split
+        self.producer = producer
+        self.prefetch = prefetch
+
+    # -- producer side -----------------------------------------------------
+    def put_batch(self, shard: int, batch_idx: int,
+                  batch: Dict[str, np.ndarray]) -> None:
+        packed = np.concatenate(
+            [batch["tokens"].reshape(-1), batch["labels"].reshape(-1)])
+        meta = np.array(batch["tokens"].shape, np.int64)
+        payload = meta.tobytes() + packed.astype(np.int32).tobytes()
+        self.fdb.archive(self._ident(shard, batch_idx), payload)
+
+    def commit(self) -> None:
+        self.fdb.flush()
+
+    # -- consumer side ---------------------------------------------------------
+    def _ident(self, shard: int, batch_idx: int) -> Identifier:
+        return Identifier({"corpus": self.corpus, "split": self.split,
+                           "producer": self.producer, "shard": str(shard),
+                           "batch": str(batch_idx)})
+
+    def get_batch(self, shard: int, batch_idx: int
+                  ) -> Optional[Dict[str, np.ndarray]]:
+        h = self.fdb.retrieve(self._ident(shard, batch_idx))
+        if h.length() == 0:
+            return None
+        raw = h.read()
+        meta = np.frombuffer(raw[:16], np.int64)
+        B, S = int(meta[0]), int(meta[1])
+        flat = np.frombuffer(raw[16:], np.int32)
+        return {"tokens": flat[:B * S].reshape(B, S).copy(),
+                "labels": flat[B * S:].reshape(B, S).copy()}
+
+    def available_batches(self, shard: int) -> int:
+        return sum(1 for _ in self.fdb.list(
+            {"corpus": self.corpus, "split": self.split,
+             "shard": str(shard)}))
+
+    def iter_batches(self, shard: int, start: int = 0
+                     ) -> Iterator[Dict[str, np.ndarray]]:
+        """Prefetching iterator: retrieval overlaps consumer compute."""
+        q: "queue.Queue" = queue.Queue(maxsize=self.prefetch)
+
+        def fill() -> None:
+            i = start
+            while True:
+                b = self.get_batch(shard, i)
+                q.put(b)
+                if b is None:
+                    return
+                i += 1
+
+        t = threading.Thread(target=fill, daemon=True)
+        t.start()
+        while True:
+            b = q.get()
+            if b is None:
+                return
+            yield b
+
+    def close(self) -> None:
+        self.fdb.close()

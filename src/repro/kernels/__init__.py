@@ -1,0 +1,5 @@
+from . import ops, ref
+from .ops import field_decode, field_encode, flash_attention, fused_rmsnorm
+
+__all__ = ["ops", "ref", "flash_attention", "field_encode", "field_decode",
+           "fused_rmsnorm"]

@@ -1,0 +1,72 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def flash_attention_ref(q: Array, k: Array, v: Array,
+                        causal: bool = True) -> Array:
+    """q,k,v: (B, H, S, D) → (B, H, S, D). Plain softmax attention."""
+    S, T = q.shape[2], k.shape[2]
+    scores = jnp.einsum("bhsd,bhtd->bhst", q, k).astype(jnp.float32)
+    scores = scores / math.sqrt(q.shape[-1])
+    if causal:
+        mask = jnp.arange(T)[None, :] <= jnp.arange(S)[:, None]
+        scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhst,bhtd->bhsd", w, v)
+
+
+def rmsnorm_ref(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale)
+
+
+def field_encode_ref(x: Array, block: int = 256, bits: int = 8
+                     ) -> Tuple[Array, Array, Array]:
+    """GRIB-style simple packing, block-local (TPU adaptation: byte-granular).
+
+    x: (N, C) with N % block == 0.  Returns (q int8/int16, scale, mins),
+    scale/mins per (N/block, C)-tile row block: (N/block, C)? No —
+    per-block scalars over the row-block × full lane width: (N/block,).
+    """
+    n_blocks = x.shape[0] // block
+    xb = x.reshape(n_blocks, block, *x.shape[1:]).astype(jnp.float32)
+    reduce_axes = tuple(range(1, xb.ndim))
+    mins = jnp.min(xb, axis=reduce_axes)
+    maxs = jnp.max(xb, axis=reduce_axes)
+    levels = float(2 ** bits - 1)
+    scale = (maxs - mins) / levels
+    safe = jnp.where(scale > 0, scale, 1.0)
+    shift = float(2 ** (bits - 1))
+    qb = jnp.round((xb - mins.reshape((-1,) + (1,) * (xb.ndim - 1))) /
+                   safe.reshape((-1,) + (1,) * (xb.ndim - 1))) - shift
+    dtype = jnp.int8 if bits == 8 else jnp.int16
+    q = jnp.clip(qb, -shift, shift - 1).astype(dtype).reshape(x.shape)
+    return q, scale, mins
+
+
+def field_decode_ref(q: Array, scale: Array, mins: Array, block: int = 256,
+                     bits: int = 8, out_dtype=jnp.float32) -> Array:
+    n_blocks = q.shape[0] // block
+    qb = q.reshape(n_blocks, block, *q.shape[1:]).astype(jnp.float32)
+    shift = float(2 ** (bits - 1))
+    ex = (1,) * (qb.ndim - 1)
+    x = (qb + shift) * scale.reshape((-1,) + ex) + mins.reshape((-1,) + ex)
+    return x.reshape(q.shape).astype(out_dtype)
+
+
+def codec_error_bound(x: Array, block: int = 256, bits: int = 8) -> Array:
+    """Max abs error guaranteed by block quantisation: half a level step."""
+    n_blocks = x.shape[0] // block
+    xb = x.reshape(n_blocks, block, *x.shape[1:]).astype(jnp.float32)
+    reduce_axes = tuple(range(1, xb.ndim))
+    rng = jnp.max(xb, axis=reduce_axes) - jnp.min(xb, axis=reduce_axes)
+    return rng / (2 ** bits - 1) * 0.5 + 1e-6

@@ -1,0 +1,435 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this driver:
+  1. builds the production mesh (16×16 single pod / 2×16×16 multi-pod),
+  2. builds ShapeDtypeStruct inputs with full shardings (no allocation),
+  3. ``jax.jit(step).lower(...).compile()`` — sharding bugs, unsupported
+     collectives and compile-time OOMs surface here,
+  4. records memory_analysis(), cost_analysis(), and per-type collective
+     bytes parsed from the optimized (post-SPMD) HLO,
+  5. applies the analytic while-loop FLOP corrections for scan-mode
+     sequence recurrences (see EXPERIMENTS.md §Roofline — XLA cost analysis
+     counts while bodies once),
+  6. writes a JSON artifact consumed by benchmarks/roofline.py.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out dryrun_artifacts
+"""
+
+
+import argparse
+import json
+import math
+import re
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_NAMES, get_config, eligible_shapes,
+                           skip_reason, SHAPES)
+from repro.configs.shapes import ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import input_specs
+from repro.models.config import ArchConfig
+from repro.sharding.partition import MeshPlan, make_plan
+from repro.train.steps import make_decode_step, make_prefill_step, \
+    make_train_step
+
+# TPU v5e-class hardware constants (per chip) — roofline denominators.
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+_SHAPE_RE = re.compile(r"\b(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|"
+                       r"u16|u8|pred)\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "s32": 4,
+          "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2, "u8": 1,
+          "pred": 1}
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _BYTES.get(dtype.split("e")[0] if dtype.startswith("f8")
+                          else dtype, 2)
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, Dict[str, float]]:
+    """Sum operand bytes of every collective op in the (per-device,
+    post-SPMD) HLO.  Returns {op: {"count": n, "operand_bytes": b}}."""
+    out: Dict[str, Dict[str, float]] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-done(" in line:
+            continue
+        op = m.group(1)
+        shapes = _SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        # lhs shape is the output; operands follow inside the parens
+        paren = line[m.end():]
+        operands = _SHAPE_RE.findall(paren)
+        if operands:
+            nbytes = sum(_shape_bytes(d, s) for d, s in operands)
+        else:  # fall back to output size
+            nbytes = _shape_bytes(*shapes[0])
+        rec = out.setdefault(op, {"count": 0, "operand_bytes": 0.0})
+        rec["count"] += 1
+        rec["operand_bytes"] += nbytes
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Analytic FLOP corrections for while-loop (scan) sequence recurrences
+# ---------------------------------------------------------------------------
+
+def loop_flop_correction(cfg: ArchConfig, shape: ShapeConfig,
+                         plan: MeshPlan, mamba_chunk: int = 256) -> float:
+    """Per-device FLOPs that XLA's cost analysis misses because they sit in
+    while-loop bodies executed `trips` times but counted once.
+
+    Applies to: mamba chunk loops when n_chunks > 32 (prefill_32k+),
+    sLSTM per-timestep scans (always), for train (×3: fwd+bwd) and prefill
+    (×1).  Decode steps have no sequence loops.  Estimates assume the inner
+    (d_inner) dim is TP-sharded and tokens are DP-sharded.
+    """
+    if shape.kind == "decode":
+        return 0.0
+    mult = 3.0 if shape.kind == "train" else 1.0
+    S = shape.seq_len
+    if cfg.family == "audio":
+        S = S // 2
+    elif cfg.family == "vlm":
+        pass
+    B_local = max(shape.global_batch // plan.dp_size, 1)
+    tp = plan.tp_size
+    total = 0.0
+    kinds = [cfg.block_pattern[i % len(cfg.block_pattern)]
+             for i in range(cfg.n_layers)]
+
+    UNROLL_LIMIT = 8                           # must match ssm.py/xlstm.py
+    n_mamba = kinds.count("mamba")
+    if n_mamba:
+        n_chunks = S // min(mamba_chunk, S)
+        if n_chunks > UNROLL_LIMIT:            # scan mode: body counted once
+            di = cfg.d_inner // tp if cfg.d_inner % tp == 0 else cfg.d_inner
+            N, R = cfg.ssm_state_dim, cfg.dt_rank
+            per_tok = (2 * di * (R + 2 * N) + 2 * R * di
+                       + di * N * (4 * math.log2(min(mamba_chunk, S)) + 8))
+            missed = per_tok * S * B_local * (n_chunks - 1) / n_chunks
+            total += missed * n_mamba * mult
+
+    n_mlstm = kinds.count("mlstm")
+    if n_mlstm:
+        chunk = min(256, S)
+        n_chunks = S // chunk
+        if n_chunks > UNROLL_LIMIT:
+            du = int(cfg.d_model * cfg.mlstm_proj_factor)
+            du_l = du // tp if du % tp == 0 else du
+            dk = du // cfg.n_heads
+            per_tok = (6 * dk * dk            # blockwise qkv
+                       + 4 * chunk * dk       # scores + weighted V
+                       + 6 * dk)              # gates/normalizer
+            missed = per_tok * du_l / dk * S * B_local \
+                * (n_chunks - 1) / n_chunks / cfg.n_heads
+            # simpler: per-token ≈ (qkv + intra-chunk quadratic) × heads
+            per_tok2 = (6 * dk * dk + 4 * chunk * dk) * cfg.n_heads / tp
+            missed = per_tok2 * S * B_local * (n_chunks - 1) / n_chunks
+            total += missed * n_mlstm * mult
+
+    n_slstm = kinds.count("slstm")
+    if n_slstm:
+        D = cfg.d_model
+        dh = D // cfg.n_heads
+        per_tok = 8 * D * D + 8 * D * dh      # W gates + blockdiag recurrence
+        per_tok /= tp if D % tp == 0 else 1   # embed dim sharded via FSDP? no:
+        # sLSTM W is sharded on embed (data) only under FSDP; compute is
+        # replicated over model — keep unsharded estimate (conservative).
+        per_tok = 8 * D * D + 8 * D * dh
+        missed = per_tok * (S - 1) * B_local
+        total += missed * n_slstm * mult
+    return total
+
+
+def estimate_tpu_peak(cfg: ArchConfig, shape: ShapeConfig, plan: MeshPlan,
+                      arg_bytes_per_dev: int) -> Dict[str, float]:
+    """Analytic per-device peak-HBM estimate for the TPU target.
+
+    The CPU-backend ``memory_analysis()`` is recorded raw but overstates the
+    TPU peak: XLA:CPU materialises fusible elementwise chains and does not
+    reuse buffers across unrolled layers (measured ~6.8 GiB/layer where the
+    fusion-reuse-correct working set is ~2 GiB — see EXPERIMENTS.md §Dry-run
+    caveats).  This estimator composes: arguments (params/opt/cache, exact)
+    + gradients + remat-saved layer boundaries + the largest single-layer
+    transient + logits buffers.
+    """
+    tp, dp = plan.tp_size, plan.dp_size
+    D, Vp = cfg.d_model, cfg.padded_vocab()
+    B_l = max(shape.global_batch // dp, 1)
+    S = shape.seq_len
+    if cfg.family == "audio":
+        S = S // 2
+    S_l = S // tp if (plan.sp and S % tp == 0) else S
+    bpe = 2  # bf16
+    est: Dict[str, float] = {"arguments": float(arg_bytes_per_dev)}
+    if shape.kind == "train":
+        n_params_dev = cfg.param_count() * bpe / tp / (dp if plan.fsdp else 1)
+        est["grads"] = n_params_dev
+        est["remat_boundaries"] = cfg.n_layers * B_l * S_l * D * bpe
+        # largest layer transient: attention scores (2× bf16 S×T buffers)
+        kv, g = cfg.n_kv_heads, max(cfg.q_rep, 1)
+        att = 2 * B_l * kv * g * S_l * S * bpe if "attn" in cfg.block_pattern \
+            else 0
+        mlp = 3 * B_l * S_l * max(cfg.d_ff, cfg.d_inner) * bpe / \
+            max(tp if max(cfg.d_ff, cfg.d_inner) % tp == 0 else 1, 1)
+        est["layer_transient"] = float(max(att, mlp))
+        v_l = Vp // tp if Vp % tp == 0 else Vp
+        est["logits"] = 2.0 * B_l * S_l * v_l * 4
+    elif shape.kind == "prefill":
+        kv = cfg.n_kv_heads
+        g = max(cfg.q_rep, 1)
+        S_loc = S // tp
+        chunk = min(256, S_loc)
+        est["layer_transient"] = float(
+            2 * B_l * kv * g * chunk * S * bpe      # chunked scores+weights
+            + 2 * B_l * S * kv * cfg.dh * bpe * 2)  # gathered K/V
+        est["activations"] = float(B_l * S_loc * D * bpe * 4)
+    else:
+        est["decode_transient"] = float(
+            4 * B_l * max(cfg.n_heads * cfg.dh, cfg.d_ff // max(tp, 1)) * bpe)
+    est["total"] = float(sum(est.values()))
+    # analytic HBM traffic (per step, per device): params/opt streams +
+    # activation streams; the raw CPU "bytes accessed" counts every operand
+    # of every unfused op and overstates TPU HBM traffic ~10×.
+    if shape.kind == "train":
+        opt_stream = 10.0 * est.get("grads", 0.0) * 2     # f32 m,v r/w + p
+        act_stream = (est.get("remat_boundaries", 0.0) * 6      # fwd+bwd+remat
+                      + est.get("layer_transient", 0.0) * 4 * cfg.n_layers
+                      + est.get("logits", 0.0) * 3)
+        est["hbm_traffic"] = float(est["arguments"] * 3 + opt_stream
+                                   + act_stream)
+    elif shape.kind == "prefill":
+        est["hbm_traffic"] = float(
+            est["arguments"] * 2
+            + est.get("layer_transient", 0.0) * 2 * cfg.n_layers
+            + est.get("activations", 0.0) * 2 * cfg.n_layers)
+    else:
+        est["hbm_traffic"] = float(est["arguments"] * 2)  # weights + cache
+    return est
+
+
+# ---------------------------------------------------------------------------
+# Cell runner
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             plan_overrides: Optional[Dict[str, Any]] = None,
+             keep_hlo: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    reason = skip_reason(cfg, shape_name)
+    if reason:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    plan = make_plan(cfg, mesh, shape.kind)
+    if plan_overrides:
+        import dataclasses as _dc
+        plan = _dc.replace(plan, **plan_overrides)
+
+    args, info = input_specs(cfg, shape, plan)
+    if shape.kind == "train":
+        step = make_train_step(cfg, plan)
+        donate = (0, 1)
+    elif shape.kind == "prefill":
+        step = make_prefill_step(cfg, plan, seq_len=shape.seq_len)
+        donate = (2,)
+    else:
+        step = make_decode_step(cfg, plan)
+        donate = (2,)
+
+    t0 = time.time()
+    with mesh:
+        lowered = jax.jit(step, donate_argnums=donate).lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    ca = dict(ca) if ca else {}
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    colls = parse_collectives(hlo)
+    n_chips = int(math.prod(mesh.devices.shape))
+
+    flops_dev = float(ca.get("flops", 0.0))
+    correction = loop_flop_correction(cfg, shape, plan)
+    flops_dev_corr = flops_dev + correction
+    bytes_dev = float(ca.get("bytes accessed", 0.0))
+    coll_bytes_dev = sum(v["operand_bytes"] for v in colls.values())
+
+    model_flops = model_flops_global(cfg, shape)
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "status": "ok",
+        "n_chips": n_chips,
+        "plan": {"fsdp": plan.fsdp, "sp": plan.sp, "remat": plan.remat,
+                 "dp_axes": list(plan.dp_axes)},
+        "lower_s": round(t1 - t0, 2), "compile_s": round(t2 - t1, 2),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_per_device": ma.argument_size_in_bytes
+            + ma.temp_size_in_bytes + ma.output_size_in_bytes
+            - ma.alias_size_in_bytes,
+        },
+        "tpu_peak_estimate": estimate_tpu_peak(
+            cfg, shape, plan, ma.argument_size_in_bytes),
+        "cost": {
+            "flops_per_device": flops_dev,
+            "loop_correction_flops": correction,
+            "flops_per_device_corrected": flops_dev_corr,
+            "bytes_accessed_per_device": bytes_dev,
+        },
+        "collectives": colls,
+        "collective_bytes_per_device": coll_bytes_dev,
+        "roofline": {
+            "compute_s": flops_dev_corr / PEAK_FLOPS,
+            "memory_s": bytes_dev / HBM_BW,
+            "collective_s": coll_bytes_dev / ICI_BW,
+        },
+        "roofline_adjusted": {
+            "compute_s": flops_dev_corr / PEAK_FLOPS,
+            "memory_s": 0.0,   # filled below from tpu_peak_estimate
+            "collective_s": coll_bytes_dev / ICI_BW,
+        },
+        "model_flops_global": model_flops,
+        "model_flops_per_device": model_flops / n_chips,
+        "useful_flops_ratio": (model_flops / n_chips) / flops_dev_corr
+        if flops_dev_corr else 0.0,
+        "info": info,
+    }
+    result["roofline_adjusted"]["memory_s"] = \
+        result["tpu_peak_estimate"]["hbm_traffic"] / HBM_BW
+    r = result["roofline"]
+    result["dominant_term"] = max(r, key=lambda k: r[k])
+    ra = result["roofline_adjusted"]
+    result["dominant_term_adjusted"] = max(ra, key=lambda k: ra[k])
+    bound = max(ra.values())
+    result["roofline_fraction"] = (
+        (result["model_flops_per_device"] / PEAK_FLOPS) / bound
+        if bound > 0 else 0.0)
+    if keep_hlo:
+        result["hlo_len"] = len(hlo)
+    return result
+
+
+def model_flops_global(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (fwd-only)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    # decode: one token per sequence
+    return 2.0 * n_active * shape.global_batch
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default=None)
+    p.add_argument("--shape", default=None)
+    p.add_argument("--mesh", default="single", choices=["single", "multi"])
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="dryrun_artifacts")
+    p.add_argument("--skip-existing", action="store_true")
+    p.add_argument("--optimize", default=None,
+                   help="comma list of hillclimb levers: ffn=gather_weights,"
+                        "moe_gather_seq,attn=tp_chunked,sp=off,fsdp=on,"
+                        "attn_q_chunk=<n> (artifacts get an __opt-... tag)")
+    args = p.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    plan_overrides: Optional[Dict[str, Any]] = None
+    opt_tag = ""
+    if args.optimize:
+        extra: Dict[str, Any] = {}
+        plan_overrides = {}
+        for item in args.optimize.split(","):
+            if item == "moe_gather_seq":
+                extra["moe_gather_seq"] = True
+            elif item == "sp=off":
+                plan_overrides["sp"] = False
+            elif item == "sp=on":
+                plan_overrides["sp"] = True
+            elif item == "fsdp=off":
+                plan_overrides["fsdp"] = False
+            elif item == "fsdp=on":
+                plan_overrides["fsdp"] = True
+            elif "=" in item:
+                k, v = item.split("=", 1)
+                extra[k] = int(v) if v.isdigit() else v
+        if extra:
+            plan_overrides["extra"] = extra
+        opt_tag = "__opt-" + args.optimize.replace("=", "").replace(",", "+")
+
+    cells = []
+    if args.all:
+        for arch in ARCH_NAMES:
+            for shape_name in SHAPES:
+                for mesh_kind in ("single", "multi"):
+                    cells.append((arch, shape_name, mesh_kind))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, args.shape, args.mesh)]
+
+    for arch, shape_name, mesh_kind in cells:
+        tag = (f"{arch}__{shape_name}__{mesh_kind}{opt_tag}").replace("/",
+                                                                      "_")
+        path = os.path.join(args.out, tag + ".json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[skip existing] {tag}")
+            continue
+        print(f"[dryrun] {tag} ...", flush=True)
+        try:
+            res = run_cell(arch, shape_name, mesh_kind,
+                           plan_overrides=plan_overrides)
+        except Exception as e:  # noqa: BLE001 — record failures as data
+            res = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()}
+        with open(path, "w") as f:
+            json.dump(res, f, indent=1)
+        status = res["status"]
+        extra = ""
+        if status == "ok":
+            mem = res["memory"]["peak_bytes_per_device"] / 2**30
+            extra = (f" compile={res['compile_s']}s peak={mem:.2f}GiB/dev "
+                     f"dominant={res['dominant_term']}")
+        elif status == "error":
+            extra = " " + res["error"][:160]
+        print(f"[{status}] {tag}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

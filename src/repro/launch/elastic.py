@@ -1,0 +1,58 @@
+"""Elastic re-meshing: recompute the distribution plan after losing nodes.
+
+At 1000+ node scale, pod-level failures must not kill the job: the
+supervisor shrinks the data-parallel extent to the surviving slice, restores
+from the latest FDB checkpoint (whose shards are replica-independent
+objects), and continues with a rescaled global batch.  This module computes
+the new mesh/plan and the shard reassignment; on real hardware the runtime
+re-initialises jax.distributed with the survivor list.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+from repro.models.config import ArchConfig
+from repro.sharding.partition import MeshPlan, make_plan
+
+
+def shrink_mesh(mesh: Mesh, lost_data_rows: int) -> Mesh:
+    """Drop ``lost_data_rows`` rows of the data axis (failed hosts)."""
+    devs = mesh.devices
+    axes = mesh.axis_names
+    d_idx = axes.index("data")
+    keep = devs.shape[d_idx] - lost_data_rows
+    if keep < 1:
+        raise RuntimeError("cannot shrink below one data row")
+    slicer = [slice(None)] * devs.ndim
+    slicer[d_idx] = slice(0, keep)
+    return Mesh(devs[tuple(slicer)], axes)
+
+
+def elastic_replan(cfg: ArchConfig, mesh: Mesh, lost_data_rows: int,
+                   global_batch: int, kind: str = "train"
+                   ) -> Tuple[MeshPlan, int]:
+    """New plan + rescaled global batch after failures.
+
+    Batch is scaled to keep per-device batch constant (optimizer LR should
+    be rescaled by the caller if it keeps the original schedule)."""
+    new_mesh = shrink_mesh(mesh, lost_data_rows)
+    plan = make_plan(cfg, new_mesh, kind)
+    old_dp = int(np.prod([mesh.shape[a] for a in plan.dp_axes]))
+    new_dp = plan.dp_size
+    new_batch = max(global_batch * new_dp // old_dp, new_dp)
+    return plan, new_batch
+
+
+def reassign_data_shards(n_shards: int, survivors: List[int]
+                         ) -> Dict[int, List[int]]:
+    """Deterministically spread orphaned data shards over survivors."""
+    out: Dict[int, List[int]] = {s: [] for s in survivors}
+    for shard in range(n_shards):
+        out[survivors[shard % len(survivors)]].append(shard)
+    return out

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A function, not a module-level constant: importing this module never touches
+jax device state (device count is locked on first jax init)."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices but only {len(devices)} present; "
+            "the dry-run launcher must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before any "
+            "jax import (see launch/dryrun.py)")
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    dev_array = np.asarray(devices[:n]).reshape(shape)
+    return jax.sharding.Mesh(dev_array, axes)
+
+
+def make_local_mesh():
+    """1×1 mesh over the single CPU device (smoke tests / examples)."""
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:1]).reshape(1, 1),
+                             ("data", "model"))

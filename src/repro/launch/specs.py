@@ -1,0 +1,101 @@
+"""input_specs(): ShapeDtypeStruct stand-ins (+ shardings) for every model
+input of every (arch × shape) cell — no device allocation (thesis-style
+dry-run probes)."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.shapes import ShapeConfig
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.sharding.partition import (MeshPlan, make_param_shardings,
+                                      shard_cache)
+from repro.train.optimizer import adamw_init
+
+
+def _sds(shape, dtype, mesh, spec) -> jax.ShapeDtypeStruct:
+    return jax.ShapeDtypeStruct(shape, dtype,
+                                sharding=NamedSharding(mesh, spec))
+
+
+def _with_shardings(abstract_tree, sharding_tree):
+    return jax.tree.map(
+        lambda a, s: jax.ShapeDtypeStruct(a.shape, a.dtype, sharding=s),
+        abstract_tree, sharding_tree)
+
+
+def batch_specs(cfg: ArchConfig, shape: ShapeConfig, plan: MeshPlan,
+                param_dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """Training/prefill batch inputs."""
+    mesh = plan.mesh
+    B = shape.global_batch
+    dp = plan.dp_axes if B % plan.dp_size == 0 else None
+    S = shape.seq_len
+    batch: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        # enc-dec split: half the budget to stub frames, half to decoder
+        s_dec, s_frames = S // 2, S // 2
+        batch["tokens"] = _sds((B, s_dec), jnp.int32, mesh, P(dp, None))
+        batch["labels"] = _sds((B, s_dec), jnp.int32, mesh, P(dp, None))
+        batch["frames"] = _sds((B, s_frames, cfg.d_model), param_dtype, mesh,
+                               P(dp, None, None))
+    elif cfg.family == "vlm":
+        s_text = S - cfg.n_patches
+        batch["tokens"] = _sds((B, s_text), jnp.int32, mesh, P(dp, None))
+        batch["labels"] = _sds((B, s_text), jnp.int32, mesh, P(dp, None))
+        batch["patches"] = _sds((B, cfg.n_patches, cfg.d_model), param_dtype,
+                                mesh, P(dp, None, None))
+    else:
+        batch["tokens"] = _sds((B, S), jnp.int32, mesh, P(dp, None))
+        batch["labels"] = _sds((B, S), jnp.int32, mesh, P(dp, None))
+    return batch
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig, plan: MeshPlan,
+                param_dtype=jnp.bfloat16, cache_dtype=jnp.bfloat16
+                ) -> Tuple[Tuple, Dict[str, Any]]:
+    """Returns (args for the step function, info dict)."""
+    mesh = plan.mesh
+    pshard = make_param_shardings(cfg, plan)
+    params = _with_shardings(lm.abstract_params(cfg, param_dtype), pshard)
+    info: Dict[str, Any] = {"param_bytes_global": sum(
+        a.size * a.dtype.itemsize for a in jax.tree.leaves(params))}
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(adamw_init, params)
+        opt_shardings = {
+            "m": pshard, "v": pshard,
+            "step": NamedSharding(mesh, P()),
+        }
+        opt = _with_shardings(opt_abs, opt_shardings)
+        batch = batch_specs(cfg, shape, plan, param_dtype)
+        return (params, opt, batch), info
+
+    B = shape.global_batch
+    src_len = 0
+    if cfg.family == "audio":
+        src_len = max(shape.seq_len // 4, 128)
+    cache_len = shape.seq_len
+    if cfg.family == "audio" and shape.kind == "prefill":
+        cache_len = shape.seq_len // 2
+    cache_abs = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, cache_len, cache_dtype, src_len))
+    cache = _with_shardings(cache_abs, shard_cache(cfg, plan, cache_abs))
+    info["cache_bytes_global"] = sum(
+        a.size * a.dtype.itemsize for a in jax.tree.leaves(cache))
+
+    if shape.kind == "prefill":
+        batch = batch_specs(cfg, shape, plan, param_dtype)
+        batch.pop("labels", None)
+        return (params, batch, cache), info
+
+    # decode: one new token against the cache
+    dp = plan.dp_axes if B % plan.dp_size == 0 else None
+    token = _sds((B, 1), jnp.int32, mesh, P(dp, None))
+    pos = jax.ShapeDtypeStruct((), jnp.int32,
+                               sharding=NamedSharding(mesh, P()))
+    return (params, token, cache, pos), info

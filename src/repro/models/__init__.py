@@ -1,0 +1,4 @@
+from .config import ArchConfig
+from .registry import build_model, Model
+
+__all__ = ["ArchConfig", "build_model", "Model"]

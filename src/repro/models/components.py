@@ -1,0 +1,273 @@
+"""Shared model components: norms, RoPE, GQA attention, MLP, MoE.
+
+Everything is a pure function over explicit param dicts; all dims are
+einsum-named so GSPMD can shard them from the NamedShardings installed by
+``repro.sharding.partition``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dtype) * scale
+
+
+def layer_norm(x: Array, scale: Array, bias: Array, eps: float = 1e-5) -> Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(dtype) * scale + bias
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(positions: Array, dh: int, theta: float) -> Tuple[Array, Array]:
+    """positions: (...,) int32 → (cos, sin) of shape (..., dh/2)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: Array, cos: Array, sin: Array) -> Array:
+    """x: (B, S, H, Dh); cos/sin: (B, S, Dh/2) or (S, Dh/2)."""
+    dtype = x.dtype
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    if cos.ndim == 2:                   # (S, Dh/2) → (1, S, 1, Dh/2)
+        cos, sin = cos[None, :, None, :], sin[None, :, None, :]
+    elif cos.ndim == 3:                 # (B, S, Dh/2) → (B, S, 1, Dh/2)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA) — full-sequence (train / prefill) and cached decode
+# ---------------------------------------------------------------------------
+
+def qkv_project(x: Array, p: Dict[str, Array], cfg) -> Tuple[Array, Array, Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return q, k, v
+
+
+def gqa_scores_softmax_out(q: Array, k: Array, v: Array, causal: bool,
+                           q_offset: int = 0) -> Array:
+    """q: (B,S,QH,Dh); k,v: (B,T,KV,Dh) → (B,S,QH,Dh).
+
+    GQA grouping: QH = KV * G; scores in f32 with online-safe softmax.
+    """
+    B, S, QH, Dh = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    G = QH // KV
+    qg = q.reshape(B, S, KV, G, Dh)
+    # scores materialise in the input dtype (bf16 on TPU) — the f32 softmax
+    # math below fuses into the reduction, halving the S×T working set.
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k) / math.sqrt(Dh)
+    if causal:
+        qpos = jnp.arange(S) + q_offset
+        kpos = jnp.arange(T)
+        mask = kpos[None, :] <= qpos[:, None]          # (S, T)
+        scores = jnp.where(mask[None, None, None], scores,
+                           jnp.asarray(-jnp.inf, scores.dtype))
+    # softmax with exp recomputation: the only materialised S×T buffers are
+    # the bf16 scores and bf16 weights (f32 chains fuse into the reductions)
+    m = jnp.maximum(jnp.max(scores.astype(jnp.float32), axis=-1,
+                            keepdims=True), -1e30)
+    l = jnp.sum(jnp.exp(scores.astype(jnp.float32) - m), axis=-1,
+                keepdims=True)
+    w = (jnp.exp(scores.astype(jnp.float32) - m) / l).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, QH, Dh)
+
+
+def attention(x: Array, p: Dict[str, Array], cfg, causal: bool = True,
+              positions: Optional[Array] = None, attn_impl=None) -> Array:
+    """Full-sequence self attention (train / prefill).
+
+    ``attn_impl(q, k, v, causal)`` overrides the score computation (e.g. the
+    shard_map sequence-parallel chunked path for 32k prefill)."""
+    B, S, _ = x.shape
+    q, k, v = qkv_project(x, p, cfg)
+    if positions is None:
+        positions = jnp.arange(S)
+    cos, sin = rope_freqs(positions, cfg.dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if attn_impl is not None:
+        out = attn_impl(q, k, v, causal=causal)
+    else:
+        out = gqa_scores_softmax_out(q, k, v, causal=causal)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_decode(x: Array, p: Dict[str, Array], cfg, cache_k: Array,
+                     cache_v: Array, pos: Array
+                     ) -> Tuple[Array, Array, Array]:
+    """One-token decode against a KV cache.
+
+    x: (B, 1, D); cache_k/v: (B, T, KV, Dh); pos: scalar int32 (current len).
+    Returns (out (B,1,D), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    q, k, v = qkv_project(x, p, cfg)
+    posv = jnp.full((B, 1), pos, dtype=jnp.int32)
+    cos, sin = rope_freqs(posv, cfg.dh, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), pos, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), pos, axis=1)
+    T = cache_k.shape[1]
+    # mask out cache slots beyond pos
+    valid = jnp.arange(T) <= pos                         # (T,)
+    KV, G, Dh = cfg.n_kv_heads, cfg.q_rep, cfg.dh
+    qg = q.reshape(B, 1, KV, G, Dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, cache_k).astype(jnp.float32)
+    scores = scores / math.sqrt(Dh)
+    scores = jnp.where(valid[None, None, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(cache_v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, cache_v).reshape(B, 1, KV * G * Dh)
+    out = out.reshape(B, 1, KV * G, Dh)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"]), cache_k, cache_v
+
+
+def cross_attention(x: Array, p: Dict[str, Array], cfg, enc_k: Array,
+                    enc_v: Array) -> Array:
+    """Decoder cross-attention against precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    out = gqa_scores_softmax_out(q, enc_k, enc_v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU for llama-family; GELU for whisper)
+# ---------------------------------------------------------------------------
+
+def _ffn_seq_constraint(t: Array) -> Array:
+    """'gather_weights' mode: keep FFN intermediates sequence-sharded so
+    GSPMD gathers the weight matrices (batch-independent bytes) instead of
+    the (B,S,·) activations — §Perf iteration B."""
+    from repro.sharding import context as shctx
+    ctx = shctx.current()
+    if ctx is None or ctx.ffn != "gather_weights":
+        return t
+    from jax.sharding import PartitionSpec as P
+    tp = ctx.mesh.shape["model"]
+    if t.shape[1] % tp != 0:
+        return t
+    return shctx.constrain(t, P(ctx.dp(t.shape[0]), "model", None))
+
+
+def swiglu_mlp(x: Array, p: Dict[str, Array]) -> Array:
+    g = _ffn_seq_constraint(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+    u = _ffn_seq_constraint(jnp.einsum("bsd,df->bsf", x, p["w_up"]))
+    out = jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, p["w_down"])
+    return _ffn_seq_constraint(out)
+
+
+def gelu_mlp(x: Array, p: Dict[str, Array]) -> Array:
+    h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_up"]) + p["b_up"])
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"]) + p["b_down"]
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts — grouped one-hot dispatch (GShard-style) baseline.
+#
+# Tokens are grouped along the sequence axis; per group, top-k experts are
+# selected and tokens are placed into per-expert capacity slots via one-hot
+# dispatch/combine einsums.  E is sharded over the `model` mesh axis, so the
+# expert FFN einsums are expert-parallel; the combine einsum contracts E and
+# GSPMD inserts the all-reduce.  (The sort-based dispatch that removes the
+# one-hot FLOPs is a hillclimb variant in repro.sharding.moe_opt.)
+# ---------------------------------------------------------------------------
+
+def moe_dispatch_combine(probs: Array, k: int, capacity: int
+                         ) -> Tuple[Array, Array]:
+    """probs: (B, G, Sg, E) router probabilities.
+
+    Returns (dispatch (B,G,Sg,E,C) bool-ish, combine (B,G,Sg,E,C) weights).
+    """
+    E = probs.shape[-1]
+    gate, idx = jax.lax.top_k(probs, k)                  # (B,G,Sg,k)
+    gate = gate / (jnp.sum(gate, axis=-1, keepdims=True) + 1e-9)
+    sel = jax.nn.one_hot(idx, E, dtype=probs.dtype)      # (B,G,Sg,k,E)
+    # Priority: earlier tokens (and lower k-slot) win capacity.
+    B, G, Sg, _, _ = sel.shape
+    flat = sel.reshape(B, G, Sg * k, E)
+    pos = jnp.cumsum(flat, axis=2) - flat                # slots before me
+    keep = (pos < capacity) * flat
+    slot = jax.nn.one_hot(pos.astype(jnp.int32), capacity,
+                          dtype=probs.dtype)             # (B,G,Sg*k,E,C)
+    disp_flat = keep[..., None] * slot
+    dispatch = disp_flat.reshape(B, G, Sg, k, E, capacity).sum(axis=3)
+    combine = dispatch * gate.sum(axis=-1)[..., None, None] if k == 1 else None
+    if combine is None:
+        gate_e = jnp.einsum("bgsk,bgske->bgse", gate,
+                            keep.reshape(B, G, Sg, k, E))
+        combine = dispatch * gate_e[..., None]
+    return dispatch, combine
+
+
+def moe_mlp(x: Array, p: Dict[str, Array], cfg) -> Array:
+    """x: (B, S, D) → (B, S, D) through routed experts (+ shared experts)."""
+    from repro.sharding import context as shctx
+    from jax.sharding import PartitionSpec as P
+    B, S, D = x.shape
+    ctx = shctx.current()
+    gather_seq = ctx is not None and ctx.moe_gather_seq
+    if gather_seq:
+        # §Perf iteration A: gather the sequence once around the MoE block —
+        # dispatch runs purely expert-parallel, no S↔E resharding storm.
+        x = shctx.constrain(x, P(ctx.dp(B), None, None))
+    E, kk = cfg.n_experts, cfg.top_k
+    Sg = min(cfg.moe_group_size, S)
+    G = S // Sg
+    capacity = max(1, int(math.ceil(Sg * kk / E * cfg.moe_capacity_factor)))
+    xg = x.reshape(B, G, Sg, D)
+    router = jnp.einsum("bgsd,de->bgse", xg, p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(router, axis=-1)
+    dispatch, combine = moe_dispatch_combine(probs, kk, capacity)
+    dispatch = dispatch.astype(x.dtype)
+    combine = combine.astype(x.dtype)
+    expert_in = jnp.einsum("bgsec,bgsd->ebgcd", dispatch, xg)
+    if gather_seq:
+        expert_in = shctx.constrain(
+            expert_in, P("model", ctx.dp(B), None, None, None))
+    g = jnp.einsum("ebgcd,edf->ebgcf", expert_in, p["w_gate"])
+    u = jnp.einsum("ebgcd,edf->ebgcf", expert_in, p["w_up"])
+    h = jax.nn.silu(g) * u
+    expert_out = jnp.einsum("ebgcf,efd->ebgcd", h, p["w_down"])
+    y = jnp.einsum("bgsec,ebgcd->bgsd", combine, expert_out)
+    y = y.reshape(B, S, D)
+    if gather_seq and S % ctx.mesh.shape["model"] == 0:
+        # hand the result back sequence-sharded (reduce-scatter, not
+        # all-reduce, closes the expert-contraction)
+        y = shctx.constrain(y, P(ctx.dp(B), "model", None))
+    if cfg.n_shared_experts:
+        y = y + swiglu_mlp(x, {"w_gate": p["shared_gate"],
+                               "w_up": p["shared_up"],
+                               "w_down": p["shared_down"]})
+    return y

@@ -1,0 +1,117 @@
+"""Unified architecture configuration for the 10 assigned architectures."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str                 # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+
+    # --- MoE ---------------------------------------------------------------
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    top_k: int = 0
+    moe_every: int = 1          # MoE replaces the MLP every k-th layer
+    moe_capacity_factor: float = 2.0
+    moe_group_size: int = 256   # dispatch grouping along sequence
+
+    # --- block pattern (scan group) -----------------------------------------
+    #: layer kinds within one scanned group, e.g. ("attn",) for dense,
+    #: ("attn",) + ("mamba",)*7 for jamba, ("mlstm",)*7+("slstm",) for xlstm.
+    block_pattern: Tuple[str, ...] = ("attn",)
+
+    # --- attention ----------------------------------------------------------
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    head_dim: int = 0           # 0 => d_model // n_heads
+
+    # --- encoder-decoder (whisper) -------------------------------------------
+    encoder_layers: int = 0     # >0 => enc-dec model with cross attention
+
+    # --- SSM (mamba) -----------------------------------------------------------
+    ssm_state_dim: int = 16
+    ssm_conv_dim: int = 4
+    ssm_expand: int = 2
+    ssm_dt_rank: int = 0        # 0 => ceil(d_model/16)
+
+    # --- xLSTM -------------------------------------------------------------------
+    mlstm_proj_factor: float = 2.0
+    slstm_ff_factor: float = 4.0 / 3.0
+
+    # --- frontend stubs -------------------------------------------------------
+    frontend: str = "none"      # none | audio | vision
+    n_patches: int = 0          # vision stub: patch-embedding count
+
+    # --- numerics / training --------------------------------------------------
+    norm_eps: float = 1e-5
+    tie_embeddings: bool = False
+
+    # ------------------------------------------------------------------------
+    def __post_init__(self) -> None:
+        if self.n_layers % len(self.block_pattern) != 0:
+            raise ValueError(
+                f"{self.name}: n_layers={self.n_layers} not a multiple of "
+                f"block pattern length {len(self.block_pattern)}")
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.block_pattern)
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def q_rep(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def dt_rank(self) -> int:
+        return self.ssm_dt_rank or max(1, math.ceil(self.d_model / 16))
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def is_encdec(self) -> bool:
+        return self.encoder_layers > 0
+
+    @property
+    def supports_long_context(self) -> bool:
+        """True when decode state is O(1)-ish in sequence length (SSM /
+        xLSTM / hybrid) — the long_500k eligibility rule."""
+        return self.family in ("ssm", "hybrid")
+
+    def padded_vocab(self, multiple: int = 128) -> int:
+        return ((self.vocab_size + multiple - 1) // multiple) * multiple
+
+    def layer_kind(self, group_idx: int, j: int) -> str:
+        return self.block_pattern[j]
+
+    def is_moe_layer(self, layer_idx: int) -> bool:
+        if self.n_experts == 0:
+            return False
+        return (layer_idx % self.moe_every) == (self.moe_every - 1)
+
+    # FLOP accounting (MODEL_FLOPS = 6·N_active·D for roofline §g) -----------
+    def param_count(self, padded_vocab: Optional[int] = None) -> int:
+        from . import lm  # avoid cycle
+        return lm.count_params(self, padded_vocab)
+
+    def active_param_count(self, padded_vocab: Optional[int] = None) -> int:
+        from . import lm
+        return lm.count_params(self, padded_vocab, active_only=True)
+
+    def scaled(self, **overrides) -> "ArchConfig":
+        return dataclasses.replace(self, **overrides)

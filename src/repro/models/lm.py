@@ -1,0 +1,530 @@
+"""Parameter definitions and forward passes for all assigned architectures.
+
+Layers are applied through an *unrolled* Python loop (no scan): this keeps
+``compiled.cost_analysis()`` / collective-byte parsing faithful for the
+dry-run roofline (XLA counts while bodies once — measured, see EXPERIMENTS.md)
+and lets heterogeneous patterns (jamba 1:7, xlstm 7:1) stay trivially
+expressible.  Activation rematerialisation wraps each layer in
+``jax.checkpoint`` when requested.
+
+Every parameter carries *logical axis names* used by
+``repro.sharding.partition`` to derive NamedShardings (TP/EP over ``model``,
+FSDP over ``data``, replication fallback on non-divisible dims).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import components as C
+from . import ssm, xlstm
+from .config import ArchConfig
+
+Array = jax.Array
+
+
+class ParamDef:
+    """A parameter leaf: shape + logical axes + init style (tree leaf)."""
+
+    __slots__ = ("shape", "axes", "init", "scale")
+
+    def __init__(self, shape: Tuple[int, ...], axes: Tuple[Optional[str], ...],
+                 init: str = "normal", scale: float = 1.0):
+        assert len(shape) == len(axes), (shape, axes)
+        self.shape = tuple(shape)
+        self.axes = tuple(axes)
+        self.init = init
+        self.scale = scale
+
+    def __repr__(self) -> str:
+        return f"ParamDef({self.shape}, {self.axes}, {self.init})"
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+# ---------------------------------------------------------------------------
+# Parameter trees
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg: ArchConfig, d_in: int) -> Dict[str, ParamDef]:
+    QH, KV, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.dh
+    out = {
+        "wq": ParamDef((d_in, QH, Dh), ("embed", "heads", None)),
+        "wk": ParamDef((d_in, KV, Dh), ("embed", "kv_heads", None)),
+        "wv": ParamDef((d_in, KV, Dh), ("embed", "kv_heads", None)),
+        "wo": ParamDef((QH, Dh, d_in), ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ParamDef((QH, Dh), ("heads", None), "zeros")
+        out["bk"] = ParamDef((KV, Dh), ("kv_heads", None), "zeros")
+        out["bv"] = ParamDef((KV, Dh), ("kv_heads", None), "zeros")
+    return out
+
+
+def _mlp_defs(cfg: ArchConfig, gelu: bool = False) -> Dict[str, ParamDef]:
+    D, F = cfg.d_model, cfg.d_ff
+    if gelu:
+        return {
+            "w_up": ParamDef((D, F), ("embed", "mlp")),
+            "b_up": ParamDef((F,), ("mlp",), "zeros"),
+            "w_down": ParamDef((F, D), ("mlp", "embed")),
+            "b_down": ParamDef((D,), (None,), "zeros"),
+        }
+    return {
+        "w_gate": ParamDef((D, F), ("embed", "mlp")),
+        "w_up": ParamDef((D, F), ("embed", "mlp")),
+        "w_down": ParamDef((F, D), ("mlp", "embed")),
+    }
+
+
+def _moe_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    out = {
+        "router": ParamDef((D, E), ("embed", None)),
+        "w_gate": ParamDef((E, D, F), ("expert", "embed", None)),
+        "w_up": ParamDef((E, D, F), ("expert", "embed", None)),
+        "w_down": ParamDef((E, F, D), ("expert", None, "embed")),
+    }
+    if cfg.n_shared_experts:
+        Fs = cfg.d_ff * cfg.n_shared_experts
+        out.update({
+            "shared_gate": ParamDef((D, Fs), ("embed", "mlp")),
+            "shared_up": ParamDef((D, Fs), ("embed", "mlp")),
+            "shared_down": ParamDef((Fs, D), ("mlp", "embed")),
+        })
+    return out
+
+
+def _mamba_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    D, di, N, K, R = (cfg.d_model, cfg.d_inner, cfg.ssm_state_dim,
+                      cfg.ssm_conv_dim, cfg.dt_rank)
+    return {
+        "in_proj": ParamDef((D, 2 * di), ("embed", "inner")),
+        "conv_w": ParamDef((K, di), (None, "inner")),
+        "conv_b": ParamDef((di,), ("inner",), "zeros"),
+        "x_proj": ParamDef((di, R + 2 * N), ("inner", None)),
+        "dt_proj": ParamDef((R, di), (None, "inner")),
+        "dt_bias": ParamDef((di,), ("inner",), "zeros"),
+        "A_log": ParamDef((di, N), ("inner", None), "a_log"),
+        "D_skip": ParamDef((di,), ("inner",), "ones"),
+        "out_proj": ParamDef((di, D), ("inner", "embed")),
+    }
+
+
+def _mlstm_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    D = cfg.d_model
+    du = int(D * cfg.mlstm_proj_factor)
+    H = cfg.n_heads
+    dk = du // H
+    return {
+        "ln": ParamDef((D,), (None,), "ones"),
+        "up_proj": ParamDef((D, 2 * du), ("embed", "inner")),
+        "wq": ParamDef((H, dk, dk), ("heads", None, None)),
+        "wk": ParamDef((H, dk, dk), ("heads", None, None)),
+        "wv": ParamDef((H, dk, dk), ("heads", None, None)),
+        "wi": ParamDef((du, H), ("inner", "heads")),
+        "wf": ParamDef((du, H), ("inner", "heads")),
+        "bi": ParamDef((H,), (None,), "zeros"),
+        "bf": ParamDef((H,), (None,), "forget_bias"),
+        "out_ln": ParamDef((du,), (None,), "ones"),
+        "down_proj": ParamDef((du, D), ("inner", "embed")),
+    }
+
+
+def _slstm_defs(cfg: ArchConfig) -> Dict[str, ParamDef]:
+    D = cfg.d_model
+    H = cfg.n_heads
+    dh = D // H
+    F = int(math.ceil(cfg.slstm_ff_factor * D / 128) * 128)
+    return {
+        "ln": ParamDef((D,), (None,), "ones"),
+        "w": ParamDef((D, H, dh, 4), ("embed", "heads", None, None)),
+        "r": ParamDef((H, dh, dh, 4), ("heads", None, None, None)),
+        "b": ParamDef((H, dh, 4), ("heads", None, None), "zeros"),
+        "out_proj": ParamDef((D, D), ("embed", "embed2")),
+        "ln2": ParamDef((D,), (None,), "ones"),
+        "ff_gate": ParamDef((D, F), ("embed", "mlp")),
+        "ff_up": ParamDef((D, F), ("embed", "mlp")),
+        "ff_down": ParamDef((F, D), ("mlp", "embed")),
+    }
+
+
+def _layer_defs(cfg: ArchConfig, layer_idx: int, kind: str,
+                decoder: bool = True) -> Dict[str, Any]:
+    D = cfg.d_model
+    gelu = cfg.family == "audio"
+    ln = lambda: ParamDef((D,), (None,), "ones")  # noqa: E731
+    if kind in ("mlstm",):
+        return {"kind": kind, **_mlstm_defs(cfg)}
+    if kind in ("slstm",):
+        return {"kind": kind, **_slstm_defs(cfg)}
+    out: Dict[str, Any] = {"kind": kind, "ln1": ln(), "ln2": ln()}
+    if gelu:
+        out["ln1_b"] = ParamDef((D,), (None,), "zeros")
+        out["ln2_b"] = ParamDef((D,), (None,), "zeros")
+    if kind == "attn":
+        out["attn"] = _attn_defs(cfg, D)
+    elif kind == "mamba":
+        out["mamba"] = _mamba_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if decoder and cfg.is_encdec:
+        out["ln_cross"] = ln()
+        if gelu:
+            out["ln_cross_b"] = ParamDef((D,), (None,), "zeros")
+        out["cross"] = _attn_defs(cfg, D)
+    if cfg.is_moe_layer(layer_idx):
+        out["moe"] = _moe_defs(cfg)
+    else:
+        out["mlp"] = _mlp_defs(cfg, gelu=gelu)
+    return out
+
+
+def param_defs(cfg: ArchConfig) -> Dict[str, Any]:
+    Vp, D = cfg.padded_vocab(), cfg.d_model
+    tree: Dict[str, Any] = {
+        "embed": ParamDef((Vp, D), ("vocab", "embed"), scale=1.0),
+        "final_ln": ParamDef((D,), (None,), "ones"),
+        "lm_head": ParamDef((D, Vp), ("embed", "vocab")),
+        "layers": [
+            _layer_defs(cfg, i, cfg.block_pattern[i % len(cfg.block_pattern)])
+            for i in range(cfg.n_layers)
+        ],
+    }
+    if cfg.family == "audio":
+        tree["final_ln_b"] = ParamDef((D,), (None,), "zeros")
+    if cfg.is_encdec:
+        tree["enc_layers"] = [
+            _layer_defs(cfg, i, "attn", decoder=False)
+            for i in range(cfg.encoder_layers)
+        ]
+        tree["enc_final_ln"] = ParamDef((D,), (None,), "ones")
+        if cfg.family == "audio":
+            tree["enc_final_ln_b"] = ParamDef((D,), (None,), "zeros")
+    return tree
+
+
+def _strip_kind(tree):
+    if isinstance(tree, dict):
+        return {k: _strip_kind(v) for k, v in tree.items() if k != "kind"}
+    if isinstance(tree, list):
+        return [_strip_kind(v) for v in tree]
+    return tree
+
+
+def init_params(cfg: ArchConfig, key: Array, dtype=jnp.float32):
+    defs = _strip_kind(param_defs(cfg))
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(key, len(leaves))
+
+    def make(d: ParamDef, k):
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, dtype)
+        if d.init == "forget_bias":
+            return jnp.full(d.shape, 3.0, dtype)
+        if d.init == "a_log":
+            n = d.shape[-1]
+            a = jnp.tile(jnp.log(jnp.arange(1, n + 1, dtype=jnp.float32)),
+                         d.shape[:-1] + (1,))
+            return a.astype(dtype)
+        std = d.scale * 0.02
+        return (jax.random.normal(k, d.shape, jnp.float32) * std).astype(dtype)
+
+    return treedef.unflatten([make(d, k) for d, k in zip(leaves, keys)])
+
+
+def abstract_params(cfg: ArchConfig, dtype=jnp.bfloat16):
+    defs = _strip_kind(param_defs(cfg))
+    return jax.tree.map(lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs,
+                        is_leaf=_is_def)
+
+
+def param_logical_axes(cfg: ArchConfig):
+    defs = _strip_kind(param_defs(cfg))
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)
+
+
+def count_params(cfg: ArchConfig, padded_vocab: Optional[int] = None,
+                 active_only: bool = False) -> int:
+    defs = param_defs(cfg)
+
+    def n_of(v) -> int:
+        return sum(math.prod(d.shape)
+                   for d in jax.tree.leaves(_strip_kind(v), is_leaf=_is_def)
+                   if _is_def(d))
+
+    total = 0
+    all_layers = list(defs["layers"]) + list(defs.get("enc_layers", []))
+    for layer in all_layers:
+        for k, v in layer.items():
+            if k == "kind":
+                continue
+            n = n_of(v)
+            if active_only and k == "moe":
+                routed = sum(math.prod(v[key].shape)
+                             for key in ("w_gate", "w_up", "w_down"))
+                n = n - routed + routed * cfg.top_k // max(cfg.n_experts, 1)
+            total += n
+    for k, v in defs.items():
+        if k in ("layers", "enc_layers"):
+            continue
+        total += n_of(v)
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+def _norm(cfg, x, scale, bias=None):
+    if cfg.family == "audio":
+        return C.layer_norm(x, scale, bias, cfg.norm_eps)
+    return C.rms_norm(x, scale, cfg.norm_eps)
+
+
+def _ffn(cfg, layer, x):
+    h = _norm(cfg, x, layer["ln2"], layer.get("ln2_b"))
+    if "moe" in layer:
+        return x + C.moe_mlp(h, layer["moe"], cfg)
+    if cfg.family == "audio":
+        return x + C.gelu_mlp(h, layer["mlp"])
+    return x + C.swiglu_mlp(h, layer["mlp"])
+
+
+def apply_layer(cfg: ArchConfig, layer: Dict[str, Any], kind: str, x: Array,
+                enc_out: Optional[Array] = None, causal: bool = True,
+                mamba_chunk: int = 256, attn_impl=None) -> Array:
+    if kind == "mlstm":
+        return xlstm.mlstm_block(x, layer, cfg, chunk=mamba_chunk)
+    if kind == "slstm":
+        return xlstm.slstm_block(x, layer, cfg)
+    h = _norm(cfg, x, layer["ln1"], layer.get("ln1_b"))
+    if kind == "attn":
+        x = x + C.attention(h, layer["attn"], cfg, causal=causal,
+                            attn_impl=attn_impl)
+    elif kind == "mamba":
+        x = x + ssm.mamba_block(h, layer["mamba"], cfg, chunk=mamba_chunk)
+    if enc_out is not None and "cross" in layer:
+        hc = _norm(cfg, x, layer["ln_cross"], layer.get("ln_cross_b"))
+        ek = jnp.einsum("btd,dhk->bthk", enc_out, layer["cross"]["wk"])
+        ev = jnp.einsum("btd,dhk->bthk", enc_out, layer["cross"]["wv"])
+        x = x + C.cross_attention(hc, layer["cross"], cfg, ek, ev)
+    return _ffn(cfg, layer, x)
+
+
+def encode(cfg: ArchConfig, params, frames: Array,
+           attn_impl=None) -> Array:
+    """Encoder stack over stub frame embeddings (B, T, D)."""
+    x = frames
+    for layer in params["enc_layers"]:
+        x = apply_layer(cfg, layer, "attn", x, causal=False,
+                        attn_impl=attn_impl)
+    return _norm(cfg, x, params["enc_final_ln"], params.get("enc_final_ln_b"))
+
+
+def forward(cfg: ArchConfig, params, tokens: Optional[Array] = None,
+            prefix_embeds: Optional[Array] = None,
+            encoder_frames: Optional[Array] = None,
+            remat: bool = False, mamba_chunk: int = 256,
+            constrain=None) -> Array:
+    """Full-sequence forward → logits (B, S, Vp).
+
+    ``prefix_embeds``: VLM stub patch embeddings prepended to token embeds.
+    ``encoder_frames``: audio stub frame embeddings for enc-dec models.
+    ``constrain``: optional fn applied to the residual stream at layer
+    boundaries (sequence-parallel sharding constraints).
+    """
+    parts = []
+    if prefix_embeds is not None:
+        parts.append(prefix_embeds)
+    if tokens is not None:
+        parts.append(params["embed"][tokens])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    enc_out = None
+    if cfg.is_encdec:
+        assert encoder_frames is not None
+        enc_out = encode(cfg, params, encoder_frames)
+
+    def run_layer(layer, kind, x, enc_out):
+        return apply_layer(cfg, layer, kind, x, enc_out,
+                           mamba_chunk=mamba_chunk)
+
+    if remat:
+        run_layer = jax.checkpoint(run_layer, static_argnums=(1,))
+    if constrain is not None:
+        x = constrain(x)
+    for i, layer in enumerate(params["layers"]):
+        kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+        x = run_layer(layer, kind, x, enc_out)
+        if constrain is not None:
+            x = constrain(x)
+    x = _norm(cfg, x, params["final_ln"], params.get("final_ln_b"))
+    return jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+
+
+def loss_fn(cfg: ArchConfig, params, tokens: Array, labels: Array,
+            **fw_kwargs) -> Array:
+    logits = forward(cfg, params, tokens, **fw_kwargs)
+    if logits.shape[1] != labels.shape[1]:       # vlm prefix: score text tail
+        logits = logits[:, -labels.shape[1]:]
+    Vp = logits.shape[-1]
+    # f32 math fuses into the reduction (no f32 materialisation in HBM)
+    logits = logits.astype(jnp.float32)
+    # mask padded vocab slots out of the softmax
+    if Vp > cfg.vocab_size:
+        pad_mask = jnp.arange(Vp) >= cfg.vocab_size
+        logits = jnp.where(pad_mask[None, None, :], -1e30, logits)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache / recurrent-state serving
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16, src_len: int = 0) -> Dict[str, Any]:
+    KV, Dh = cfg.n_kv_heads, cfg.dh
+    layers: List[Any] = []
+    for i in range(cfg.n_layers):
+        kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+        if kind == "attn":
+            entry: Dict[str, Any] = {
+                "k": jnp.zeros((batch, max_len, KV, Dh), dtype),
+                "v": jnp.zeros((batch, max_len, KV, Dh), dtype),
+            }
+            if cfg.is_encdec:
+                entry["ek"] = jnp.zeros((batch, src_len, KV, Dh), dtype)
+                entry["ev"] = jnp.zeros((batch, src_len, KV, Dh), dtype)
+            layers.append(entry)
+        elif kind == "mamba":
+            layers.append(ssm.mamba_init_state(cfg, batch, dtype))
+        elif kind == "mlstm":
+            layers.append(xlstm.mlstm_init_state(cfg, batch))
+        elif kind == "slstm":
+            layers.append(xlstm.slstm_init_state(cfg, batch))
+    return {"layers": layers}
+
+
+def decode_step(cfg: ArchConfig, params, token: Array, cache: Dict[str, Any],
+                pos: Array) -> Tuple[Array, Dict[str, Any]]:
+    """One decode step. token: (B, 1) int32; pos: scalar int32.
+
+    Returns (logits (B, 1, Vp), new cache)."""
+    x = params["embed"][token]
+    new_layers: List[Any] = []
+    for i, layer in enumerate(params["layers"]):
+        kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+        state = cache["layers"][i]
+        if kind == "attn":
+            h = _norm(cfg, x, layer["ln1"], layer.get("ln1_b"))
+            att, ck, cv = C.attention_decode(h, layer["attn"], cfg,
+                                             state["k"], state["v"], pos)
+            x = x + att
+            new_state = dict(state)
+            new_state["k"], new_state["v"] = ck, cv
+            if cfg.is_encdec and "cross" in layer:
+                hc = _norm(cfg, x, layer["ln_cross"], layer.get("ln_cross_b"))
+                x = x + C.cross_attention(hc, layer["cross"], cfg,
+                                          state["ek"], state["ev"])
+            x = _ffn(cfg, layer, x)
+            new_layers.append(new_state)
+        elif kind == "mamba":
+            h = _norm(cfg, x, layer["ln1"], layer.get("ln1_b"))
+            out, new_state = ssm.mamba_decode(h, layer["mamba"], cfg, state)
+            x = _ffn(cfg, layer, x + out)
+            new_layers.append(new_state)
+        elif kind == "mlstm":
+            x, new_state = xlstm.mlstm_block_decode(x, layer, cfg, state)
+            new_layers.append(new_state)
+        elif kind == "slstm":
+            x, new_state = xlstm.slstm_block_decode(x, layer, cfg, state)
+            new_layers.append(new_state)
+    x = _norm(cfg, x, params["final_ln"], params.get("final_ln_b"))
+    logits = jnp.einsum("bsd,dv->bsv", x, params["lm_head"])
+    return logits, {"layers": new_layers}
+
+
+def prefill(cfg: ArchConfig, params, tokens: Array, cache: Dict[str, Any],
+            encoder_frames: Optional[Array] = None,
+            prefix_embeds: Optional[Array] = None,
+            mamba_chunk: int = 256,
+            attn_impl=None, constrain=None) -> Tuple[Array, Dict[str, Any]]:
+    """Prefill pass: full forward that also fills the KV cache and returns
+    last-position logits.  (Recurrent layers refresh their state too.)"""
+    parts = []
+    if prefix_embeds is not None:
+        parts.append(prefix_embeds)
+    if tokens is not None:
+        parts.append(params["embed"][tokens])
+    x = parts[0] if len(parts) == 1 else jnp.concatenate(parts, axis=1)
+    S = x.shape[1]
+    enc_out = encode(cfg, params, encoder_frames,
+                     attn_impl=attn_impl) if cfg.is_encdec else None
+    if constrain is not None:
+        x = constrain(x)
+    new_layers: List[Any] = []
+    for i, layer in enumerate(params["layers"]):
+        kind = cfg.block_pattern[i % len(cfg.block_pattern)]
+        state = cache["layers"][i]
+        if kind == "attn":
+            h = _norm(cfg, x, layer["ln1"], layer.get("ln1_b"))
+            q, k, v = C.qkv_project(h, layer["attn"], cfg)
+            posv = jnp.arange(S)
+            cos, sin = C.rope_freqs(posv, cfg.dh, cfg.rope_theta)
+            q = C.apply_rope(q, cos, sin)
+            k = C.apply_rope(k, cos, sin)
+            if attn_impl is not None:
+                att = attn_impl(q, k, v, causal=True)
+            else:
+                att = C.gqa_scores_softmax_out(q, k, v, causal=True)
+            x = x + jnp.einsum("bshk,hkd->bsd", att, layer["attn"]["wo"])
+            new_state = dict(state)
+            new_state["k"] = jax.lax.dynamic_update_slice_in_dim(
+                state["k"], k.astype(state["k"].dtype), 0, axis=1)
+            new_state["v"] = jax.lax.dynamic_update_slice_in_dim(
+                state["v"], v.astype(state["v"].dtype), 0, axis=1)
+            if cfg.is_encdec and "cross" in layer:
+                ek = jnp.einsum("btd,dhk->bthk", enc_out, layer["cross"]["wk"])
+                ev = jnp.einsum("btd,dhk->bthk", enc_out, layer["cross"]["wv"])
+                hc = _norm(cfg, x, layer["ln_cross"], layer.get("ln_cross_b"))
+                x = x + C.cross_attention(hc, layer["cross"], cfg, ek, ev)
+                new_state["ek"] = ek.astype(state["ek"].dtype)
+                new_state["ev"] = ev.astype(state["ev"].dtype)
+            x = _ffn(cfg, layer, x)
+            new_layers.append(new_state)
+        elif kind == "mamba":
+            h = _norm(cfg, x, layer["ln1"], layer.get("ln1_b"))
+            out, new_state = ssm.mamba_block(h, layer["mamba"], cfg,
+                                             chunk=min(256, S),
+                                             return_state=True)
+            x = _ffn(cfg, layer, x + out)
+            new_layers.append(new_state)
+        elif kind == "mlstm":
+            x, new_state = xlstm.mlstm_block(x, layer, cfg,
+                                             chunk=min(256, S),
+                                             return_state=True)
+            new_layers.append(new_state)
+        elif kind == "slstm":
+            h = _norm(cfg, x, layer["ln"], None)
+            core, new_state = xlstm.slstm_core(h, layer, cfg,
+                                               return_state=True)
+            x = x + jnp.einsum("bsd,de->bse", core, layer["out_proj"])
+            h2 = C.rms_norm(x, layer["ln2"], cfg.norm_eps)
+            x = x + C.swiglu_mlp(h2, {"w_gate": layer["ff_gate"],
+                                      "w_up": layer["ff_up"],
+                                      "w_down": layer["ff_down"]})
+            new_layers.append(new_state)
+        if constrain is not None:
+            x = constrain(x)
+    x = _norm(cfg, x, params["final_ln"], params.get("final_ln_b"))
+    logits = jnp.einsum("bsd,dv->bsv", x[:, -1:], params["lm_head"])
+    return logits, {"layers": new_layers}

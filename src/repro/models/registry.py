@@ -1,0 +1,55 @@
+"""Model wrapper + registry: a thin OO facade over the functional core."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import lm
+from .config import ArchConfig
+
+
+class Model:
+    def __init__(self, cfg: ArchConfig):
+        self.cfg = cfg
+
+    # params ------------------------------------------------------------------
+    def init(self, key, dtype=jnp.float32):
+        return lm.init_params(self.cfg, key, dtype)
+
+    def abstract_params(self, dtype=jnp.bfloat16):
+        return lm.abstract_params(self.cfg, dtype)
+
+    def logical_axes(self):
+        return lm.param_logical_axes(self.cfg)
+
+    def param_count(self) -> int:
+        return lm.count_params(self.cfg)
+
+    def active_param_count(self) -> int:
+        return lm.count_params(self.cfg, active_only=True)
+
+    # compute ------------------------------------------------------------------
+    def forward(self, params, tokens=None, **kw):
+        return lm.forward(self.cfg, params, tokens, **kw)
+
+    def loss(self, params, tokens, labels, **kw):
+        return lm.loss_fn(self.cfg, params, tokens, labels, **kw)
+
+    def init_cache(self, batch: int, max_len: int, dtype=jnp.bfloat16,
+                   src_len: int = 0):
+        return lm.init_cache(self.cfg, batch, max_len, dtype, src_len)
+
+    def decode_step(self, params, token, cache, pos):
+        return lm.decode_step(self.cfg, params, token, cache, pos)
+
+    def prefill(self, params, tokens, cache, **kw):
+        return lm.prefill(self.cfg, params, tokens, cache, **kw)
+
+
+@functools.lru_cache(maxsize=None)
+def build_model(name: str) -> Model:
+    from repro.configs import get_config
+    return Model(get_config(name))

@@ -1,0 +1,252 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM and recurrent sLSTM.
+
+mLSTM (matrix memory, no memory mixing) admits a chunkwise-parallel training
+form — intra-chunk quadratic attention-like compute plus inter-chunk
+recurrent carries — which is what makes the architecture sub-quadratic and
+long_500k-eligible.  Chunks are iterated with an unrolled Python loop (dry-run
+FLOP fidelity); the carry is the (dk×dv) matrix memory + normalizer + max
+stabilizer.
+
+sLSTM (scalar memory, block-diagonal memory mixing) has a true nonlinear
+recurrence and cannot be parallelised over time; it runs as ``jax.lax.scan``
+over the sequence.  Its FLOPs are corrected analytically in the roofline
+harness (XLA cost analysis counts while bodies once — see EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+def _mlstm_qkv_gates(xu: Array, p: Dict[str, Array]):
+    """xu: (B, C, du) → q,k,v (B,C,H,dk), log-gates (B,C,H).
+
+    q/k/v are head-wise block-diagonal projections (the official
+    ``LinearHeadwiseExpand`` / qkv_proj_blocksize trick) — full (du×du)
+    matrices would triple the parameter budget of the 1.3B config."""
+    H, dk = p["wq"].shape[0], p["wq"].shape[1]
+    xh = xu.reshape(xu.shape[0], xu.shape[1], H, dk)
+    q = jnp.einsum("bchk,hkj->bchj", xh, p["wq"])
+    k = jnp.einsum("bchk,hkj->bchj", xh, p["wk"])
+    v = jnp.einsum("bchk,hkj->bchj", xh, p["wv"])
+    li = jnp.einsum("bcu,uh->bch", xu, p["wi"]).astype(jnp.float32) + p["bi"]
+    lf = jax.nn.log_sigmoid(
+        jnp.einsum("bcu,uh->bch", xu, p["wf"]).astype(jnp.float32) + p["bf"])
+    return q, k, v, li, lf
+
+
+def mlstm_chunk_scan(xu: Array, p: Dict[str, Array], n_heads: int,
+                     chunk: int = 256, return_state: bool = False):
+    """Chunkwise mLSTM core. xu: (B, S, du) → (B, S, du)."""
+    B, S, du = xu.shape
+    H = n_heads
+    dk = du // H
+    chunk = min(chunk, S)
+    n_chunks = (S + chunk - 1) // chunk
+    scale = 1.0 / math.sqrt(dk)
+
+    def one_chunk(carry, sl):
+        C_prev, n_prev, m_prev = carry
+        q, k, v, li, lf = _mlstm_qkv_gates(sl, p)
+        Cn = sl.shape[1]
+        F = jnp.cumsum(lf, axis=1)                      # (B,C,H) inclusive
+        # intra-chunk log weights W[t,s] = F_t - F_s + li_s  (s <= t)
+        W = F[:, :, None, :] - F[:, None, :, :] + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((Cn, Cn), bool))
+        W = jnp.where(tri[None, :, :, None], W, -jnp.inf)   # (B,t,s,H)
+        G = F + m_prev[:, None, :]                      # inter weight (B,C,H)
+        m_intra = jnp.max(W, axis=2)                    # (B,t,H)
+        m_t = jnp.maximum(m_intra, G)
+        D = jnp.exp(W - m_t[:, :, None, :])             # (B,t,s,H)
+        inter_w = jnp.exp(G - m_t)                      # (B,t,H)
+        qf = q.astype(jnp.float32) * scale
+        kf = k.astype(jnp.float32)
+        vf = v.astype(jnp.float32)
+        scores = jnp.einsum("bthk,bshk->btsh", qf, kf) * D
+        num = jnp.einsum("btsh,bshk->bthk", scores, vf) + \
+            inter_w[..., None] * jnp.einsum("bthk,bhkv->bthv", qf, C_prev)
+        # normalizer vector: n_t = Σ_s D_ts k_s + inter_w · n_prev
+        nvec = jnp.einsum("btsh,bshk->bthk", D, kf) + \
+            inter_w[..., None] * n_prev[:, None, :, :]
+        den = jnp.abs(jnp.einsum("bthk,bthk->bth", qf, nvec))
+        den = jnp.maximum(den, jnp.exp(-m_t))[..., None]
+        h = (num / den).astype(xu.dtype)                # (B,t,H,dk)
+        # carry update
+        FC = F[:, -1:, :]                               # total logf (B,1,H)
+        carry_w = FC - F + li                           # (B,s,H)
+        m_carry = jnp.maximum(m_prev + FC[:, 0], jnp.max(carry_w, axis=1))
+        cw = jnp.exp(carry_w - m_carry[:, None, :])     # (B,s,H)
+        decay = jnp.exp(m_prev + FC[:, 0] - m_carry)    # (B,H)
+        C_new = decay[..., None, None] * C_prev + \
+            jnp.einsum("bsh,bshk,bshv->bhkv", cw, kf, vf)
+        n_new = decay[..., None] * n_prev + \
+            jnp.einsum("bsh,bshk->bhk", cw, kf)
+        return (C_new, n_new, m_carry), h.reshape(B, Cn, du)
+
+    carry = (jnp.zeros((B, H, dk, dk), jnp.float32),    # matrix memory
+             jnp.zeros((B, H, dk), jnp.float32),        # normalizer
+             jnp.full((B, H), -1e30, jnp.float32))      # max stabilizer
+    if n_chunks <= 8:
+        outs = []
+        for c in range(n_chunks):                       # unrolled (dry-run)
+            carry, h = one_chunk(carry, xu[:, c * chunk:(c + 1) * chunk])
+            outs.append(h)
+        out = jnp.concatenate(outs, axis=1)
+    else:
+        xs = xu.reshape(B, n_chunks, chunk, du).swapaxes(0, 1)
+        carry, hs = jax.lax.scan(one_chunk, carry, xs)
+        out = hs.swapaxes(0, 1).reshape(B, S, du)
+    if return_state:
+        C_prev, n_prev, m_prev = carry
+        return out, {"C": C_prev, "n": n_prev, "m": m_prev}
+    return out
+
+
+def mlstm_block(x: Array, p: Dict[str, Array], cfg, chunk: int = 256,
+                return_state: bool = False):
+    """Pre-up-projection mLSTM block (proj_factor 2). x: (B,S,D)."""
+    from .components import rms_norm
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h, p["up_proj"])
+    xu, gate = jnp.split(up, 2, axis=-1)
+    core = mlstm_chunk_scan(xu, p, cfg.n_heads, chunk=chunk,
+                            return_state=return_state)
+    state = None
+    if return_state:
+        core, state = core
+    core = rms_norm(core, p["out_ln"], cfg.norm_eps)
+    y = core * jax.nn.silu(gate)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["down_proj"])
+    if return_state:
+        return out, state
+    return out
+
+
+def mlstm_init_state(cfg, batch: int) -> Dict[str, Array]:
+    du = int(cfg.d_model * cfg.mlstm_proj_factor)
+    dk = du // cfg.n_heads
+    return {
+        "C": jnp.zeros((batch, cfg.n_heads, dk, dk), jnp.float32),
+        "n": jnp.zeros((batch, cfg.n_heads, dk), jnp.float32),
+        "m": jnp.full((batch, cfg.n_heads), -1e30, jnp.float32),
+    }
+
+
+def mlstm_block_decode(x: Array, p: Dict[str, Array], cfg,
+                       state: Dict[str, Array]
+                       ) -> Tuple[Array, Dict[str, Array]]:
+    """One-token mLSTM step with O(1) state. x: (B, 1, D)."""
+    from .components import rms_norm
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,de->bse", h, p["up_proj"])
+    xu, gate = jnp.split(up, 2, axis=-1)
+    B, _, du = xu.shape
+    dk = du // cfg.n_heads
+    q, k, v, li, lf = _mlstm_qkv_gates(xu, p)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]                 # (B,H,dk)
+    li, lf = li[:, 0], lf[:, 0]                         # (B,H)
+    m_new = jnp.maximum(lf + state["m"], li)
+    fw = jnp.exp(lf + state["m"] - m_new)[..., None]
+    iw = jnp.exp(li - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = fw[..., None] * state["C"] + \
+        iw[..., None] * jnp.einsum("bhk,bhv->bhkv", kf, vf)
+    n = fw * state["n"] + iw * kf
+    qf = q.astype(jnp.float32) / math.sqrt(dk)
+    num = jnp.einsum("bhk,bhkv->bhv", qf, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n)),
+                      jnp.exp(-m_new))[..., None]
+    core = (num / den).astype(x.dtype).reshape(B, 1, du)
+    core = rms_norm(core, p["out_ln"], cfg.norm_eps)
+    y = core * jax.nn.silu(gate)
+    out = x + jnp.einsum("bse,ed->bsd", y, p["down_proj"])
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+def _slstm_step(p: Dict[str, Array], cfg, carry, x_t):
+    """carry: (c, n, h, m) each (B,H,dh); x_t: (B, D)."""
+    c, n, h, m = carry
+    # gates from input + block-diagonal recurrence  (B,H,dh,4)
+    wx = jnp.einsum("bd,dhkg->bhkg", x_t, p["w"]).astype(jnp.float32)
+    rh = jnp.einsum("bhk,hkjg->bhjg", h, p["r"]).astype(jnp.float32)
+    g = wx + rh + p["b"]
+    zt = jnp.tanh(g[..., 0])
+    it = g[..., 1]                                       # log-space input gate
+    ft = jax.nn.log_sigmoid(g[..., 2])                   # log forget gate
+    ot = jax.nn.sigmoid(g[..., 3])
+    m_new = jnp.maximum(ft + m, it)
+    iw = jnp.exp(it - m_new)
+    fw = jnp.exp(ft + m - m_new)
+    c_new = fw * c + iw * zt
+    n_new = fw * n + iw
+    h_new = ot * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new.astype(jnp.float32), m_new), h_new
+
+
+def slstm_core(x: Array, p: Dict[str, Array], cfg,
+               return_state: bool = False):
+    """x: (B, S, D) → (B, S, H*dh) via sequential scan (nonlinear recurrence)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    dh = D // H
+    init = (jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.full((B, H, dh), -1e30, jnp.float32))
+    carry, hs = jax.lax.scan(
+        lambda carry, xt: _slstm_step(p, cfg, carry, xt),
+        init, jnp.swapaxes(x, 0, 1))
+    out = jnp.swapaxes(hs, 0, 1).reshape(B, S, D).astype(x.dtype)
+    if return_state:
+        return out, carry
+    return out
+
+
+def slstm_block(x: Array, p: Dict[str, Array], cfg,
+                return_state: bool = False):
+    from .components import rms_norm, swiglu_mlp
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    core = slstm_core(h, p, cfg, return_state=return_state)
+    state = None
+    if return_state:
+        core, state = core
+    x = x + jnp.einsum("bsd,de->bse", core, p["out_proj"])
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    out = x + swiglu_mlp(h2, {"w_gate": p["ff_gate"], "w_up": p["ff_up"],
+                              "w_down": p["ff_down"]})
+    if return_state:
+        return out, state
+    return out
+
+
+def slstm_init_state(cfg, batch: int) -> Tuple[Array, ...]:
+    H, dh = cfg.n_heads, cfg.d_model // cfg.n_heads
+    z = jnp.zeros((batch, H, dh), jnp.float32)
+    return (z, z, z, jnp.full((batch, H, dh), -1e30, jnp.float32))
+
+
+def slstm_block_decode(x: Array, p: Dict[str, Array], cfg, state
+                       ) -> Tuple[Array, Tuple[Array, ...]]:
+    from .components import rms_norm, swiglu_mlp
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    new_state, h_out = _slstm_step(p, cfg, state, h[:, 0])
+    core = h_out.reshape(x.shape[0], 1, -1).astype(x.dtype)
+    x = x + jnp.einsum("bsd,de->bse", core, p["out_proj"])
+    h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+    out = x + swiglu_mlp(h2, {"w_gate": p["ff_gate"], "w_up": p["ff_up"],
+                              "w_down": p["ff_down"]})
+    return out, new_state

@@ -1,0 +1,5 @@
+from .partition import (MeshPlan, make_param_shardings, make_plan,
+                        shard_batch_spec, shard_cache, constrain_activations)
+
+__all__ = ["MeshPlan", "make_param_shardings", "make_plan",
+           "shard_batch_spec", "shard_cache", "constrain_activations"]

@@ -1,0 +1,63 @@
+"""Layer-interior sharding strategy context (§Perf hillclimb levers).
+
+The baseline lets GSPMD pick every interior resharding.  The hillclimb
+iterations steer it with targeted constraints, selected per-run through this
+contextvar so model code stays pure-functional:
+
+* ``ffn="gather_weights"`` — constrain FFN intermediates to stay
+  sequence-sharded so XLA all-gathers the (batch-independent) weight
+  matrices instead of the (B,S,D) activations (Megatron-SP inversion; wins
+  when B·S·D ≳ layer params, which holds for all train_4k cells).
+* ``moe_gather_seq=True`` — gather the sequence once around the MoE block
+  and run dispatch purely expert-parallel (kills the S↔E resharding storm).
+* ``attn="tp_chunked"`` — prefill attention with heads-TP + unrolled query
+  chunks instead of the seq-resharding shard_map path (divisible heads only).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Iterator, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingCtx:
+    mesh: Mesh
+    dp_axes: Tuple[str, ...]
+    ffn: Optional[str] = None          # None | "gather_weights"
+    moe_gather_seq: bool = False
+    attn: Optional[str] = None         # None | "tp_chunked"
+    attn_q_chunk: int = 2048
+
+    def dp(self, size: int) -> Optional[Tuple[str, ...]]:
+        import math
+        dp_size = math.prod(self.mesh.shape[a] for a in self.dp_axes)
+        return self.dp_axes if size % dp_size == 0 else None
+
+
+_ctx: contextvars.ContextVar[Optional[ShardingCtx]] = contextvars.ContextVar(
+    "repro_sharding_ctx", default=None)
+
+
+def current() -> Optional[ShardingCtx]:
+    return _ctx.get()
+
+
+@contextlib.contextmanager
+def use(ctx: Optional[ShardingCtx]) -> Iterator[None]:
+    tok = _ctx.set(ctx)
+    try:
+        yield
+    finally:
+        _ctx.reset(tok)
+
+
+def constrain(x, spec: P):
+    ctx = current()
+    if ctx is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(ctx.mesh, spec))

@@ -1,0 +1,134 @@
+"""Sequence-parallel chunked prefill attention (shard_map).
+
+For 32k-token prefill, a monolithic scores tensor is (B,H,S,T) — hundreds of
+GiB.  This module computes attention under ``shard_map`` with the query
+sequence sharded over the ``model`` axis (context parallelism — works for
+*any* head count, including the 56-head/2-kv configs that defeat head-TP):
+
+  * K/V are all-gathered along ``model`` (the visible collective cost),
+  * each device loops over its local query chunks (unrolled — dry-run FLOP
+    fidelity), online-softmax style but with full-T rows per chunk, scores
+    materialised in bf16.
+
+Used by the prefill path when seq_len exceeds ``SP_ATTN_THRESHOLD``.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+SP_ATTN_THRESHOLD = 8192
+Q_CHUNK = 256
+
+
+def _local_chunked_attention(q, k, v, *, q_offset, causal: bool,
+                             q_chunk: int):
+    """q: (B, Sl, KV, G, Dh) local; k/v: (B, T, KV, Dh) full (gathered)."""
+    B, Sl, KV, G, Dh = q.shape
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(Dh)
+    outs = []
+    n_chunks = max(Sl // q_chunk, 1)
+    cq = Sl // n_chunks
+    for c in range(n_chunks):
+        qc = q[:, c * cq:(c + 1) * cq]
+        scores = jnp.einsum("bskgd,btkd->bkgst", qc, k) * scale
+        if causal:
+            qpos = q_offset + c * cq + jnp.arange(cq)
+            mask = jnp.arange(T)[None, :] <= qpos[:, None]
+            scores = jnp.where(mask[None, None, None], scores,
+                               jnp.asarray(-jnp.inf, scores.dtype))
+        m = jnp.maximum(jnp.max(scores.astype(jnp.float32), axis=-1,
+                                keepdims=True), -1e30)
+        l = jnp.sum(jnp.exp(scores.astype(jnp.float32) - m), axis=-1,
+                    keepdims=True)
+        w = (jnp.exp(scores.astype(jnp.float32) - m) / l).astype(v.dtype)
+        outs.append(jnp.einsum("bkgst,btkd->bskgd", w, v))
+    return jnp.concatenate(outs, axis=1)          # (B, Sl, KV, G, Dh)
+
+
+def sp_prefill_attention(q, k, v, mesh: Mesh, causal: bool = True,
+                         dp_axes=("data",), q_chunk: int = Q_CHUNK):
+    """q: (B, S, QH, Dh); k/v: (B, S, KV, Dh) → (B, S, QH, Dh).
+
+    Sequence sharded over "model"; batch over dp axes when divisible.
+    """
+    B, S, QH, Dh = q.shape
+    KV = k.shape[2]
+    G = QH // KV
+    tp = mesh.shape["model"]
+    assert S % tp == 0, (S, tp)
+    dp_size = math.prod(mesh.shape[a] for a in dp_axes)
+    dp = tuple(dp_axes) if B % dp_size == 0 else None
+    qg = q.reshape(B, S, KV, G, Dh)
+
+    spec_q = P(dp, "model", None, None, None)
+    spec_kv = P(dp, "model", None, None)
+
+    @functools.partial(
+        shard_map, mesh=mesh,
+        in_specs=(spec_q, spec_kv, spec_kv),
+        out_specs=spec_q,
+        check_vma=False)
+    def inner(q_l, k_l, v_l):
+        k_full = jax.lax.all_gather(k_l, "model", axis=1, tiled=True)
+        v_full = jax.lax.all_gather(v_l, "model", axis=1, tiled=True)
+        Sl = q_l.shape[1]
+        off = jax.lax.axis_index("model") * Sl
+        return _local_chunked_attention(q_l, k_full, v_full, q_offset=off,
+                                        causal=causal, q_chunk=q_chunk)
+
+    out = inner(qg, k, v)
+    return out.reshape(B, S, QH, Dh)
+
+
+def tp_chunked_prefill_attention(q, k, v, mesh: Mesh, causal: bool = True,
+                                 dp_axes=("data",), q_chunk: int = 2048):
+    """Heads-TP prefill attention with unrolled query chunks (§Perf C).
+
+    Avoids the seq↔heads resharding of the shard_map path: q and the
+    G-expanded k/v stay sharded on the (divisible) head dim; the only
+    collective is one k/v gather per layer.  Memory is bounded by one
+    (B, H/tp, q_chunk, T) score block.
+    """
+    B, S, QH, Dh = q.shape
+    KV = k.shape[2]
+    G = QH // KV
+    tp = mesh.shape["model"]
+    assert QH % tp == 0, (QH, tp)
+    dp_size = math.prod(mesh.shape[a] for a in dp_axes)
+    dp = tuple(dp_axes) if B % dp_size == 0 else None
+
+    def cst(t, spec):
+        return jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+
+    q = cst(q, P(dp, None, "model", None))
+    k_rep = jnp.repeat(k, G, axis=2)           # (B, T, QH, Dh)
+    v_rep = jnp.repeat(v, G, axis=2)
+    k_rep = cst(k_rep, P(dp, None, "model", None))
+    v_rep = cst(v_rep, P(dp, None, "model", None))
+    scale = 1.0 / math.sqrt(Dh)
+    n_chunks = max(S // q_chunk, 1)
+    cq = S // n_chunks
+    outs = []
+    for c in range(n_chunks):                  # unrolled (≤16 blocks)
+        qc = q[:, c * cq:(c + 1) * cq]
+        scores = jnp.einsum("bshd,bthd->bhst", qc, k_rep) * scale
+        if causal:
+            qpos = c * cq + jnp.arange(cq)
+            mask = jnp.arange(S)[None, :] <= qpos[:, None]
+            scores = jnp.where(mask[None, None], scores,
+                               jnp.asarray(-jnp.inf, scores.dtype))
+        m = jnp.maximum(jnp.max(scores.astype(jnp.float32), axis=-1,
+                                keepdims=True), -1e30)
+        l = jnp.sum(jnp.exp(scores.astype(jnp.float32) - m), axis=-1,
+                    keepdims=True)
+        w = (jnp.exp(scores.astype(jnp.float32) - m) / l).astype(v.dtype)
+        outs.append(jnp.einsum("bhst,bthd->bshd", w, v_rep))
+    return cst(jnp.concatenate(outs, axis=1), P(dp, None, "model", None))

@@ -1,0 +1,5 @@
+from .optimizer import AdamWConfig, adamw_init, adamw_update
+from .steps import make_train_step, make_prefill_step, make_decode_step
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update",
+           "make_train_step", "make_prefill_step", "make_decode_step"]

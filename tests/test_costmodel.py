@@ -1,0 +1,101 @@
+"""Cost-model invariants: the paper's qualitative claims must hold."""
+import os
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (FDB, FDBConfig, Meter, PROFILES, client_context,
+                        model_run, reset_engines)
+
+
+def _write_trace(backend, n_nodes, n_procs, n_fields, field_kb=1024,
+                 shared_collocation=False, **cfg_kw):
+    meter = Meter()
+    reset_engines()
+    schema = "nwp-posix" if shared_collocation else "nwp-object"
+    fdb = FDB(FDBConfig(backend=backend, schema=schema,
+                        root=f"/tmp/fdbcm-{os.getpid()}-{backend}-{n_nodes}",
+                        **cfg_kw), meter=meter)
+    data = os.urandom(field_kb * 1024)
+    for node in range(n_nodes):
+        for proc in range(n_procs):
+            with client_context(f"proc{proc}@node{node}"):
+                for i in range(n_fields):
+                    fdb.archive({"class": "od", "expver": "1",
+                                 "stream": "oper", "date": "20240101",
+                                 "time": "0", "type": "fc", "levtype": "sfc",
+                                 "number": str(node), "levelist": str(proc),
+                                 "step": str(i), "param": "t"}, data)
+                fdb.flush()
+    fdb.close()
+    return meter
+
+
+def test_daos_write_bw_scales_with_servers():
+    """Claim C1: DAOS bandwidth scales near-linearly with server nodes."""
+    m = _write_trace("daos", n_nodes=8, n_procs=4, n_fields=10)
+    bw = []
+    for servers in (2, 4, 8):
+        r = model_run(m.snapshot(), PROFILES["gcp"], server_nodes=servers)
+        bw.append(r.write_bw)
+    assert bw[1] > bw[0] * 1.5
+    assert bw[2] > bw[1] * 1.5
+
+
+def test_daos_faster_than_rados_like_for_like():
+    """Claim C2: Ceph suitable but slower than DAOS on the same workload."""
+    daos = _write_trace("daos", 4, 4, 10)
+    rados = _write_trace("rados", 4, 4, 10)
+    bd = model_run(daos.snapshot(), PROFILES["gcp"], server_nodes=4)
+    br = model_run(rados.snapshot(), PROFILES["gcp"], server_nodes=4)
+    assert bd.write_bw > br.write_bw
+
+
+def test_small_objects_hit_op_rate():
+    """Claim C6: KiB-sized objects are op-rate/latency bound, and DAOS
+    sustains much higher rates than Ceph."""
+    daos = _write_trace("daos", 4, 4, 40, field_kb=1)
+    rados = _write_trace("rados", 4, 4, 40, field_kb=1)
+    rd = model_run(daos.snapshot(), PROFILES["gcp"], server_nodes=4)
+    rr = model_run(rados.snapshot(), PROFILES["gcp"], server_nodes=4)
+    assert rr.dominant in ("latency", "op_rate")
+    assert rd.write_bw > 2 * rr.write_bw
+
+
+def test_hotspot_schema_penalty_on_daos():
+    """Claim C7: sharing one collocation key across many writers serializes
+    index KV commits; the object schema removes the hot spot."""
+    hot = _write_trace("daos", 8, 8, 10, shared_collocation=True)
+    cool = _write_trace("daos", 8, 8, 10, shared_collocation=False)
+    rh = model_run(hot.snapshot(), PROFILES["gcp"], server_nodes=8)
+    rc = model_run(cool.snapshot(), PROFILES["gcp"], server_nodes=8)
+    assert rh.terms["hotspot"] > 4 * rc.terms["hotspot"]
+
+
+def test_replication_halves_write_bandwidth():
+    """Claim C5: 2× replication ≈ half the write bandwidth (server bound)."""
+    plain = _write_trace("rados", 8, 8, 10)
+    repl = _write_trace("rados", 8, 8, 10, rados_replication=2)
+    rp = model_run(plain.snapshot(), PROFILES["gcp"], server_nodes=4)
+    rr = model_run(repl.snapshot(), PROFILES["gcp"], server_nodes=4)
+    assert rr.write_bw < 0.7 * rp.write_bw
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 32), st.integers(1, 8))
+def test_model_run_invariants(servers, procs):
+    meter = Meter()
+    reset_engines()
+    fdb = FDB(FDBConfig(backend="daos"), meter=meter)
+    for p in range(procs):
+        with client_context(f"proc{p}@node0"):
+            fdb.archive({"class": "od", "expver": "1", "stream": "o",
+                         "date": "1", "time": "0", "type": "fc",
+                         "levtype": "sfc", "number": "0",
+                         "levelist": str(p), "step": "0", "param": "t"},
+                        b"x" * 1024)
+    r = model_run(meter.snapshot(), PROFILES["gcp"], server_nodes=servers)
+    assert r.wall_time > 0
+    assert r.write_bw >= 0
+    assert r.dominant in r.terms
+    assert all(v >= 0 for v in r.terms.values())

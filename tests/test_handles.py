@@ -1,0 +1,57 @@
+"""DataHandle merging (the POSIX read-coalescing optimisation, §2.7.1)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.handle import FileRangeHandle, MemoryHandle, MultiHandle
+
+
+def _mem_reader(blob):
+    def reader(unit, offset, length):
+        return blob[offset:offset + length]
+    return reader
+
+
+def test_adjacent_ranges_coalesce():
+    blob = bytes(range(256)) * 4
+    reader = _mem_reader(blob)
+    h1 = FileRangeHandle.single(reader, "f", 0, 100)
+    h2 = FileRangeHandle.single(reader, "f", 100, 50)
+    h3 = FileRangeHandle.single(reader, "f", 200, 24)
+    assert h1.mergeable_with(h2)
+    merged = h1.merged(h2).merged(h3)
+    assert merged.read_ops() == 2          # [0,150) + [200,224)
+    assert merged.read() == blob[0:150] + blob[200:224]
+
+
+def test_different_units_do_not_merge():
+    r = _mem_reader(b"x" * 64)
+    h1 = FileRangeHandle.single(r, "a", 0, 8)
+    h2 = FileRangeHandle.single(r, "b", 8, 8)
+    assert not h1.mergeable_with(h2)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 900), st.integers(1, 100)),
+                min_size=1, max_size=12))
+def test_multihandle_preserves_order_and_content(ranges):
+    blob = np.random.default_rng(0).integers(0, 255, 1024, np.uint8).tobytes()
+    reader = _mem_reader(blob)
+    handles = [FileRangeHandle.single(reader, "f", off, ln)
+               for off, ln in ranges]
+    mh = MultiHandle(handles)
+    expect = b"".join(blob[o:o + n] for o, n in ranges)
+    assert mh.read() == expect
+    parts = mh.read_parts()
+    assert parts == [blob[o:o + n] for o, n in ranges]
+    assert mh.read_ops() <= len(ranges)    # merging never adds ops
+
+
+def test_multihandle_mixed_backends():
+    blob = b"0123456789" * 10
+    mh = MultiHandle([
+        MemoryHandle(b"AAA"),
+        FileRangeHandle.single(_mem_reader(blob), "f", 0, 10),
+        FileRangeHandle.single(_mem_reader(blob), "f", 10, 10),
+    ])
+    assert mh.read() == b"AAA" + blob[:20]
+    assert mh.read_ops() == 2              # memory + one coalesced file read

@@ -1,0 +1,79 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles (interpret)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("shape", [(1, 2, 128, 64), (2, 3, 256, 64),
+                                   (1, 1, 128, 128), (2, 2, 512, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("causal", [True, False])
+def test_flash_attention_matches_ref(shape, dtype, causal):
+    B, H, S, D = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, shape, dtype)
+    k = jax.random.normal(k2, shape, dtype)
+    v = jax.random.normal(k3, shape, dtype)
+    out = ops.flash_attention(q, k, v, causal=causal, block_q=64, block_k=64)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 3e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_uneven_blocks():
+    q = jax.random.normal(jax.random.PRNGKey(1), (1, 2, 384, 64))
+    out = ops.flash_attention(q, q, q, causal=True, block_q=128, block_k=128)
+    expect = ref.flash_attention_ref(q, q, q, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect), atol=2e-5,
+                               rtol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(256, 128), (512, 256), (1024, 128)])
+@pytest.mark.parametrize("bits", [8, 16])
+def test_field_codec_roundtrip_bound(shape, bits):
+    x = jax.random.normal(jax.random.PRNGKey(2), shape, jnp.float32) * 100
+    q, s, m = ops.field_encode(x, block=256, bits=bits)
+    y = ops.field_decode(q, s, m, block=256, bits=bits)
+    bound = np.asarray(ref.codec_error_bound(x, 256, bits)).max()
+    err = float(jnp.max(jnp.abs(y - x)))
+    assert err <= bound * 1.05 + 1e-6, (err, bound)
+    # vs oracle: quantised codes may differ by 1 ULP-of-scale at rounding
+    # boundaries (reduction-order wobble) — never more.
+    qr, sr, mr = ref.field_encode_ref(x, block=256, bits=bits)
+    assert int(jnp.max(jnp.abs(q.astype(jnp.int32)
+                               - qr.astype(jnp.int32)))) <= 1
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(m), np.asarray(mr), rtol=1e-5)
+
+
+def test_field_codec_constant_block():
+    x = jnp.ones((256, 128), jnp.float32) * 3.14
+    q, s, m = ops.field_encode(x)
+    y = ops.field_decode(q, s, m)
+    np.testing.assert_allclose(np.asarray(y), 3.14, atol=1e-6)
+
+
+def test_field_codec_compression_ratio():
+    x = jax.random.normal(jax.random.PRNGKey(3), (1024, 128), jnp.float32)
+    q, s, m = ops.field_encode(x, bits=8)
+    packed = q.nbytes + s.nbytes + m.nbytes
+    assert packed < x.nbytes / 3.9          # ~4× (byte-granular GRIB target)
+
+
+@pytest.mark.parametrize("shape", [(256, 128), (512, 512), (128, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_rmsnorm_matches_ref(shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(4), shape, dtype)
+    scale = (jax.random.normal(jax.random.PRNGKey(5), (shape[1],), dtype)
+             * 0.1 + 1.0)
+    out = ops.fused_rmsnorm(x, scale, block_rows=128)
+    expect = ref.rmsnorm_ref(x, scale)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               atol=tol, rtol=tol)

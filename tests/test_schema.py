@@ -1,0 +1,65 @@
+"""Property tests for identifiers and schema key-splitting (thesis §2.7)."""
+import string
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Identifier, NWP_OBJECT_SCHEMA, NWP_POSIX_SCHEMA, Schema
+
+_key_text = st.text(alphabet=string.ascii_lowercase + string.digits,
+                    min_size=1, max_size=8)
+
+
+def _ident_strategy(schema: Schema):
+    dims = schema.all_dims
+    return st.fixed_dictionaries({d: _key_text for d in dims}).map(Identifier)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_ident_strategy(NWP_POSIX_SCHEMA))
+def test_split_join_roundtrip_posix(ident):
+    d, c, e = NWP_POSIX_SCHEMA.split(ident)
+    assert NWP_POSIX_SCHEMA.join(d, c, e) == ident
+    assert set(d) == set(NWP_POSIX_SCHEMA.dataset_dims)
+    assert set(c) == set(NWP_POSIX_SCHEMA.collocation_dims)
+    assert set(e) == set(NWP_POSIX_SCHEMA.element_dims)
+
+
+@settings(max_examples=50, deadline=None)
+@given(_ident_strategy(NWP_OBJECT_SCHEMA))
+def test_canonical_roundtrip(ident):
+    assert Identifier.from_canonical(ident.canonical()) == ident
+
+
+@settings(max_examples=50, deadline=None)
+@given(_ident_strategy(NWP_OBJECT_SCHEMA), st.data())
+def test_matches_partial(ident, data):
+    sub_dims = data.draw(st.sets(st.sampled_from(list(ident)), max_size=4))
+    partial = {k: ident[k] for k in sub_dims}
+    assert ident.matches(partial)
+    if sub_dims:
+        k = next(iter(sub_dims))
+        assert not ident.matches({**partial, k: ident[k] + "x"})
+
+
+def test_identifier_order_invariance():
+    a = Identifier({"a": 1, "b": 2})
+    b = Identifier({"b": 2, "a": 1})
+    assert a == b and hash(a) == hash(b)
+
+
+def test_schema_rejects_overlap():
+    with pytest.raises(ValueError):
+        Schema("bad", ("a",), ("a",), ("b",))
+
+
+def test_schema_rejects_missing_dims():
+    with pytest.raises(KeyError):
+        NWP_POSIX_SCHEMA.split(Identifier({"class": "od"}))
+
+
+def test_object_schema_moves_contention_dims():
+    """The thesis's C7 lever: number+levelist in the collocation key."""
+    assert "number" in NWP_OBJECT_SCHEMA.collocation_dims
+    assert "levelist" in NWP_OBJECT_SCHEMA.collocation_dims
+    assert "number" in NWP_POSIX_SCHEMA.element_dims

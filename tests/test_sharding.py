@@ -1,0 +1,91 @@
+"""Sharding rules: TP divisibility fallback, FSDP, cache layouts."""
+from types import SimpleNamespace
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.lm import ParamDef
+from repro.sharding.partition import MeshPlan, _spec_for, _cache_leaf_spec
+
+
+def fake_plan(fsdp=False, data=16, model=16, pod=None):
+    shape = {"data": data, "model": model}
+    if pod:
+        shape = {"pod": pod, **shape}
+    mesh = SimpleNamespace(shape=shape)
+    dp_axes = tuple(a for a in ("pod", "data") if a in shape)
+    return MeshPlan(mesh=mesh, dp_axes=dp_axes, fsdp=fsdp)
+
+
+def test_tp_on_divisible_heads():
+    d = ParamDef((2048, 32, 64), ("embed", "heads", None))
+    assert _spec_for(d, fake_plan()) == P(None, "model", None)
+
+
+def test_replicate_non_divisible_heads():
+    """deepseek-coder 56 heads: TP falls back to replication (context
+    parallelism takes over via activation sharding)."""
+    d = ParamDef((7168, 56, 128), ("embed", "heads", None))
+    assert _spec_for(d, fake_plan()) == P(None, None, None)
+
+
+def test_replicate_small_kv_heads():
+    d = ParamDef((2048, 2, 128), ("embed", "kv_heads", None))
+    assert _spec_for(d, fake_plan()) == P(None, None, None)
+
+
+def test_fsdp_shards_embed_dim():
+    d = ParamDef((2048, 32, 64), ("embed", "heads", None))
+    assert _spec_for(d, fake_plan(fsdp=True)) == P("data", "model", None)
+
+
+def test_fsdp_skipped_when_not_divisible():
+    d = ParamDef((100, 32, 64), ("embed", "heads", None))
+    assert _spec_for(d, fake_plan(fsdp=True)) == P(None, "model", None)
+
+
+def test_expert_dim_sharded():
+    d = ParamDef((64, 2048, 1408), ("expert", "embed", None))
+    assert _spec_for(d, fake_plan(fsdp=True)) == P("model", "data", None)
+
+
+def test_one_mesh_axis_used_once():
+    d = ParamDef((2048, 2048), ("embed", "embed2"))
+    spec = _spec_for(d, fake_plan(fsdp=True))
+    axes = [a for a in spec if a is not None]
+    assert len(axes) == len(set(axes))
+
+
+def test_cache_attn_kv_seq_over_model():
+    plan = fake_plan()
+    spec = _cache_leaf_spec((128, 32768, 8, 128), plan, "attn_kv")
+    assert spec == P(("data",), "model", None, None)
+
+
+def test_cache_batch_replicated_when_indivisible():
+    plan = fake_plan()
+    spec = _cache_leaf_spec((1, 524288, 8, 128), plan, "attn_kv")
+    assert spec == P(None, "model", None, None)
+
+
+def test_cache_state_shards_largest_divisible_dim():
+    plan = fake_plan()
+    spec = _cache_leaf_spec((128, 8192, 16), plan, "state")
+    assert spec == P(("data",), "model", None)
+
+
+def test_multipod_dp_axes():
+    plan = fake_plan(pod=2)
+    assert plan.dp_axes == ("pod", "data")
+    assert plan.dp_size == 32
+
+
+def test_plan_defaults():
+    from repro.launch.mesh import make_local_mesh
+    cfg = get_config("deepseek-coder-33b")
+    from repro.sharding.partition import make_plan
+    mesh = make_local_mesh()
+    plan = make_plan(cfg, mesh, "train")
+    assert plan.fsdp            # 33B ⇒ FSDP on
+    assert not plan.sp          # model axis size 1 locally ⇒ no SP

@@ -1,0 +1,111 @@
+"""End-to-end behaviour: the ECMWF operational NWP I/O pattern (§2.7.2 /
+§3.1.3) run against the framework — parallel I/O-server writers archiving
+weather fields per step, flush barriers, and PGEN-style post-processing
+readers listing+retrieving under write+read contention."""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import FDB, FDBConfig, client_context
+
+N_WRITERS = 4
+N_STEPS = 5
+N_PARAMS = 6
+FIELD = 8 * 1024
+
+
+def _ident(writer, step, param):
+    return {"class": "od", "expver": "0001", "stream": "oper",
+            "date": "20240101", "time": "0000", "type": "fc",
+            "levtype": "sfc", "number": str(writer), "levelist": "1",
+            "step": str(step), "param": f"p{param}"}
+
+
+@pytest.mark.parametrize("backend", ["daos", "rados", "posix"])
+def test_operational_nwp_pattern(backend, tmp_path):
+    schema = "nwp-posix" if backend == "posix" else "nwp-object"
+    cfg = FDBConfig(backend=backend, schema=schema,
+                    root=str(tmp_path / "fdb"))
+    fields = {(w, s, p): os.urandom(FIELD)
+              for w in range(N_WRITERS) for s in range(N_STEPS)
+              for p in range(N_PARAMS)}
+    barrier_counts = [threading.Semaphore(0) for _ in range(N_STEPS)]
+    pgen_results = {}
+    errors = []
+
+    def io_server(w):
+        fdb = FDB(cfg)
+        try:
+            with client_context(f"proc{w}@node{w % 2}"):
+                for s in range(N_STEPS):
+                    for p in range(N_PARAMS):
+                        fdb.archive(_ident(w, s, p), fields[(w, s, p)])
+                    fdb.flush()           # step barrier (visibility rule 3)
+                    barrier_counts[s].release()
+            fdb.close()
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    def pgen(s):
+        # wait for all writers to flush step s (workflow-manager signal)
+        for _ in range(N_WRITERS):
+            barrier_counts[s].acquire()
+        fdb = FDB(cfg)
+        try:
+            listed = list(fdb.list({"class": "od", "date": "20240101",
+                                    "step": str(s)}))
+            assert len(listed) == N_WRITERS * N_PARAMS, \
+                f"step {s}: {len(listed)} fields listed"
+            total = bytearray()
+            for w in range(N_WRITERS):
+                handle = fdb.retrieve([_ident(w, s, p)
+                                       for p in range(N_PARAMS)])
+                data = handle.read_parts()
+                for p, blob in enumerate(data):
+                    assert blob == fields[(w, s, p)], (w, s, p)
+                    total += blob
+            pgen_results[s] = len(total)
+        except Exception as e:  # noqa: BLE001
+            errors.append(e)
+
+    writers = [threading.Thread(target=io_server, args=(w,))
+               for w in range(N_WRITERS)]
+    pgens = [threading.Thread(target=pgen, args=(s,))
+             for s in range(N_STEPS)]
+    for t in writers + pgens:
+        t.start()
+    for t in writers + pgens:
+        t.join()
+    assert not errors, errors[:2]
+    assert all(pgen_results[s] == N_WRITERS * N_PARAMS * FIELD
+               for s in range(N_STEPS))
+
+
+def test_framework_end_to_end_train_ckpt_serve():
+    """Train a reduced model a few steps, checkpoint through the FDB,
+    restore into a fresh process-alike, and serve from it."""
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.data import SyntheticTokens
+    from repro.models import lm
+    from repro.serve import Request, ServeEngine
+    from repro.train.checkpoint import FDBCheckpointer
+    from repro.train.optimizer import AdamWConfig
+    from repro.train.trainer import Trainer
+
+    cfg = get_smoke_config("tinyllama-1.1b")
+    data = SyntheticTokens(cfg.vocab_size, 16, seed=9)
+    ck = FDBCheckpointer("e2e", FDBConfig(backend="daos"))
+    tr = Trainer(cfg, None, AdamWConfig(lr=1e-3), checkpointer=ck,
+                 ckpt_every=5, batch_fn=lambda s: data.batch(s, 2))
+    tr.fit(5, log_every=100)
+    step, params = ck.restore_latest(
+        lm.init_params(cfg, jax.random.PRNGKey(0)))
+    assert step == 5
+    eng = ServeEngine(cfg, params, batch_slots=2, max_len=24)
+    eng.submit(Request(rid=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=3))
+    done = eng.run()
+    assert len(done) == 1 and len(done[0].out_tokens) == 3

@@ -1,0 +1,139 @@
+"""Trainer integration: checkpoint/restart, async archival, stragglers,
+elastic re-planning."""
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.core import FDBConfig
+from repro.data import FDBDataPipeline, SyntheticTokens
+from repro.train.checkpoint import FDBCheckpointer
+from repro.train.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.train.trainer import (StragglerMonitor, Trainer, WorkerFailure,
+                                 reassign_shard, run_with_restarts)
+
+
+@pytest.fixture
+def tiny_setup():
+    cfg = get_smoke_config("tinyllama-1.1b")
+    data = SyntheticTokens(cfg.vocab_size, 16, seed=3)
+    return cfg, data
+
+
+def test_adamw_descends_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    opt = adamw_init(params)
+    cfg = AdamWConfig(lr=0.1, weight_decay=0.0)
+    for _ in range(100):
+        grads = {"w": 2 * params["w"]}
+        params, opt, _ = adamw_update(grads, opt, params, cfg)
+    assert float(jnp.abs(params["w"]).max()) < 0.2
+
+
+def test_checkpoint_roundtrip_async(tiny_setup):
+    cfg, data = tiny_setup
+    from repro.models import lm
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    ck = FDBCheckpointer("async-run", FDBConfig(backend="rados"),
+                         asynchronous=True)
+    ck.save(7, params)
+    ck.wait()
+    restored = ck.restore(7, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    ck.close()
+
+
+def test_checkpoint_compressed_roundtrip(tiny_setup):
+    cfg, _ = tiny_setup
+    from repro.models import lm
+    params = lm.init_params(cfg, jax.random.PRNGKey(1))
+    ck = FDBCheckpointer("comp-run", FDBConfig(backend="daos"),
+                         compress=True)
+    ck.save(1, params)
+    restored = ck.restore(1, params)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        a, b = np.asarray(a), np.asarray(b)
+        if a.size >= 1024 and a.ndim >= 2:
+            rng = a.max() - a.min()
+            assert np.abs(a - b).max() <= rng / 255 * 0.51 + 1e-6
+        else:
+            np.testing.assert_array_equal(a, b)
+    ck.close()
+
+
+def test_restart_resumes_from_checkpoint(tiny_setup):
+    cfg, data = tiny_setup
+    ck = FDBCheckpointer("restart-run", FDBConfig(backend="daos"))
+    fail = {8}
+
+    def fault(step):
+        if step in fail:
+            fail.discard(step)
+            raise WorkerFailure("chaos")
+
+    def make():
+        return Trainer(cfg, None, AdamWConfig(lr=1e-3), checkpointer=ck,
+                       ckpt_every=4, batch_fn=lambda s: data.batch(s, 2),
+                       fault_hook=fault)
+
+    tr = run_with_restarts(make, n_steps=12, max_restarts=1)
+    assert tr.step == 12
+    assert all(math.isfinite(m["loss"]) for m in tr.metrics)
+    assert 12 in ck.available_steps()
+
+
+def test_straggler_monitor_flags_outliers():
+    mon = StragglerMonitor(threshold=2.0)
+    for _ in range(10):
+        assert not mon.observe(0.1)
+    assert mon.observe(0.5)
+    assert mon.flagged == 1
+
+
+def test_reassign_shard_deterministic_and_total():
+    n = 16
+    for epoch in range(3):
+        targets = {reassign_shard(h, n, epoch) for h in range(n)}
+        assert targets == set(range(n))     # a permutation — no data loss
+
+
+def test_elastic_replan():
+    import os
+    if "pod" in str(jax.devices()):
+        pass
+    from repro.launch.elastic import reassign_data_shards
+    out = reassign_data_shards(10, [0, 2, 5])
+    assert sorted(s for lst in out.values() for s in lst) == list(range(10))
+    assert max(len(v) for v in out.values()) \
+        - min(len(v) for v in out.values()) <= 1
+
+
+def test_pipeline_contended_producer_consumer(tiny_setup):
+    cfg, data = tiny_setup
+    import threading
+    pipe = FDBDataPipeline("corpus", fdb_config=FDBConfig(backend="daos"))
+    n = 8
+    got = []
+
+    def producer():
+        for i in range(n):
+            pipe.put_batch(0, i, data.batch(i, 2))
+            pipe.commit()
+
+    t = threading.Thread(target=producer)
+    t.start()
+    # poll concurrently with the producer: only ever see complete batches
+    import time
+    deadline = time.time() + 30
+    while len(got) < n and time.time() < deadline:
+        b = pipe.get_batch(0, len(got))
+        if b is not None:
+            got.append(b)
+    t.join()
+    assert len(got) == n
+    for i, b in enumerate(got):
+        np.testing.assert_array_equal(b["tokens"], data.batch(i, 2)["tokens"])
