@@ -1,0 +1,75 @@
+"""Chunked tensorstore sweeps — the paper's object-size/concurrency axes
+applied to the new subsystem: chunk size × I/O parallelism × backend.
+
+Per cell: archive one (256, 256) float32 field as a chunked array (parallel
+chunk writes through the bounded executor), then read back a 64-row window
+(partial read: only intersecting chunks).  Reports in-process us/chunk and
+the cost-modeled at-scale bandwidth, mirroring Figs. 4.5-4.7/4.26.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import (FDB, FDBConfig, Meter, PROFILES, model_run,
+                        reset_engines)
+from repro.tensorstore import ChunkExecutor, TensorStore
+from .common import Row
+
+BACKENDS = ("daos", "rados", "posix", "s3")
+CHUNK_EDGES = (32, 64, 128)
+PARALLELISM = (1, 4, 16)
+SERVERS = 4
+SHAPE = (256, 256)
+
+
+def run(profile: str = "gcp") -> List[Row]:
+    rows: List[Row] = []
+    x = np.random.default_rng(0).normal(size=SHAPE).astype(np.float32)
+    for backend in BACKENDS:
+        for edge in CHUNK_EDGES:
+            for par in PARALLELISM:
+                meter = Meter()
+                reset_engines()
+                root = f"/tmp/fdb-bench-ts-{backend}-{edge}-{par}-{os.getpid()}"
+                shutil.rmtree(root, ignore_errors=True)
+                # parallelism lever: the explicitly sized executor below
+                fdb = FDB(FDBConfig(backend=backend, schema="tensor",
+                                    root=root), meter=meter)
+                executor = ChunkExecutor(max_workers=max(par, 1),
+                                         max_in_flight=4 * max(par, 1))
+                ts = TensorStore(fdb, {"store": "bench", "array": "field",
+                                       "writer": "p0"}, executor=executor)
+                n_chunks = (-(-SHAPE[0] // edge)) * (-(-SHAPE[1] // edge))
+
+                t0 = time.perf_counter()
+                ts.save(x, chunks=(edge, edge))
+                wall_w = time.perf_counter() - t0
+                mw = model_run(meter.snapshot(), PROFILES[profile],
+                               server_nodes=SERVERS)
+
+                meter.reset()
+                arr = ts.open()
+                t0 = time.perf_counter()
+                arr[96:160, :]           # 64-row window: partial read
+                wall_r = time.perf_counter() - t0
+                mr = model_run(meter.snapshot(), PROFILES[profile],
+                               server_nodes=SERVERS)
+
+                tag = f"tensorstore/{backend}/c{edge}/p{par}"
+                rows.append(Row(
+                    f"{tag}/write", wall_w / n_chunks * 1e6,
+                    f"modeled={mw.write_bw / 2**30:.2f}GiB/s "
+                    f"dominant={mw.dominant}"))
+                rows.append(Row(
+                    f"{tag}/window_read", wall_r * 1e6,
+                    f"modeled={mr.read_bw / 2**30:.2f}GiB/s "
+                    f"dominant={mr.dominant}"))
+                executor.shutdown()
+                fdb.close()
+                shutil.rmtree(root, ignore_errors=True)
+    return rows

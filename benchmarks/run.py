@@ -9,7 +9,7 @@ import traceback
 def main() -> None:
     from . import (bench_ckpt, bench_fieldio, bench_hammer, bench_ior,
                    bench_rados_options, bench_redundancy,
-                   bench_small_objects, roofline)
+                   bench_small_objects, bench_tensorstore, roofline)
     suites = [
         ("ior", bench_ior),                     # Figs. 4.5-4.7 / 4.19-4.20
         ("fieldio", bench_fieldio),             # Figs. 4.8-4.11
@@ -18,6 +18,7 @@ def main() -> None:
         ("small_objects", bench_small_objects), # Fig. 4.26
         ("redundancy", bench_redundancy),       # Figs. 4.27-4.28
         ("ckpt", bench_ckpt),                   # §3.1.3 operational pattern
+        ("tensorstore", bench_tensorstore),     # chunk size x parallelism
         ("roofline", roofline),                 # §Roofline deliverable
     ]
     print("name,us_per_call,derived")

@@ -12,7 +12,8 @@ from .fdb import FDB, FDBConfig, reset_engines, shared_engine
 from .handle import DataHandle, FieldLocation, MultiHandle
 from .interfaces import Catalogue, Store
 from .schema import (CHECKPOINT_SCHEMA, DATA_SCHEMA, Identifier,
-                     NWP_OBJECT_SCHEMA, NWP_POSIX_SCHEMA, SCHEMAS, Schema)
+                     NWP_OBJECT_SCHEMA, NWP_POSIX_SCHEMA, SCHEMAS, Schema,
+                     TENSOR_SCHEMA)
 from .engine.meter import GLOBAL_METER, Meter, client_context
 from .engine.costmodel import PROFILES, HardwareProfile, model_run
 
@@ -22,7 +23,7 @@ __all__ = [
     "Catalogue", "Store",
     "Identifier", "Schema", "SCHEMAS",
     "NWP_OBJECT_SCHEMA", "NWP_POSIX_SCHEMA", "CHECKPOINT_SCHEMA",
-    "DATA_SCHEMA",
+    "DATA_SCHEMA", "TENSOR_SCHEMA",
     "GLOBAL_METER", "Meter", "client_context",
     "PROFILES", "HardwareProfile", "model_run",
 ]

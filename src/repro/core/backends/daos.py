@@ -169,6 +169,10 @@ class DaosCatalogue(Catalogue):
                                _axis_kv_oid(collocation, dim), val, b"1")
             with self._lock:
                 self._axis_seen.add(seen_key)
+                # read-your-writes: drop our own pre-loaded axis summary so a
+                # later retrieve by this client sees the new value (other
+                # clients' pre-loads stay stale — the §3.1.2 caveat)
+                self._axes_cache.pop((label, ckey), None)
 
     def flush(self) -> None:
         # kv_put is immediately persistent and visible (§3.1.2).
@@ -271,6 +275,11 @@ class DaosCatalogue(Catalogue):
             self._known_datasets.discard(label)
             self._axes_cache = {k: v for k, v in self._axes_cache.items()
                                 if k[0] != label}
+            # the index/axis KVs died with the container: forget the memos so
+            # re-archiving the same keys rebuilds them
+            self._known_indexes = {k for k in self._known_indexes
+                                   if k[0] != label}
+            self._axis_seen = {k for k in self._axis_seen if k[0] != label}
 
     # NOTE on wipe(): a dataset container destroy removes data+index in one
     # administrative op — the reason for container-per-dataset (§3.1).

@@ -307,10 +307,10 @@ class PosixCatalogue(Catalogue):
     def archive(self, dataset: Identifier, collocation: Identifier,
                 element: Identifier, location: FieldLocation) -> None:
         mi = self._mem_index(dataset, collocation)
-        uri_id = mi.intern(location.unit)
-        entry = (uri_id, location.offset, location.length)
         ekey = element.canonical()
         with self._lock:
+            uri_id = mi.intern(location.unit)
+            entry = (uri_id, location.offset, location.length)
             mi.partial[ekey] = entry
             mi.full[ekey] = entry
             for dim in self.schema.element_dims:
@@ -359,6 +359,9 @@ class PosixCatalogue(Catalogue):
                 "index": {"path": mi.pindex_path, "offset": offset,
                           "length": len(blob)},
                 "uris": uris, "axes": axes}, self.sim, unit=st)
+            with self._lock:
+                # read-your-writes: our own pre-loaded TOC is now stale
+                self._preloaded.pop(dlabel, None)
 
     def close(self) -> None:
         """Write full indexes, point the TOC at them, mask our sub-TOCs."""

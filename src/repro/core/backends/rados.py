@@ -110,10 +110,12 @@ class RadosStore(Store):
                 name = _unique_name(f"{collocation.canonical()}.part{part}")
                 off = 0
             self._spans[key] = (name, off + len(data), part)
-        if self.persistence == "immediate":
-            self.engine.append(pool, ns, name, data)
-        else:
-            with self._lock:
+            # append (or enqueue) under the reservation lock: with parallel
+            # archives the physical append order must match the reserved
+            # offsets or locations would point at other items' bytes
+            if self.persistence == "immediate":
+                self.engine.append(pool, ns, name, data)
+            else:
                 self._pending.append((pool, ns, name, off, bytes(data)))
         return FieldLocation(self.scheme, ns, name, off, len(data), pool=pool)
 
@@ -239,6 +241,8 @@ class RadosCatalogue(Catalogue):
             axis_updates.setdefault(_axis_name(collocation, dim), {})[val] = b"1"
             with self._lock:
                 self._axis_seen.add(seen)
+                # read-your-writes: invalidate our own axis summary cache
+                self._axes_cache.pop((label, ckey), None)
         for obj, kvs in axis_updates.items():
             self._omap_set(label, obj, kvs)
 
@@ -342,3 +346,8 @@ class RadosCatalogue(Catalogue):
             self._known_datasets.discard(label)
             self._axes_cache = {k: v for k, v in self._axes_cache.items()
                                 if k[0] != label}
+            # the index/axis omaps died with the namespace: forget the memos
+            # so re-archiving the same keys rebuilds them
+            self._known_indexes = {k for k in self._known_indexes
+                                   if k[0] != label}
+            self._axis_seen = {k for k in self._axis_seen if k[0] != label}

@@ -191,7 +191,20 @@ DATA_SCHEMA = Schema(
     element_dims=("shard", "batch"),
 )
 
+#: Schema for ``repro.tensorstore`` chunked N-D arrays: one dataset per
+#: (store, array) — wiping an array is a container destroy, the Zarr-array ≈
+#: DAOS-container mapping; one collocation key per writer process
+#: (contention-free chunk index, the paper's C7 lever); element = chunk index
+#: within the array (the reserved value ``meta`` holds the array metadata).
+TENSOR_SCHEMA = Schema(
+    name="tensor",
+    dataset_dims=("store", "array"),
+    collocation_dims=("writer",),
+    element_dims=("chunk",),
+)
+
 SCHEMAS: Dict[str, Schema] = {
     s.name: s
-    for s in (NWP_POSIX_SCHEMA, NWP_OBJECT_SCHEMA, CHECKPOINT_SCHEMA, DATA_SCHEMA)
+    for s in (NWP_POSIX_SCHEMA, NWP_OBJECT_SCHEMA, CHECKPOINT_SCHEMA,
+              DATA_SCHEMA, TENSOR_SCHEMA)
 }

@@ -1,3 +1,3 @@
-from .pipeline import FDBDataPipeline, SyntheticTokens
+from .pipeline import ChunkedFieldStore, FDBDataPipeline, SyntheticTokens
 
-__all__ = ["FDBDataPipeline", "SyntheticTokens"]
+__all__ = ["ChunkedFieldStore", "FDBDataPipeline", "SyntheticTokens"]

@@ -15,7 +15,9 @@ from typing import Dict, Iterator, Optional
 import numpy as np
 
 from repro.core import FDB, FDBConfig, Identifier
-from repro.core.schema import DATA_SCHEMA
+from repro.core.schema import DATA_SCHEMA, TENSOR_SCHEMA
+from repro.tensorstore import (ChunkedArray, LayoutMismatchError,
+                               TensorStore)
 
 
 class SyntheticTokens:
@@ -31,6 +33,84 @@ class SyntheticTokens:
         toks = rng.integers(0, self.vocab_size,
                             (batch_size, self.seq_len + 1), dtype=np.int32)
         return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+class ChunkedFieldStore:
+    """Chunked N-D weather-field access over ``repro.tensorstore``.
+
+    Producers archive whole fields (lat × lon × level grids) as chunked
+    arrays; consumers slice windows — ``read_window("t2m", slice(0, 120),
+    slice(300, 420))`` retrieves only the intersecting chunks, the partial-
+    read NWP workload (regional post-processing / PGEN extraction) the
+    whole-blob archive path cannot serve.
+    """
+
+    def __init__(self, store: str = "nwp",
+                 fdb_config: Optional[FDBConfig] = None,
+                 writer: str = "prod0", codec: str = "raw",
+                 chunks: Optional[tuple] = None):
+        cfg = fdb_config or FDBConfig(backend="daos")
+        if cfg.resolved_schema().name != "tensor":
+            import dataclasses
+            cfg = dataclasses.replace(cfg, schema=TENSOR_SCHEMA)
+        self.fdb = FDB(cfg)
+        self.store = store
+        self.writer = writer
+        self.codec = codec
+        self.chunks = chunks
+        # metadata is immutable until wipe/re-put, so opened arrays cache
+        self._opened: Dict[str, ChunkedArray] = {}
+
+    def _ts(self, name: str) -> TensorStore:
+        return TensorStore(self.fdb, {"store": self.store, "array": name,
+                                      "writer": self.writer})
+
+    # -- producer side -----------------------------------------------------
+    def put_field(self, name: str, values: np.ndarray,
+                  chunks: Optional[tuple] = None,
+                  codec: Optional[str] = None) -> ChunkedArray:
+        ts = self._ts(name)
+        values = np.asarray(values)
+        try:
+            arr = ts.create(values.shape, values.dtype,
+                            chunks=chunks or self.chunks,
+                            codec=codec or self.codec)
+        except LayoutMismatchError:
+            # layout changed: the array's dataset is exactly (store, array),
+            # so a wipe removes every stale chunk before re-creating
+            self.wipe_field(name)
+            arr = ts.create(values.shape, values.dtype,
+                            chunks=chunks or self.chunks,
+                            codec=codec or self.codec)
+        # commit() is the visibility barrier — don't flush per field
+        arr.write(values, flush=False)
+        self._opened[name] = arr
+        return arr
+
+    def commit(self) -> None:
+        self.fdb.flush()
+
+    # -- consumer side -----------------------------------------------------
+    def open_field(self, name: str) -> ChunkedArray:
+        arr = self._opened.get(name)
+        if arr is None:
+            arr = self._opened[name] = self._ts(name).open()
+        return arr
+
+    def read_window(self, name: str, *selection) -> np.ndarray:
+        """Read a window of a field; I/O is issued for only the chunks the
+        window intersects, in parallel."""
+        arr = self.open_field(name)
+        if not selection:
+            return arr.read()
+        return arr[tuple(selection)]
+
+    def wipe_field(self, name: str) -> None:
+        self._opened.pop(name, None)
+        self.fdb.wipe({"store": self.store, "array": name})
+
+    def close(self) -> None:
+        self.fdb.close()
 
 
 class FDBDataPipeline:

@@ -1,0 +1,118 @@
+"""Per-chunk codecs: raw passthrough + the Pallas field codec.
+
+``field8``/``field16`` reuse the TPU field-packing kernels
+(:mod:`repro.kernels.field_codec`): the chunk is flattened, the lane-aligned
+head (a multiple of 128 elements) is block-quantised to int8/int16 with
+per-block (scale, min) pairs, and the sub-lane tail rides along as float32.
+Chunks that cannot profit (non-float dtypes, tiny chunks) fall back to raw
+bytes — the one-byte container header makes every chunk self-describing, so
+edge chunks of any shape roundtrip exactly through either path.
+
+Container layout (little-endian):
+  [0]   marker: 0 = raw ndarray bytes, 1 = quantised
+  quantised payload:
+  [1:9] rows:u32, block:u32
+  [9:]  q (rows*128 int8|int16) | scale (rows/block f32) | mins (f32) | tail f32
+"""
+from __future__ import annotations
+
+import struct
+from typing import Dict, Tuple
+
+import numpy as np
+
+_LANES = 128
+_RAW, _QUANT = 0, 1
+_BLOCK_CANDIDATES = (256, 128, 64, 32, 16, 8, 4, 2, 1)
+
+
+class Codec:
+    name: str = "?"
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        raise NotImplementedError
+
+    def decode(self, data: bytes, shape: Tuple[int, ...],
+               dtype: np.dtype) -> np.ndarray:
+        raise NotImplementedError
+
+
+class RawCodec(Codec):
+    name = "raw"
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        return np.ascontiguousarray(arr).tobytes()
+
+    def decode(self, data: bytes, shape: Tuple[int, ...],
+               dtype: np.dtype) -> np.ndarray:
+        return np.frombuffer(data, dtype=dtype).reshape(shape).copy()
+
+
+class FieldQuantCodec(Codec):
+    """Lossy block quantisation via the Pallas field codec kernels."""
+
+    def __init__(self, bits: int = 8):
+        assert bits in (8, 16)
+        self.bits = bits
+        self.name = f"field{bits}"
+        self._qdtype = np.int8 if bits == 8 else np.int16
+
+    def _eligible(self, arr: np.ndarray) -> bool:
+        return (arr.dtype in (np.float32, np.float16, np.float64)
+                and arr.size >= 2 * _LANES)
+
+    def encode(self, arr: np.ndarray) -> bytes:
+        arr = np.ascontiguousarray(arr)
+        if not self._eligible(arr):
+            return bytes([_RAW]) + arr.tobytes()
+        from repro.kernels import ops
+        flat = arr.reshape(-1).astype(np.float32)
+        n = (flat.size // _LANES) * _LANES
+        rows = n // _LANES
+        block = next(b for b in _BLOCK_CANDIDATES if rows % b == 0)
+        q, scale, mins = ops.field_encode(flat[:n].reshape(rows, _LANES),
+                                          block=block, bits=self.bits)
+        return b"".join([
+            bytes([_QUANT]), struct.pack("<II", rows, block),
+            np.asarray(q, self._qdtype).tobytes(),
+            np.asarray(scale, np.float32).tobytes(),
+            np.asarray(mins, np.float32).tobytes(),
+            flat[n:].tobytes(),
+        ])
+
+    def decode(self, data: bytes, shape: Tuple[int, ...],
+               dtype: np.dtype) -> np.ndarray:
+        marker = data[0]
+        if marker == _RAW:
+            return np.frombuffer(data, dtype=dtype, offset=1
+                                 ).reshape(shape).copy()
+        from repro.kernels import ops
+        rows, block = struct.unpack_from("<II", data, 1)
+        nb = rows // block
+        off = 9
+        qlen = rows * _LANES * np.dtype(self._qdtype).itemsize
+        q = np.frombuffer(data, self._qdtype, rows * _LANES, off
+                          ).reshape(rows, _LANES)
+        off += qlen
+        scale = np.frombuffer(data, np.float32, nb, off)
+        off += 4 * nb
+        mins = np.frombuffer(data, np.float32, nb, off)
+        off += 4 * nb
+        tail = np.frombuffer(data, np.float32, offset=off)
+        head = np.asarray(ops.field_decode(q, scale, mins, block=block,
+                                           bits=self.bits))
+        return np.concatenate([head.reshape(-1), tail]).astype(
+            dtype, copy=False).reshape(shape)
+
+
+CODECS: Dict[str, Codec] = {
+    c.name: c for c in (RawCodec(), FieldQuantCodec(8), FieldQuantCodec(16))
+}
+
+
+def get_codec(name: str) -> Codec:
+    try:
+        return CODECS[name]
+    except KeyError:
+        raise ValueError(f"unknown tensorstore codec {name!r}; "
+                         f"known: {sorted(CODECS)}") from None

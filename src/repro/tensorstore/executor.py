@@ -1,0 +1,114 @@
+"""Async chunk-I/O executor: thread pool + futures with a bounded in-flight
+window.
+
+The paper's core result is that object stores win when clients keep many
+independent object-granular I/Os in flight; this executor is the client-side
+half of that — ``submit()`` admits at most ``max_in_flight`` outstanding
+tasks (queued + running) and blocks the producer beyond that, bounding the
+memory held by encoded chunks while keeping the pipe full.
+
+Callers' :mod:`contextvars` context (the engine meter's ``client_context``)
+is propagated into worker threads so op attribution survives the hop.
+
+This module deliberately has no ``repro`` imports: :mod:`repro.core.fdb`
+reaches for it lazily without creating an import cycle.
+"""
+from __future__ import annotations
+
+import contextvars
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Iterable, List, Optional
+
+DEFAULT_WORKERS = 8
+
+
+class ChunkExecutor:
+    def __init__(self, max_workers: int = DEFAULT_WORKERS,
+                 max_in_flight: Optional[int] = None):
+        if max_workers < 1:
+            raise ValueError("max_workers must be >= 1")
+        self.max_workers = max_workers
+        self.max_in_flight = max_in_flight or 4 * max_workers
+        if self.max_in_flight < 1:
+            raise ValueError("max_in_flight must be >= 1")
+        self._pool = ThreadPoolExecutor(max_workers=max_workers,
+                                        thread_name_prefix="fdbx-io")
+        self._window = threading.Semaphore(self.max_in_flight)
+        self._lock = threading.Lock()
+        self._in_flight = 0
+        self.peak_in_flight = 0
+
+    # -- core API -------------------------------------------------------------
+    def submit(self, fn: Callable[..., Any], *args: Any, **kw: Any) -> Future:
+        """Schedule ``fn(*args, **kw)``; blocks while the window is full."""
+        self._window.acquire()
+        with self._lock:
+            self._in_flight += 1
+            self.peak_in_flight = max(self.peak_in_flight, self._in_flight)
+        ctx = contextvars.copy_context()
+        try:
+            fut = self._pool.submit(ctx.run, fn, *args, **kw)
+        except BaseException:
+            self._leave()
+            raise
+        fut.add_done_callback(lambda _f: self._leave())
+        return fut
+
+    def _leave(self) -> None:
+        with self._lock:
+            self._in_flight -= 1
+        self._window.release()
+
+    @property
+    def in_flight(self) -> int:
+        with self._lock:
+            return self._in_flight
+
+    def map_ordered(self, fn: Callable[[Any], Any],
+                    items: Iterable[Any]) -> List[Any]:
+        """Run ``fn`` over ``items`` concurrently; results in input order.
+
+        The first raised exception propagates (after all futures settle, so
+        no task outlives the call with shared state in hand).
+        """
+        futures = [self.submit(fn, item) for item in items]
+        results, first_error = [], None
+        for fut in futures:
+            try:
+                results.append(fut.result())
+            except BaseException as e:  # noqa: BLE001
+                if first_error is None:
+                    first_error = e
+                results.append(None)
+        if first_error is not None:
+            raise first_error
+        return results
+
+    def shutdown(self, wait: bool = True) -> None:
+        self._pool.shutdown(wait=wait)
+
+    def __enter__(self) -> "ChunkExecutor":
+        return self
+
+    def __exit__(self, *exc: Any) -> None:
+        self.shutdown()
+
+
+#: process-global shared executors, one per requested depth (threads are
+#: created lazily by the pool, so idle entries cost almost nothing)
+_SHARED: dict = {}
+_SHARED_LOCK = threading.Lock()
+
+
+def sized_executor(max_workers: int) -> ChunkExecutor:
+    """Shared executor with exactly ``max_workers`` of overlap depth."""
+    with _SHARED_LOCK:
+        ex = _SHARED.get(max_workers)
+        if ex is None:
+            ex = _SHARED[max_workers] = ChunkExecutor(max_workers=max_workers)
+        return ex
+
+
+def default_executor() -> ChunkExecutor:
+    return sized_executor(DEFAULT_WORKERS)

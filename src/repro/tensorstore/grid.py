@@ -1,0 +1,119 @@
+"""Chunk-grid geometry for chunked N-D arrays (the Zarr layer's index math).
+
+An array of ``shape`` is split on a regular grid of ``chunks``-shaped tiles;
+edge tiles are clipped.  All selection math lives here so the store itself
+only deals in whole chunks: ``intersecting()`` maps an N-D selection onto the
+minimal set of (chunk index, within-chunk slice, output slice) triples — the
+property that makes partial reads issue I/O for only the touched chunks.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Iterator, List, Tuple
+
+Index = Tuple[int, ...]
+Slices = Tuple[slice, ...]
+
+
+class ChunkGrid:
+    def __init__(self, shape: Tuple[int, ...], chunks: Tuple[int, ...]):
+        shape = tuple(int(s) for s in shape)
+        chunks = tuple(int(c) for c in chunks)
+        if len(shape) != len(chunks):
+            raise ValueError(f"rank mismatch: shape {shape} vs chunks {chunks}")
+        if any(s < 0 for s in shape):
+            raise ValueError(f"negative dim in shape {shape}")
+        if any(c <= 0 for c in chunks):
+            raise ValueError(f"non-positive chunk dim in {chunks}")
+        self.shape = shape
+        # clip oversize chunk dims so n_chunks math stays trivial
+        self.chunks = tuple(min(c, s) if s > 0 else 1
+                            for c, s in zip(chunks, shape))
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
+
+    @property
+    def n_chunks(self) -> Tuple[int, ...]:
+        return tuple(-(-s // c) for s, c in zip(self.shape, self.chunks))
+
+    @property
+    def chunk_count(self) -> int:
+        total = 1
+        for n in self.n_chunks:
+            total *= n
+        return total
+
+    def all_indices(self) -> Iterator[Index]:
+        return itertools.product(*(range(n) for n in self.n_chunks))
+
+    def chunk_slices(self, idx: Index) -> Slices:
+        """Array region covered by chunk ``idx`` (edge chunks clipped)."""
+        self._check_index(idx)
+        return tuple(slice(i * c, min((i + 1) * c, s))
+                     for i, c, s in zip(idx, self.chunks, self.shape))
+
+    def chunk_shape(self, idx: Index) -> Tuple[int, ...]:
+        return tuple(sl.stop - sl.start for sl in self.chunk_slices(idx))
+
+    def _check_index(self, idx: Index) -> None:
+        if len(idx) != self.ndim:
+            raise IndexError(f"chunk index {idx} has wrong rank for {self.shape}")
+        for i, n in zip(idx, self.n_chunks):
+            if not 0 <= i < n:
+                raise IndexError(f"chunk index {idx} outside grid {self.n_chunks}")
+
+    # -- selection handling ---------------------------------------------------
+    def normalize_key(self, key) -> Tuple[Slices, Tuple[int, ...]]:
+        """Normalise a ``__getitem__`` key into per-dim unit-step slices.
+
+        Returns ``(slices, squeeze_axes)``: integer indices become length-1
+        slices and their axes are recorded for squeezing.  Steps other than 1
+        are rejected (resharding follow-on, see ROADMAP).
+        """
+        if not isinstance(key, tuple):
+            key = (key,)
+        if len(key) > self.ndim:
+            raise IndexError(f"too many indices for {self.ndim}-d array")
+        key = key + (slice(None),) * (self.ndim - len(key))
+        sel: List[slice] = []
+        squeeze: List[int] = []
+        for axis, (k, size) in enumerate(zip(key, self.shape)):
+            if isinstance(k, slice):
+                start, stop, step = k.indices(size)
+                if step != 1:
+                    raise IndexError("tensorstore selections require step 1")
+                sel.append(slice(start, max(start, stop)))
+            else:
+                i = int(k)
+                if i < 0:
+                    i += size
+                if not 0 <= i < size:
+                    raise IndexError(f"index {k} out of bounds for axis "
+                                     f"{axis} with size {size}")
+                sel.append(slice(i, i + 1))
+                squeeze.append(axis)
+        return tuple(sel), tuple(squeeze)
+
+    def selection_shape(self, sel: Slices) -> Tuple[int, ...]:
+        return tuple(s.stop - s.start for s in sel)
+
+    def intersecting(self, sel: Slices
+                     ) -> Iterator[Tuple[Index, Slices, Slices]]:
+        """Yield ``(chunk_idx, within_chunk_slices, output_slices)`` for every
+        chunk intersecting ``sel`` — and only those."""
+        if any(s.stop <= s.start for s in sel):
+            return
+        per_dim = []
+        for s, c in zip(sel, self.chunks):
+            first, last = s.start // c, (s.stop - 1) // c
+            per_dim.append(range(first, last + 1))
+        for idx in itertools.product(*per_dim):
+            chunk_sel, out_sel = [], []
+            for i, s, c, size in zip(idx, sel, self.chunks, self.shape):
+                c_lo, c_hi = i * c, min((i + 1) * c, size)
+                lo, hi = max(s.start, c_lo), min(s.stop, c_hi)
+                chunk_sel.append(slice(lo - c_lo, hi - c_lo))
+                out_sel.append(slice(lo - s.start, hi - s.start))
+            yield idx, tuple(chunk_sel), tuple(out_sel)

@@ -1,0 +1,85 @@
+"""Array metadata: the small self-describing object archived next to the
+chunks (the ``.zarray`` analogue).  One metadata object per array, stored
+under the reserved chunk key ``meta``."""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Tuple
+
+import numpy as np
+
+from .grid import ChunkGrid
+
+#: reserved element-key value for the metadata object
+META_CHUNK_KEY = "meta"
+
+FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class ArrayMeta:
+    shape: Tuple[int, ...]
+    dtype: str                  # numpy dtype string, e.g. "float32"
+    chunks: Tuple[int, ...]
+    codec: str = "raw"
+    version: int = FORMAT_VERSION
+
+    def __post_init__(self) -> None:
+        np.dtype(self.dtype)    # raises early on junk
+        ChunkGrid(self.shape, self.chunks)   # validates rank/positivity
+
+    @property
+    def npdtype(self) -> np.dtype:
+        return np.dtype(self.dtype)
+
+    @property
+    def nbytes(self) -> int:
+        n = self.npdtype.itemsize
+        for s in self.shape:
+            n *= s
+        return n
+
+    def grid(self) -> ChunkGrid:
+        return ChunkGrid(self.shape, self.chunks)
+
+    def to_bytes(self) -> bytes:
+        return json.dumps({
+            "shape": list(self.shape), "dtype": self.dtype,
+            "chunks": list(self.chunks), "codec": self.codec,
+            "version": self.version,
+        }, separators=(",", ":")).encode()
+
+    @staticmethod
+    def from_bytes(raw: bytes) -> "ArrayMeta":
+        d = json.loads(raw.decode())
+        if d.get("version", 1) > FORMAT_VERSION:
+            raise ValueError(f"tensorstore format {d['version']} is newer "
+                             f"than supported {FORMAT_VERSION}")
+        return ArrayMeta(shape=tuple(d["shape"]), dtype=d["dtype"],
+                         chunks=tuple(d["chunks"]), codec=d.get("codec", "raw"),
+                         version=d.get("version", 1))
+
+
+def auto_chunks(shape: Tuple[int, ...], dtype,
+                target_bytes: int = 1 << 20) -> Tuple[int, ...]:
+    """Pick a chunk shape with roughly ``target_bytes`` per chunk by halving
+    the largest dimension until the tile fits (object-granular I/O wants
+    chunks big enough to amortise per-op cost — thesis Fig. 4.26)."""
+    chunks = [max(1, int(s)) for s in shape]
+    if not chunks:
+        return ()
+    itemsize = np.dtype(dtype).itemsize
+
+    def tile_bytes() -> int:
+        n = itemsize
+        for c in chunks:
+            n *= c
+        return n
+
+    while tile_bytes() > target_bytes:
+        axis = max(range(len(chunks)), key=lambda a: chunks[a])
+        if chunks[axis] == 1:
+            break
+        chunks[axis] = -(-chunks[axis] // 2)
+    return tuple(chunks)

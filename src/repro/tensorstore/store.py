@@ -1,0 +1,200 @@
+"""Chunked N-D arrays over the FDB: the storage layer the paper's access
+pattern wants (many independent object-granular I/Os per request).
+
+An array is split on a :class:`~.grid.ChunkGrid`; every chunk is archived as
+one FDB object whose element key encodes the chunk index (``c<i>.<j>...``),
+and a small :class:`~.meta.ArrayMeta` object rides under the reserved element
+value ``meta``.  Slicing ``arr[10:20, :]`` retrieves only the intersecting
+chunks — in parallel, through the bounded :class:`~.executor.ChunkExecutor` —
+on any of the four backends (daos / rados / posix / s3).
+
+The store is schema-agnostic: it binds to an existing :class:`repro.core.FDB`
+plus a *base identifier* covering every schema dimension except the chunk
+dimension.  With the dedicated ``tensor`` schema that base is
+``{store, array, writer}``; with the ``ckpt`` schema the chunk index rides
+the ``shard`` element dim so checkpoint tensors become chunked arrays without
+a second catalogue.
+"""
+from __future__ import annotations
+
+from typing import List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import FDB, FieldLocation, Identifier
+from .codec import Codec, get_codec
+from .executor import ChunkExecutor, sized_executor
+from .grid import ChunkGrid
+from .meta import META_CHUNK_KEY, ArrayMeta, auto_chunks
+
+Index = Tuple[int, ...]
+
+
+class LayoutMismatchError(ValueError):
+    """Raised on re-create of an existing array with a different layout."""
+
+
+def chunk_key(idx: Index) -> str:
+    """Element-key value for a chunk index, e.g. ``c0.3.1``.
+
+    ``.`` as separator: ``/`` is the FDB multi-value expression separator and
+    ``,``/``=`` are taken by the canonical identifier form.
+    """
+    return "c" + ".".join(str(i) for i in idx)
+
+
+class TensorStore:
+    """A named slot for one chunked array inside an FDB."""
+
+    def __init__(self, fdb: FDB, base: Mapping[str, object],
+                 chunk_dim: Optional[str] = None,
+                 executor: Optional[ChunkExecutor] = None):
+        self.fdb = fdb
+        schema = fdb.schema
+        self.chunk_dim = chunk_dim or schema.element_dims[-1]
+        if self.chunk_dim not in schema.element_dims:
+            raise KeyError(f"chunk dim {self.chunk_dim!r} is not an element "
+                           f"dim of schema {schema.name!r}")
+        self.base = {str(k): str(v) for k, v in base.items()}
+        missing = [d for d in schema.all_dims
+                   if d != self.chunk_dim and d not in self.base]
+        if missing:
+            raise KeyError(f"tensorstore base {self.base} missing dims "
+                           f"{missing} of schema {schema.name!r}")
+        if executor is None:
+            # honour the FDB's configured overlap depth (<= 1 serializes)
+            executor = sized_executor(max(1, fdb.config.io_parallelism))
+        self.executor = executor
+
+    # -- identifiers -----------------------------------------------------------
+    def _ident(self, chunk_value: str) -> Identifier:
+        return Identifier({**self.base, self.chunk_dim: chunk_value})
+
+    # -- lifecycle -------------------------------------------------------------
+    def exists(self) -> bool:
+        return self.fdb.retrieve(self._ident(META_CHUNK_KEY)).length() > 0
+
+    def create(self, shape: Sequence[int], dtype,
+               chunks: Optional[Sequence[int]] = None,
+               codec: str = "raw") -> "ChunkedArray":
+        """Archive the metadata object and return the (empty) array.
+
+        Re-creating over an existing array is only a clean transactional
+        replace (FDB rule 5) when the layout is unchanged — every new chunk
+        key then overwrites its predecessor.  A different chunk grid / dtype
+        / codec would leave stale old-grid chunk objects behind (there is no
+        per-object delete in the FDB API), so that case is rejected: wipe
+        the array's dataset first.
+        """
+        get_codec(codec)        # validate early
+        shape = tuple(int(s) for s in shape)
+        dtype = np.dtype(dtype)
+        if chunks is None:
+            chunks = auto_chunks(shape, dtype)
+        meta = ArrayMeta(shape=shape, dtype=dtype.name,
+                         chunks=tuple(int(c) for c in chunks), codec=codec)
+        handle = self.fdb.retrieve(self._ident(META_CHUNK_KEY))
+        if handle.length():
+            old = ArrayMeta.from_bytes(handle.read())
+            if old != meta:
+                raise LayoutMismatchError(
+                    f"array at {self.base} already exists with layout "
+                    f"{old} != {meta}; wipe it before re-creating with a "
+                    f"different layout")
+        self.fdb.archive(self._ident(META_CHUNK_KEY), meta.to_bytes())
+        return ChunkedArray(self, meta)
+
+    def open(self) -> "ChunkedArray":
+        handle = self.fdb.retrieve(self._ident(META_CHUNK_KEY))
+        if handle.length() == 0:
+            raise FileNotFoundError(
+                f"no tensorstore array at {self.base} "
+                f"(backend {self.fdb.config.backend})")
+        return ChunkedArray(self, ArrayMeta.from_bytes(handle.read()))
+
+    def save(self, values, chunks: Optional[Sequence[int]] = None,
+             codec: str = "raw") -> "ChunkedArray":
+        """create() + write() + flush() in one call."""
+        values = np.asarray(values)
+        arr = self.create(values.shape, values.dtype, chunks=chunks,
+                          codec=codec)
+        arr.write(values)
+        return arr
+
+
+class ChunkedArray:
+    def __init__(self, store: TensorStore, meta: ArrayMeta):
+        self.store = store
+        self.meta = meta
+        self.grid: ChunkGrid = meta.grid()
+        self._codec: Codec = get_codec(meta.codec)
+
+    # -- introspection ---------------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.meta.shape
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self.meta.npdtype
+
+    @property
+    def chunks(self) -> Tuple[int, ...]:
+        return self.meta.chunks
+
+    @property
+    def n_chunks(self) -> Tuple[int, ...]:
+        return self.grid.n_chunks
+
+    def __repr__(self) -> str:
+        return (f"ChunkedArray(shape={self.shape}, dtype={self.dtype.name}, "
+                f"chunks={self.chunks}, codec={self.meta.codec})")
+
+    # -- write path ------------------------------------------------------------
+    def write(self, values, flush: bool = True) -> List[FieldLocation]:
+        """Archive every chunk: one executor task per chunk encodes *and*
+        archives, so at most the executor's in-flight window of encoded
+        chunks is ever alive and archives overlap encodes of later chunks.
+        ``flush=True`` commits before returning (FDB visibility rule 3)."""
+        values = np.asarray(values)
+        if values.shape != self.shape:
+            raise ValueError(f"write shape {values.shape} != array shape "
+                             f"{self.shape}")
+        values = values.astype(self.dtype, copy=False)
+        codec, grid, store = self._codec, self.grid, self.store
+
+        def put(idx: Index) -> FieldLocation:
+            chunk = values[grid.chunk_slices(idx)]
+            return store.fdb.archive(store._ident(chunk_key(idx)),
+                                     codec.encode(chunk))
+
+        locs = store.executor.map_ordered(put, list(grid.all_indices()))
+        if flush:
+            store.fdb.flush()
+        return locs
+
+    # -- read path -------------------------------------------------------------
+    def __getitem__(self, key) -> np.ndarray:
+        sel, squeeze = self.grid.normalize_key(key)
+        out = np.empty(self.grid.selection_shape(sel), self.dtype)
+        plan = list(self.grid.intersecting(sel))
+        codec, grid, store = self._codec, self.grid, self.store
+
+        def fetch(task) -> None:
+            idx, chunk_sel, out_sel = task
+            handle = store.fdb.retrieve(store._ident(chunk_key(idx)))
+            if handle.length() == 0:
+                raise KeyError(f"missing chunk {idx} of array at {store.base}")
+            chunk = codec.decode(handle.read(), grid.chunk_shape(idx),
+                                 self.dtype)
+            out[out_sel] = chunk[chunk_sel]
+
+        # disjoint output regions per task → concurrent assembly is safe
+        store.executor.map_ordered(fetch, plan)
+        if squeeze:
+            out = out.reshape(tuple(
+                s for a, s in enumerate(out.shape) if a not in squeeze))
+        return out
+
+    def read(self) -> np.ndarray:
+        return self[(slice(None),) * self.grid.ndim]

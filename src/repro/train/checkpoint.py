@@ -20,6 +20,14 @@ Semantics used:
 Async mode archives from a background thread (the paper's I/O-server
 pattern: compute and storage I/O overlap); ``wait()`` joins before the next
 checkpoint or at exit.
+
+Storage path (``chunked=True``, the default): every tensor is a
+``repro.tensorstore`` chunked array — the chunk index rides the ``shard``
+element dim, chunk archives overlap through the bounded I/O executor, and
+restore can read partial tensors per host (``open_tensor()``); ``compress``
+selects the ``field8`` per-chunk codec instead of a post-hoc buffer hack.
+``chunked=False`` keeps the legacy one-blob-per-shard layout, and restore
+transparently falls back to it for checkpoints written by older runs.
 """
 from __future__ import annotations
 
@@ -34,6 +42,8 @@ import numpy as np
 
 from repro.core import FDB, FDBConfig, Identifier
 from repro.core.schema import CHECKPOINT_SCHEMA
+from repro.tensorstore import (ChunkedArray, LayoutMismatchError,
+                               TensorStore, auto_chunks)
 
 
 def _tensor_name(path) -> str:
@@ -62,7 +72,8 @@ def _unpack(raw: bytes) -> np.ndarray:
 class FDBCheckpointer:
     def __init__(self, run: str, fdb_config: Optional[FDBConfig] = None,
                  n_shards: int = 1, asynchronous: bool = False,
-                 compress: bool = False, host: Optional[str] = None):
+                 compress: bool = False, host: Optional[str] = None,
+                 chunked: bool = True):
         cfg = fdb_config or FDBConfig(backend="daos")
         if cfg.resolved_schema().name != "ckpt":
             import dataclasses
@@ -71,6 +82,7 @@ class FDBCheckpointer:
         self.run = run
         self.n_shards = n_shards
         self.compress = compress
+        self.chunked = chunked
         self.host = host or socket.gethostname()
         self.asynchronous = asynchronous
         self._q: "queue.Queue" = queue.Queue()
@@ -84,13 +96,60 @@ class FDBCheckpointer:
     def _dataset(self, kind: str, step: int) -> Dict[str, str]:
         return {"run": self.run, "kind": kind, "step": str(step)}
 
+    def _tensor_store(self, kind: str, step: int, name: str) -> TensorStore:
+        base = {**self._dataset(kind, step), "host": self.host,
+                "tensor": name}
+        return TensorStore(self.fdb, base, chunk_dim="shard")
+
+    def _compressible(self, arr: np.ndarray) -> bool:
+        return arr.dtype in (np.float32, np.float16) and arr.ndim >= 2 \
+            and arr.size >= 1024
+
+    def _tensor_chunks(self, arr: np.ndarray):
+        """n_shards > 1 splits along axis 0 (one chunk row-band per shard);
+        otherwise ~1 MiB auto chunks."""
+        if self.n_shards > 1 and arr.ndim >= 1 and arr.shape[0] > 1:
+            first = -(-arr.shape[0] // self.n_shards)
+            return (first,) + arr.shape[1:]
+        return auto_chunks(arr.shape, arr.dtype)
+
     def _archive_tree(self, kind: str, step: int, tree) -> None:
         flat = jax.tree_util.tree_flatten_with_path(tree)[0]
         for path, leaf in flat:
             arr = np.asarray(leaf)
+            if self.chunked:
+                codec = "field8" if self.compress and self._compressible(arr) \
+                    else "raw"
+                ts = self._tensor_store(kind, step, _tensor_name(path))
+                try:
+                    chunked = ts.create(arr.shape, arr.dtype,
+                                        chunks=self._tensor_chunks(arr),
+                                        codec=codec)
+                except LayoutMismatchError:
+                    # layout changed across re-saves of this step (e.g. a
+                    # different n_shards): tombstone the old metadata and
+                    # re-create — old-grid chunks beyond the new grid stay
+                    # behind as unreachable garbage, never as wrong reads
+                    self.fdb.archive(
+                        Identifier({**self._dataset(kind, step),
+                                    "host": self.host,
+                                    "tensor": _tensor_name(path),
+                                    "shard": "meta"}), b"")
+                    chunked = ts.create(arr.shape, arr.dtype,
+                                        chunks=self._tensor_chunks(arr),
+                                        codec=codec)
+                # the step-level flush() in _do_save is the commit barrier
+                chunked.write(arr, flush=False)
+                continue
+            # tombstone any chunked metadata from a previous save of this
+            # step, so chunked-first restore falls through to these blobs
+            # instead of returning stale chunked data
+            self.fdb.archive(Identifier({**self._dataset(kind, step),
+                                         "host": self.host,
+                                         "tensor": _tensor_name(path),
+                                         "shard": "meta"}), b"")
             payload = arr
-            if self.compress and arr.dtype in (np.float32, np.float16) \
-                    and arr.ndim >= 2 and arr.size >= 1024:
+            if self.compress and self._compressible(arr):
                 payload = self._compress(arr)
             shards = np.array_split(payload.reshape(-1), self.n_shards) \
                 if self.n_shards > 1 else [payload]
@@ -191,26 +250,43 @@ class FDBCheckpointer:
             steps.add(int(ident["step"]))
         return sorted(steps)
 
+    def open_tensor(self, step: int, name: str, kind: str = "params"
+                    ) -> ChunkedArray:
+        """Open one tensor of a chunked checkpoint for partial reads — e.g.
+        ``ck.open_tensor(step, "layer0.w")[1000:2000]`` retrieves only the
+        intersecting chunks archived by this host."""
+        return self._tensor_store(kind, step, name).open()
+
+    def _restore_tensor(self, step: int, kind: str, name: str,
+                        ref: np.ndarray) -> np.ndarray:
+        """Chunked-first restore; falls back to the legacy per-shard blobs
+        so old checkpoints stay readable."""
+        try:
+            return self._tensor_store(kind, step, name).open().read()
+        except FileNotFoundError:
+            pass
+        shards = []
+        for si in range(self.n_shards):
+            handle = self.fdb.retrieve({**self._dataset(kind, step),
+                                        "host": self.host,
+                                        "tensor": name,
+                                        "shard": str(si)})
+            if handle.length() == 0:
+                raise FileNotFoundError(
+                    f"checkpoint step {step} missing {name}#{si}")
+            shards.append(_unpack(handle.read()))
+        arr = np.concatenate(shards) if len(shards) > 1 else shards[0]
+        if arr.dtype == np.uint8 and ref.dtype != np.uint8:
+            arr = self._decompress(arr, ref)
+        return arr
+
     def restore(self, step: int, template, kind: str = "params"):
-        """Rebuild a pytree like ``template`` from archived shards."""
+        """Rebuild a pytree like ``template`` from archived tensors."""
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
         for path, leaf in flat:
-            name = _tensor_name(path)
-            shards = []
-            for si in range(self.n_shards):
-                handle = self.fdb.retrieve({**self._dataset(kind, step),
-                                            "host": self.host,
-                                            "tensor": name,
-                                            "shard": str(si)})
-                if handle.length() == 0:
-                    raise FileNotFoundError(
-                        f"checkpoint step {step} missing {name}#{si}")
-                shards.append(_unpack(handle.read()))
-            arr = np.concatenate(shards) if len(shards) > 1 else shards[0]
             ref = np.asarray(leaf)
-            if arr.dtype == np.uint8 and ref.dtype != np.uint8:
-                arr = self._decompress(arr, ref)
+            arr = self._restore_tensor(step, kind, _tensor_name(path), ref)
             arr = arr.reshape(ref.shape) if arr.size == ref.size else arr
             leaves.append(arr.astype(ref.dtype))
         return treedef.unflatten(

@@ -1,0 +1,117 @@
+"""Thin deterministic stand-in for ``hypothesis`` (collection-safe tier-1).
+
+The property tests import ``given``/``settings``/``st`` from here when the
+real hypothesis package is unavailable, so the suite collects and runs
+everywhere.  Strategies draw deterministic pseudo-random examples from a
+seeded ``random.Random``; ``given`` replays ``max_examples`` of them.  This
+is *not* a property-testing engine (no shrinking, no coverage guidance) —
+just enough surface for the existing tests.
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, Sequence
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+    def draw(self, rng: random.Random) -> Any:
+        return self._draw(rng)
+
+    def map(self, f: Callable[[Any], Any]) -> "_Strategy":
+        return _Strategy(lambda rng: f(self._draw(rng)))
+
+
+class _DrawProxy:
+    """The object handed to tests by ``st.data()``."""
+
+    def __init__(self, rng: random.Random):
+        self._rng = rng
+
+    def draw(self, strategy: _Strategy) -> Any:
+        return strategy.draw(self._rng)
+
+
+class _StNamespace:
+    @staticmethod
+    def text(alphabet: str = "abcdefghijklmnopqrstuvwxyz", min_size: int = 0,
+             max_size: int = 10) -> _Strategy:
+        chars = list(alphabet)
+
+        def draw(rng: random.Random) -> str:
+            n = rng.randint(min_size, max_size)
+            return "".join(rng.choice(chars) for _ in range(n))
+        return _Strategy(draw)
+
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 1 << 30) -> _Strategy:
+        return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(rng: random.Random) -> list:
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*strategies: _Strategy) -> _Strategy:
+        return _Strategy(lambda rng: tuple(s.draw(rng) for s in strategies))
+
+    @staticmethod
+    def fixed_dictionaries(mapping: dict) -> _Strategy:
+        return _Strategy(
+            lambda rng: {k: s.draw(rng) for k, s in mapping.items()})
+
+    @staticmethod
+    def sampled_from(seq: Sequence) -> _Strategy:
+        pool = list(seq)
+        return _Strategy(lambda rng: rng.choice(pool))
+
+    @staticmethod
+    def sets(elements: _Strategy, min_size: int = 0,
+             max_size: int = 10) -> _Strategy:
+        def draw(rng: random.Random) -> set:
+            want = rng.randint(min_size, max_size)
+            out: set = set()
+            for _ in range(want * 8 + 8):     # finite pools may be < want
+                if len(out) >= want:
+                    break
+                out.add(elements.draw(rng))
+            return out
+        return _Strategy(draw)
+
+    @staticmethod
+    def data() -> _Strategy:
+        return _Strategy(lambda rng: _DrawProxy(rng))
+
+
+st = _StNamespace()
+
+
+def settings(max_examples: int = 20, **_kw) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strategies: _Strategy) -> Callable:
+    def deco(fn: Callable) -> Callable:
+        # NB: deliberately no functools.wraps — pytest must see the wrapper's
+        # (*args) signature, not the test's drawn-argument parameters, or it
+        # would try to resolve them as fixtures.
+        def wrapper(*args, **kw):
+            rng = random.Random(0)
+            n = getattr(wrapper, "_fallback_max_examples", 20)
+            for _ in range(n):
+                fn(*args, *(s.draw(rng) for s in strategies), **kw)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper._fallback_max_examples = getattr(fn, "_fallback_max_examples",
+                                                 20)
+        return wrapper
+    return deco

@@ -2,7 +2,11 @@
 import os
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # thin deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import (FDB, FDBConfig, Meter, PROFILES, client_context,
                         model_run, reset_engines)

@@ -1,6 +1,10 @@
 """DataHandle merging (the POSIX read-coalescing optimisation, §2.7.1)."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # thin deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core.handle import FileRangeHandle, MemoryHandle, MultiHandle
 

@@ -2,7 +2,11 @@
 import string
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                     # thin deterministic fallback
+    from _hypothesis_fallback import given, settings, st
 
 from repro.core import Identifier, NWP_OBJECT_SCHEMA, NWP_POSIX_SCHEMA, Schema
 

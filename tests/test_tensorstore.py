@@ -1,0 +1,406 @@
+"""repro.tensorstore: chunked N-D arrays over the FDB.
+
+Covers the acceptance criteria: roundtrip of non-chunk-aligned arrays on all
+four backends, partial slice reads issuing I/O for only the intersecting
+chunks (asserted via engine ``Meter`` op counts), chunk-boundary edge cases,
+and codec on/off parity — plus the executor's bounded in-flight window and
+the batched ``FDB.archive_many`` semantics.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import FDB, FDBConfig, FieldLocation
+from repro.core.engine.meter import GLOBAL_METER
+from repro.tensorstore import (ChunkExecutor, ChunkGrid, TensorStore,
+                               auto_chunks, get_codec)
+
+BACKENDS = ["daos", "rados", "posix", "s3"]
+
+#: engine op kinds that move object payload bytes on a read path
+DATA_READ_KINDS = {"array_read", "read", "http_get"}
+
+
+def make_store(backend, tmp_path, array="a", writer="w0", **kw):
+    fdb = FDB(FDBConfig(backend=backend, schema="tensor",
+                        root=str(tmp_path / "fdb"), **kw))
+    return fdb, TensorStore(fdb, {"store": "s", "array": array,
+                                  "writer": writer})
+
+
+def _data_reads(ops):
+    return [op for op in ops if op.kind in DATA_READ_KINDS]
+
+
+# ---------------------------------------------------------------------------
+# roundtrip + partial reads (acceptance criteria)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_non_aligned_roundtrip(backend, tmp_path):
+    """(37, 53) on a (16, 16) grid: every edge chunk is clipped."""
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.random.default_rng(0).normal(size=(37, 53)).astype(np.float32)
+    ts.save(x, chunks=(16, 16))
+    arr = ts.open()
+    assert arr.shape == (37, 53) and arr.dtype == np.float32
+    assert arr.n_chunks == (3, 4)
+    np.testing.assert_array_equal(arr.read(), x)
+    fdb.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_partial_read_touches_only_intersecting_chunks(backend, tmp_path):
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
+    ts.save(x, chunks=(16, 16))          # 4 x 4 chunk grid, 1 KiB chunks
+    arr = ts.open()
+    arr[0:1, 0:1]                        # warm catalogue/axis caches
+
+    for sel, n_expected in [
+        ((slice(0, 16), slice(0, 16)), 1),     # exactly one chunk
+        ((slice(10, 40), slice(0, 10)), 3),    # rows 0-2 x col 0
+        ((slice(0, 64), slice(20, 28)), 4),    # full column band
+    ]:
+        before = GLOBAL_METER.snapshot()
+        np.testing.assert_array_equal(arr[sel], x[sel])
+        new_ops = GLOBAL_METER.snapshot()[len(before):]
+        reads = _data_reads(new_ops)
+        if backend == "posix":
+            # posix stripes one chunk read over several OSTs: assert on bytes
+            assert sum(op.nbytes for op in reads) == n_expected * 16 * 16 * 4
+        else:
+            assert len(reads) == n_expected, (sel, reads)
+        assert sum(op.nbytes for op in reads) < x.nbytes
+    fdb.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_full_read_moves_all_bytes(backend, tmp_path):
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.random.default_rng(2).normal(size=(40, 40)).astype(np.float32)
+    ts.save(x, chunks=(32, 32))
+    arr = ts.open()
+    before = GLOBAL_METER.snapshot()
+    np.testing.assert_array_equal(arr.read(), x)
+    reads = _data_reads(GLOBAL_METER.snapshot()[len(before):])
+    assert sum(op.nbytes for op in reads) == x.nbytes
+    fdb.close()
+
+
+def test_replace_semantics_same_layout(tmp_path):
+    """Re-saving with an unchanged layout transactionally replaces every
+    chunk (FDB rule 5)."""
+    fdb, ts = make_store("daos", tmp_path)
+    ts.save(np.zeros((8, 8), np.float32), chunks=(4, 4))
+    y = np.random.default_rng(3).normal(size=(8, 8)).astype(np.float32)
+    ts.save(y, chunks=(4, 4))
+    np.testing.assert_array_equal(ts.open().read(), y)
+    fdb.close()
+
+
+def test_layout_change_rejected_without_wipe(tmp_path):
+    """A re-create with a different grid would strand old-grid chunk objects
+    (no per-object delete in the FDB API) — it must be rejected."""
+    from repro.tensorstore import LayoutMismatchError
+    fdb, ts = make_store("daos", tmp_path)
+    ts.save(np.zeros((8, 8), np.float32), chunks=(2, 2))
+    with pytest.raises(LayoutMismatchError):
+        ts.create((8, 8), np.float32, chunks=(4, 4))
+    with pytest.raises(LayoutMismatchError):
+        ts.create((6, 6), np.float32, chunks=(2, 2))
+    # after a wipe the new layout goes through
+    fdb.wipe({"store": "s", "array": "a"})
+    y = np.ones((6, 6), np.float32)
+    ts.save(y, chunks=(4, 4))
+    np.testing.assert_array_equal(ts.open().read(), y)
+    fdb.close()
+
+
+def test_field_store_regrid_wipes_stale_chunks():
+    """ChunkedFieldStore.put_field transparently wipes + re-creates on a
+    layout change, leaving no stale old-grid entries behind."""
+    from repro.data import ChunkedFieldStore
+    fs = ChunkedFieldStore("regrid", FDBConfig(backend="daos"))
+    fs.put_field("f", np.zeros((8, 8), np.float32), chunks=(2, 2))
+    fs.commit()
+    y = np.random.default_rng(11).normal(size=(8, 8)).astype(np.float32)
+    fs.put_field("f", y, chunks=(4, 4))
+    fs.commit()
+    np.testing.assert_array_equal(fs.read_window("f"), y)
+    listed = list(fs.fdb.list({"store": "regrid", "array": "f"}))
+    assert len(listed) == 4 + 1          # 4 new-grid chunks + meta, no stale
+    fs.close()
+
+
+def test_checkpoint_legacy_resave_shadows_chunked():
+    """A legacy (chunked=False) re-save of a step previously saved chunked
+    must win on restore — the chunked metadata is tombstoned."""
+    from repro.train.checkpoint import FDBCheckpointer
+    w = np.full((64, 32), 1.0, np.float32)
+    ck1 = FDBCheckpointer("shadow", FDBConfig(backend="daos"))
+    ck1.save(5, {"w": w})
+    ck2 = FDBCheckpointer("shadow", FDBConfig(backend="daos"), chunked=False)
+    ck2.save(5, {"w": w * 2})
+    restored = ck2.restore(5, {"w": w})
+    np.testing.assert_array_equal(np.asarray(restored["w"]), w * 2)
+    ck1.close()
+    ck2.close()
+
+
+def test_open_missing_array_raises(tmp_path):
+    fdb, ts = make_store("daos", tmp_path, array="nope")
+    assert not ts.exists()
+    with pytest.raises(FileNotFoundError):
+        ts.open()
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# chunk-grid edge cases
+# ---------------------------------------------------------------------------
+
+def test_grid_math_non_divisible():
+    g = ChunkGrid((37, 53), (16, 16))
+    assert g.n_chunks == (3, 4)
+    assert g.chunk_shape((2, 3)) == (5, 5)          # clipped corner
+    hits = list(g.intersecting((slice(30, 37), slice(48, 53))))
+    assert {h[0] for h in hits} == {(1, 3), (2, 3)}
+
+
+def test_grid_oversize_chunks_clip():
+    g = ChunkGrid((10, 10), (64, 64))
+    assert g.chunks == (10, 10) and g.n_chunks == (1, 1)
+
+
+def test_grid_rejects_bad_args():
+    with pytest.raises(ValueError):
+        ChunkGrid((4, 4), (4,))
+    with pytest.raises(ValueError):
+        ChunkGrid((4,), (0,))
+
+
+def test_indexing_edge_cases(tmp_path):
+    fdb, ts = make_store("daos", tmp_path)
+    x = np.random.default_rng(4).normal(size=(9, 7, 5)).astype(np.float32)
+    ts.save(x, chunks=(4, 3, 2))
+    arr = ts.open()
+    np.testing.assert_array_equal(arr[3], x[3])              # int → squeeze
+    np.testing.assert_array_equal(arr[-2, 1:], x[-2, 1:])    # negative index
+    np.testing.assert_array_equal(arr[:, -3:, 4], x[:, -3:, 4])
+    assert arr[2:2].size == 0                                # empty selection
+    with pytest.raises(IndexError):
+        arr[::2]                                             # steps unsupported
+    with pytest.raises(IndexError):
+        arr[0, 0, 0, 0]
+    fdb.close()
+
+
+def test_scalar_and_1d_arrays(tmp_path):
+    fdb, ts = make_store("rados", tmp_path, array="scalar")
+    ts.save(np.float32(3.25))
+    assert ts.open().read() == np.float32(3.25)
+    ts2 = TensorStore(fdb, {"store": "s", "array": "vec", "writer": "w0"})
+    v = np.arange(1000, dtype=np.int64)
+    ts2.save(v, chunks=(64,))
+    np.testing.assert_array_equal(ts2.open()[128:700], v[128:700])
+    fdb.close()
+
+
+def test_auto_chunks_targets_size():
+    chunks = auto_chunks((4096, 4096), np.float32, target_bytes=1 << 20)
+    nbytes = chunks[0] * chunks[1] * 4
+    assert nbytes <= 1 << 20
+    assert auto_chunks((), np.float32) == ()
+    assert auto_chunks((3,), np.float32) == (3,)
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["daos", "posix"])
+def test_codec_parity_on_off(backend, tmp_path):
+    """field8/field16 vs raw: lossy within the block-quantisation bound,
+    identical shape/dtype, raw stays exact."""
+    rng = np.random.default_rng(5)
+    x = rng.normal(size=(300, 200)).astype(np.float32)
+    fdb = FDB(FDBConfig(backend=backend, schema="tensor",
+                        root=str(tmp_path / "fdb")))
+    got = {}
+    for codec in ("raw", "field8", "field16"):
+        ts = TensorStore(fdb, {"store": "s", "array": f"a-{codec}",
+                               "writer": "w0"})
+        ts.save(x, chunks=(128, 128), codec=codec)
+        got[codec] = ts.open().read()
+        assert got[codec].shape == x.shape and got[codec].dtype == x.dtype
+    np.testing.assert_array_equal(got["raw"], x)
+    rng_x = x.max() - x.min()
+    assert np.abs(got["field8"] - x).max() <= rng_x / 255 * 0.51 + 1e-6
+    assert np.abs(got["field16"] - x).max() <= rng_x / 65535 * 0.51 + 1e-6
+    assert np.abs(got["field16"] - x).max() < np.abs(got["field8"] - x).max()
+    fdb.close()
+
+
+def test_quant_codec_falls_back_to_raw_for_ints_and_tiny_chunks(tmp_path):
+    fdb, ts = make_store("daos", tmp_path, array="ints")
+    ints = np.arange(600, dtype=np.int32).reshape(30, 20)
+    ts.save(ints, chunks=(16, 16), codec="field8")   # ineligible → raw marker
+    np.testing.assert_array_equal(ts.open().read(), ints)
+    fdb.close()
+
+
+def test_codec_container_roundtrip_odd_tail():
+    """Sizes that are not multiples of 128 carry an exact float tail."""
+    codec = get_codec("field8")
+    x = np.random.default_rng(6).normal(size=(5, 131)).astype(np.float32)
+    y = codec.decode(codec.encode(x), x.shape, x.dtype)
+    assert y.shape == x.shape
+    # head quantised, tail exact
+    tail = x.reshape(-1)[(x.size // 128) * 128:]
+    np.testing.assert_array_equal(y.reshape(-1)[(x.size // 128) * 128:], tail)
+
+
+def test_unknown_codec_rejected(tmp_path):
+    fdb, ts = make_store("daos", tmp_path)
+    with pytest.raises(ValueError):
+        ts.create((4, 4), np.float32, codec="zstd")
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# executor + archive_many
+# ---------------------------------------------------------------------------
+
+def test_executor_bounded_in_flight():
+    ex = ChunkExecutor(max_workers=4, max_in_flight=2)
+
+    def task(i):
+        time.sleep(0.01)
+        return i * i
+
+    results = ex.map_ordered(task, range(12))
+    assert results == [i * i for i in range(12)]
+    assert ex.peak_in_flight <= 2
+    ex.shutdown()
+
+
+def test_executor_propagates_errors_in_order():
+    ex = ChunkExecutor(max_workers=2)
+
+    def task(i):
+        if i == 3:
+            raise RuntimeError("chunk 3 failed")
+        return i
+
+    with pytest.raises(RuntimeError, match="chunk 3"):
+        ex.map_ordered(task, range(6))
+    ex.shutdown()
+
+
+def test_executor_propagates_client_context():
+    from repro.core import client_context
+    from repro.core.engine.meter import current_client
+    ex = ChunkExecutor(max_workers=2)
+    with client_context("proc7@node3"):
+        seen = ex.map_ordered(lambda _i: current_client(), range(4))
+    assert seen == ["proc7@node3"] * 4
+    ex.shutdown()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_archive_many_returns_locations(backend, tmp_path, nwp_identifier):
+    schema = "nwp-posix" if backend == "posix" else "nwp-object"
+    fdb = FDB(FDBConfig(backend=backend, schema=schema,
+                        root=str(tmp_path / "fdb")))
+    items = [({**nwp_identifier, "step": str(i)}, bytes([i]) * 256)
+             for i in range(12)]
+    locs = fdb.archive_many(items)
+    fdb.flush()
+    assert len(locs) == 12
+    assert all(isinstance(loc, FieldLocation) for loc in locs)
+    # locations come back in input order and resolve to the right payloads
+    for i, loc in enumerate(locs):
+        assert fdb.store.retrieve(loc).read() == bytes([i]) * 256
+    for i in range(12):
+        assert fdb.retrieve({**nwp_identifier, "step": str(i)}).read() \
+            == bytes([i]) * 256
+    fdb.close()
+
+
+@pytest.mark.parametrize("persistence", ["immediate", "on_flush"])
+def test_parallel_archive_rados_span_mode_consistent(tmp_path, persistence,
+                                                     nwp_identifier):
+    """Span mode appends into shared objects: under parallel archive the
+    physical append order must match the reserved offsets, or locations
+    would point at other items' bytes."""
+    fdb = FDB(FDBConfig(backend="rados", schema="nwp-object",
+                        rados_object_mode="span",
+                        rados_persistence=persistence,
+                        rados_max_object_size=4096))
+    items = [({**nwp_identifier, "step": str(i)},
+              bytes([i % 251]) * (100 + (i % 7) * 13))
+             for i in range(200)]
+    locs = fdb.archive_many(items, parallelism=16)
+    fdb.flush()
+    for (ident, data), loc in zip(items, locs):
+        assert fdb.retrieve(ident).read() == data, ident
+        assert fdb.store.retrieve(loc).read() == data
+    fdb.close()
+
+
+def test_archive_many_serial_path_equivalent(tmp_path, nwp_identifier):
+    fdb = FDB(FDBConfig(backend="daos", io_parallelism=0))
+    items = [({**nwp_identifier, "step": str(i)}, b"z" * 64) for i in range(3)]
+    locs = fdb.archive_many(items)
+    assert len(locs) == 3
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# integrations: checkpoint + data pipeline
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_partial_tensor_read():
+    from repro.train.checkpoint import FDBCheckpointer
+    ck = FDBCheckpointer("ts-part", FDBConfig(backend="daos"), n_shards=4)
+    w = np.random.default_rng(7).normal(size=(256, 64)).astype(np.float32)
+    ck.save(3, {"w": w})
+    arr = ck.open_tensor(3, "w")
+    assert arr.n_chunks[0] == 4                   # n_shards → axis-0 bands
+    np.testing.assert_array_equal(arr[100:200], w[100:200])
+    ck.close()
+
+
+def test_chunked_field_store_window_read(tmp_path):
+    from repro.data import ChunkedFieldStore
+    fs = ChunkedFieldStore("nwp", FDBConfig(backend="rados"),
+                           chunks=(32, 32))
+    field = np.random.default_rng(8).normal(size=(100, 90)).astype(np.float32)
+    fs.put_field("t2m", field)
+    fs.commit()
+    np.testing.assert_array_equal(
+        fs.read_window("t2m", slice(10, 60), slice(40, 80)),
+        field[10:60, 40:80])
+    np.testing.assert_array_equal(fs.read_window("t2m"), field)
+    fs.wipe_field("t2m")
+    with pytest.raises(FileNotFoundError):
+        fs.open_field("t2m")
+    fs.close()
+
+
+# ---------------------------------------------------------------------------
+# heavy sweep (excluded from tier-1 via the slow marker)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_sweep_chunk_sizes_roundtrip(backend, tmp_path):
+    rng = np.random.default_rng(9)
+    x = rng.normal(size=(257, 129)).astype(np.float32)
+    for cs in (8, 32, 64, 128, 512):
+        fdb, ts = make_store(backend, tmp_path, array=f"sweep{cs}")
+        ts.save(x, chunks=(cs, cs))
+        np.testing.assert_array_equal(ts.open().read(), x)
+        fdb.close()
