@@ -3,8 +3,11 @@ applied to the new subsystem: chunk size × I/O parallelism × backend.
 
 Per cell: archive one (256, 256) float32 field as a chunked array (parallel
 chunk writes through the bounded executor), then read back a 64-row window
-(partial read: only intersecting chunks).  Reports in-process us/chunk and
-the cost-modeled at-scale bandwidth, mirroring Figs. 4.5-4.7/4.26.
+(partial read: only intersecting chunks).  Reports in-process us/chunk, the
+cost-modeled at-scale bandwidth, and the planned I/O-op count per read
+(``ReadPlan.read_ops()``) — on posix, adjacent chunks of one data file
+coalesce into fewer ranged reads, while object stores keep one op per chunk
+in flight: the paper's central trade-off, mirroring Figs. 4.5-4.7/4.26.
 """
 from __future__ import annotations
 
@@ -59,6 +62,10 @@ def run(profile: str = "gcp") -> List[Row]:
                 wall_r = time.perf_counter() - t0
                 mr = model_run(meter.snapshot(), PROFILES[profile],
                                server_nodes=SERVERS)
+                # planned I/O-op counts after coalescing (metadata only, so
+                # compute after the modeled run to keep the meter clean)
+                window = arr.read_plan((slice(96, 160), slice(None)))
+                full = arr.read_plan((slice(None), slice(None)))
 
                 tag = f"tensorstore/{backend}/c{edge}/p{par}"
                 rows.append(Row(
@@ -68,7 +75,9 @@ def run(profile: str = "gcp") -> List[Row]:
                 rows.append(Row(
                     f"{tag}/window_read", wall_r * 1e6,
                     f"modeled={mr.read_bw / 2**30:.2f}GiB/s "
-                    f"dominant={mr.dominant}"))
+                    f"dominant={mr.dominant} "
+                    f"ops={window.read_ops()}/{window.n_chunks}chunks "
+                    f"full_ops={full.read_ops()}/{full.n_chunks}chunks"))
                 executor.shutdown()
                 fdb.close()
                 shutil.rmtree(root, ignore_errors=True)

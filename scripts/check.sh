@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 gate: what CI runs and what every PR must keep green.
+#   1. compile-all — every module under src/ must at least parse/compile;
+#   2. tier-1 tests — the ROADMAP's verify command (slow marker excluded
+#      via pytest.ini).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m compileall -q src
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"

@@ -8,8 +8,9 @@ Public surface:
 >>> fdb.flush()
 >>> data = fdb.retrieve({...identifier...}).read()
 """
-from .fdb import FDB, FDBConfig, reset_engines, shared_engine
-from .handle import DataHandle, FieldLocation, MultiHandle
+from .fdb import FDB, FDBConfig, as_identifier, reset_engines, shared_engine
+from .handle import (DataHandle, FieldLocation, FileRangeHandle, MultiHandle,
+                     ShortReadError, group_mergeable)
 from .interfaces import Catalogue, Store
 from .schema import (CHECKPOINT_SCHEMA, DATA_SCHEMA, Identifier,
                      NWP_OBJECT_SCHEMA, NWP_POSIX_SCHEMA, SCHEMAS, Schema,
@@ -18,8 +19,9 @@ from .engine.meter import GLOBAL_METER, Meter, client_context
 from .engine.costmodel import PROFILES, HardwareProfile, model_run
 
 __all__ = [
-    "FDB", "FDBConfig", "reset_engines", "shared_engine",
-    "DataHandle", "FieldLocation", "MultiHandle",
+    "FDB", "FDBConfig", "as_identifier", "reset_engines", "shared_engine",
+    "DataHandle", "FieldLocation", "FileRangeHandle", "MultiHandle",
+    "ShortReadError", "group_mergeable",
     "Catalogue", "Store",
     "Identifier", "Schema", "SCHEMAS",
     "NWP_OBJECT_SCHEMA", "NWP_POSIX_SCHEMA", "CHECKPOINT_SCHEMA",

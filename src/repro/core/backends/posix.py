@@ -189,15 +189,28 @@ class PosixStore(Store):
         with self._lock:
             items = list(self._files.values())
         for ent in items:
-            path, f, _off, unsynced = ent
+            # snapshot-and-reset the unsynced counter under the lock: a
+            # concurrent archive() incrementing it between our read and the
+            # reset would have its bytes dropped from the metering
+            with self._lock:
+                path, f, unsynced = ent[0], ent[1], ent[3]
+                ent[3] = 0
             f.flush()
             os.fsync(f.fileno())
             if unsynced:
                 self.sim.data_io(path, unsynced, "write")
             self.sim.fsync(path)
-            ent[3] = 0
 
     def retrieve(self, location: FieldLocation) -> DataHandle:
+        """Return a :class:`FileRangeHandle` — no I/O until it is read.
+
+        Handles over the same data file merge, so multi-chunk retrieves
+        (``MultiHandle`` / the tensorstore ``ReadPlan``) coalesce adjacent
+        ranges into one large read + one open, the POSIX read optimisation
+        the paper's Lustre numbers hinge on.  A short read (range past EOF —
+        e.g. another writer's data not yet flushed, rule 3) surfaces as
+        :class:`repro.core.ShortReadError` at read time.
+        """
         sim = self.sim
 
         def reader(unit: str, offset: int, length: int) -> bytes:

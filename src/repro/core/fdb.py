@@ -35,6 +35,34 @@ def _as_bytes(data: BytesLike) -> bytes:
     return bytes(data)
 
 
+def as_identifier(identifier: Union[Identifier, Mapping[str, object]]
+                  ) -> Identifier:
+    """Canonicalise one user-supplied identifier mapping — the single place
+    non-string values are handled for every FDB entry point.
+
+    Scalar values are stringified (``{"step": 0}`` ≡ ``{"step": "0"}``, the
+    way ``axes()`` always did), and sequence values become ``/``-joined
+    multi-value request expressions (``{"step": [0, 6]}`` ≡
+    ``{"step": "0/6"}``), matching :meth:`Identifier.matches` semantics.
+    Request expressions are only meaningful on the retrieve side;
+    ``archive()`` rejects them.
+    Lists/tuples keep the caller's order (which fixes the byte order of a
+    multi-object ``retrieve().read()``); unordered sets are sorted *by their
+    string form* ("12" < "2") purely for determinism — callers that care
+    about payload order should pass a list.
+    """
+    if isinstance(identifier, Identifier):
+        return identifier
+    out: Dict[str, str] = {}
+    for k, v in identifier.items():
+        if isinstance(v, (set, frozenset)):
+            v = "/".join(sorted(str(x) for x in v))
+        elif isinstance(v, (list, tuple)):
+            v = "/".join(str(x) for x in v)
+        out[str(k)] = str(v)
+    return Identifier(out)
+
+
 @dataclasses.dataclass
 class FDBConfig:
     """Deployment-time configuration (the FDB administrator's file)."""
@@ -115,6 +143,7 @@ class FDB:
         self.meter = meter or GLOBAL_METER
         self.store, self.catalogue = self._build_backends()
         self._closed = False
+        self._dirty = False
 
     # -- backend wiring ------------------------------------------------------
     def _build_backends(self) -> Tuple[Store, Catalogue]:
@@ -159,7 +188,12 @@ class FDB:
         return store, catalogue
 
     def _shared_lustre(self, cfg: FDBConfig) -> "LustreSim":
-        key = ("lustre", cfg.root, id(self.meter))
+        # geometry is part of the identity (mirroring shared_engine): two
+        # FDBs on one root with different OST/stripe settings must not
+        # silently share a sim, or stripe-geometry sweeps measure the first
+        # configuration repeatedly
+        key = ("lustre", cfg.root, cfg.lustre_osts, cfg.lustre_stripe_count,
+               cfg.lustre_stripe_size, id(self.meter))
         with _ENGINES_LOCK:
             sim = _ENGINES.get(key)
             if sim is None:
@@ -173,11 +207,20 @@ class FDB:
     # -- the four primary API methods (Listing 2.2) -----------------------------
     def archive(self, identifier: Union[Identifier, Mapping[str, object]],
                 data: BytesLike) -> FieldLocation:
-        ident = identifier if isinstance(identifier, Identifier) \
-            else Identifier(identifier)
+        ident = as_identifier(identifier)
+        # an archive identifier must be fully specified: a multi-value
+        # request expression ("0/6", or a sequence value) would catalogue
+        # the object under a key no retrieve can ever expand back to
+        multi = [k for k, v in ident.items() if "/" in v]
+        if multi:
+            raise ValueError(
+                f"archive identifier {ident!r} has multi-value request "
+                f"expressions on dims {multi}; archive one object per "
+                f"fully-specified identifier")
         dataset, collocation, element = self.schema.split(ident)
         loc = self.store.archive(_as_bytes(data), dataset, collocation)
         self.catalogue.archive(dataset, collocation, element, loc)
+        self._dirty = True
         return loc
 
     def archive_many(self, items: Sequence[Tuple[Mapping[str, object],
@@ -211,9 +254,16 @@ class FDB:
         return executor.map_ordered(
             lambda item: self.archive(item[0], item[1]), items)
 
+    @property
+    def dirty(self) -> bool:
+        """True while this client has archived data not yet flush()ed —
+        i.e. a flush() barrier would actually publish something (rule 3)."""
+        return self._dirty
+
     def flush(self) -> None:
         self.store.flush()
         self.catalogue.flush()
+        self._dirty = False
 
     def retrieve(self, identifiers: Union[Identifier, Mapping[str, object],
                                           Sequence]) -> MultiHandle:
@@ -221,15 +271,28 @@ class FDB:
             identifiers = [identifiers]
         handles: List[DataHandle] = []
         for ident in identifiers:
-            ident = ident if isinstance(ident, Identifier) \
-                else Identifier(ident)
-            expanded = self._expand(ident)
-            for e in expanded:
-                dataset, collocation, element = self.schema.split(e)
-                loc = self.catalogue.retrieve(dataset, collocation, element)
-                if loc is not None:   # absence is not an error (§2.7.1)
-                    handles.append(self.store.retrieve(loc))
+            for e in self._expand(as_identifier(ident)):
+                h = self.retrieve_handle(e)
+                if h is not None:     # absence is not an error (§2.7.1)
+                    handles.append(h)
         return MultiHandle(handles)
+
+    def retrieve_handle(self, identifier: Union[Identifier,
+                                                Mapping[str, object]]
+                        ) -> Optional[DataHandle]:
+        """Resolve one fully-specified identifier to its backend
+        :class:`DataHandle` — catalogue lookup only, no data I/O.
+
+        Unlike :meth:`retrieve` this keeps the identifier ↔ handle pairing:
+        ``None`` means the object does not exist, and the returned handles
+        can be regrouped by the caller (``repro.core.handle.group_mergeable``)
+        into coalesced reads before any byte moves — the tensorstore read
+        path's planning hook.  Multi-value expressions are not expanded here.
+        """
+        ident = as_identifier(identifier)
+        dataset, collocation, element = self.schema.split(ident)
+        loc = self.catalogue.retrieve(dataset, collocation, element)
+        return None if loc is None else self.store.retrieve(loc)
 
     def _expand(self, ident: Identifier) -> List[Identifier]:
         """Expand multi-value expressions (lists) via axes (§2.7.1 axis())."""
@@ -258,7 +321,7 @@ class FDB:
                 if d.matches(dataset_part)]
 
     def axes(self, identifier: Mapping[str, object], dim: str) -> frozenset:
-        ident = Identifier({k: str(v) for k, v in identifier.items()})
+        ident = as_identifier(identifier)
         dataset = ident.subset(self.schema.dataset_dims)
         collocation = ident.subset(self.schema.collocation_dims)
         return self.catalogue.axes(dataset, collocation, dim)

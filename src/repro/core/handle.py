@@ -8,9 +8,18 @@ the POSIX backend's key read optimisation).
 """
 from __future__ import annotations
 
+import bisect
 import dataclasses
 import json
-from typing import Callable, List, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
+
+
+class ShortReadError(IOError):
+    """A backend returned fewer bytes than a handle's range requires.
+
+    Raised instead of silently returning short data: a range not covered by
+    any coalesced segment means the storage unit is truncated or the data is
+    not yet visible (unflushed writer, FDB rule 3)."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,19 +130,25 @@ class FileRangeHandle(DataHandle):
         return sum(r.length for r in self._ranges)
 
     def read(self) -> bytes:
-        # Issue coalesced I/O, but return bytes in *request* order.
-        segments = {}
-        for r in self._coalesced():
-            segments[r.offset] = self._reader(self._unit, r.offset, r.length)
+        # Issue coalesced I/O, but return bytes in *request* order.  Each
+        # requested range lies inside exactly one coalesced segment by
+        # construction, found by bisect on the sorted segment offsets; a
+        # range a (short) segment does not cover raises ShortReadError
+        # instead of silently dropping bytes.
+        segments = [(r.offset, self._reader(self._unit, r.offset, r.length))
+                    for r in self._coalesced()]
+        seg_offs = [off for off, _ in segments]
         out = bytearray()
         for r in self._ranges:
-            for seg_off in segments:
-                seg = segments[seg_off]
-                if seg_off <= r.offset and r.offset + r.length \
-                        <= seg_off + len(seg):
-                    lo = r.offset - seg_off
-                    out += seg[lo:lo + r.length]
-                    break
+            i = bisect.bisect_right(seg_offs, r.offset) - 1
+            seg = segments[i][1] if i >= 0 else b""
+            lo = r.offset - seg_offs[i] if i >= 0 else 0
+            if i < 0 or lo + r.length > len(seg):
+                raise ShortReadError(
+                    f"range [{r.offset}, {r.offset + r.length}) of "
+                    f"{self._unit!r} not covered by any read segment "
+                    f"(got {len(seg)} bytes at {seg_offs[i] if i >= 0 else 0})")
+            out += seg[lo:lo + r.length]
         return bytes(out)
 
     def read_ops(self) -> int:
@@ -203,3 +218,35 @@ class MultiHandle(DataHandle):
         for h in self._plan:
             ops += h.read_ops() if isinstance(h, FileRangeHandle) else 1
         return ops
+
+
+def group_mergeable(handles: Sequence[DataHandle]) -> List[List[int]]:
+    """Partition handle positions into coalescible groups.
+
+    Handles that are mutually mergeable (same storage unit, for
+    :class:`FileRangeHandle`) land in one group regardless of where they sit
+    in the sequence — unlike :class:`MultiHandle`, which only merges
+    *consecutive* neighbours, this sees an interleaved fetch plan.
+    Non-mergeable handles (object-store :class:`LazyHandle`) get singleton
+    groups.  Returns index groups in first-appearance order, so a caller can
+    issue one I/O batch per group and scatter results back by position.
+
+    A handle that cannot merge even with itself can never join a group, so
+    only merge-capable representatives are scanned — a full object-store
+    read of n chunks costs O(n), not O(n²) singleton probes; merge-capable
+    handles cost O(n · distinct storage units).
+    """
+    groups: List[List[int]] = []
+    merge_reps: List[Tuple[int, DataHandle]] = []
+    for i, h in enumerate(handles):
+        if not h.mergeable_with(h):
+            groups.append([i])
+            continue
+        for gi, rep in merge_reps:
+            if rep.mergeable_with(h):
+                groups[gi].append(i)
+                break
+        else:
+            merge_reps.append((len(groups), h))
+            groups.append([i])
+    return groups

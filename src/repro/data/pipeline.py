@@ -97,13 +97,37 @@ class ChunkedFieldStore:
             arr = self._opened[name] = self._ts(name).open()
         return arr
 
-    def read_window(self, name: str, *selection) -> np.ndarray:
+    def read_window(self, name: str, *selection,
+                    fill_missing: bool = True) -> np.ndarray:
         """Read a window of a field; I/O is issued for only the chunks the
-        window intersects, in parallel."""
+        window intersects — in parallel, and coalesced into single ranged
+        reads where chunks are adjacent in one file (posix backend).
+
+        ``fill_missing=False`` raises ``KeyError`` on never-written chunks
+        instead of zero-filling — for consumers of dense fields where a
+        missing chunk means lost or not-yet-committed data.
+        """
         arr = self.open_field(name)
-        if not selection:
-            return arr.read()
-        return arr[tuple(selection)]
+        return arr.read_plan(tuple(selection),
+                             fill_missing=fill_missing).execute()
+
+    def write_window(self, name: str, values, *selection) -> ChunkedArray:
+        """Chunk-aligned in-place update of a field window — the
+        assimilation pattern: ``write_window("t2m", increment, slice(0,
+        120), slice(300, 420))`` re-archives only the chunks the window
+        touches (partially covered edge chunks read-modify-write).
+
+        Visibility of the *new* chunk versions waits for :meth:`commit`.
+        Caveat for chunk-*aligned* batching only: a window that partially
+        covers a chunk needs read-modify-write, and the RMW pre-flush
+        (FDB rule 3, see :meth:`ChunkedArray.write_at`) publishes whatever
+        this producer archived earlier in the batch.  Producers that need a
+        strict single commit barrier must keep their windows chunk-aligned.
+        """
+        arr = self.open_field(name)
+        # normalize_key pads a short/empty key with full slices
+        arr.write_at(tuple(selection), values, flush=False)
+        return arr
 
     def wipe_field(self, name: str) -> None:
         self._opened.pop(name, None)

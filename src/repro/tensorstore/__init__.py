@@ -5,17 +5,21 @@
 >>> fdb = FDB(FDBConfig(backend="daos", schema="tensor"))
 >>> ts = TensorStore(fdb, {"store": "nwp", "array": "t2m", "writer": "p0"})
 >>> ts.save(field)                       # chunked, parallel archive
->>> window = ts.open()[120:240, 300:420]  # reads only intersecting chunks
+>>> arr = ts.open()
+>>> window = arr[120:240, 300:420]       # reads only intersecting chunks
+>>> arr[120:240, 300:420] = window + dx  # chunk-aligned in-place update
+>>> arr.read_plan((slice(None), slice(None))).read_ops()  # coalesced I/O ops
 """
 from .codec import CODECS, Codec, FieldQuantCodec, RawCodec, get_codec
 from .executor import ChunkExecutor, default_executor, sized_executor
 from .grid import ChunkGrid
 from .meta import META_CHUNK_KEY, ArrayMeta, auto_chunks
-from .store import (ChunkedArray, LayoutMismatchError, TensorStore,
-                    chunk_key)
+from .store import (ChunkedArray, LayoutMismatchError, ReadPlan,
+                    TensorStore, chunk_key)
 
 __all__ = [
-    "TensorStore", "ChunkedArray", "chunk_key", "LayoutMismatchError",
+    "TensorStore", "ChunkedArray", "ReadPlan", "chunk_key",
+    "LayoutMismatchError",
     "ArrayMeta", "auto_chunks", "META_CHUNK_KEY",
     "ChunkGrid",
     "Codec", "RawCodec", "FieldQuantCodec", "CODECS", "get_codec",

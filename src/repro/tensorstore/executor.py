@@ -69,6 +69,11 @@ class ChunkExecutor:
                     items: Iterable[Any]) -> List[Any]:
         """Run ``fn`` over ``items`` concurrently; results in input order.
 
+        Items may be wildly mixed-size units of work — the tensorstore write
+        path mixes direct chunk encodes with read-modify-write fetches, the
+        read path mixes single-chunk fetches with one-I/O multi-chunk group
+        reads — the bounded window simply admits whatever comes next.
+
         The first raised exception propagates (after all futures settle, so
         no task outlives the call with shared state in hand).
         """

@@ -5,6 +5,10 @@ edge tiles are clipped.  All selection math lives here so the store itself
 only deals in whole chunks: ``intersecting()`` maps an N-D selection onto the
 minimal set of (chunk index, within-chunk slice, output slice) triples — the
 property that makes partial reads issue I/O for only the touched chunks.
+``write_plan()`` is the write-side counterpart: it additionally classifies
+each touched chunk as *fully covered* (encode the new tile directly) or
+*partially covered* (read-modify-write), the split that makes chunk-aligned
+in-place assignment (``arr[sel] = values``) re-archive only what it must.
 """
 from __future__ import annotations
 
@@ -117,3 +121,18 @@ class ChunkGrid:
                 chunk_sel.append(slice(lo - c_lo, hi - c_lo))
                 out_sel.append(slice(lo - s.start, hi - s.start))
             yield idx, tuple(chunk_sel), tuple(out_sel)
+
+    def write_plan(self, sel: Slices
+                   ) -> Iterator[Tuple[Index, Slices, Slices, bool]]:
+        """Yield ``(chunk_idx, within_chunk_slices, value_slices, full)`` for
+        every chunk ``sel`` touches.
+
+        ``full=True`` means the selection covers the whole (possibly clipped
+        edge) chunk, so a writer can encode the new tile outright;
+        ``full=False`` chunks need read-modify-write to preserve the bytes
+        outside the selection.
+        """
+        for idx, chunk_sel, val_sel in self.intersecting(sel):
+            full = all(s.start == 0 and s.stop == n
+                       for s, n in zip(chunk_sel, self.chunk_shape(idx)))
+            yield idx, chunk_sel, val_sel, full

@@ -14,6 +14,24 @@ dimension.  With the dedicated ``tensor`` schema that base is
 ``{store, array, writer}``; with the ``ckpt`` schema the chunk index rides
 the ``shard`` element dim so checkpoint tensors become chunked arrays without
 a second catalogue.
+
+Both data paths plan before they touch bytes — the two halves of the paper's
+object-store/POSIX trade-off:
+
+* **Reads** build a :class:`ReadPlan`: every intersecting chunk is resolved
+  to its backend handle (catalogue only, no data I/O), and handles over the
+  same storage unit — posix chunks of one data file — are grouped so adjacent
+  ranges coalesce into single large reads (``FileRangeHandle`` merging),
+  while object-store chunks keep one op in flight each.  ``read_ops()`` on
+  the plan reports the I/O-op count a read will issue.
+* **In-place writes** (``arr[sel] = values``) follow a
+  :class:`~.grid.ChunkGrid.write_plan`: chunks fully covered by the selection
+  are encoded and archived outright; partially covered (edge) chunks do
+  read-modify-write through the same bounded executor.  Chunks never written
+  before read as zeros (the Zarr fill-value convention).  A ``flush()``
+  barrier after the archives preserves FDB visibility rule 3 — and partial
+  writes flush *first* as well, so their RMW fetches see this writer's own
+  earlier unflushed chunks.
 """
 from __future__ import annotations
 
@@ -21,7 +39,8 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import FDB, FieldLocation, Identifier
+from repro.core import (FDB, FieldLocation, Identifier, MultiHandle,
+                        group_mergeable)
 from .codec import Codec, get_codec
 from .executor import ChunkExecutor, sized_executor
 from .grid import ChunkGrid
@@ -173,28 +192,167 @@ class ChunkedArray:
             store.fdb.flush()
         return locs
 
-    # -- read path -------------------------------------------------------------
-    def __getitem__(self, key) -> np.ndarray:
+    def write_at(self, key, values, flush: bool = True
+                 ) -> List[FieldLocation]:
+        """Chunk-aligned in-place assignment: ``arr[sel] = values``.
+
+        Only chunks the selection touches are re-archived.  Fully covered
+        chunks are encoded from ``values`` directly; partially covered ones
+        do read-modify-write (fetch, patch, re-archive) through the bounded
+        executor — a chunk never written before patches onto zeros, the Zarr
+        fill-value convention.  ``values`` broadcasts against the selection
+        shape (so ``arr[10:20, :] = 0.0`` works).
+
+        Visibility (FDB rule 3): when RMW is needed and this client has
+        unflushed archives, the FDB is flushed *before* fetching, so its own
+        earlier unflushed chunks are seen rather than lost (no barrier is
+        paid when the client is clean); ``flush=True`` commits the new chunk
+        versions before returning.  With lossy codecs (``field8``/``field16``) RMW
+        re-quantises the whole chunk, so untouched elements of partially
+        covered chunks may shift within the quantisation bound.
+        """
         sel, squeeze = self.grid.normalize_key(key)
-        out = np.empty(self.grid.selection_shape(sel), self.dtype)
-        plan = list(self.grid.intersecting(sel))
-        codec, grid, store = self._codec, self.grid, self.store
+        sel_shape = self.grid.selection_shape(sel)
+        values = np.asarray(values)
+        if squeeze and values.ndim == len(sel_shape) - len(squeeze):
+            # integer-indexed axes were dropped by the caller: re-insert them
+            values = np.expand_dims(values, tuple(squeeze))
+        values = np.broadcast_to(values.astype(self.dtype, copy=False),
+                                 sel_shape)
+        tasks = list(self.grid.write_plan(sel))
+        if not tasks:
+            return []
+        codec, store = self._codec, self.store
+        if store.fdb.dirty and any(not full for _i, _c, _v, full in tasks):
+            store.fdb.flush()       # make own unflushed chunks RMW-visible
 
-        def fetch(task) -> None:
-            idx, chunk_sel, out_sel = task
-            handle = store.fdb.retrieve(store._ident(chunk_key(idx)))
-            if handle.length() == 0:
-                raise KeyError(f"missing chunk {idx} of array at {store.base}")
-            chunk = codec.decode(handle.read(), grid.chunk_shape(idx),
-                                 self.dtype)
-            out[out_sel] = chunk[chunk_sel]
+        def put(task) -> FieldLocation:
+            idx, chunk_sel, val_sel, full = task
+            if full:
+                tile = values[val_sel]
+            else:
+                tile = self._fetch_chunk(idx)
+                tile[chunk_sel] = values[val_sel]
+            return store.fdb.archive(store._ident(chunk_key(idx)),
+                                     codec.encode(tile))
 
-        # disjoint output regions per task → concurrent assembly is safe
-        store.executor.map_ordered(fetch, plan)
-        if squeeze:
+        # mixed-size batch: direct encodes + RMW fetches through one window
+        locs = store.executor.map_ordered(put, tasks)
+        if flush:
+            store.fdb.flush()
+        return locs
+
+    def __setitem__(self, key, values) -> None:
+        self.write_at(key, values, flush=True)
+
+    # -- read path -------------------------------------------------------------
+    def _fetch_chunk(self, idx: Index) -> np.ndarray:
+        """Decode one whole chunk for read-modify-write (always writable);
+        a chunk never written decodes as zeros (fill-value convention)."""
+        store = self.store
+        handle = store.fdb.retrieve_handle(store._ident(chunk_key(idx)))
+        shape = self.grid.chunk_shape(idx)
+        if handle is None or handle.length() == 0:
+            return np.zeros(shape, self.dtype)
+        chunk = self._codec.decode(handle.read(), shape, self.dtype)
+        return chunk if chunk.flags.writeable else chunk.copy()
+
+    def read_plan(self, key, fill_missing: bool = True) -> "ReadPlan":
+        """Plan a read without moving data: resolves every intersecting
+        chunk to its backend handle and groups coalescible ones.  Use
+        :meth:`ReadPlan.read_ops` to see the I/O-op count before (or
+        without) executing.
+
+        ``fill_missing=True`` (default) reads never-written chunks as zeros
+        — the Zarr fill-value convention that makes sparsely-populated
+        arrays (create + partial writes) readable.  The flip side: on a
+        fully ``save()``\\ d array a missing chunk means lost or
+        not-yet-flushed data, and zeros would mask that — pass
+        ``fill_missing=False`` to get a ``KeyError`` at plan time instead
+        (consumers that require every chunk present, e.g. checkpoint
+        restores of dense tensors).
+        """
+        sel, squeeze = self.grid.normalize_key(key)
+        return ReadPlan(self, sel, squeeze, fill_missing=fill_missing)
+
+    def __getitem__(self, key) -> np.ndarray:
+        return self.read_plan(key).execute()
+
+    def read(self, fill_missing: bool = True) -> np.ndarray:
+        """Read the whole array.  ``fill_missing=False`` raises ``KeyError``
+        on never-written chunks instead of zero-filling — for consumers of
+        dense arrays where a missing chunk means lost data."""
+        key = (slice(None),) * self.grid.ndim
+        return self.read_plan(key, fill_missing=fill_missing).execute()
+
+
+class ReadPlan:
+    """Materialised I/O plan for one selection of a :class:`ChunkedArray`.
+
+    Chunk identifiers are resolved to backend :class:`DataHandle`\\ s up
+    front (catalogue lookups only — no payload I/O), then grouped with
+    :func:`repro.core.group_mergeable`: handles over the same storage unit
+    (posix chunks living in one writer's data file) merge, so adjacent
+    chunks coalesce into single ranged reads — the POSIX backend's key read
+    optimisation — while object-store chunks stay one independent op each,
+    which is what those backends want kept in flight.  Executing scatters
+    decoded chunks into the output array, one executor task per group.
+    """
+
+    def __init__(self, array: "ChunkedArray", sel, squeeze,
+                 fill_missing: bool = True):
+        self.array = array
+        self.sel = sel
+        self.squeeze = squeeze
+        store = array.store
+        self.tasks = list(array.grid.intersecting(sel))
+        present: List[int] = []
+        handles = []
+        #: positions of chunks never written — they read as zeros (the same
+        #: fill-value convention the write path patches onto), no I/O
+        self.missing: List[int] = []
+        for pos, (idx, _chunk_sel, _out_sel) in enumerate(self.tasks):
+            h = store.fdb.retrieve_handle(store._ident(chunk_key(idx)))
+            if h is None or h.length() == 0:
+                if not fill_missing:
+                    raise KeyError(
+                        f"missing chunk {idx} of array at {store.base}")
+                self.missing.append(pos)
+            else:
+                present.append(pos)
+                handles.append(h)
+        #: (positions-into-tasks, merged handle) per I/O batch
+        self.batches: List[Tuple[List[int], MultiHandle]] = [
+            ([present[i] for i in group],
+             MultiHandle([handles[i] for i in group]))
+            for group in group_mergeable(handles)]
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.tasks)
+
+    def read_ops(self) -> int:
+        """I/O operations :meth:`execute` will issue (after coalescing)."""
+        return sum(mh.read_ops() for _g, mh in self.batches)
+
+    def execute(self) -> np.ndarray:
+        arr = self.array
+        grid, codec = arr.grid, arr._codec
+        out = np.empty(grid.selection_shape(self.sel), arr.dtype)
+        for pos in self.missing:
+            out[self.tasks[pos][2]] = 0
+
+        def run_batch(positions: List[int], mh: MultiHandle) -> None:
+            # one coalesced read per batch; per-chunk payloads scatter into
+            # disjoint output regions → concurrent assembly is safe
+            for pos, payload in zip(positions, mh.read_parts()):
+                idx, chunk_sel, out_sel = self.tasks[pos]
+                chunk = codec.decode(payload, grid.chunk_shape(idx),
+                                     arr.dtype)
+                out[out_sel] = chunk[chunk_sel]
+
+        arr.store.executor.map_ordered(lambda b: run_batch(*b), self.batches)
+        if self.squeeze:
             out = out.reshape(tuple(
-                s for a, s in enumerate(out.shape) if a not in squeeze))
+                s for a, s in enumerate(out.shape) if a not in self.squeeze))
         return out
-
-    def read(self) -> np.ndarray:
-        return self[(slice(None),) * self.grid.ndim]

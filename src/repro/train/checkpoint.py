@@ -24,7 +24,8 @@ checkpoint or at exit.
 Storage path (``chunked=True``, the default): every tensor is a
 ``repro.tensorstore`` chunked array — the chunk index rides the ``shard``
 element dim, chunk archives overlap through the bounded I/O executor, and
-restore can read partial tensors per host (``open_tensor()``); ``compress``
+restore can read partial tensors per host (``open_tensor()``) or patch them
+in place (``update_tensor()``, chunk-aligned partial writes); ``compress``
 selects the ``field8`` per-chunk codec instead of a post-hoc buffer hack.
 ``chunked=False`` keeps the legacy one-blob-per-shard layout, and restore
 transparently falls back to it for checkpoints written by older runs.
@@ -257,14 +258,36 @@ class FDBCheckpointer:
         intersecting chunks archived by this host."""
         return self._tensor_store(kind, step, name).open()
 
+    def update_tensor(self, step: int, name: str, selection, values,
+                      kind: str = "params") -> ChunkedArray:
+        """Chunk-aligned in-place update of one saved tensor.
+
+        The in-place assimilation pattern applied to training state: patch a
+        slice of a saved parameter — or, with ``kind="opt"``, optimizer-state
+        — tensor: ``ck.update_tensor(step, "mu.l0.w", slice(0, 4096), rows,
+        kind="opt")``.  Only the chunks the selection touches are
+        re-archived (partially covered chunks read-modify-write).  The
+        update is committed (flushed) before returning, so a restore on any
+        host sees it.  Requires a chunked checkpoint (the default layout);
+        ``kind`` defaults to ``"params"`` like :meth:`open_tensor`.
+        """
+        arr = self.open_tensor(step, name, kind)
+        arr.write_at(selection, values, flush=True)
+        return arr
+
     def _restore_tensor(self, step: int, kind: str, name: str,
                         ref: np.ndarray) -> np.ndarray:
         """Chunked-first restore; falls back to the legacy per-shard blobs
         so old checkpoints stay readable."""
         try:
-            return self._tensor_store(kind, step, name).open().read()
+            arr = self._tensor_store(kind, step, name).open()
         except FileNotFoundError:
-            pass
+            arr = None
+        if arr is not None:
+            # strict read: a saved tensor is dense, so a missing chunk is
+            # lost data (unflushed writer, partial wipe) — raise rather
+            # than resume training from silently zero-filled state
+            return arr.read(fill_missing=False)
         shards = []
         for si in range(self.n_shards):
             handle = self.fdb.retrieve({**self._dataset(kind, step),

@@ -6,7 +6,10 @@ try:
 except ImportError:                     # thin deterministic fallback
     from _hypothesis_fallback import given, settings, st
 
-from repro.core.handle import FileRangeHandle, MemoryHandle, MultiHandle
+import pytest
+
+from repro.core.handle import (FileRangeHandle, MemoryHandle, MultiHandle,
+                               ShortReadError, group_mergeable)
 
 
 def _mem_reader(blob):
@@ -48,6 +51,33 @@ def test_multihandle_preserves_order_and_content(ranges):
     parts = mh.read_parts()
     assert parts == [blob[o:o + n] for o, n in ranges]
     assert mh.read_ops() <= len(ranges)    # merging never adds ops
+
+
+def test_short_read_raises_instead_of_dropping_bytes():
+    """A reader returning fewer bytes than a range needs (file truncated /
+    data not yet flushed) must raise, never silently return short data."""
+    blob = b"x" * 64                       # file is only 64 bytes long
+
+    def reader(unit, offset, length):
+        return blob[offset:offset + length]
+
+    h = FileRangeHandle.single(reader, "f", 32, 64)   # runs past EOF
+    with pytest.raises(ShortReadError):
+        h.read()
+    # a fully covered range on the same file still reads fine
+    assert FileRangeHandle.single(reader, "f", 32, 32).read() == b"x" * 32
+
+
+def test_group_mergeable_groups_by_unit_not_adjacency():
+    r = _mem_reader(bytes(range(256)))
+    handles = [
+        FileRangeHandle.single(r, "a", 0, 8),
+        MemoryHandle(b"zz"),
+        FileRangeHandle.single(r, "b", 0, 8),
+        FileRangeHandle.single(r, "a", 8, 8),   # same unit, not consecutive
+    ]
+    assert group_mergeable(handles) == [[0, 3], [1], [2]]
+    assert group_mergeable([]) == []
 
 
 def test_multihandle_mixed_backends():
