@@ -1,13 +1,20 @@
 """Chunked tensorstore sweeps — the paper's object-size/concurrency axes
 applied to the new subsystem: chunk size × I/O parallelism × backend.
 
-Per cell: archive one (256, 256) float32 field as a chunked array (parallel
-chunk writes through the bounded executor), then read back a 64-row window
-(partial read: only intersecting chunks).  Reports in-process us/chunk, the
-cost-modeled at-scale bandwidth, and the planned I/O-op count per read
-(``ReadPlan.read_ops()``) — on posix, adjacent chunks of one data file
-coalesce into fewer ranged reads, while object stores keep one op per chunk
-in flight: the paper's central trade-off, mirroring Figs. 4.5-4.7/4.26.
+Per cell: archive one (256, 256) float32 field as a chunked array (the
+write side plans first — ``WritePlan`` batches chunks per storage unit, so
+posix archives land as single buffered appends), then read back a 64-row
+window (partial read: only intersecting chunks).  Reports in-process
+us/chunk, the cost-modeled at-scale bandwidth, and the planned I/O-op
+counts on BOTH sides — ``WritePlan.write_ops()`` next to
+``ReadPlan.read_ops()``: on posix, adjacent chunks of one data file
+coalesce into fewer store-level ops, while object stores keep one op per
+chunk in flight — the paper's central trade-off, mirroring
+Figs. 4.5-4.7/4.26.
+
+``run(tiny=True)`` is the CI smoke profile: two backends, one cell each,
+enough to keep the perf-trajectory JSON (read_ops/write_ops/throughput)
+honest without a full sweep.
 """
 from __future__ import annotations
 
@@ -26,16 +33,23 @@ from .common import Row
 BACKENDS = ("daos", "rados", "posix", "s3")
 CHUNK_EDGES = (32, 64, 128)
 PARALLELISM = (1, 4, 16)
+#: CI smoke profile: one cell per backend family (object vs posix)
+TINY_BACKENDS = ("daos", "posix")
+TINY_CHUNK_EDGES = (64,)
+TINY_PARALLELISM = (4,)
 SERVERS = 4
 SHAPE = (256, 256)
 
 
-def run(profile: str = "gcp") -> List[Row]:
+def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
     rows: List[Row] = []
     x = np.random.default_rng(0).normal(size=SHAPE).astype(np.float32)
-    for backend in BACKENDS:
-        for edge in CHUNK_EDGES:
-            for par in PARALLELISM:
+    backends = TINY_BACKENDS if tiny else BACKENDS
+    edges = TINY_CHUNK_EDGES if tiny else CHUNK_EDGES
+    parallelisms = TINY_PARALLELISM if tiny else PARALLELISM
+    for backend in backends:
+        for edge in edges:
+            for par in parallelisms:
                 meter = Meter()
                 reset_engines()
                 root = f"/tmp/fdb-bench-ts-{backend}-{edge}-{par}-{os.getpid()}"
@@ -62,8 +76,10 @@ def run(profile: str = "gcp") -> List[Row]:
                 wall_r = time.perf_counter() - t0
                 mr = model_run(meter.snapshot(), PROFILES[profile],
                                server_nodes=SERVERS)
-                # planned I/O-op counts after coalescing (metadata only, so
-                # compute after the modeled run to keep the meter clean)
+                # planned I/O-op counts after coalescing, write and read
+                # side (metadata/placement only, so compute after the
+                # modeled runs to keep the meter clean)
+                wplan = arr.write_plan((slice(None), slice(None)), x)
                 window = arr.read_plan((slice(96, 160), slice(None)))
                 full = arr.read_plan((slice(None), slice(None)))
 
@@ -71,13 +87,28 @@ def run(profile: str = "gcp") -> List[Row]:
                 rows.append(Row(
                     f"{tag}/write", wall_w / n_chunks * 1e6,
                     f"modeled={mw.write_bw / 2**30:.2f}GiB/s "
-                    f"dominant={mw.dominant}"))
+                    f"dominant={mw.dominant} "
+                    f"write_ops={wplan.write_ops()}/{wplan.n_chunks}chunks",
+                    extra={"backend": backend, "chunk_edge": edge,
+                           "parallelism": par,
+                           "write_ops": wplan.write_ops(),
+                           "n_chunks": wplan.n_chunks,
+                           "modeled_write_gib_s": round(mw.write_bw / 2**30,
+                                                        4)}))
                 rows.append(Row(
                     f"{tag}/window_read", wall_r * 1e6,
                     f"modeled={mr.read_bw / 2**30:.2f}GiB/s "
                     f"dominant={mr.dominant} "
                     f"ops={window.read_ops()}/{window.n_chunks}chunks "
-                    f"full_ops={full.read_ops()}/{full.n_chunks}chunks"))
+                    f"full_ops={full.read_ops()}/{full.n_chunks}chunks",
+                    extra={"backend": backend, "chunk_edge": edge,
+                           "parallelism": par,
+                           "read_ops": window.read_ops(),
+                           "n_chunks": window.n_chunks,
+                           "full_read_ops": full.read_ops(),
+                           "full_n_chunks": full.n_chunks,
+                           "modeled_read_gib_s": round(mr.read_bw / 2**30,
+                                                       4)}))
                 executor.shutdown()
                 fdb.close()
                 shutil.rmtree(root, ignore_errors=True)

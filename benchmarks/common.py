@@ -78,15 +78,24 @@ def fresh_fdb(backend: str, meter: Meter, tmp_tag: str, **kw) -> FDB:
 
 
 class Row:
-    """One CSV output row: name,us_per_call,derived."""
+    """One benchmark result row: name,us_per_call,derived (CSV), plus an
+    optional ``extra`` dict of structured fields (read_ops / write_ops /
+    modeled throughput ...) that rides along into ``run.py --json``
+    perf-trajectory dumps but stays out of the CSV line."""
 
-    def __init__(self, name: str, us_per_call: float, derived: str):
+    def __init__(self, name: str, us_per_call: float, derived: str,
+                 extra: Optional[Dict[str, object]] = None):
         self.name = name
         self.us_per_call = us_per_call
         self.derived = derived
+        self.extra = dict(extra or {})
 
     def line(self) -> str:
         return f"{self.name},{self.us_per_call:.2f},{self.derived}"
+
+    def to_json(self) -> Dict[str, object]:
+        return {"name": self.name, "us_per_call": round(self.us_per_call, 3),
+                "derived": self.derived, **self.extra}
 
 
 def modeled_bw(meter: Meter, profile: str, servers: int) -> Dict[str, float]:

@@ -1,36 +1,74 @@
 """Benchmark runner: one function per thesis table/figure.
-Prints ``name,us_per_call,derived`` CSV rows."""
+
+Prints ``name,us_per_call,derived`` CSV rows; ``--json FILE`` additionally
+dumps the rows (with their structured read_ops/write_ops/throughput fields)
+to a perf-trajectory file — the repo commits one ``BENCH_<n>.json`` per perf
+PR so regressions are diffable.  ``--suites a,b`` selects suites,
+``--tiny`` switches suites that support it onto their CI smoke profile.
+"""
 from __future__ import annotations
 
+import argparse
+import inspect
+import json
 import sys
 import traceback
 
+SUITES = [
+    ("ior", "bench_ior"),                      # Figs. 4.5-4.7 / 4.19-4.20
+    ("fieldio", "bench_fieldio"),              # Figs. 4.8-4.11
+    ("hammer", "bench_hammer"),                # Figs. 4.12-4.13 / 4.21-4.25
+    ("rados_options", "bench_rados_options"),  # Fig. 3.5
+    ("small_objects", "bench_small_objects"),  # Fig. 4.26
+    ("redundancy", "bench_redundancy"),        # Figs. 4.27-4.28
+    ("ckpt", "bench_ckpt"),                    # §3.1.3 operational pattern
+    ("tensorstore", "bench_tensorstore"),      # chunk size x parallelism
+    ("roofline", "roofline"),                  # §Roofline deliverable
+]
 
-def main() -> None:
-    from . import (bench_ckpt, bench_fieldio, bench_hammer, bench_ior,
-                   bench_rados_options, bench_redundancy,
-                   bench_small_objects, bench_tensorstore, roofline)
-    suites = [
-        ("ior", bench_ior),                     # Figs. 4.5-4.7 / 4.19-4.20
-        ("fieldio", bench_fieldio),             # Figs. 4.8-4.11
-        ("hammer", bench_hammer),               # Figs. 4.12-4.13 / 4.21-4.25
-        ("rados_options", bench_rados_options), # Fig. 3.5
-        ("small_objects", bench_small_objects), # Fig. 4.26
-        ("redundancy", bench_redundancy),       # Figs. 4.27-4.28
-        ("ckpt", bench_ckpt),                   # §3.1.3 operational pattern
-        ("tensorstore", bench_tensorstore),     # chunk size x parallelism
-        ("roofline", roofline),                 # §Roofline deliverable
-    ]
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--suites", default=None,
+                    help="comma-separated suite names (default: all)")
+    ap.add_argument("--json", default=None, metavar="FILE",
+                    help="also dump rows as JSON to FILE")
+    ap.add_argument("--tiny", action="store_true",
+                    help="tiny CI profile for suites that support it")
+    args = ap.parse_args(argv)
+
+    wanted = None if args.suites is None else {
+        s.strip() for s in args.suites.split(",") if s.strip()}
+    selected = [(n, m) for n, m in SUITES if wanted is None or n in wanted]
+    if wanted is not None:
+        unknown = wanted - {n for n, _m in SUITES}
+        if unknown:
+            sys.exit(f"unknown suites: {sorted(unknown)} "
+                     f"(known: {[n for n, _m in SUITES]})")
+
+    import importlib
     print("name,us_per_call,derived")
     failures = 0
-    for name, mod in suites:
+    json_rows = []
+    for name, modname in selected:
         try:
-            for row in mod.run():
+            mod = importlib.import_module(f"benchmarks.{modname}")
+            kwargs = {}
+            if args.tiny and "tiny" in inspect.signature(
+                    mod.run).parameters:
+                kwargs["tiny"] = True
+            for row in mod.run(**kwargs):
                 print(row.line(), flush=True)
+                json_rows.append({"suite": name, **row.to_json()})
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"{name},,ERROR", flush=True)
             traceback.print_exc()
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"suites": [n for n, _m in selected],
+                       "tiny": args.tiny, "rows": json_rows}, f, indent=1)
+            f.write("\n")
     if failures:
         sys.exit(1)
 

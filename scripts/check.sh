@@ -2,9 +2,30 @@
 # Tier-1 gate: what CI runs and what every PR must keep green.
 #   1. compile-all — every module under src/ must at least parse/compile;
 #   2. tier-1 tests — the ROADMAP's verify command (slow marker excluded
-#      via pytest.ini).
+#      via pytest.ini);
+#   3. benchmark smoke — the tiny tensorstore sweep must run end to end and
+#      emit valid perf-trajectory JSON (read_ops/write_ops rows), so the
+#      BENCH_<n>.json plumbing can't silently rot.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m compileall -q src
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
+
+smoke_json=$(mktemp /tmp/bench_smoke.XXXXXX.json)
+trap 'rm -f "$smoke_json"' EXIT
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
+    python -m benchmarks.run --suites tensorstore --tiny \
+    --json "$smoke_json" > /dev/null
+python - "$smoke_json" <<'PY'
+import json, sys
+d = json.load(open(sys.argv[1]))
+rows = d["rows"]
+assert rows, "bench smoke emitted no rows"
+assert any("write_ops" in r for r in rows), "no write_ops rows"
+assert any("read_ops" in r for r in rows), "no read_ops rows"
+posix = [r for r in rows if r.get("backend") == "posix" and "write_ops" in r]
+assert posix and all(r["write_ops"] < r["n_chunks"] for r in posix), \
+    "posix write coalescing regressed: write_ops not below chunk count"
+print(f"bench smoke OK: {len(rows)} rows")
+PY

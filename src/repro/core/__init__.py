@@ -10,7 +10,7 @@ Public surface:
 """
 from .fdb import FDB, FDBConfig, as_identifier, reset_engines, shared_engine
 from .handle import (DataHandle, FieldLocation, FileRangeHandle, MultiHandle,
-                     ShortReadError, group_mergeable)
+                     PlacementHandle, ShortReadError, group_mergeable)
 from .interfaces import Catalogue, Store
 from .schema import (CHECKPOINT_SCHEMA, DATA_SCHEMA, Identifier,
                      NWP_OBJECT_SCHEMA, NWP_POSIX_SCHEMA, SCHEMAS, Schema,
@@ -21,7 +21,7 @@ from .engine.costmodel import PROFILES, HardwareProfile, model_run
 __all__ = [
     "FDB", "FDBConfig", "as_identifier", "reset_engines", "shared_engine",
     "DataHandle", "FieldLocation", "FileRangeHandle", "MultiHandle",
-    "ShortReadError", "group_mergeable",
+    "PlacementHandle", "ShortReadError", "group_mergeable",
     "Catalogue", "Store",
     "Identifier", "Schema", "SCHEMAS",
     "NWP_OBJECT_SCHEMA", "NWP_POSIX_SCHEMA", "CHECKPOINT_SCHEMA",

@@ -76,6 +76,13 @@ class DaosStore(Store):
         return FieldLocation(self.scheme, label, str(oid), 0, len(data),
                              pool=self.pool)
 
+    # NOTE on write coalescing: ``placement()`` stays None (the base-class
+    # default) — one DAOS array per field is the §3.1 design, and saturation
+    # comes from many independent object-granular writes in flight, not from
+    # batching them into shared units.  ``archive_batch`` therefore keeps the
+    # per-item loop; callers preserve op-level parallelism by submitting one
+    # batch (of one object) per executor slot.
+
     def flush(self) -> None:
         # DAOS persists and publishes on archive(); nothing to do (§3.1.1).
         return

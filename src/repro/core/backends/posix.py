@@ -30,7 +30,8 @@ import socket
 import struct
 import threading
 import time
-from typing import Dict, Iterator, List, Mapping, Optional, Set, Tuple
+from typing import (Dict, Iterator, List, Mapping, Optional, Sequence, Set,
+                    Tuple)
 
 import msgpack
 
@@ -164,26 +165,86 @@ class PosixStore(Store):
             pass
         return d
 
+    def _entry(self, dataset: Identifier, collocation: Identifier) -> List:
+        """Resolve (reserving on first use) the per-(process, collocation)
+        data-file entry ``[path, fileobj_or_None, offset, unsynced]``.
+        Reservation only names the path — no directory, file, or metered op
+        is created until the first real write (:meth:`_open_entry`), so
+        planning-time placement stays free of side effects.  Caller must
+        hold ``self._lock``."""
+        key = (dataset.canonical(), collocation.canonical())
+        ent = self._files.get(key)
+        if ent is None:
+            stem = _unique_stem(collocation.canonical())
+            path = os.path.join(self.sim.root, dataset.canonical(),
+                                stem + ".data")
+            ent = [path, None, 0, 0]
+            self._files[key] = ent
+        return ent
+
+    def _open_entry(self, ent: List, dataset: Identifier):
+        """Open the entry's data file on first write (mkdir + create +
+        contention tracking are charged here, not at placement time).
+        Caller must hold ``self._lock``."""
+        if ent[1] is None:
+            self._dataset_dir(dataset)
+            ent[1] = open(ent[0], "ab", buffering=self.buffer_size)
+            self.sim.meta()                      # file create
+            self.sim.writer_opens(ent[0])
+        return ent[1]
+
     def archive(self, data: bytes, dataset: Identifier,
                 collocation: Identifier) -> FieldLocation:
-        key = (dataset.canonical(), collocation.canonical())
         with self._lock:
-            ent = self._files.get(key)
-            if ent is None:
-                d = self._dataset_dir(dataset)
-                stem = _unique_stem(collocation.canonical())
-                path = os.path.join(d, stem + ".data")
-                f = open(path, "ab", buffering=self.buffer_size)
-                self.sim.meta()                      # file create
-                self.sim.writer_opens(path)
-                ent = [path, f, 0, 0]
-                self._files[key] = ent
-            path, f, offset, unsynced = ent
+            ent = self._entry(dataset, collocation)
+            f = self._open_entry(ent, dataset)
+            path, _f, offset, unsynced = ent
             f.write(data)
             ent[2] = offset + len(data)
             ent[3] = unsynced + len(data)
         return FieldLocation(self.scheme, dataset.canonical(), path,
                              offset, len(data))
+
+    def placement(self, dataset: Identifier,
+                  collocation: Identifier) -> Optional[str]:
+        """The data file archives to this (dataset, collocation) append
+        into — the write-side merge unit, resolved without touching disk or
+        the op meter (the file itself opens lazily on first write).
+        Archives resolving to one path coalesce into a single buffered
+        append (``archive_batch``), the write-op mirror of
+        ``FileRangeHandle`` read merging."""
+        with self._lock:
+            return self._entry(dataset, collocation)[0]
+
+    def archive_batch(self, items: Sequence[Tuple[bytes, Identifier,
+                                                  Identifier]]
+                      ) -> List[FieldLocation]:
+        """One buffered append per destination data file for the whole
+        batch: payloads bound for the same file concatenate into a single
+        ``write()`` under one lock round-trip — the store-level write-op
+        reduction the paper's POSIX scaling numbers call for.  Offsets are
+        reserved in input order, so per-item locations stay exact."""
+        locs: List[Optional[FieldLocation]] = [None] * len(items)
+        with self._lock:
+            per_file: Dict[int, Tuple[List, str, List[Tuple[int, bytes]]]] = {}
+            for pos, (data, dataset, collocation) in enumerate(items):
+                ent = self._entry(dataset, collocation)
+                self._open_entry(ent, dataset)
+                per_file.setdefault(
+                    id(ent), (ent, dataset.canonical(), []))[2].append(
+                        (pos, data))
+            for ent, dlabel, parts in per_file.values():
+                path, f = ent[0], ent[1]
+                buf = b"".join(d for _pos, d in parts)
+                f.write(buf)        # ONE append for this file's whole batch
+                offset = ent[2]
+                for pos, d in parts:
+                    locs[pos] = FieldLocation(self.scheme, dlabel, path,
+                                              offset, len(d))
+                    offset += len(d)
+                ent[2] = offset
+                ent[3] += len(buf)
+        return locs                  # type: ignore[return-value]
 
     def flush(self) -> None:
         with self._lock:
@@ -195,6 +256,8 @@ class PosixStore(Store):
             with self._lock:
                 path, f, unsynced = ent[0], ent[1], ent[3]
                 ent[3] = 0
+            if f is None:
+                continue            # placement-reserved, never written
             f.flush()
             os.fsync(f.fileno())
             if unsynced:
@@ -229,6 +292,8 @@ class PosixStore(Store):
             items = list(self._files.items())
             self._files.clear()
         for _key, (path, f, _off, unsynced) in items:
+            if f is None:
+                continue            # placement-reserved, never written
             f.flush()
             os.fsync(f.fileno())
             f.close()
@@ -322,13 +387,34 @@ class PosixCatalogue(Catalogue):
         mi = self._mem_index(dataset, collocation)
         ekey = element.canonical()
         with self._lock:
-            uri_id = mi.intern(location.unit)
-            entry = (uri_id, location.offset, location.length)
-            mi.partial[ekey] = entry
-            mi.full[ekey] = entry
-            for dim in self.schema.element_dims:
-                mi.axes[dim].add(element[dim])
+            self._index_one(mi, element, ekey, location)
         # purely in-memory: no I/O until flush() (§2.7.2)
+
+    def _index_one(self, mi: "_PerKeyIndex", element: Identifier, ekey: str,
+                   location: FieldLocation) -> None:
+        """Insert one entry; caller must hold ``self._lock``."""
+        uri_id = mi.intern(location.unit)
+        entry = (uri_id, location.offset, location.length)
+        mi.partial[ekey] = entry
+        mi.full[ekey] = entry
+        for dim in self.schema.element_dims:
+            mi.axes[dim].add(element[dim])
+
+    def archive_batch(self, entries) -> None:
+        """Index a whole batch with one index resolution + one lock
+        round-trip per (dataset, collocation) key — the catalogue half of a
+        coalesced store write (still in-memory only until flush)."""
+        by_key: Dict[Tuple[str, str], List] = {}
+        for dataset, collocation, element, location in entries:
+            by_key.setdefault(
+                (dataset.canonical(), collocation.canonical()),
+                []).append((dataset, collocation, element, location))
+        for batch in by_key.values():
+            mi = self._mem_index(batch[0][0], batch[0][1])
+            with self._lock:
+                for _d, _c, element, location in batch:
+                    self._index_one(mi, element, element.canonical(),
+                                    location)
 
     def _subtoc_for(self, dataset_dir: str, dataset_label: str) -> str:
         with self._lock:

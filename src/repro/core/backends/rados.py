@@ -119,6 +119,13 @@ class RadosStore(Store):
                 self._pending.append((pool, ns, name, off, bytes(data)))
         return FieldLocation(self.scheme, ns, name, off, len(data), pool=pool)
 
+    # NOTE on write coalescing: ``placement()`` stays None even in span /
+    # single_large modes.  Span objects are an *offset-reservation* shared
+    # unit — appends interleave per-op under the reservation lock so many
+    # archives stay in flight (§3.2.1); collapsing them into one batched
+    # write would serialize exactly the op-level parallelism object stores
+    # are won by.  Coalescing is the POSIX backend's lever, not RADOS's.
+
     def flush(self) -> None:
         if self.persistence != "on_flush":
             return

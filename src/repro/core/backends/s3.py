@@ -77,6 +77,11 @@ class S3Store(Store):
         self.engine.upload_part(upload, part_no + 1, data)
         return FieldLocation(self.scheme, bucket, key, offset, len(data))
 
+    # NOTE on write coalescing: ``placement()`` stays None — a PUT per field
+    # is the §3.3 design (multipart spans reserve offsets per-part, like the
+    # RADOS span mode), so batching archives into one request would trade
+    # away the request-level parallelism S3 throughput depends on.
+
     def flush(self) -> None:
         if self.object_mode != "multipart":
             return

@@ -21,7 +21,8 @@ from .engine.daos import DaosEngine
 from .engine.meter import GLOBAL_METER, Meter
 from .engine.rados import RadosEngine
 from .engine.s3 import S3Engine
-from .handle import DataHandle, FieldLocation, MultiHandle
+from .handle import (DataHandle, FieldLocation, MultiHandle, PlacementHandle,
+                     group_mergeable)
 from .interfaces import Catalogue, Store
 from .schema import (CHECKPOINT_SCHEMA, Identifier, NWP_OBJECT_SCHEMA,
                      NWP_POSIX_SCHEMA, SCHEMAS, Schema)
@@ -144,6 +145,9 @@ class FDB:
         self.store, self.catalogue = self._build_backends()
         self._closed = False
         self._dirty = False
+        self._io_executor = None        # lazily built, see io_executor
+        self._io_executor_size = 0
+        self._io_lock = threading.Lock()
 
     # -- backend wiring ------------------------------------------------------
     def _build_backends(self) -> Tuple[Store, Catalogue]:
@@ -205,23 +209,104 @@ class FDB:
         return sim
 
     # -- the four primary API methods (Listing 2.2) -----------------------------
-    def archive(self, identifier: Union[Identifier, Mapping[str, object]],
-                data: BytesLike) -> FieldLocation:
+    def _split_archivable(self, identifier: Union[Identifier,
+                                                  Mapping[str, object]]):
+        """Canonicalise + split an archive identifier, rejecting multi-value
+        request expressions ("0/6", or a sequence value): they would
+        catalogue the object under a key no retrieve can ever expand back
+        to — archive one object per fully-specified identifier."""
         ident = as_identifier(identifier)
-        # an archive identifier must be fully specified: a multi-value
-        # request expression ("0/6", or a sequence value) would catalogue
-        # the object under a key no retrieve can ever expand back to
         multi = [k for k, v in ident.items() if "/" in v]
         if multi:
             raise ValueError(
                 f"archive identifier {ident!r} has multi-value request "
                 f"expressions on dims {multi}; archive one object per "
                 f"fully-specified identifier")
-        dataset, collocation, element = self.schema.split(ident)
-        loc = self.store.archive(_as_bytes(data), dataset, collocation)
+        return self.schema.split(ident)
+
+    def archive(self, identifier: Union[Identifier, Mapping[str, object]],
+                data: BytesLike) -> FieldLocation:
+        return self._archive_split(self._split_archivable(identifier),
+                                   _as_bytes(data))
+
+    def _archive_split(self, split, data: bytes) -> FieldLocation:
+        """Archive one pre-split (dataset, collocation, element) triple —
+        the shared tail of :meth:`archive`/:meth:`archive_many`, so batch
+        paths canonicalise each identifier exactly once."""
+        dataset, collocation, element = split
+        loc = self.store.archive(data, dataset, collocation)
         self.catalogue.archive(dataset, collocation, element, loc)
         self._dirty = True
         return loc
+
+    def archive_placement(self, identifier: Union[Identifier,
+                                                  Mapping[str, object]]
+                          ) -> PlacementHandle:
+        """Resolve where an ``archive(identifier, ...)`` would land —
+        placement only, no data I/O: the write-side twin of
+        :meth:`retrieve_handle`.  Handles over the same storage unit (posix
+        archives appending into one writer's data file) are mutually
+        mergeable, so :func:`repro.core.group_mergeable` groups them into
+        single :meth:`archive_batch` submissions — the tensorstore
+        ``WritePlan``'s planning hook."""
+        dataset, collocation, _element = self._split_archivable(identifier)
+        return PlacementHandle(self.store.placement(dataset, collocation))
+
+    def archive_batch(self, items: Sequence[Tuple[Mapping[str, object],
+                                                  BytesLike]]
+                      ) -> List[FieldLocation]:
+        """Archive several fully-specified objects through ONE store-level
+        batched write + one catalogue batch.
+
+        The store coalesces items bound for the same storage unit into a
+        single write (posix: one buffered append per data file); on object
+        backends the batch degenerates to the per-item loop, so callers
+        wanting op-level overlap there should submit one batch per executor
+        slot (what :meth:`archive_many` and the tensorstore ``WritePlan``
+        do).  Per-item semantics are rule 2/3-unchanged: on return the FDB
+        controls all payloads; visibility still requires ``flush()``."""
+        return self._archive_batch_split(
+            [(self._split_archivable(ident), _as_bytes(data))
+             for ident, data in items])
+
+    def _archive_batch_split(self, split) -> List[FieldLocation]:
+        """Batch-archive pre-split ``((dataset, collocation, element),
+        bytes)`` pairs — one store submission + one catalogue batch."""
+        locs = self.store.archive_batch(
+            [(data, dataset, collocation)
+             for (dataset, collocation, _e), data in split])
+        self.catalogue.archive_batch(
+            [(dataset, collocation, element, loc)
+             for ((dataset, collocation, element), _d), loc
+             in zip(split, locs)])
+        if split:
+            self._dirty = True
+        return locs
+
+    @property
+    def io_executor(self):
+        """This client's bounded I/O executor (``archive_many`` overlap,
+        tensorstore chunk I/O), sized by ``config.io_parallelism`` — one
+        per FDB instead of one per call, rebuilt if the configured depth
+        changes, shut down in :meth:`close`.  A closed client refuses to
+        mint a fresh pool (nothing would ever shut it down again)."""
+        from repro.tensorstore.executor import ChunkExecutor
+        size = max(1, self.config.io_parallelism)
+        with self._io_lock:
+            # checked under the lock: close() flips _closed under the same
+            # lock, so a concurrent close cannot slip between the check and
+            # the build and leave a fresh pool nothing will shut down
+            if self._closed:
+                raise RuntimeError(
+                    "FDB client is closed; its I/O executor cannot be "
+                    "rebuilt")
+            ex = self._io_executor
+            if ex is None or self._io_executor_size != size:
+                if ex is not None:
+                    ex.shutdown(wait=True)
+                ex = self._io_executor = ChunkExecutor(max_workers=size)
+                self._io_executor_size = size
+            return ex
 
     def archive_many(self, items: Sequence[Tuple[Mapping[str, object],
                                                  BytesLike]],
@@ -230,16 +315,19 @@ class FDB:
         """The thesis's efficient multi-object archive() variant.
 
         Batched semantics: every item is archived as an independent object
-        (identifier → one store object + one catalogue entry), but archives
-        are submitted through a bounded-depth I/O executor so they *overlap*
-        instead of running as a serial per-item loop — the paper's finding
-        that object stores are won or lost on keeping many object-granular
-        ops in flight.  Returns the :class:`FieldLocation` of every item in
-        input order.  Per-item API semantics are unchanged: on return the
-        FDB controls (a copy of) all data (rule 2); visibility still requires
-        ``flush()`` (rule 3).  ``parallelism`` (defaulting to
-        ``config.io_parallelism``) sets the overlap depth; values <= 1 fall
-        back to the serial loop.  An explicit ``executor`` overrides both.
+        (identifier → one store object + one catalogue entry), with two
+        levers applied per the paper's findings: items whose payloads land
+        in the same storage unit (posix data files, via
+        :meth:`archive_placement` + :func:`group_mergeable`) coalesce into
+        one batched store write, and the resulting batches are submitted
+        through a bounded-depth I/O executor so independent object writes
+        *overlap* instead of running as a serial per-item loop.  Returns the
+        :class:`FieldLocation` of every item in input order.  Per-item API
+        semantics are unchanged: on return the FDB controls (a copy of) all
+        data (rule 2); visibility still requires ``flush()`` (rule 3).
+        ``parallelism`` (defaulting to ``config.io_parallelism``) sets the
+        overlap depth; values <= 1 fall back to the serial loop.  An
+        explicit ``executor`` overrides both.
         """
         items = list(items)
         if parallelism is None:
@@ -247,12 +335,34 @@ class FDB:
         if executor is None and (parallelism <= 1 or len(items) <= 1):
             return [self.archive(ident, data) for ident, data in items]
         if executor is None:
-            # late import: repro.tensorstore.executor has no repro imports,
-            # but the tensorstore package itself imports repro.core.
-            from repro.tensorstore.executor import sized_executor
-            executor = sized_executor(parallelism)
-        return executor.map_ordered(
-            lambda item: self.archive(item[0], item[1]), items)
+            if parallelism == self.config.io_parallelism:
+                executor = self.io_executor
+            else:
+                # explicit non-default depth: use the shared process-global
+                # pool of that size (not owned by this client, never shut
+                # down here)
+                from repro.tensorstore.executor import sized_executor
+                executor = sized_executor(parallelism)
+        # canonicalise + split each identifier exactly once; both the
+        # placement pre-pass and the archive submissions reuse the triples
+        split = [(self._split_archivable(ident), _as_bytes(data))
+                 for ident, data in items]
+        placements = [
+            PlacementHandle(self.store.placement(dataset, collocation))
+            for (dataset, collocation, _e), _d in split]
+        groups = group_mergeable(placements)
+        if len(groups) == len(items):       # nothing coalesces (object
+            return executor.map_ordered(    # backends): one op per item
+                lambda pair: self._archive_split(*pair), split)
+        locs: List[Optional[FieldLocation]] = [None] * len(items)
+        batches = executor.map_ordered(
+            lambda group: self._archive_batch_split(
+                [split[pos] for pos in group]),
+            groups)
+        for group, batch_locs in zip(groups, batches):
+            for pos, loc in zip(group, batch_locs):
+                locs[pos] = loc
+        return locs                          # type: ignore[return-value]
 
     @property
     def dirty(self) -> bool:
@@ -336,7 +446,14 @@ class FDB:
             self.flush()
             self.catalogue.close()
             self.store.close()
-            self._closed = True
+            with self._io_lock:
+                # _closed flips under _io_lock so io_executor's guard and
+                # this shutdown are atomic with respect to each other
+                if self._io_executor is not None:
+                    self._io_executor.shutdown(wait=True)
+                    self._io_executor = None
+                    self._io_executor_size = 0
+                self._closed = True
 
     def __enter__(self) -> "FDB":
         return self

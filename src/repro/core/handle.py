@@ -50,6 +50,33 @@ class FieldLocation:
         return FieldLocation(**json.loads(b.decode()))
 
 
+@dataclasses.dataclass(frozen=True)
+class PlacementHandle:
+    """Where an archive *would* land, resolved before any byte is written —
+    the write-side analogue of a :class:`DataHandle`.
+
+    ``unit`` names the destination storage unit when archives to the same
+    (dataset, collocation) key append into one shared unit (the posix
+    backend's per-writer data file); such handles are mutually mergeable, so
+    :func:`group_mergeable` groups them into one batched store-level write —
+    the write-side mirror of read coalescing.  ``unit=None`` means every
+    archive creates its own independent object (object-store backends): the
+    handle does not merge even with itself, each archive keeps its own
+    in-flight op — which is what those backends want.
+    """
+
+    unit: Optional[str]
+
+    def mergeable_with(self, other: "PlacementHandle") -> bool:
+        return (self.unit is not None
+                and isinstance(other, PlacementHandle)
+                and other.unit == self.unit)
+
+    def merged(self, other: "PlacementHandle") -> "PlacementHandle":
+        assert self.mergeable_with(other)
+        return self                     # grouping only: nothing to combine
+
+
 class DataHandle:
     """Abstract reader.  ``read()`` returns the full payload bytes."""
 

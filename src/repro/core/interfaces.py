@@ -7,12 +7,19 @@ contracts:
 Store
   * ``archive`` takes control of the data and returns a unique, collision-free
     :class:`FieldLocation`; data need not be persistent yet.
+  * ``placement`` resolves the destination storage unit an archive would
+    append into — without writing — so callers can group archives per unit
+    (write coalescing); ``None`` = every archive is its own object.
+  * ``archive_batch`` archives several objects in one store-level submission;
+    backends whose archives share a storage unit coalesce the batch into a
+    single write to that unit.
   * ``flush`` blocks until all data archived by this process is persistent and
     readable by external processes.
   * ``retrieve`` builds a :class:`DataHandle` without performing I/O.
 
 Catalogue
   * ``archive`` indexes element-key → location; may be in-memory only.
+  * ``archive_batch`` indexes several entries in one submission.
   * ``flush`` blocks until all indexed entries are persistent & visible.
   * ``close`` finalises process-lifetime structures (e.g. full indexes).
   * ``retrieve`` returns the location for an exact key triple (None = absent —
@@ -24,7 +31,7 @@ Catalogue
 """
 from __future__ import annotations
 
-from typing import Iterator, Mapping, Optional, Tuple
+from typing import Iterator, List, Mapping, Optional, Sequence, Tuple
 
 from .handle import DataHandle, FieldLocation
 from .schema import Identifier
@@ -36,6 +43,25 @@ class Store:
     def archive(self, data: bytes, dataset: Identifier,
                 collocation: Identifier) -> FieldLocation:
         raise NotImplementedError
+
+    def placement(self, dataset: Identifier,
+                  collocation: Identifier) -> Optional[str]:
+        """Destination storage unit an ``archive(dataset, collocation)``
+        would append into, resolved without writing — the write-side
+        counterpart of ``retrieve``'s no-I/O handle.  ``None`` (the object
+        backends) means archives are independent objects with no shared
+        unit, so there is nothing to coalesce."""
+        return None
+
+    def archive_batch(self, items: Sequence[Tuple[bytes, Identifier,
+                                                  Identifier]]
+                      ) -> List[FieldLocation]:
+        """Archive several objects in one store-level submission, returning
+        locations in input order.  The default loops ``archive`` (object
+        backends: one op per object is the point); backends with shared
+        storage units override to issue one write per unit."""
+        return [self.archive(data, dataset, collocation)
+                for data, dataset, collocation in items]
 
     def flush(self) -> None:
         raise NotImplementedError
@@ -56,6 +82,15 @@ class Catalogue:
     def archive(self, dataset: Identifier, collocation: Identifier,
                 element: Identifier, location: FieldLocation) -> None:
         raise NotImplementedError
+
+    def archive_batch(self, entries: Sequence[Tuple[Identifier, Identifier,
+                                                    Identifier,
+                                                    FieldLocation]]) -> None:
+        """Index several entries in one submission (the catalogue half of a
+        batched archive).  Default loops ``archive``; backends with per-key
+        in-memory indexes override to take their locks once per key."""
+        for dataset, collocation, element, location in entries:
+            self.archive(dataset, collocation, element, location)
 
     def flush(self) -> None:
         raise NotImplementedError

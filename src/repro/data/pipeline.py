@@ -115,7 +115,10 @@ class ChunkedFieldStore:
         """Chunk-aligned in-place update of a field window — the
         assimilation pattern: ``write_window("t2m", increment, slice(0,
         120), slice(300, 420))`` re-archives only the chunks the window
-        touches (partially covered edge chunks read-modify-write).
+        touches (partially covered edge chunks read-modify-write), through
+        a coalesced :class:`~repro.tensorstore.WritePlan` — chunks landing
+        in one posix data file archive as a single batched store write, and
+        same-shape chunks encode in one codec kernel launch.
 
         Visibility of the *new* chunk versions waits for :meth:`commit`.
         Caveat for chunk-*aligned* batching only: a window that partially
@@ -126,7 +129,7 @@ class ChunkedFieldStore:
         """
         arr = self.open_field(name)
         # normalize_key pads a short/empty key with full slices
-        arr.write_at(tuple(selection), values, flush=False)
+        arr.write_plan(tuple(selection), values).execute(flush=False)
         return arr
 
     def wipe_field(self, name: str) -> None:

@@ -12,8 +12,17 @@ packing does not vectorise on TPU lanes and is intentionally dropped
 Used by the framework for (a) checkpoint-shard compression before
 FDB archive() and (b) optional cross-pod gradient compression.
 
-encode:  x (N, C) → q int8 (N, C), scale (N/block, 1), mins (N/block, 1)
+encode:  x (N, C) → q int8 (N, C), scale (N/block,), mins (N/block,)
 decode:  inverse.
+
+Both entry points also accept a leading *batch* dimension — x (B, N, C) —
+encoding B same-shape fields in ONE kernel launch.  The batch flattens onto
+the block grid (grid = B · N/block, i.e. fields × blocks): because each
+field's row count is a multiple of the block size, no quantisation block
+ever straddles a field boundary, so the per-block (scale, min) pairs — and
+therefore the quantised bytes — are bit-identical to B separate 2-D calls.
+This is what lets the tensorstore write path encode a whole write plan's
+chunks per launch instead of a Python loop of per-chunk launches.
 """
 from __future__ import annotations
 
@@ -50,7 +59,20 @@ def _decode_kernel(q_ref, scale_ref, min_ref, x_ref, *, bits: int):
                    static_argnames=("block", "bits", "interpret"))
 def field_encode(x: jax.Array, block: int = 256, bits: int = 8,
                  interpret: bool = False):
-    """x: (N, C), N % block == 0, C % 128 == 0 (lane alignment)."""
+    """x: (N, C) or (B, N, C); N % block == 0, C % 128 == 0 (lane alignment).
+
+    With a batch dimension the outputs are q (B, N, C), scale (B, N/block),
+    mins (B, N/block) from a single launch with grid B · N/block.
+    """
+    if x.ndim == 3:
+        B, N, Cdim = x.shape
+        blk = min(block, N)
+        assert N % blk == 0, (N, blk)
+        q, scale, mins = field_encode(x.reshape(B * N, Cdim), block=blk,
+                                      bits=bits, interpret=interpret)
+        nb = N // blk
+        return (q.reshape(B, N, Cdim), scale.reshape(B, nb),
+                mins.reshape(B, nb))
     N, Cdim = x.shape
     block = min(block, N)
     assert N % block == 0, (N, block)
@@ -81,6 +103,15 @@ def field_encode(x: jax.Array, block: int = 256, bits: int = 8,
 def field_decode(q: jax.Array, scale: jax.Array, mins: jax.Array,
                  block: int = 256, bits: int = 8, out_dtype=jnp.float32,
                  interpret: bool = False) -> jax.Array:
+    """Inverse of :func:`field_encode`; q (N, C) or batched (B, N, C) with
+    scale/mins (B, N/block) — the batched form decodes in one launch."""
+    if q.ndim == 3:
+        B, N, Cdim = q.shape
+        blk = min(block, N)
+        out = field_decode(q.reshape(B * N, Cdim), scale.reshape(-1),
+                           mins.reshape(-1), block=blk, bits=bits,
+                           out_dtype=out_dtype, interpret=interpret)
+        return out.reshape(B, N, Cdim)
     N, Cdim = q.shape
     block = min(block, N)
     n_blocks = N // block

@@ -9,16 +9,17 @@
 >>> window = arr[120:240, 300:420]       # reads only intersecting chunks
 >>> arr[120:240, 300:420] = window + dx  # chunk-aligned in-place update
 >>> arr.read_plan((slice(None), slice(None))).read_ops()  # coalesced I/O ops
+>>> arr.write_plan((slice(None), slice(None)), field).write_ops()  # the twin
 """
 from .codec import CODECS, Codec, FieldQuantCodec, RawCodec, get_codec
 from .executor import ChunkExecutor, default_executor, sized_executor
 from .grid import ChunkGrid
 from .meta import META_CHUNK_KEY, ArrayMeta, auto_chunks
 from .store import (ChunkedArray, LayoutMismatchError, ReadPlan,
-                    TensorStore, chunk_key)
+                    TensorStore, WritePlan, chunk_key)
 
 __all__ = [
-    "TensorStore", "ChunkedArray", "ReadPlan", "chunk_key",
+    "TensorStore", "ChunkedArray", "ReadPlan", "WritePlan", "chunk_key",
     "LayoutMismatchError",
     "ArrayMeta", "auto_chunks", "META_CHUNK_KEY",
     "ChunkGrid",

@@ -91,7 +91,14 @@ class ChunkExecutor:
         return results
 
     def shutdown(self, wait: bool = True) -> None:
+        self._shut = True
         self._pool.shutdown(wait=wait)
+
+    @property
+    def is_shutdown(self) -> bool:
+        """True once :meth:`shutdown` ran — lets owners (and tests) observe
+        an executor's lifecycle; submitting to a shut-down pool raises."""
+        return getattr(self, "_shut", False)
 
     def __enter__(self) -> "ChunkExecutor":
         return self

@@ -9,6 +9,9 @@ property that makes partial reads issue I/O for only the touched chunks.
 each touched chunk as *fully covered* (encode the new tile directly) or
 *partially covered* (read-modify-write), the split that makes chunk-aligned
 in-place assignment (``arr[sel] = values``) re-archive only what it must.
+The store's :class:`~.store.WritePlan` consumes these triples, batching the
+encodes (equal-shape chunks share one kernel launch) and coalescing chunks
+bound for one storage unit into single store-level writes.
 """
 from __future__ import annotations
 

@@ -24,14 +24,23 @@ object-store/POSIX trade-off:
   ranges coalesce into single large reads (``FileRangeHandle`` merging),
   while object-store chunks keep one op in flight each.  ``read_ops()`` on
   the plan reports the I/O-op count a read will issue.
-* **In-place writes** (``arr[sel] = values``) follow a
-  :class:`~.grid.ChunkGrid.write_plan`: chunks fully covered by the selection
-  are encoded and archived outright; partially covered (edge) chunks do
-  read-modify-write through the same bounded executor.  Chunks never written
-  before read as zeros (the Zarr fill-value convention).  A ``flush()``
-  barrier after the archives preserves FDB visibility rule 3 — and partial
-  writes flush *first* as well, so their RMW fetches see this writer's own
-  earlier unflushed chunks.
+* **Writes** (``write``, ``arr[sel] = values``, ``write_at``) build a
+  :class:`WritePlan` — the mirror of the read side.  Every chunk the
+  selection touches is resolved to its destination storage unit
+  (``FDB.archive_placement``, placement only, no I/O) and chunks landing in
+  the same unit — posix chunks appending into one writer's data file — are
+  grouped into ONE batched store-level write (``FDB.archive_batch``), while
+  object-store chunks keep one archive op in flight each.
+  ``write_ops()`` on the plan reports the store-level write count, the twin
+  of ``ReadPlan.read_ops()``.  Encoding is batched too: same-shape chunks
+  encode through the codec's single-kernel-launch path
+  (``Codec.encode_batch``), ragged edge chunks fall back per-chunk.  Chunks
+  fully covered by the selection encode from the new values outright;
+  partially covered (edge) chunks do read-modify-write through the bounded
+  executor.  Chunks never written before read as zeros (the Zarr fill-value
+  convention).  A ``flush()`` barrier after the archives preserves FDB
+  visibility rule 3 — and partial writes flush *first* as well, so their
+  RMW fetches see this writer's own earlier unflushed chunks.
 """
 from __future__ import annotations
 
@@ -42,7 +51,7 @@ import numpy as np
 from repro.core import (FDB, FieldLocation, Identifier, MultiHandle,
                         group_mergeable)
 from .codec import Codec, get_codec
-from .executor import ChunkExecutor, sized_executor
+from .executor import ChunkExecutor
 from .grid import ChunkGrid
 from .meta import META_CHUNK_KEY, ArrayMeta, auto_chunks
 
@@ -80,10 +89,19 @@ class TensorStore:
         if missing:
             raise KeyError(f"tensorstore base {self.base} missing dims "
                            f"{missing} of schema {schema.name!r}")
-        if executor is None:
-            # honour the FDB's configured overlap depth (<= 1 serializes)
-            executor = sized_executor(max(1, fdb.config.io_parallelism))
-        self.executor = executor
+        #: explicit executor, or None to track the FDB client's own
+        self._executor = executor
+
+    @property
+    def executor(self) -> ChunkExecutor:
+        """This store's bounded I/O executor.  When none was passed in, the
+        FDB client's own (``FDB.io_executor``) is resolved *per use*, not
+        cached: the client rebuilds it on an ``io_parallelism`` config
+        change, and a reference taken at construction would go stale (a
+        shut-down pool)."""
+        if self._executor is not None:
+            return self._executor
+        return self.fdb.io_executor
 
     # -- identifiers -----------------------------------------------------------
     def _ident(self, chunk_value: str) -> Identifier:
@@ -170,46 +188,15 @@ class ChunkedArray:
                 f"chunks={self.chunks}, codec={self.meta.codec})")
 
     # -- write path ------------------------------------------------------------
-    def write(self, values, flush: bool = True) -> List[FieldLocation]:
-        """Archive every chunk: one executor task per chunk encodes *and*
-        archives, so at most the executor's in-flight window of encoded
-        chunks is ever alive and archives overlap encodes of later chunks.
-        ``flush=True`` commits before returning (FDB visibility rule 3)."""
-        values = np.asarray(values)
-        if values.shape != self.shape:
-            raise ValueError(f"write shape {values.shape} != array shape "
-                             f"{self.shape}")
-        values = values.astype(self.dtype, copy=False)
-        codec, grid, store = self._codec, self.grid, self.store
+    def write_plan(self, key, values) -> "WritePlan":
+        """Plan a write without moving data — the mirror of
+        :meth:`read_plan`: every chunk the selection touches is resolved to
+        its destination storage unit and coalescible chunks are grouped
+        into single batched store writes.  Use :meth:`WritePlan.write_ops`
+        to see the store-level write count before (or without) executing.
 
-        def put(idx: Index) -> FieldLocation:
-            chunk = values[grid.chunk_slices(idx)]
-            return store.fdb.archive(store._ident(chunk_key(idx)),
-                                     codec.encode(chunk))
-
-        locs = store.executor.map_ordered(put, list(grid.all_indices()))
-        if flush:
-            store.fdb.flush()
-        return locs
-
-    def write_at(self, key, values, flush: bool = True
-                 ) -> List[FieldLocation]:
-        """Chunk-aligned in-place assignment: ``arr[sel] = values``.
-
-        Only chunks the selection touches are re-archived.  Fully covered
-        chunks are encoded from ``values`` directly; partially covered ones
-        do read-modify-write (fetch, patch, re-archive) through the bounded
-        executor — a chunk never written before patches onto zeros, the Zarr
-        fill-value convention.  ``values`` broadcasts against the selection
-        shape (so ``arr[10:20, :] = 0.0`` works).
-
-        Visibility (FDB rule 3): when RMW is needed and this client has
-        unflushed archives, the FDB is flushed *before* fetching, so its own
-        earlier unflushed chunks are seen rather than lost (no barrier is
-        paid when the client is clean); ``flush=True`` commits the new chunk
-        versions before returning.  With lossy codecs (``field8``/``field16``) RMW
-        re-quantises the whole chunk, so untouched elements of partially
-        covered chunks may shift within the quantisation bound.
+        ``values`` broadcasts against the selection shape (so
+        ``arr[10:20, :] = 0.0`` works).
         """
         sel, squeeze = self.grid.normalize_key(key)
         sel_shape = self.grid.selection_shape(sel)
@@ -219,28 +206,40 @@ class ChunkedArray:
             values = np.expand_dims(values, tuple(squeeze))
         values = np.broadcast_to(values.astype(self.dtype, copy=False),
                                  sel_shape)
-        tasks = list(self.grid.write_plan(sel))
-        if not tasks:
-            return []
-        codec, store = self._codec, self.store
-        if store.fdb.dirty and any(not full for _i, _c, _v, full in tasks):
-            store.fdb.flush()       # make own unflushed chunks RMW-visible
+        return WritePlan(self, sel, values)
 
-        def put(task) -> FieldLocation:
-            idx, chunk_sel, val_sel, full = task
-            if full:
-                tile = values[val_sel]
-            else:
-                tile = self._fetch_chunk(idx)
-                tile[chunk_sel] = values[val_sel]
-            return store.fdb.archive(store._ident(chunk_key(idx)),
-                                     codec.encode(tile))
+    def write(self, values, flush: bool = True) -> List[FieldLocation]:
+        """Archive every chunk through a whole-array :class:`WritePlan`:
+        same-shape chunks encode in one Pallas launch, chunks bound for one
+        storage unit archive as one batched store write.  ``flush=True``
+        commits before returning (FDB visibility rule 3)."""
+        values = np.asarray(values)
+        if values.shape != self.shape:
+            raise ValueError(f"write shape {values.shape} != array shape "
+                             f"{self.shape}")
+        key = (slice(None),) * self.grid.ndim
+        return self.write_plan(key, values).execute(flush=flush)
 
-        # mixed-size batch: direct encodes + RMW fetches through one window
-        locs = store.executor.map_ordered(put, tasks)
-        if flush:
-            store.fdb.flush()
-        return locs
+    def write_at(self, key, values, flush: bool = True
+                 ) -> List[FieldLocation]:
+        """Chunk-aligned in-place assignment: ``arr[sel] = values``.
+
+        Only chunks the selection touches are re-archived — through a
+        :class:`WritePlan`, so coalescible chunks batch into single store
+        writes.  Fully covered chunks are encoded from ``values`` directly;
+        partially covered ones do read-modify-write (fetch, patch,
+        re-archive) through the bounded executor — a chunk never written
+        before patches onto zeros, the Zarr fill-value convention.
+
+        Visibility (FDB rule 3): when RMW is needed and this client has
+        unflushed archives, the FDB is flushed *before* fetching, so its own
+        earlier unflushed chunks are seen rather than lost (no barrier is
+        paid when the client is clean); ``flush=True`` commits the new chunk
+        versions before returning.  With lossy codecs (``field8``/``field16``) RMW
+        re-quantises the whole chunk, so untouched elements of partially
+        covered chunks may shift within the quantisation bound.
+        """
+        return self.write_plan(key, values).execute(flush=flush)
 
     def __setitem__(self, key, values) -> None:
         self.write_at(key, values, flush=True)
@@ -284,6 +283,111 @@ class ChunkedArray:
         dense arrays where a missing chunk means lost data."""
         key = (slice(None),) * self.grid.ndim
         return self.read_plan(key, fill_missing=fill_missing).execute()
+
+
+class WritePlan:
+    """Materialised write-side I/O plan for one selection of a
+    :class:`ChunkedArray` — the mirror of :class:`ReadPlan`.
+
+    Construction resolves every chunk the selection touches to its
+    destination storage unit (:meth:`repro.core.FDB.archive_placement` —
+    placement only, no data I/O) and groups chunks landing in the same unit
+    with :func:`repro.core.group_mergeable`: posix chunks appending into one
+    writer's data file archive as ONE batched store-level write
+    (``FDB.archive_batch`` → a single buffered append), while object-store
+    chunks keep one independent archive op in flight each — the two sides of
+    the paper's object-store/POSIX trade-off, now symmetric with reads.
+    :meth:`write_ops` reports the store-level write count :meth:`execute`
+    will issue.
+
+    Executing encodes every tile through the codec's *batched* path
+    (:meth:`~.codec.Codec.encode_batch`): all same-shape chunks — the
+    interior of any multi-chunk write — quantise in one Pallas kernel
+    launch (grid over chunks × blocks), ragged edge chunks fall back to
+    per-chunk launches, and the bytes are identical either way.  The cost of
+    batching is that the plan materialises every encoded tile at once
+    (the per-chunk path only ever held the executor window's worth);
+    callers archiving arrays far larger than memory should write in
+    selections, as the checkpointer and field store do per-tensor/field.
+    """
+
+    def __init__(self, array: "ChunkedArray", sel, values: np.ndarray):
+        self.array = array
+        self.values = values
+        store = array.store
+        #: (chunk_idx, within_chunk_slices, value_slices, fully_covered)
+        self.tasks = list(array.grid.write_plan(sel))
+        if self.tasks:
+            # the chunk dim is an element dim, so every chunk of one array
+            # shares (dataset, collocation) — one placement resolve covers
+            # the whole plan
+            placement = store.fdb.archive_placement(
+                store._ident(chunk_key(self.tasks[0][0])))
+            placements = [placement] * len(self.tasks)
+        else:
+            placements = []
+        #: positions-into-tasks per batched store write
+        self.groups: List[List[int]] = group_mergeable(placements)
+
+    @property
+    def n_chunks(self) -> int:
+        return len(self.tasks)
+
+    @property
+    def rmw_chunks(self) -> int:
+        """Chunks only partially covered by the selection — they fetch and
+        patch (read-modify-write) before re-encoding."""
+        return sum(1 for _i, _c, _v, full in self.tasks if not full)
+
+    def write_ops(self) -> int:
+        """Store-level write operations :meth:`execute` will issue (after
+        coalescing) — the twin of :meth:`ReadPlan.read_ops`."""
+        return len(self.groups)
+
+    def execute(self, flush: bool = True) -> List[FieldLocation]:
+        """Encode (batched), archive (one submission per group), and — with
+        ``flush=True`` — commit (FDB visibility rule 3).  Returns per-chunk
+        :class:`FieldLocation`\\ s in plan order."""
+        if not self.tasks:
+            return []
+        arr, values = self.array, self.values
+        store, codec = arr.store, arr._codec
+        fdb = store.fdb
+        rmw = [pos for pos, (_i, _c, _v, full) in enumerate(self.tasks)
+               if not full]
+        if rmw and fdb.dirty:
+            fdb.flush()         # make own unflushed chunks RMW-visible
+        tiles: List[Optional[np.ndarray]] = [None] * len(self.tasks)
+        for pos, (_idx, _chunk_sel, val_sel, full) in enumerate(self.tasks):
+            if full:
+                tiles[pos] = values[val_sel]
+
+        def fetch_and_patch(pos: int) -> None:
+            idx, chunk_sel, val_sel, _full = self.tasks[pos]
+            tile = arr._fetch_chunk(idx)
+            tile[chunk_sel] = values[val_sel]
+            tiles[pos] = tile
+
+        if rmw:                 # RMW fetches overlap through the executor
+            store.executor.map_ordered(fetch_and_patch, rmw)
+        blobs = codec.encode_batch(tiles)
+
+        locs: List[Optional[FieldLocation]] = [None] * len(self.tasks)
+
+        def put(group: List[int]) -> List[FieldLocation]:
+            # one store-level submission per group: a posix group lands as
+            # a single buffered append; object groups are singletons
+            return fdb.archive_batch(
+                [(store._ident(chunk_key(self.tasks[pos][0])), blobs[pos])
+                 for pos in group])
+
+        batches = store.executor.map_ordered(put, self.groups)
+        for group, batch_locs in zip(self.groups, batches):
+            for pos, loc in zip(group, batch_locs):
+                locs[pos] = loc
+        if flush:
+            fdb.flush()
+        return locs             # type: ignore[return-value]
 
 
 class ReadPlan:
@@ -343,12 +447,14 @@ class ReadPlan:
             out[self.tasks[pos][2]] = 0
 
         def run_batch(positions: List[int], mh: MultiHandle) -> None:
-            # one coalesced read per batch; per-chunk payloads scatter into
+            # one coalesced read per batch, one batched decode (equal-shape
+            # chunks share a kernel launch); per-chunk payloads scatter into
             # disjoint output regions → concurrent assembly is safe
-            for pos, payload in zip(positions, mh.read_parts()):
-                idx, chunk_sel, out_sel = self.tasks[pos]
-                chunk = codec.decode(payload, grid.chunk_shape(idx),
-                                     arr.dtype)
+            shapes = [grid.chunk_shape(self.tasks[pos][0])
+                      for pos in positions]
+            chunks = codec.decode_batch(mh.read_parts(), shapes, arr.dtype)
+            for pos, chunk in zip(positions, chunks):
+                _idx, chunk_sel, out_sel = self.tasks[pos]
                 out[out_sel] = chunk[chunk_sel]
 
         arr.store.executor.map_ordered(lambda b: run_batch(*b), self.batches)

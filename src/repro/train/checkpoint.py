@@ -23,12 +23,17 @@ checkpoint or at exit.
 
 Storage path (``chunked=True``, the default): every tensor is a
 ``repro.tensorstore`` chunked array — the chunk index rides the ``shard``
-element dim, chunk archives overlap through the bounded I/O executor, and
-restore can read partial tensors per host (``open_tensor()``) or patch them
-in place (``update_tensor()``, chunk-aligned partial writes); ``compress``
-selects the ``field8`` per-chunk codec instead of a post-hoc buffer hack.
-``chunked=False`` keeps the legacy one-blob-per-shard layout, and restore
-transparently falls back to it for checkpoints written by older runs.
+element dim, and each tensor archives through a coalesced
+:class:`~repro.tensorstore.WritePlan`: same-shape chunks encode in one
+Pallas codec launch, chunks bound for one storage unit (posix data files)
+land as a single batched store write, and independent object writes overlap
+through the FDB client's bounded I/O executor.  Restore can read partial
+tensors per host (``open_tensor()``) or patch them in place
+(``update_tensor()``, chunk-aligned partial writes); ``compress`` selects
+the ``field8`` per-chunk codec instead of a post-hoc buffer hack.
+``chunked=False`` keeps the legacy one-blob-per-shard layout (its shard
+blobs now batch through ``FDB.archive_many``), and restore transparently
+falls back to it for checkpoints written by older runs.
 """
 from __future__ import annotations
 
@@ -154,13 +159,15 @@ class FDBCheckpointer:
                 payload = self._compress(arr)
             shards = np.array_split(payload.reshape(-1), self.n_shards) \
                 if self.n_shards > 1 else [payload]
-            meta = {"shape": list(arr.shape), "dtype": str(payload.dtype)}
-            for si, shard in enumerate(shards):
-                ident = Identifier({**self._dataset(kind, step),
-                                    "host": self.host,
-                                    "tensor": _tensor_name(path),
-                                    "shard": str(si)})
-                self.fdb.archive(ident, _pack(np.asarray(shard)))
+            # batched archive: shard blobs coalesce per storage unit (posix)
+            # and overlap through the client's bounded executor elsewhere
+            self.fdb.archive_many(
+                [(Identifier({**self._dataset(kind, step),
+                              "host": self.host,
+                              "tensor": _tensor_name(path),
+                              "shard": str(si)}),
+                  _pack(np.asarray(shard)))
+                 for si, shard in enumerate(shards)])
 
     def _compress(self, arr: np.ndarray) -> np.ndarray:
         from repro.kernels import ops

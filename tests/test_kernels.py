@@ -51,6 +51,37 @@ def test_field_codec_roundtrip_bound(shape, bits):
     np.testing.assert_allclose(np.asarray(m), np.asarray(mr), rtol=1e-5)
 
 
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.float16])
+@pytest.mark.parametrize("bits", [8, 16])
+def test_field_codec_batched_matches_loop(dtype, bits):
+    """A leading batch dim (one launch, grid = fields × blocks) must be
+    bit-identical to a Python loop of per-field launches — blocks never
+    straddle fields, so per-block (scale, min) pairs cannot differ."""
+    x = jax.random.normal(jax.random.PRNGKey(6), (5, 512, 128), dtype) * 50
+    qb, sb, mb = ops.field_encode(x, block=256, bits=bits)
+    assert qb.shape == (5, 512, 128) and sb.shape == mb.shape == (5, 2)
+    yb = ops.field_decode(qb, sb, mb, block=256, bits=bits)
+    for i in range(x.shape[0]):
+        q, s, m = ops.field_encode(x[i], block=256, bits=bits)
+        np.testing.assert_array_equal(np.asarray(qb[i]), np.asarray(q))
+        np.testing.assert_array_equal(np.asarray(sb[i]), np.asarray(s))
+        np.testing.assert_array_equal(np.asarray(mb[i]), np.asarray(m))
+        np.testing.assert_array_equal(
+            np.asarray(yb[i]),
+            np.asarray(ops.field_decode(q, s, m, block=256, bits=bits)))
+
+
+def test_field_codec_batched_single_and_sub_block():
+    """B=1 batches and fields smaller than the block size (block clips to
+    N) stay bit-identical to the 2-D path."""
+    x = jax.random.normal(jax.random.PRNGKey(7), (1, 64, 128), jnp.float32)
+    qb, sb, mb = ops.field_encode(x, block=256)       # block clips to 64
+    q, s, m = ops.field_encode(x[0], block=256)
+    np.testing.assert_array_equal(np.asarray(qb[0]), np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(sb[0]), np.asarray(s))
+    np.testing.assert_array_equal(np.asarray(mb[0]), np.asarray(m))
+
+
 def test_field_codec_constant_block():
     x = jnp.ones((256, 128), jnp.float32) * 3.14
     q, s, m = ops.field_encode(x)

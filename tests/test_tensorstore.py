@@ -314,6 +314,297 @@ def test_read_plan_partial_window(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# write planning + posix write coalescing (the WritePlan mirror)
+# ---------------------------------------------------------------------------
+
+def test_posix_write_plan_coalesces(tmp_path):
+    """Acceptance: posix write_ops for a multi-chunk write is strictly
+    lower than the chunk count — one writer's chunks append into one data
+    file, so the whole plan lands as a single batched store write."""
+    fdb, ts = make_store("posix", tmp_path)
+    v = np.arange(64, dtype=np.float32)
+    arr = ts.create(v.shape, v.dtype, chunks=(8,))    # 8 chunks, one file
+    plan = arr.write_plan((slice(None),), v)
+    assert plan.n_chunks == 8
+    assert plan.write_ops() < plan.n_chunks
+    assert plan.write_ops() == 1          # one data file -> one append
+    locs = plan.execute()
+    assert len(locs) == 8
+    # locations are exact and adjacent: the read side coalesces them back
+    # into one ranged read (write/read op symmetry)
+    offs = [loc.offset for loc in locs]
+    assert offs == sorted(offs)
+    rplan = arr.read_plan((slice(None),))
+    assert rplan.read_ops() == 1
+    np.testing.assert_array_equal(rplan.execute(), v)
+    fdb.close()
+
+
+def test_object_store_writes_stay_object_granular(tmp_path):
+    """No false write coalescing on object backends: one archive op per
+    chunk stays in flight (the other side of the paper's trade-off)."""
+    for backend in ("daos", "rados", "s3"):
+        fdb, ts = make_store(backend, tmp_path, array=f"wog-{backend}")
+        arr = ts.create((64,), np.float32, chunks=(8,))
+        plan = arr.write_plan((slice(None),), np.zeros(64, np.float32))
+        assert plan.write_ops() == plan.n_chunks == 8
+        fdb.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_write_plan_read_plan_roundtrip(backend, tmp_path):
+    """write_plan -> read_plan round-trips on every backend, including
+    ragged edge chunks (batched encode falls back per shape group)."""
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.random.default_rng(40).normal(size=(37, 53)).astype(np.float32)
+    arr = ts.create(x.shape, x.dtype, chunks=(16, 16))
+    plan = arr.write_plan((slice(None), slice(None)), x)
+    assert plan.n_chunks == 12 and plan.rmw_chunks == 0
+    plan.execute()
+    np.testing.assert_array_equal(
+        arr.read_plan((slice(None), slice(None)),
+                      fill_missing=False).execute(), x)
+    fdb.close()
+
+
+def test_write_plan_partial_window_rmw_and_ops(tmp_path):
+    """A window cutting through chunks: the plan reports its RMW split and
+    still coalesces every re-archive into one posix write."""
+    fdb, ts = make_store("posix", tmp_path)
+    x = np.random.default_rng(41).normal(size=(64, 64)).astype(np.float32)
+    ts.save(x, chunks=(16, 16))
+    arr = ts.open()
+    v = np.random.default_rng(42).normal(size=(30, 30)).astype(np.float32)
+    plan = arr.write_plan((slice(10, 40), slice(10, 40)), v)
+    assert plan.n_chunks == 9
+    assert plan.rmw_chunks == 8           # only the (1,1) chunk is full
+    assert plan.write_ops() == 1 < plan.n_chunks
+    plan.execute()
+    x[10:40, 10:40] = v
+    np.testing.assert_array_equal(arr.read(), x)
+    fdb.close()
+
+
+def test_write_window_coalesces_store_writes(tmp_path):
+    """The pipeline facade's write_window goes through the same coalesced
+    plan: a multi-chunk assimilation window on posix lands as one batched
+    store write (observed via the store's append offsets, not just the
+    plan's claim)."""
+    from repro.data import ChunkedFieldStore
+    fs = ChunkedFieldStore("nwp-wco", FDBConfig(backend="posix",
+                                                root=str(tmp_path / "fdb")),
+                           chunks=(16, 16))
+    field = np.zeros((64, 64), np.float32)
+    fs.put_field("t2m", field)
+    fs.commit()
+    arr = fs.open_field("t2m")
+    plan = arr.write_plan((slice(0, 32), slice(None)), np.ones((32, 64),
+                                                               np.float32))
+    assert plan.write_ops() == 1 and plan.n_chunks == 8
+    fs.write_window("t2m", np.ones((32, 64), np.float32),
+                    slice(0, 32), slice(None))
+    fs.commit()
+    field[0:32, :] = 1.0
+    np.testing.assert_array_equal(fs.read_window("t2m"), field)
+    fs.close()
+
+
+def test_write_plan_flush_barrier_preserved(tmp_path):
+    """FDB rule 3 under batching: a second client sees nothing until the
+    writer flushes, then sees everything — and execute(flush=True) is that
+    barrier."""
+    root = str(tmp_path / "fdb")
+    fdb, ts = make_store("posix", tmp_path)
+    x = np.arange(64, dtype=np.float32)
+    arr = ts.create(x.shape, x.dtype, chunks=(8,))
+    arr.write_plan((slice(None),), x).execute(flush=False)
+    reader = FDB(FDBConfig(backend="posix", schema="tensor", root=root))
+    rts = TensorStore(reader, {"store": "s", "array": "a", "writer": "w0"})
+    with pytest.raises(FileNotFoundError):
+        rts.open()                        # not yet visible (rule 3)
+    fdb.flush()
+    reader.catalogue.refresh()
+    np.testing.assert_array_equal(rts.open().read(), x)
+    reader.close()
+    fdb.close()
+
+
+def test_archive_many_coalesces_on_posix(tmp_path, nwp_identifier):
+    """archive_many groups items per destination data file: many fields of
+    one (dataset, collocation) land as one batched append, and locations
+    still resolve exactly."""
+    fdb = FDB(FDBConfig(backend="posix", schema="nwp-posix",
+                        root=str(tmp_path / "fdb")))
+    items = [({**nwp_identifier, "step": str(i)}, bytes([i]) * 64)
+             for i in range(10)]
+    unit = fdb.archive_placement(items[0][0]).unit
+    assert unit is not None
+    assert all(fdb.archive_placement(i).unit == unit for i, _d in items)
+    locs = fdb.archive_many(items)
+    fdb.flush()
+    assert len({loc.unit for loc in locs}) == 1       # one data file
+    assert [loc.offset for loc in locs] == sorted(loc.offset for loc in locs)
+    for i, (ident, data) in enumerate(items):
+        assert fdb.retrieve(ident).read() == data
+    fdb.close()
+
+
+def test_archive_placement_object_backends_none(tmp_path, nwp_identifier):
+    for backend in ("daos", "rados", "s3"):
+        fdb = FDB(FDBConfig(backend=backend, schema="nwp-object",
+                            root=str(tmp_path / "fdb")))
+        p = fdb.archive_placement(nwp_identifier)
+        assert p.unit is None and not p.mergeable_with(p)
+        fdb.close()
+
+
+def test_archive_batch_rejects_multi_value(nwp_identifier):
+    fdb = FDB(FDBConfig(backend="daos"))
+    with pytest.raises(ValueError, match="multi-value"):
+        fdb.archive_batch([({**nwp_identifier, "step": [0, 6]}, b"x")])
+    with pytest.raises(ValueError, match="multi-value"):
+        fdb.archive_placement({**nwp_identifier, "step": "0/6"})
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# batched codec paths (encode_batch / decode_batch)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("codec_name", ["raw", "field8", "field16"])
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+def test_codec_batch_byte_identical_to_loop(codec_name, dtype):
+    """The single-launch batched encode must produce byte-identical
+    containers to the per-chunk loop — equal-shape interior chunks, ragged
+    tails, and ineligible (tiny) chunks alike — so the two paths
+    interoperate on one array."""
+    codec = get_codec(codec_name)
+    rng = np.random.default_rng(50)
+    arrs = [rng.normal(size=(16, 16)).astype(dtype) for _ in range(5)]
+    arrs += [rng.normal(size=(5, 131)).astype(dtype)]   # ragged f32 tail
+    arrs += [rng.normal(size=(3, 3)).astype(dtype)]     # ineligible -> raw
+    batched = codec.encode_batch(arrs)
+    looped = [codec.encode(a) for a in arrs]
+    assert batched == looped
+    shapes = [a.shape for a in arrs]
+    dec_b = codec.decode_batch(batched, shapes, np.dtype(dtype))
+    for got, data, shape in zip(dec_b, looped, shapes):
+        np.testing.assert_array_equal(
+            got, codec.decode(data, shape, np.dtype(dtype)))
+
+
+@pytest.mark.parametrize("bits", [8, 16])
+def test_codec_batch_roundtrip_bound(bits):
+    codec = get_codec(f"field{bits}")
+    rng = np.random.default_rng(51)
+    arrs = [rng.normal(size=(32, 128)).astype(np.float32) for _ in range(4)]
+    enc = codec.encode_batch(arrs)
+    dec = codec.decode_batch(enc, [a.shape for a in arrs], np.float32)
+    for a, d in zip(arrs, dec):
+        bound = (a.max() - a.min()) / (2 ** bits - 1) * 0.51 + 1e-6
+        assert np.abs(d - a).max() <= bound
+
+
+def test_codec_batch_mixed_written_paths(tmp_path):
+    """Chunks written per-chunk (old data) and batched (new data) decode
+    together: the containers are identical, so a batched read of a
+    mixed-provenance array just works."""
+    fdb, ts = make_store("posix", tmp_path)
+    x = np.random.default_rng(52).normal(size=(64, 64)).astype(np.float32)
+    ts.save(x, chunks=(16, 16), codec="field16")      # batched write
+    arr = ts.open()
+    # overwrite two chunks through the per-chunk encode path
+    codec = get_codec("field16")
+    from repro.tensorstore import chunk_key
+    for idx in ((0, 0), (1, 1)):
+        tile = x[arr.grid.chunk_slices(idx)]
+        fdb.archive(arr.store._ident(chunk_key(idx)), codec.encode(tile))
+    fdb.flush()
+    got = arr.read()
+    bound = (x.max() - x.min()) / 65535 * 0.51 + 1e-6
+    assert np.abs(got - x).max() <= bound
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# per-FDB io executor (churn fix)
+# ---------------------------------------------------------------------------
+
+def test_fdb_io_executor_cached_and_rebuilt(tmp_path):
+    fdb = FDB(FDBConfig(backend="daos", io_parallelism=4))
+    ex = fdb.io_executor
+    assert ex is fdb.io_executor                  # cached, not per-call
+    assert ex.max_workers == 4
+    fdb.config.io_parallelism = 2                 # config change -> rebuild
+    ex2 = fdb.io_executor
+    assert ex2 is not ex and ex2.max_workers == 2
+    assert ex.is_shutdown                         # old one was shut down
+    fdb.close()
+    assert ex2.is_shutdown                        # close() shuts it down
+
+
+def test_fdb_io_executor_not_shared_across_clients():
+    a = FDB(FDBConfig(backend="daos"))
+    b = FDB(FDBConfig(backend="daos"))
+    assert a.io_executor is not b.io_executor
+    a.close()
+    assert not b.io_executor.is_shutdown          # b unaffected by a.close()
+    b.close()
+
+
+def test_tensorstore_uses_fdb_executor(tmp_path):
+    fdb, ts = make_store("daos", tmp_path)
+    assert ts.executor is fdb.io_executor
+    fdb.close()
+
+
+def test_tensorstore_survives_executor_rebuild(tmp_path):
+    """A store must not cache the client's executor: after an
+    io_parallelism change rebuilds it, the store's next I/O must ride the
+    fresh pool, not a shut-down one."""
+    fdb, ts = make_store("daos", tmp_path)
+    x = np.arange(64, dtype=np.float32)
+    arr = ts.create(x.shape, x.dtype, chunks=(8,))
+    arr.write(x)
+    fdb.config.io_parallelism = 2         # rebuilds on next access
+    assert ts.executor.max_workers == 2
+    arr.write(x * 2)                      # would raise on a dead pool
+    np.testing.assert_array_equal(arr.read(), x * 2)
+    fdb.close()
+
+
+def test_fdb_io_executor_refuses_after_close():
+    """A closed client must not silently mint a fresh pool nothing will
+    ever shut down."""
+    fdb = FDB(FDBConfig(backend="daos"))
+    fdb.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        fdb.io_executor
+
+
+def test_posix_placement_is_side_effect_free(tmp_path, nwp_identifier):
+    """Resolving a placement (planning a write) must not create files or
+    charge the op meter — a plan that is never executed leaves no trace,
+    and the data file only appears on the first real archive."""
+    import os
+    fdb = FDB(FDBConfig(backend="posix", schema="nwp-posix",
+                        root=str(tmp_path / "fdb")))
+    before = GLOBAL_METER.snapshot()
+    p = fdb.archive_placement(nwp_identifier)
+    assert p.unit is not None and not os.path.exists(p.unit)
+    assert fdb.archive_placement(nwp_identifier).unit == p.unit   # stable
+    assert GLOBAL_METER.snapshot()[len(before):] == []    # meter untouched
+    fdb.flush()                           # reserved-only entries: no-op
+    assert not os.path.exists(p.unit)
+    loc = fdb.archive(nwp_identifier, b"x" * 32)
+    assert loc.unit == p.unit             # archives land where planned
+    fdb.flush()
+    assert os.path.exists(p.unit)
+    assert fdb.retrieve(nwp_identifier).read() == b"x" * 32
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
 # chunk-grid edge cases
 # ---------------------------------------------------------------------------
 
