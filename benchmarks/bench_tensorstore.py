@@ -4,17 +4,20 @@ applied to the new subsystem: chunk size × I/O parallelism × backend.
 Per cell: archive one (256, 256) float32 field as a chunked array (the
 write side plans first — ``WritePlan`` batches chunks per storage unit, so
 posix archives land as single buffered appends), then read back a 64-row
-window (partial read: only intersecting chunks).  Reports in-process
+window (partial read: only intersecting chunks), then **reshard** the array
+onto a transposed chunk grid (the paper's producer-grid → consumer-grid
+re-layout, streamed through composed Read/Write plans).  Reports in-process
 us/chunk, the cost-modeled at-scale bandwidth, and the planned I/O-op
-counts on BOTH sides — ``WritePlan.write_ops()`` next to
-``ReadPlan.read_ops()``: on posix, adjacent chunks of one data file
-coalesce into fewer store-level ops, while object stores keep one op per
-chunk in flight — the paper's central trade-off, mirroring
+counts on ALL sides — ``WritePlan.write_ops()`` next to
+``ReadPlan.read_ops()``, and the reshard's coalesced read/write op totals
+next to the naive one-op-per-chunk counts: on posix, adjacent chunks of one
+data file coalesce into fewer store-level ops, while object stores keep one
+op per chunk in flight — the paper's central trade-off, mirroring
 Figs. 4.5-4.7/4.26.
 
 ``run(tiny=True)`` is the CI smoke profile: two backends, one cell each,
-enough to keep the perf-trajectory JSON (read_ops/write_ops/throughput)
-honest without a full sweep.
+enough to keep the perf-trajectory JSON (read_ops/write_ops/reshard
+rows/throughput) honest without a full sweep.
 """
 from __future__ import annotations
 
@@ -109,6 +112,35 @@ def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                            "full_n_chunks": full.n_chunks,
                            "modeled_read_gib_s": round(mr.read_bw / 2**30,
                                                        4)}))
+
+                # reshard: producer grid (edge, edge) -> consumer grid
+                # (edge/2, 2*edge), streamed through composed plans; the
+                # coalesced op totals ride next to the naive per-chunk
+                # counts (source fetches / destination chunks)
+                meter.reset()
+                rplan = arr.reshard_plan((max(1, edge // 2), 2 * edge))
+                naive_r, naive_w = (rplan.src_chunk_fetches(),
+                                    rplan.n_dest_chunks)
+                t0 = time.perf_counter()
+                rplan.execute()
+                wall_rs = time.perf_counter() - t0
+                ms = model_run(meter.snapshot(), PROFILES[profile],
+                               server_nodes=SERVERS)
+                rows.append(Row(
+                    f"{tag}/reshard", wall_rs / max(1, naive_w) * 1e6,
+                    f"modeled={ms.write_bw / 2**30:.2f}GiB/s "
+                    f"dominant={ms.dominant} "
+                    f"read_ops={rplan.read_ops_executed}/{naive_r}naive "
+                    f"write_ops={rplan.write_ops_executed}/{naive_w}naive "
+                    f"batches={rplan.n_batches}",
+                    extra={"backend": backend, "chunk_edge": edge,
+                           "parallelism": par,
+                           "reshard_read_ops": rplan.read_ops_executed,
+                           "reshard_write_ops": rplan.write_ops_executed,
+                           "naive_read_ops": naive_r,
+                           "naive_write_ops": naive_w,
+                           "reshard_batches": rplan.n_batches,
+                           "peak_staged_bytes": rplan.peak_staged_bytes}))
                 executor.shutdown()
                 fdb.close()
                 shutil.rmtree(root, ignore_errors=True)

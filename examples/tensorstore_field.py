@@ -1,9 +1,11 @@
-"""Chunked NWP field write + slice-read with repro.tensorstore.
+"""Chunked NWP field write + slice-read + reshard with repro.tensorstore.
 
 A (lat, lon, level) temperature field is archived as a chunked array — every
 chunk one FDB object, archives overlapping through the bounded I/O executor —
 then a regional window is sliced back, retrieving only the intersecting
-chunks (the partial-read workload the whole-blob archive path cannot serve).
+chunks (the partial-read workload the whole-blob archive path cannot serve),
+and finally the array is resharded onto a consumer's chunk grid as a
+streaming composition of the read and write plans.
 
     PYTHONPATH=src python examples/tensorstore_field.py
 """
@@ -60,6 +62,23 @@ wplan.execute()
 rplan = parr.read_plan(full)
 print(f"posix read plan:  {rplan.read_ops()} store reads for "
       f"{rplan.n_chunks} chunks (coalesced)")
+
+# ------------------------------------------------- plan-composed reshard ---
+# The producer archived (60, 90, 2) chunks; a regional consumer wants
+# whole-column (lat-band) tiles.  reshard() streams the array onto the new
+# grid — bounded batches, each one coalesced ReadPlan + one coalesced
+# WritePlan — and flips readers over with a single metadata replace.  The
+# old grid's chunks are retained under the previous layout generation.
+splan = parr.reshard_plan((30, 360, 4))
+print(f"posix reshard:    {splan.read_ops()} reads + {splan.write_ops()} "
+      f"writes for {splan.n_dest_chunks} new chunks "
+      f"(naive: {splan.src_chunk_fetches()} + {splan.n_dest_chunks})")
+splan.execute()
+assert parr.chunks == (30, 360, 4) and parr.meta.generation == 1
+# strided selections express subsampled consumer grids directly
+coarse = parr[::4, ::4, 0]
+print(f"strided read {coarse.shape}: every 4th point, "
+      f"{parr.read_plan((slice(None, None, 4),) * 2).n_chunks} chunks touched")
 pfdb.close()
 
 # ----------------------------------------------------- pipeline-level API --

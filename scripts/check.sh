@@ -4,8 +4,11 @@
 #   2. tier-1 tests — the ROADMAP's verify command (slow marker excluded
 #      via pytest.ini);
 #   3. benchmark smoke — the tiny tensorstore sweep must run end to end and
-#      emit valid perf-trajectory JSON (read_ops/write_ops rows), so the
-#      BENCH_<n>.json plumbing can't silently rot.
+#      emit valid perf-trajectory JSON (read_ops/write_ops/reshard rows),
+#      so the BENCH_<n>.json plumbing can't silently rot — and posix
+#      coalescing (write + reshard) must stay below per-chunk counts;
+#   4. docs gate — README.md/docs/*.md internal links resolve and the
+#      fenced python quickstart blocks actually execute.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -24,8 +27,17 @@ rows = d["rows"]
 assert rows, "bench smoke emitted no rows"
 assert any("write_ops" in r for r in rows), "no write_ops rows"
 assert any("read_ops" in r for r in rows), "no read_ops rows"
+assert any("reshard_read_ops" in r for r in rows), "no reshard rows"
 posix = [r for r in rows if r.get("backend") == "posix" and "write_ops" in r]
 assert posix and all(r["write_ops"] < r["n_chunks"] for r in posix), \
     "posix write coalescing regressed: write_ops not below chunk count"
+prs = [r for r in rows if r.get("backend") == "posix"
+       and "reshard_read_ops" in r]
+assert prs and all(r["reshard_read_ops"] < r["naive_read_ops"]
+                   and r["reshard_write_ops"] < r["naive_write_ops"]
+                   for r in prs), \
+    "posix reshard coalescing regressed: ops not below naive per-chunk count"
 print(f"bench smoke OK: {len(rows)} rows")
 PY
+
+python scripts/docs_check.py

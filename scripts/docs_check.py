@@ -1,0 +1,125 @@
+#!/usr/bin/env python
+"""Docs gate: keep README.md and docs/*.md from rotting.
+
+Two checks, run by ``scripts/check.sh`` (and CI):
+
+1. **Internal links resolve** — every markdown link target that is not an
+   external URL or pure anchor must exist on disk, relative to the file
+   containing it (anchors on internal links are stripped).
+2. **Fenced ``python`` blocks execute** — each one is smoke-run in a
+   subprocess with ``PYTHONPATH=src`` from the repo root, so the quickstart
+   can never drift from the real API.  Blocks fenced as anything else
+   (``console``, ``text``, …) are documentation-only and skipped.
+
+Exit status: 0 when the gate passes, 1 when anything failed (every
+failure is printed to stderr).
+"""
+from __future__ import annotations
+
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: [text](target) — target captured; images (![...]) match too, same rules
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE = re.compile(r"^```(\w*)\s*$")
+
+#: seconds before a runaway quickstart block fails the gate
+BLOCK_TIMEOUT = 300
+
+
+def doc_files() -> list:
+    docs = [os.path.join(ROOT, "README.md")]
+    docs_dir = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs_dir):
+        docs += sorted(os.path.join(docs_dir, f)
+                       for f in os.listdir(docs_dir) if f.endswith(".md"))
+    return [d for d in docs if os.path.exists(d)]
+
+
+def strip_fences(text: str) -> str:
+    """Drop fenced code block bodies so code snippets containing
+    ``[x](y)``-shaped text don't register as links."""
+    out, in_fence = [], False
+    for line in text.splitlines():
+        if _FENCE.match(line) or (in_fence and line.strip() == "```"):
+            in_fence = not in_fence
+            continue
+        if not in_fence:
+            out.append(line)
+    return "\n".join(out)
+
+
+def check_links(path: str) -> list:
+    failures = []
+    text = strip_fences(open(path).read())
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            failures.append(f"{os.path.relpath(path, ROOT)}: broken link "
+                            f"-> {target}")
+    return failures
+
+
+def python_blocks(path: str) -> list:
+    blocks, current = [], None
+    for line in open(path).read().splitlines():
+        m = _FENCE.match(line)
+        if current is None and m and m.group(1) == "python":
+            current = []
+        elif current is not None and line.strip() == "```":
+            blocks.append("\n".join(current))
+            current = None
+        elif current is not None:
+            current.append(line)
+    return blocks
+
+
+def run_block(path: str, i: int, code: str) -> list:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    try:
+        proc = subprocess.run([sys.executable, "-"], input=code.encode(),
+                              cwd=ROOT, env=env, capture_output=True,
+                              timeout=BLOCK_TIMEOUT)
+    except subprocess.TimeoutExpired:
+        return [f"{os.path.relpath(path, ROOT)}: python block #{i} hung "
+                f"(killed after {BLOCK_TIMEOUT}s)"]
+    if proc.returncode != 0:
+        tail = proc.stderr.decode(errors="replace").strip().splitlines()
+        return [f"{os.path.relpath(path, ROOT)}: python block #{i} failed "
+                f"(exit {proc.returncode}): "
+                + ("; ".join(tail[-3:]) if tail else "no stderr")]
+    return []
+
+
+def main() -> int:
+    failures = []
+    n_links = n_blocks = 0
+    for path in doc_files():
+        link_fails = check_links(path)
+        failures += link_fails
+        n_links += len(_LINK.findall(strip_fences(open(path).read())))
+        for i, code in enumerate(python_blocks(path)):
+            n_blocks += 1
+            failures += run_block(path, i, code)
+    for f in failures:
+        print(f"docs gate FAIL: {f}", file=sys.stderr)
+    if not failures:
+        print(f"docs gate OK: {len(doc_files())} files, {n_links} links, "
+              f"{n_blocks} python blocks executed")
+    # exit status, not a count: N*256 failures must not wrap to "success"
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,23 @@
 """The FDB facade (thesis §2.7): archive / flush / retrieve / list / axes.
 
 Backend-agnostic: pairs any conforming Catalogue with any conforming Store
-(``FDBConfig``), enforcing the API semantics:
+(``FDBConfig``), enforcing the API semantics (see ``docs/architecture.md``
+for how the tensorstore plans lean on each rule):
 
 1. data is visible-and-indexed or not (ACID);
 2. ``archive()`` blocks until the FDB controls (a copy of) the data;
-3. ``flush()`` blocks until all archived data is persistent + visible;
+3. ``flush()`` blocks until all archived data is persistent + visible —
+   archive-without-flush is not readable, *not even by the archiving
+   client itself* (which is why RMW and reshard paths pre-flush);
 4. visible data is immutable;
-5. re-archiving an identifier transactionally replaces.
+5. re-archiving an identifier transactionally replaces it — the only
+   "update" primitive, and the hook layout flips (tensorstore metadata
+   replace) build on.
+
+Deliberately absent: a per-object delete.  ``wipe()`` removes whole
+datasets (container destroy), so layers that re-layout data under live
+identifiers must *version* superseded objects out (the tensorstore's
+generation-prefixed chunk keys) rather than delete them.
 """
 from __future__ import annotations
 
@@ -437,6 +447,14 @@ class FDB:
         return self.catalogue.axes(dataset, collocation, dim)
 
     def wipe(self, dataset_part: Mapping[str, object]) -> None:
+        """Destroy every matching dataset — data and index together (the
+        container-destroy granularity of the thesis's schema mapping).
+
+        This is the FDB's *only* deletion primitive: there is no per-object
+        delete, so wiping is also how superseded tensorstore layout
+        generations (resharded arrays' old-grid chunks, retained versioned)
+        are eventually reclaimed — at the cost of the whole array dataset.
+        """
         for dataset in self._matching_datasets(dict(dataset_part)):
             self.store.wipe(dataset)
             self.catalogue.wipe(dataset)

@@ -58,7 +58,10 @@ class ChunkedFieldStore:
         self.writer = writer
         self.codec = codec
         self.chunks = chunks
-        # metadata is immutable until wipe/re-put, so opened arrays cache
+        # metadata only changes on wipe/re-put/reshard, so opened arrays
+        # cache; those mutators update or drop this store's own cache, but
+        # a *different* consumer store must re-open after a producer
+        # reshard (open_field(refresh=True)) — see reshard()
         self._opened: Dict[str, ChunkedArray] = {}
 
     def _ts(self, name: str) -> TensorStore:
@@ -91,7 +94,14 @@ class ChunkedFieldStore:
         self.fdb.flush()
 
     # -- consumer side -----------------------------------------------------
-    def open_field(self, name: str) -> ChunkedArray:
+    def open_field(self, name: str, refresh: bool = False) -> ChunkedArray:
+        """Open (and cache) a field's chunked array.  ``refresh=True``
+        drops the cached open and re-reads the metadata — required for a
+        consumer to pick up another client's re-layout (``reshard``), since
+        versioned retain keeps the old generation's chunks readable and a
+        stale cached open would keep returning them."""
+        if refresh:
+            self._opened.pop(name, None)
         arr = self._opened.get(name)
         if arr is None:
             arr = self._opened[name] = self._ts(name).open()
@@ -102,6 +112,8 @@ class ChunkedFieldStore:
         """Read a window of a field; I/O is issued for only the chunks the
         window intersects — in parallel, and coalesced into single ranged
         reads where chunks are adjacent in one file (posix backend).
+        Windows may be strided (``slice(0, 720, 4)`` — every 4th latitude):
+        chunks the stride steps over are not touched at all.
 
         ``fill_missing=False`` raises ``KeyError`` on never-written chunks
         instead of zero-filling — for consumers of dense fields where a
@@ -121,15 +133,49 @@ class ChunkedFieldStore:
         same-shape chunks encode in one codec kernel launch.
 
         Visibility of the *new* chunk versions waits for :meth:`commit`.
-        Caveat for chunk-*aligned* batching only: a window that partially
-        covers a chunk needs read-modify-write, and the RMW pre-flush
-        (FDB rule 3, see :meth:`ChunkedArray.write_at`) publishes whatever
-        this producer archived earlier in the batch.  Producers that need a
-        strict single commit barrier must keep their windows chunk-aligned.
+        Windows may be strided (a subsampled analysis grid writing every
+        k-th row): stride gaps are preserved via read-modify-write of the
+        touched chunks.  Caveat for chunk-*aligned* batching only: a window
+        that partially covers a chunk needs read-modify-write, and the RMW
+        pre-flush (FDB rule 3, see :meth:`ChunkedArray.write_at`) publishes
+        whatever this producer archived earlier in the batch.  Producers
+        that need a strict single commit barrier must keep their windows
+        chunk-aligned.
         """
         arr = self.open_field(name)
         # normalize_key pads a short/empty key with full slices
         arr.write_plan(tuple(selection), values).execute(flush=False)
+        return arr
+
+    def reshard(self, name: str, new_chunks, *selection,
+                codec: Optional[str] = None) -> ChunkedArray:
+        """Re-lay-out a field onto a new chunk grid — the producer-grid vs
+        consumer-grid mismatch the paper's workflows revolve around: a
+        model archives level-major chunks, regional post-processing wants
+        lat/lon tiles, so the pipeline reshards between the stages instead
+        of punishing every consumer read.
+
+        Streams through bounded batches (one coalesced read plan + one
+        coalesced write plan each — see
+        :class:`repro.tensorstore.ReshardPlan`); the whole field is never
+        materialised client-side, and the re-layout is committed (flushed)
+        before returning: this store's cached open is updated in place and
+        consumers *opening* the field afterwards see the new grid.  A
+        consumer store that already cached its open keeps reading the
+        retained old generation until it re-opens —
+        ``open_field(name, refresh=True)`` — because versioned retain
+        deliberately keeps the old chunks readable.  A trailing
+        ``*selection`` of slices (possibly strided) subsamples on the way
+        through — e.g. every other level for a coarse consumer.
+
+        Old-grid chunks are retained versioned (unreachable, never read as
+        wrong data) because the FDB has no per-object delete; to *reclaim*
+        their space instead, use :meth:`wipe_field` + :meth:`put_field`,
+        which costs a full client-side roundtrip.
+        """
+        arr = self.open_field(name)
+        sel = tuple(selection) if selection else None
+        arr.reshard(new_chunks, codec=codec, sel=sel, flush=True)
         return arr
 
     def wipe_field(self, name: str) -> None:

@@ -7,19 +7,23 @@
 >>> ts.save(field)                       # chunked, parallel archive
 >>> arr = ts.open()
 >>> window = arr[120:240, 300:420]       # reads only intersecting chunks
+>>> coarse = arr[::4, ::4]               # strided: touches 1 chunk in 16
 >>> arr[120:240, 300:420] = window + dx  # chunk-aligned in-place update
 >>> arr.read_plan((slice(None), slice(None))).read_ops()  # coalesced I/O ops
 >>> arr.write_plan((slice(None), slice(None)), field).write_ops()  # the twin
+>>> arr.reshard((30, 420))               # stream onto a consumer chunk grid
 """
 from .codec import CODECS, Codec, FieldQuantCodec, RawCodec, get_codec
 from .executor import ChunkExecutor, default_executor, sized_executor
 from .grid import ChunkGrid
 from .meta import META_CHUNK_KEY, ArrayMeta, auto_chunks
+from .reshard import ReshardPlan, chunk_rectangles
 from .store import (ChunkedArray, LayoutMismatchError, ReadPlan,
                     TensorStore, WritePlan, chunk_key)
 
 __all__ = [
-    "TensorStore", "ChunkedArray", "ReadPlan", "WritePlan", "chunk_key",
+    "TensorStore", "ChunkedArray", "ReadPlan", "WritePlan", "ReshardPlan",
+    "chunk_key", "chunk_rectangles",
     "LayoutMismatchError",
     "ArrayMeta", "auto_chunks", "META_CHUNK_KEY",
     "ChunkGrid",

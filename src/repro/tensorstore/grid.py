@@ -12,6 +12,17 @@ in-place assignment (``arr[sel] = values``) re-archive only what it must.
 The store's :class:`~.store.WritePlan` consumes these triples, batching the
 encodes (equal-shape chunks share one kernel launch) and coalescing chunks
 bound for one storage unit into single store-level writes.
+
+Selections may be *strided*: any slice with a positive step is accepted on
+both the read and the write path (``arr[::4]``, ``arr[10:200:3] = v``) — the
+producer-grid vs consumer-grid mismatch the paper's workflows re-lay-out
+data around (a consumer subsampling every k-th level/row of a producer's
+field).  A strided selection touches only the chunks holding at least one
+selected point — chunks the stride steps over entirely are skipped — and the
+within-chunk slices keep the stride, so strided scatters/gathers stay single
+numpy slice assignments.  Output (and value) slices are always unit-step:
+selections address a *compact* result array.  Negative steps (reversing
+reads) are rejected — chunk visit order would no longer match output order.
 """
 from __future__ import annotations
 
@@ -73,11 +84,14 @@ class ChunkGrid:
 
     # -- selection handling ---------------------------------------------------
     def normalize_key(self, key) -> Tuple[Slices, Tuple[int, ...]]:
-        """Normalise a ``__getitem__`` key into per-dim unit-step slices.
+        """Normalise a ``__getitem__`` key into per-dim positive-step slices.
 
         Returns ``(slices, squeeze_axes)``: integer indices become length-1
-        slices and their axes are recorded for squeezing.  Steps other than 1
-        are rejected (resharding follow-on, see ROADMAP).
+        slices and their axes are recorded for squeezing.  Any positive step
+        is accepted (strided selections); every returned slice has an
+        explicit ``step >= 1`` and a ``stop`` normalised to *last selected
+        index + 1* (``start`` when empty), so downstream chunk math can rely
+        on ``stop - 1`` being a selected point.  Negative steps are rejected.
         """
         if not isinstance(key, tuple):
             key = (key,)
@@ -89,9 +103,14 @@ class ChunkGrid:
         for axis, (k, size) in enumerate(zip(key, self.shape)):
             if isinstance(k, slice):
                 start, stop, step = k.indices(size)
-                if step != 1:
-                    raise IndexError("tensorstore selections require step 1")
-                sel.append(slice(start, max(start, stop)))
+                if step < 1:
+                    raise IndexError(
+                        "tensorstore selections require a positive step "
+                        f"(got {step} on axis {axis}); reversed reads are "
+                        "not supported")
+                count = len(range(start, stop, step))
+                stop = start + (count - 1) * step + 1 if count else start
+                sel.append(slice(start, stop, step))
             else:
                 i = int(k)
                 if i < 0:
@@ -99,17 +118,24 @@ class ChunkGrid:
                 if not 0 <= i < size:
                     raise IndexError(f"index {k} out of bounds for axis "
                                      f"{axis} with size {size}")
-                sel.append(slice(i, i + 1))
+                sel.append(slice(i, i + 1, 1))
                 squeeze.append(axis)
         return tuple(sel), tuple(squeeze)
 
     def selection_shape(self, sel: Slices) -> Tuple[int, ...]:
-        return tuple(s.stop - s.start for s in sel)
+        return tuple(len(range(s.start, s.stop, s.step or 1)) for s in sel)
 
     def intersecting(self, sel: Slices
                      ) -> Iterator[Tuple[Index, Slices, Slices]]:
         """Yield ``(chunk_idx, within_chunk_slices, output_slices)`` for every
-        chunk intersecting ``sel`` — and only those."""
+        chunk holding at least one selected point — and only those.
+
+        With a strided ``sel``, ``within_chunk_slices`` keep the stride
+        (clamped to the chunk's first/last selected point) while
+        ``output_slices`` are the compact unit-step positions of those points
+        in the result — so a step larger than the chunk size simply skips
+        the chunks it strides over.
+        """
         if any(s.stop <= s.start for s in sel):
             return
         per_dim = []
@@ -119,23 +145,34 @@ class ChunkGrid:
         for idx in itertools.product(*per_dim):
             chunk_sel, out_sel = [], []
             for i, s, c, size in zip(idx, sel, self.chunks, self.shape):
+                step = s.step or 1
                 c_lo, c_hi = i * c, min((i + 1) * c, size)
-                lo, hi = max(s.start, c_lo), min(s.stop, c_hi)
-                chunk_sel.append(slice(lo - c_lo, hi - c_lo))
-                out_sel.append(slice(lo - s.start, hi - s.start))
-            yield idx, tuple(chunk_sel), tuple(out_sel)
+                # k-th selected point is start + k*step; clamp to the chunk
+                k0 = max(0, -(-(c_lo - s.start) // step))
+                k1 = (min(s.stop, c_hi) - 1 - s.start) // step
+                if k1 < k0:         # stride stepped over this chunk entirely
+                    break
+                a0, a1 = s.start + k0 * step, s.start + k1 * step
+                chunk_sel.append(slice(a0 - c_lo, a1 - c_lo + 1, step))
+                out_sel.append(slice(k0, k1 + 1, 1))
+            else:
+                yield idx, tuple(chunk_sel), tuple(out_sel)
 
     def write_plan(self, sel: Slices
                    ) -> Iterator[Tuple[Index, Slices, Slices, bool]]:
         """Yield ``(chunk_idx, within_chunk_slices, value_slices, full)`` for
         every chunk ``sel`` touches.
 
-        ``full=True`` means the selection covers the whole (possibly clipped
-        edge) chunk, so a writer can encode the new tile outright;
-        ``full=False`` chunks need read-modify-write to preserve the bytes
-        outside the selection.
+        ``full=True`` means the selection covers *every* element of the
+        (possibly clipped edge) chunk, so a writer can encode the new tile
+        outright; ``full=False`` chunks need read-modify-write to preserve
+        the bytes outside the selection.  A strided selection can only fully
+        cover a chunk dim of size 1 (a step > 1 always leaves gaps), so
+        strided writes are RMW except on such degenerate dims.
         """
         for idx, chunk_sel, val_sel in self.intersecting(sel):
-            full = all(s.start == 0 and s.stop == n
-                       for s, n in zip(chunk_sel, self.chunk_shape(idx)))
+            full = all(
+                s.start == 0 and s.stop == n
+                and len(range(s.start, s.stop, s.step or 1)) == n
+                for s, n in zip(chunk_sel, self.chunk_shape(idx)))
             yield idx, chunk_sel, val_sel, full

@@ -1,6 +1,21 @@
 """Array metadata: the small self-describing object archived next to the
 chunks (the ``.zarray`` analogue).  One metadata object per array, stored
-under the reserved chunk key ``meta``."""
+under the reserved chunk key ``meta``.
+
+Layout *generations* (format v2) are how the FDB's immutability rules and
+re-chunking coexist: the FDB API has no per-object delete (wipe is
+dataset-granular), so a layout change cannot remove the old grid's chunk
+objects.  Instead every layout carries a ``generation`` counter and chunk
+element keys are generation-prefixed (:func:`~.store.chunk_key`) — a
+reshard (or a ``create(on_mismatch="retain")``) writes the new grid's
+chunks under fresh ``g<N+1>.c...`` keys that can never collide with live
+data, then transactionally replaces this metadata object (FDB rule 5) to
+flip readers onto the new grid.  Old-generation chunks are *versioned
+retained*: unreachable through the new metadata, never readable as wrong
+data, reclaimed only by wiping the array's dataset.  Generation-0 metadata
+serialises as format v1 (unprefixed ``c...`` keys), so arrays that never
+resharded stay readable by older code.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -14,7 +29,8 @@ from .grid import ChunkGrid
 #: reserved element-key value for the metadata object
 META_CHUNK_KEY = "meta"
 
-FORMAT_VERSION = 1
+#: v1: unprefixed chunk keys; v2 adds generation-prefixed chunk keys
+FORMAT_VERSION = 2
 
 
 @dataclasses.dataclass(frozen=True)
@@ -23,11 +39,16 @@ class ArrayMeta:
     dtype: str                  # numpy dtype string, e.g. "float32"
     chunks: Tuple[int, ...]
     codec: str = "raw"
-    version: int = FORMAT_VERSION
+    #: layout generation: bumped on every re-layout of the same array slot,
+    #: prefixing the chunk element keys so grids never collide (see module
+    #: docstring); 0 = the original layout (format-v1-compatible)
+    generation: int = 0
 
     def __post_init__(self) -> None:
         np.dtype(self.dtype)    # raises early on junk
         ChunkGrid(self.shape, self.chunks)   # validates rank/positivity
+        if self.generation < 0:
+            raise ValueError(f"negative generation {self.generation}")
 
     @property
     def npdtype(self) -> np.dtype:
@@ -40,15 +61,30 @@ class ArrayMeta:
             n *= s
         return n
 
+    @property
+    def version(self) -> int:
+        """Serialisation format: generation-0 metadata stays v1 so readers
+        predating generations keep working; any resharded layout needs v2
+        (a v1 reader would look for unprefixed chunk keys and fill zeros)."""
+        return 2 if self.generation else 1
+
     def grid(self) -> ChunkGrid:
         return ChunkGrid(self.shape, self.chunks)
 
+    def layout_matches(self, other: "ArrayMeta") -> bool:
+        """True when ``other`` describes the same physical layout — shape,
+        dtype, chunk grid and codec; the *generation* is deliberately not
+        part of the layout (it names an instance of one)."""
+        return (self.shape == other.shape and self.dtype == other.dtype
+                and self.chunks == other.chunks and self.codec == other.codec)
+
     def to_bytes(self) -> bytes:
-        return json.dumps({
-            "shape": list(self.shape), "dtype": self.dtype,
-            "chunks": list(self.chunks), "codec": self.codec,
-            "version": self.version,
-        }, separators=(",", ":")).encode()
+        d = {"shape": list(self.shape), "dtype": self.dtype,
+             "chunks": list(self.chunks), "codec": self.codec,
+             "version": self.version}
+        if self.generation:
+            d["generation"] = self.generation
+        return json.dumps(d, separators=(",", ":")).encode()
 
     @staticmethod
     def from_bytes(raw: bytes) -> "ArrayMeta":
@@ -58,7 +94,7 @@ class ArrayMeta:
                              f"than supported {FORMAT_VERSION}")
         return ArrayMeta(shape=tuple(d["shape"]), dtype=d["dtype"],
                          chunks=tuple(d["chunks"]), codec=d.get("codec", "raw"),
-                         version=d.get("version", 1))
+                         generation=d.get("generation", 0))
 
 
 def auto_chunks(shape: Tuple[int, ...], dtype,

@@ -2,11 +2,14 @@
 pattern wants (many independent object-granular I/Os per request).
 
 An array is split on a :class:`~.grid.ChunkGrid`; every chunk is archived as
-one FDB object whose element key encodes the chunk index (``c<i>.<j>...``),
-and a small :class:`~.meta.ArrayMeta` object rides under the reserved element
-value ``meta``.  Slicing ``arr[10:20, :]`` retrieves only the intersecting
-chunks — in parallel, through the bounded :class:`~.executor.ChunkExecutor` —
-on any of the four backends (daos / rados / posix / s3).
+one FDB object whose element key encodes the chunk index (``c<i>.<j>...``,
+generation-prefixed ``g<N>.c...`` after a reshard), and a small
+:class:`~.meta.ArrayMeta` object rides under the reserved element value
+``meta``.  Slicing ``arr[10:20, :]`` retrieves only the intersecting chunks
+— in parallel, through the bounded :class:`~.executor.ChunkExecutor` — on
+any of the four backends (daos / rados / posix / s3).  Selections may be
+strided (``arr[::4]``): only the chunks holding a selected point are
+touched, on the read and the write path alike.
 
 The store is schema-agnostic: it binds to an existing :class:`repro.core.FDB`
 plus a *base identifier* covering every schema dimension except the chunk
@@ -15,8 +18,8 @@ dimension.  With the dedicated ``tensor`` schema that base is
 the ``shard`` element dim so checkpoint tensors become chunked arrays without
 a second catalogue.
 
-Both data paths plan before they touch bytes — the two halves of the paper's
-object-store/POSIX trade-off:
+All three data paths plan before they touch bytes — the two halves of the
+paper's object-store/POSIX trade-off, plus their composition:
 
 * **Reads** build a :class:`ReadPlan`: every intersecting chunk is resolved
   to its backend handle (catalogue only, no data I/O), and handles over the
@@ -29,21 +32,35 @@ object-store/POSIX trade-off:
   selection touches is resolved to its destination storage unit
   (``FDB.archive_placement``, placement only, no I/O) and chunks landing in
   the same unit — posix chunks appending into one writer's data file — are
-  grouped into ONE batched store-level write (``FDB.archive_batch``), while
+  grouped into batched store-level writes (``FDB.archive_batch``), while
   object-store chunks keep one archive op in flight each.
   ``write_ops()`` on the plan reports the store-level write count, the twin
-  of ``ReadPlan.read_ops()``.  Encoding is batched too: same-shape chunks
-  encode through the codec's single-kernel-launch path
-  (``Codec.encode_batch``), ragged edge chunks fall back per-chunk.  Chunks
-  fully covered by the selection encode from the new values outright;
-  partially covered (edge) chunks do read-modify-write through the bounded
-  executor.  Chunks never written before read as zeros (the Zarr fill-value
-  convention).  A ``flush()`` barrier after the archives preserves FDB
-  visibility rule 3 — and partial writes flush *first* as well, so their
-  RMW fetches see this writer's own earlier unflushed chunks.
+  of ``ReadPlan.read_ops()``.  Encoding is batched (same-shape chunks share
+  one ``Codec.encode_batch`` kernel launch, ragged edge chunks fall back
+  per-chunk) and *staged*: the plan is executed in sub-batches of at most
+  one executor window (``WritePlan.window`` chunks), so peak staged bytes
+  are bounded no matter how large the plan — arrays far larger than memory
+  archive without materialising every encoded tile at once.  Chunks fully
+  covered by the selection encode from the new values outright; partially
+  covered chunks do read-modify-write, with the fetches routed through a
+  whole-chunk :class:`ReadPlan` (:meth:`ReadPlan.for_chunks`) so adjacent
+  posix RMW reads coalesce exactly like normal reads.  Chunks never written
+  before read as zeros (the Zarr fill-value convention).  A ``flush()``
+  barrier after the archives preserves FDB visibility rule 3 — and partial
+  writes flush *first* as well, so their RMW fetches see this writer's own
+  earlier unflushed chunks.
+* **Reshards** (``arr.reshard(new_chunks)``) compose the two: a
+  :class:`~.reshard.ReshardPlan` streams the array onto a new chunk grid —
+  destination chunks in bounded rectangular batches, each batch one
+  coalesced source ``ReadPlan`` and one coalesced destination ``WritePlan``
+  — never materialising the whole array client-side.  The new grid's chunks
+  live under a fresh layout *generation* (see :mod:`.meta`), so the flip is
+  one transactional metadata replace and old-grid chunks are retained
+  versioned, never readable as wrong data.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
@@ -59,16 +76,23 @@ Index = Tuple[int, ...]
 
 
 class LayoutMismatchError(ValueError):
-    """Raised on re-create of an existing array with a different layout."""
+    """Raised on re-create of an existing array with a different layout
+    (unless the caller opted into ``on_mismatch="retain"``, which bumps the
+    layout generation instead — see :meth:`TensorStore.create`)."""
 
 
-def chunk_key(idx: Index) -> str:
-    """Element-key value for a chunk index, e.g. ``c0.3.1``.
+def chunk_key(idx: Index, generation: int = 0) -> str:
+    """Element-key value for a chunk index, e.g. ``c0.3.1`` — prefixed with
+    the layout generation (``g2.c0.3.1``) for resharded layouts, so chunk
+    keys of different grids over one array slot can never collide.
 
     ``.`` as separator: ``/`` is the FDB multi-value expression separator and
-    ``,``/``=`` are taken by the canonical identifier form.
+    ``,``/``=`` are taken by the canonical identifier form.  Generation 0
+    stays unprefixed for compatibility with pre-generation (format v1)
+    arrays.
     """
-    return "c" + ".".join(str(i) for i in idx)
+    key = "c" + ".".join(str(i) for i in idx)
+    return key if generation == 0 else f"g{generation}.{key}"
 
 
 class TensorStore:
@@ -113,16 +137,31 @@ class TensorStore:
 
     def create(self, shape: Sequence[int], dtype,
                chunks: Optional[Sequence[int]] = None,
-               codec: str = "raw") -> "ChunkedArray":
+               codec: str = "raw",
+               on_mismatch: str = "error") -> "ChunkedArray":
         """Archive the metadata object and return the (empty) array.
 
-        Re-creating over an existing array is only a clean transactional
-        replace (FDB rule 5) when the layout is unchanged — every new chunk
-        key then overwrites its predecessor.  A different chunk grid / dtype
-        / codec would leave stale old-grid chunk objects behind (there is no
-        per-object delete in the FDB API), so that case is rejected: wipe
-        the array's dataset first.
+        Re-creating over an existing array with an *unchanged* layout is a
+        clean transactional replace (FDB rule 5): the live generation is
+        kept, so every new chunk key overwrites its predecessor.  A
+        different chunk grid / dtype / codec cannot reuse the old keys —
+        there is no per-object delete in the FDB API, so the old grid's
+        chunk objects cannot be removed.  ``on_mismatch`` picks the policy:
+
+        * ``"error"`` (default): raise :class:`LayoutMismatchError`; wipe
+          the array's dataset first if the old data is expendable (what
+          :meth:`repro.data.ChunkedFieldStore.put_field` does — the *wipe*
+          policy, which reclaims space).
+        * ``"retain"``: bump the layout generation — the new layout's
+          chunks live under fresh generation-prefixed keys
+          (:func:`chunk_key`) and the metadata replace flips readers over;
+          old-generation chunks are retained versioned (unreachable, never
+          readable as wrong data) until the dataset is wiped.  This is the
+          policy :meth:`ChunkedArray.reshard` builds on.
         """
+        if on_mismatch not in ("error", "retain"):
+            raise ValueError(f"on_mismatch must be 'error' or 'retain', "
+                             f"got {on_mismatch!r}")
         get_codec(codec)        # validate early
         shape = tuple(int(s) for s in shape)
         dtype = np.dtype(dtype)
@@ -133,11 +172,19 @@ class TensorStore:
         handle = self.fdb.retrieve(self._ident(META_CHUNK_KEY))
         if handle.length():
             old = ArrayMeta.from_bytes(handle.read())
-            if old != meta:
+            if old.layout_matches(meta):
+                meta = old          # same layout: keep the live generation,
+                # so re-written chunk keys land on (and replace) their
+                # predecessors instead of forking a new namespace
+            elif on_mismatch == "retain":
+                meta = dataclasses.replace(meta,
+                                           generation=old.generation + 1)
+            else:
                 raise LayoutMismatchError(
                     f"array at {self.base} already exists with layout "
                     f"{old} != {meta}; wipe it before re-creating with a "
-                    f"different layout")
+                    f"different layout, or pass on_mismatch='retain' to "
+                    f"version the old chunks out")
         self.fdb.archive(self._ident(META_CHUNK_KEY), meta.to_bytes())
         return ChunkedArray(self, meta)
 
@@ -185,18 +232,28 @@ class ChunkedArray:
 
     def __repr__(self) -> str:
         return (f"ChunkedArray(shape={self.shape}, dtype={self.dtype.name}, "
-                f"chunks={self.chunks}, codec={self.meta.codec})")
+                f"chunks={self.chunks}, codec={self.meta.codec}"
+                + (f", generation={self.meta.generation}"
+                   if self.meta.generation else "") + ")")
+
+    def chunk_ident(self, idx: Index) -> Identifier:
+        """FDB identifier of chunk ``idx`` under this array's live layout
+        generation."""
+        return self.store._ident(chunk_key(idx, self.meta.generation))
 
     # -- write path ------------------------------------------------------------
     def write_plan(self, key, values) -> "WritePlan":
         """Plan a write without moving data — the mirror of
         :meth:`read_plan`: every chunk the selection touches is resolved to
         its destination storage unit and coalescible chunks are grouped
-        into single batched store writes.  Use :meth:`WritePlan.write_ops`
-        to see the store-level write count before (or without) executing.
+        into batched store writes, staged at most one executor window at a
+        time.  Use :meth:`WritePlan.write_ops` to see the store-level write
+        count before (or without) executing.
 
         ``values`` broadcasts against the selection shape (so
-        ``arr[10:20, :] = 0.0`` works).
+        ``arr[10:20, :] = 0.0`` works).  The selection may be strided
+        (``arr[::2] = v``): stride gaps are preserved via read-modify-write
+        of the touched chunks.
         """
         sel, squeeze = self.grid.normalize_key(key)
         sel_shape = self.grid.selection_shape(sel)
@@ -211,8 +268,9 @@ class ChunkedArray:
     def write(self, values, flush: bool = True) -> List[FieldLocation]:
         """Archive every chunk through a whole-array :class:`WritePlan`:
         same-shape chunks encode in one Pallas launch, chunks bound for one
-        storage unit archive as one batched store write.  ``flush=True``
-        commits before returning (FDB visibility rule 3)."""
+        storage unit archive as batched store writes, staged one executor
+        window at a time.  ``flush=True`` commits before returning (FDB
+        visibility rule 3)."""
         values = np.asarray(values)
         if values.shape != self.shape:
             raise ValueError(f"write shape {values.shape} != array shape "
@@ -225,11 +283,13 @@ class ChunkedArray:
         """Chunk-aligned in-place assignment: ``arr[sel] = values``.
 
         Only chunks the selection touches are re-archived — through a
-        :class:`WritePlan`, so coalescible chunks batch into single store
-        writes.  Fully covered chunks are encoded from ``values`` directly;
-        partially covered ones do read-modify-write (fetch, patch,
-        re-archive) through the bounded executor — a chunk never written
-        before patches onto zeros, the Zarr fill-value convention.
+        :class:`WritePlan`, so coalescible chunks batch into store writes.
+        Fully covered chunks are encoded from ``values`` directly;
+        partially covered ones (including every chunk of a strided
+        selection) do read-modify-write — fetch, patch, re-archive — with
+        the fetches coalesced through a whole-chunk :class:`ReadPlan`; a
+        chunk never written before patches onto zeros, the Zarr fill-value
+        convention.
 
         Visibility (FDB rule 3): when RMW is needed and this client has
         unflushed archives, the FDB is flushed *before* fetching, so its own
@@ -245,22 +305,12 @@ class ChunkedArray:
         self.write_at(key, values, flush=True)
 
     # -- read path -------------------------------------------------------------
-    def _fetch_chunk(self, idx: Index) -> np.ndarray:
-        """Decode one whole chunk for read-modify-write (always writable);
-        a chunk never written decodes as zeros (fill-value convention)."""
-        store = self.store
-        handle = store.fdb.retrieve_handle(store._ident(chunk_key(idx)))
-        shape = self.grid.chunk_shape(idx)
-        if handle is None or handle.length() == 0:
-            return np.zeros(shape, self.dtype)
-        chunk = self._codec.decode(handle.read(), shape, self.dtype)
-        return chunk if chunk.flags.writeable else chunk.copy()
-
     def read_plan(self, key, fill_missing: bool = True) -> "ReadPlan":
         """Plan a read without moving data: resolves every intersecting
         chunk to its backend handle and groups coalescible ones.  Use
         :meth:`ReadPlan.read_ops` to see the I/O-op count before (or
-        without) executing.
+        without) executing.  The selection may be strided (``arr[::4]``):
+        only chunks holding a selected point are resolved at all.
 
         ``fill_missing=True`` (default) reads never-written chunks as zeros
         — the Zarr fill-value convention that makes sparsely-populated
@@ -284,31 +334,73 @@ class ChunkedArray:
         key = (slice(None),) * self.grid.ndim
         return self.read_plan(key, fill_missing=fill_missing).execute()
 
+    # -- reshard path ----------------------------------------------------------
+    def reshard_plan(self, new_chunks, codec: Optional[str] = None,
+                     sel=None, window: Optional[int] = None,
+                     fill_missing: bool = True) -> "ReshardPlan":
+        """Plan a re-layout of this array onto a new chunk grid (and
+        optionally a new codec, or a strided sub-selection of the source)
+        without moving data — see :class:`~.reshard.ReshardPlan`.  Use
+        :meth:`~.reshard.ReshardPlan.read_ops` /
+        :meth:`~.reshard.ReshardPlan.write_ops` to see the coalesced I/O-op
+        counts before (or without) executing."""
+        from .reshard import ReshardPlan
+        return ReshardPlan(self, new_chunks, codec=codec, sel=sel,
+                           window=window, fill_missing=fill_missing)
+
+    def reshard(self, new_chunks, codec: Optional[str] = None, sel=None,
+                window: Optional[int] = None, fill_missing: bool = True,
+                flush: bool = True) -> "ChunkedArray":
+        """Rewrite this array onto a new chunk grid — streaming, never
+        materialising the whole array client-side.
+
+        Each bounded batch of destination chunks is read from the source
+        grid through one coalesced :class:`ReadPlan` and archived through
+        one coalesced :class:`WritePlan`; the new grid's chunks live under
+        a fresh layout generation, and a final transactional metadata
+        replace (plus the ``flush=True`` commit barrier) flips readers onto
+        the new grid.  Old-generation chunks are retained versioned —
+        unreachable, reclaimed only by wiping the array's dataset.
+
+        ``sel`` (optional, slices only) reshards a sub-selection — possibly
+        strided, e.g. every other level — so a consumer grid can subsample
+        the producer's; the array's shape becomes the selection's shape.
+        ``codec`` re-encodes (e.g. raw → field16) on the way through.
+        Returns this array, mutated onto the new layout.
+        """
+        self.reshard_plan(new_chunks, codec=codec, sel=sel, window=window,
+                          fill_missing=fill_missing).execute(flush=flush)
+        return self
+
 
 class WritePlan:
     """Materialised write-side I/O plan for one selection of a
     :class:`ChunkedArray` — the mirror of :class:`ReadPlan`.
 
-    Construction resolves every chunk the selection touches to its
-    destination storage unit (:meth:`repro.core.FDB.archive_placement` —
-    placement only, no data I/O) and groups chunks landing in the same unit
-    with :func:`repro.core.group_mergeable`: posix chunks appending into one
-    writer's data file archive as ONE batched store-level write
-    (``FDB.archive_batch`` → a single buffered append), while object-store
-    chunks keep one independent archive op in flight each — the two sides of
-    the paper's object-store/POSIX trade-off, now symmetric with reads.
-    :meth:`write_ops` reports the store-level write count :meth:`execute`
-    will issue.
+    Construction resolves the destination storage unit of every chunk the
+    selection touches (:meth:`repro.core.FDB.archive_placement` — placement
+    only, no data I/O; chunks of one array share their collocation, so one
+    resolve covers the plan) and splits the plan into *stages* of at most
+    one executor window (:attr:`window` chunks, from the executor's
+    ``max_in_flight``).  Within a stage, chunks landing in the same unit —
+    posix chunks appending into one writer's data file — archive as ONE
+    batched store-level write (``FDB.archive_batch`` → a single buffered
+    append), while object-store chunks keep one independent archive op in
+    flight each — the two sides of the paper's object-store/POSIX
+    trade-off, now symmetric with reads.  :meth:`write_ops` reports the
+    store-level write count :meth:`execute` will issue.
 
-    Executing encodes every tile through the codec's *batched* path
-    (:meth:`~.codec.Codec.encode_batch`): all same-shape chunks — the
-    interior of any multi-chunk write — quantise in one Pallas kernel
-    launch (grid over chunks × blocks), ragged edge chunks fall back to
-    per-chunk launches, and the bytes are identical either way.  The cost of
-    batching is that the plan materialises every encoded tile at once
-    (the per-chunk path only ever held the executor window's worth);
-    callers archiving arrays far larger than memory should write in
-    selections, as the checkpointer and field store do per-tensor/field.
+    Staging bounds memory: a stage encodes its tiles (through the codec's
+    batched single-kernel-launch path, :meth:`~.codec.Codec.encode_batch`;
+    ragged edge chunks fall back per-chunk, byte-identical either way),
+    archives them, and releases them before the next stage starts — so peak
+    staged bytes are ~one executor window of encoded chunks regardless of
+    plan size.  The trade-off: a posix plan larger than the window issues
+    one batched write *per stage* instead of one total, still far below
+    one-per-chunk.  Partially covered chunks fetch-and-patch first, with
+    the stage's fetches coalesced through :meth:`ReadPlan.for_chunks` —
+    adjacent posix RMW reads merge into single ranged reads exactly like
+    normal reads.
     """
 
     def __init__(self, array: "ChunkedArray", sel, values: np.ndarray):
@@ -317,17 +409,33 @@ class WritePlan:
         store = array.store
         #: (chunk_idx, within_chunk_slices, value_slices, fully_covered)
         self.tasks = list(array.grid.write_plan(sel))
+        #: staging window: most chunks encoded/held at once (executor's
+        #: in-flight bound, resolved at plan time)
+        self.window = max(1, store.executor.max_in_flight)
         if self.tasks:
             # the chunk dim is an element dim, so every chunk of one array
             # shares (dataset, collocation) — one placement resolve covers
             # the whole plan
             placement = store.fdb.archive_placement(
-                store._ident(chunk_key(self.tasks[0][0])))
-            placements = [placement] * len(self.tasks)
+                array.chunk_ident(self.tasks[0][0]))
+            self._mergeable = placement.mergeable_with(placement)
         else:
-            placements = []
-        #: positions-into-tasks per batched store write
-        self.groups: List[List[int]] = group_mergeable(placements)
+            self._mergeable = False
+        #: consecutive position runs staged (encoded + archived) together
+        self.stages: List[List[int]] = [
+            list(range(lo, min(lo + self.window, len(self.tasks))))
+            for lo in range(0, len(self.tasks), self.window)]
+
+    def _stage_groups(self, stage: List[int]) -> List[List[int]]:
+        """Positions-into-tasks per batched store write within one stage."""
+        if self._mergeable:
+            return [list(stage)]
+        return [[pos] for pos in stage]
+
+    @property
+    def groups(self) -> List[List[int]]:
+        """Positions-into-tasks per batched store write, across stages."""
+        return [g for stage in self.stages for g in self._stage_groups(stage)]
 
     @property
     def n_chunks(self) -> int:
@@ -341,50 +449,57 @@ class WritePlan:
 
     def write_ops(self) -> int:
         """Store-level write operations :meth:`execute` will issue (after
-        coalescing) — the twin of :meth:`ReadPlan.read_ops`."""
-        return len(self.groups)
+        coalescing, one batch per storage unit per stage) — the twin of
+        :meth:`ReadPlan.read_ops`."""
+        return sum(len(self._stage_groups(stage)) for stage in self.stages)
 
     def execute(self, flush: bool = True) -> List[FieldLocation]:
-        """Encode (batched), archive (one submission per group), and — with
-        ``flush=True`` — commit (FDB visibility rule 3).  Returns per-chunk
+        """Stage by stage: fetch-and-patch (coalesced), encode (batched),
+        archive (one submission per group), release — and, with
+        ``flush=True``, commit (FDB visibility rule 3).  Returns per-chunk
         :class:`FieldLocation`\\ s in plan order."""
         if not self.tasks:
             return []
         arr, values = self.array, self.values
         store, codec = arr.store, arr._codec
         fdb = store.fdb
-        rmw = [pos for pos, (_i, _c, _v, full) in enumerate(self.tasks)
-               if not full]
-        if rmw and fdb.dirty:
+        if self.rmw_chunks and fdb.dirty:
             fdb.flush()         # make own unflushed chunks RMW-visible
-        tiles: List[Optional[np.ndarray]] = [None] * len(self.tasks)
-        for pos, (_idx, _chunk_sel, val_sel, full) in enumerate(self.tasks):
-            if full:
-                tiles[pos] = values[val_sel]
-
-        def fetch_and_patch(pos: int) -> None:
-            idx, chunk_sel, val_sel, _full = self.tasks[pos]
-            tile = arr._fetch_chunk(idx)
-            tile[chunk_sel] = values[val_sel]
-            tiles[pos] = tile
-
-        if rmw:                 # RMW fetches overlap through the executor
-            store.executor.map_ordered(fetch_and_patch, rmw)
-        blobs = codec.encode_batch(tiles)
-
         locs: List[Optional[FieldLocation]] = [None] * len(self.tasks)
+        for stage in self.stages:
+            tiles: List[Optional[np.ndarray]] = [None] * len(stage)
+            rmw = [(k, pos) for k, pos in enumerate(stage)
+                   if not self.tasks[pos][3]]
+            if rmw:             # coalesced whole-chunk fetches, then patch
+                fetch = ReadPlan.for_chunks(
+                    arr, [self.tasks[pos][0] for _k, pos in rmw])
+                for (k, pos), tile in zip(rmw, fetch.read_chunks()):
+                    _idx, chunk_sel, val_sel, _full = self.tasks[pos]
+                    tile[chunk_sel] = values[val_sel]
+                    tiles[k] = tile
+            for k, pos in enumerate(stage):
+                _idx, _chunk_sel, val_sel, full = self.tasks[pos]
+                if full:
+                    tiles[k] = values[val_sel]
+            blobs = codec.encode_batch(tiles)
+            idents = [arr.chunk_ident(self.tasks[pos][0]) for pos in stage]
 
-        def put(group: List[int]) -> List[FieldLocation]:
-            # one store-level submission per group: a posix group lands as
-            # a single buffered append; object groups are singletons
-            return fdb.archive_batch(
-                [(store._ident(chunk_key(self.tasks[pos][0])), blobs[pos])
-                 for pos in group])
+            def put(ks: List[int]) -> List[FieldLocation]:
+                # one store-level submission per group: a posix group lands
+                # as a single buffered append; object groups are singletons
+                return fdb.archive_batch(
+                    [(idents[k], blobs[k]) for k in ks])
 
-        batches = store.executor.map_ordered(put, self.groups)
-        for group, batch_locs in zip(self.groups, batches):
-            for pos, loc in zip(group, batch_locs):
-                locs[pos] = loc
+            # the one grouping decision lives in _stage_groups — write_ops()
+            # accounting and execution must never diverge (check.sh asserts
+            # on the plan's claim); stages are contiguous position runs, so
+            # stage-local index = position - stage[0]
+            kgroups = [[pos - stage[0] for pos in group]
+                       for group in self._stage_groups(stage)]
+            batches = store.executor.map_ordered(put, kgroups)
+            for ks, batch_locs in zip(kgroups, batches):
+                for k, loc in zip(ks, batch_locs):
+                    locs[stage[k]] = loc
         if flush:
             fdb.flush()
         return locs             # type: ignore[return-value]
@@ -401,6 +516,12 @@ class ReadPlan:
     optimisation — while object-store chunks stay one independent op each,
     which is what those backends want kept in flight.  Executing scatters
     decoded chunks into the output array, one executor task per group.
+
+    Two consumption modes share the resolved batches: :meth:`execute`
+    assembles the selection into one output array (strided selections
+    scatter through their strided within-chunk slices), while
+    :meth:`read_chunks` — on plans built by :meth:`for_chunks` — returns
+    whole decoded chunks, the write path's coalesced RMW fetch.
     """
 
     def __init__(self, array: "ChunkedArray", sel, squeeze,
@@ -408,15 +529,39 @@ class ReadPlan:
         self.array = array
         self.sel = sel
         self.squeeze = squeeze
-        store = array.store
         self.tasks = list(array.grid.intersecting(sel))
+        self._resolve(fill_missing)
+
+    @classmethod
+    def for_chunks(cls, array: "ChunkedArray", indices: Sequence[Index],
+                   fill_missing: bool = True) -> "ReadPlan":
+        """Plan whole-chunk fetches for an explicit chunk-index list — the
+        write path's RMW hook (:meth:`read_chunks` consumes it): the listed
+        chunks resolve and coalesce exactly like a selection's, so adjacent
+        posix RMW fetches merge into single ranged reads."""
+        plan = cls.__new__(cls)
+        plan.array = array
+        plan.sel = None
+        plan.squeeze = ()
+        plan.tasks = [
+            (tuple(idx),
+             tuple(slice(0, n, 1) for n in array.grid.chunk_shape(idx)),
+             None)
+            for idx in indices]
+        plan._resolve(fill_missing)
+        return plan
+
+    def _resolve(self, fill_missing: bool) -> None:
+        """Resolve every task's chunk to its backend handle and group
+        coalescible handles into I/O batches (no data I/O)."""
+        store = self.array.store
         present: List[int] = []
         handles = []
         #: positions of chunks never written — they read as zeros (the same
         #: fill-value convention the write path patches onto), no I/O
         self.missing: List[int] = []
         for pos, (idx, _chunk_sel, _out_sel) in enumerate(self.tasks):
-            h = store.fdb.retrieve_handle(store._ident(chunk_key(idx)))
+            h = store.fdb.retrieve_handle(self.array.chunk_ident(idx))
             if h is None or h.length() == 0:
                 if not fill_missing:
                     raise KeyError(
@@ -439,7 +584,32 @@ class ReadPlan:
         """I/O operations :meth:`execute` will issue (after coalescing)."""
         return sum(mh.read_ops() for _g, mh in self.batches)
 
+    def read_chunks(self) -> List[np.ndarray]:
+        """Decode every planned chunk *whole*, in task order — always
+        writable, missing chunks as zeros (fill-value convention).  One
+        coalesced read + one batched decode per I/O batch, through the
+        bounded executor — the write path's RMW fetch."""
+        arr = self.array
+        grid, codec = arr.grid, arr._codec
+        out: List[Optional[np.ndarray]] = [None] * len(self.tasks)
+        for pos in self.missing:
+            out[pos] = np.zeros(grid.chunk_shape(self.tasks[pos][0]),
+                                arr.dtype)
+
+        def run_batch(positions: List[int], mh: MultiHandle) -> None:
+            shapes = [grid.chunk_shape(self.tasks[pos][0])
+                      for pos in positions]
+            chunks = codec.decode_batch(mh.read_parts(), shapes, arr.dtype)
+            for pos, chunk in zip(positions, chunks):
+                out[pos] = chunk if chunk.flags.writeable else chunk.copy()
+
+        arr.store.executor.map_ordered(lambda b: run_batch(*b), self.batches)
+        return out              # type: ignore[return-value]
+
     def execute(self) -> np.ndarray:
+        if self.sel is None:
+            raise TypeError("whole-chunk plan (for_chunks) has no selection "
+                            "to assemble; use read_chunks()")
         arr = self.array
         grid, codec = arr.grid, arr._codec
         out = np.empty(grid.selection_shape(self.sel), arr.dtype)

@@ -34,6 +34,17 @@ the ``field8`` per-chunk codec instead of a post-hoc buffer hack.
 ``chunked=False`` keeps the legacy one-blob-per-shard layout (its shard
 blobs now batch through ``FDB.archive_many``), and restore transparently
 falls back to it for checkpoints written by older runs.
+
+Topology changes: a run restarted with a different ``n_shards`` can restore
+a checkpoint saved under the old banding as-is (``restore()`` reads whole
+tensors from whatever grid they carry), and ``reshard_tensor()`` /
+``reshard_step()`` re-band the saved tensors onto the new topology as a
+streaming reshard (bounded batches of coalesced reads + writes, old-banding
+chunks retained versioned) so sharded partial reads line up again.  A
+*re-save* of a step under a new banding bumps the tensor's layout
+generation (``create(on_mismatch="retain")``) instead of failing — new-grid
+chunks live under fresh generation-prefixed keys, never colliding with the
+old grid's.
 """
 from __future__ import annotations
 
@@ -48,8 +59,7 @@ import numpy as np
 
 from repro.core import FDB, FDBConfig, Identifier
 from repro.core.schema import CHECKPOINT_SCHEMA
-from repro.tensorstore import (ChunkedArray, LayoutMismatchError,
-                               TensorStore, auto_chunks)
+from repro.tensorstore import ChunkedArray, TensorStore, auto_chunks
 
 
 def _tensor_name(path) -> str:
@@ -111,13 +121,13 @@ class FDBCheckpointer:
         return arr.dtype in (np.float32, np.float16) and arr.ndim >= 2 \
             and arr.size >= 1024
 
-    def _tensor_chunks(self, arr: np.ndarray):
+    def _tensor_chunks(self, shape, dtype):
         """n_shards > 1 splits along axis 0 (one chunk row-band per shard);
         otherwise ~1 MiB auto chunks."""
-        if self.n_shards > 1 and arr.ndim >= 1 and arr.shape[0] > 1:
-            first = -(-arr.shape[0] // self.n_shards)
-            return (first,) + arr.shape[1:]
-        return auto_chunks(arr.shape, arr.dtype)
+        if self.n_shards > 1 and len(shape) >= 1 and shape[0] > 1:
+            first = -(-shape[0] // self.n_shards)
+            return (first,) + tuple(shape[1:])
+        return auto_chunks(tuple(shape), dtype)
 
     def _archive_tree(self, kind: str, step: int, tree) -> None:
         flat = jax.tree_util.tree_flatten_with_path(tree)[0]
@@ -127,23 +137,16 @@ class FDBCheckpointer:
                 codec = "field8" if self.compress and self._compressible(arr) \
                     else "raw"
                 ts = self._tensor_store(kind, step, _tensor_name(path))
-                try:
-                    chunked = ts.create(arr.shape, arr.dtype,
-                                        chunks=self._tensor_chunks(arr),
-                                        codec=codec)
-                except LayoutMismatchError:
-                    # layout changed across re-saves of this step (e.g. a
-                    # different n_shards): tombstone the old metadata and
-                    # re-create — old-grid chunks beyond the new grid stay
-                    # behind as unreachable garbage, never as wrong reads
-                    self.fdb.archive(
-                        Identifier({**self._dataset(kind, step),
-                                    "host": self.host,
-                                    "tensor": _tensor_name(path),
-                                    "shard": "meta"}), b"")
-                    chunked = ts.create(arr.shape, arr.dtype,
-                                        chunks=self._tensor_chunks(arr),
-                                        codec=codec)
+                # on_mismatch="retain": a layout change across re-saves of
+                # this step (e.g. a different n_shards) bumps the layout
+                # generation — the new grid's chunks live under fresh
+                # generation-prefixed keys and the metadata replace flips
+                # readers over; old-grid chunks stay behind as versioned,
+                # unreachable garbage, never as wrong reads
+                chunked = ts.create(arr.shape, arr.dtype,
+                                    chunks=self._tensor_chunks(arr.shape,
+                                                               arr.dtype),
+                                    codec=codec, on_mismatch="retain")
                 # the step-level flush() in _do_save is the commit barrier
                 chunked.write(arr, flush=False)
                 continue
@@ -281,6 +284,37 @@ class FDBCheckpointer:
         arr = self.open_tensor(step, name, kind)
         arr.write_at(selection, values, flush=True)
         return arr
+
+    def reshard_tensor(self, step: int, name: str, kind: str = "params",
+                       chunks=None) -> ChunkedArray:
+        """Re-chunk one saved tensor onto this checkpointer's topology —
+        the restore-side half of a topology change: a run restarted with a
+        different ``n_shards`` (or host count) reshards the tensors it owns
+        onto its own shard banding before sharded partial reads
+        (:meth:`open_tensor` row-band slices) line up again.
+
+        Streams through :meth:`repro.tensorstore.ChunkedArray.reshard` —
+        bounded batches of coalesced reads + writes, never the whole tensor
+        client-side; the old banding's chunks are retained versioned under
+        the previous layout generation.  ``chunks`` overrides the target
+        grid (default: this checkpointer's ``_tensor_chunks`` banding).
+        Requires a chunked checkpoint (the default layout).
+        """
+        arr = self.open_tensor(step, name, kind)
+        if chunks is None:
+            chunks = self._tensor_chunks(arr.shape, arr.dtype)
+        return arr.reshard(chunks, flush=True)
+
+    def reshard_step(self, step: int, template, kind: str = "params"
+                     ) -> None:
+        """Reshard every tensor of a saved step onto this checkpointer's
+        topology (see :meth:`reshard_tensor`): restore onto a different
+        chunking than the checkpoint was saved with, without a full
+        client-side rewrite.  ``template`` names the tensors (any pytree
+        shaped like the saved state)."""
+        flat = jax.tree_util.tree_flatten_with_path(template)[0]
+        for path, _leaf in flat:
+            self.reshard_tensor(step, _tensor_name(path), kind)
 
     def _restore_tensor(self, step: int, kind: str, name: str,
                         ref: np.ndarray) -> np.ndarray:

@@ -635,7 +635,7 @@ def test_grid_empty_selection_and_negative_indices():
     assert list(g.intersecting(sel)) == []
     # negative integer indices resolve from the end and record squeezes
     sel, squeeze = g.normalize_key((-1, -7))
-    assert sel == (slice(8, 9), slice(0, 1)) and squeeze == (0, 1)
+    assert sel == (slice(8, 9, 1), slice(0, 1, 1)) and squeeze == (0, 1)
     with pytest.raises(IndexError):
         g.normalize_key((-10, 0))
     # reversed slices clamp to empty rather than going negative
@@ -665,8 +665,8 @@ def test_grid_write_plan_full_vs_partial():
     # a clipped edge chunk covered to the array boundary counts as full
     sel, _ = g.normalize_key((slice(32, 37), slice(48, 53)))
     assert list(g.write_plan(sel)) == [
-        ((2, 3), (slice(0, 5), slice(0, 5)), (slice(0, 5), slice(0, 5)),
-         True)]
+        ((2, 3), (slice(0, 5, 1), slice(0, 5, 1)),
+         (slice(0, 5, 1), slice(0, 5, 1)), True)]
 
 
 def test_store_zero_length_dim_roundtrip(tmp_path):
@@ -688,8 +688,10 @@ def test_indexing_edge_cases(tmp_path):
     np.testing.assert_array_equal(arr[-2, 1:], x[-2, 1:])    # negative index
     np.testing.assert_array_equal(arr[:, -3:, 4], x[:, -3:, 4])
     assert arr[2:2].size == 0                                # empty selection
+    np.testing.assert_array_equal(arr[::2], x[::2])          # strided reads
+    np.testing.assert_array_equal(arr[1::3, :, 4], x[1::3, :, 4])
     with pytest.raises(IndexError):
-        arr[::2]                                             # steps unsupported
+        arr[::-1]                                            # negative steps
     with pytest.raises(IndexError):
         arr[0, 0, 0, 0]
     fdb.close()
@@ -985,6 +987,455 @@ def test_lustre_sim_keyed_on_stripe_geometry(tmp_path):
     assert a.store.sim is c.store.sim     # same geometry still shares
     assert a.store.sim.stripe_count == 1 and b.store.sim.stripe_count == 8
     a.close(), b.close(), c.close()
+
+
+# ---------------------------------------------------------------------------
+# strided selections (read + write paths)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_strided_read_roundtrip(backend, tmp_path):
+    """Positive-step selections match numpy on every backend, including
+    steps larger than the chunk and offset starts."""
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.random.default_rng(60).normal(size=(37, 53)).astype(np.float32)
+    ts.save(x, chunks=(16, 16))
+    arr = ts.open()
+    for sel in [(slice(None, None, 2),),
+                (slice(1, 30, 3), slice(0, None, 4)),
+                (slice(None, None, 17), slice(5, None, 23)),
+                (slice(0, 37, 16), slice(52, 53, 7)),
+                (2, slice(1, None, 5))]:
+        np.testing.assert_array_equal(arr[sel], x[sel], err_msg=str(sel))
+    fdb.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_strided_write_roundtrip(backend, tmp_path):
+    """Strided assignment preserves the stride gaps (RMW) on every
+    backend."""
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.random.default_rng(61).normal(size=(37, 53)).astype(np.float32)
+    ts.save(x, chunks=(16, 16))
+    arr = ts.open()
+    v = np.random.default_rng(62).normal(
+        size=x[2::5, 1::7].shape).astype(np.float32)
+    arr[2::5, 1::7] = v
+    x[2::5, 1::7] = v
+    np.testing.assert_array_equal(arr.read(), x)
+    arr[::2] = 0.0                       # broadcast over a strided selection
+    x[::2] = 0.0
+    np.testing.assert_array_equal(arr.read(), x)
+    fdb.close()
+
+
+def test_strided_read_skips_strided_over_chunks(tmp_path):
+    """A step larger than the chunk touches only the chunks holding a
+    selected point — observed via planned chunk count AND the meter."""
+    fdb, ts = make_store("daos", tmp_path)
+    x = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
+    ts.save(x, chunks=(16, 16))          # 4 x 4 chunk grid
+    arr = ts.open()
+    plan = arr.read_plan((slice(None, None, 32), slice(None, None, 32)))
+    assert plan.n_chunks == 4            # rows 0/32 x cols 0/32 -> 4 chunks
+    before = GLOBAL_METER.snapshot()
+    np.testing.assert_array_equal(plan.execute(), x[::32, ::32])
+    reads = _data_reads(GLOBAL_METER.snapshot()[len(before):])
+    assert len(reads) == 4
+    # strided writes classify as RMW (stride gaps must be preserved)
+    wplan = arr.write_plan((slice(None, None, 2), slice(None)),
+                           np.zeros((32, 64), np.float32))
+    assert wplan.n_chunks == 16 and wplan.rmw_chunks == 16
+    fdb.close()
+
+
+def test_grid_strided_math():
+    g = ChunkGrid((37, 53), (16, 16))
+    sel, squeeze = g.normalize_key((slice(None, None, 5), slice(1, 50, 9)))
+    assert squeeze == ()
+    assert sel[0] == slice(0, 36, 5)     # stop normalised to last + 1
+    assert sel[1] == slice(1, 47, 9)
+    assert g.selection_shape(sel) == (8, 6)
+    hits = list(g.intersecting(sel))
+    # every selected point lands in exactly one (chunk, out) slot
+    seen = np.zeros((8, 6), bool)
+    for idx, chunk_sel, out_sel in hits:
+        block = np.zeros(g.chunk_shape(idx), bool)
+        block[chunk_sel] = True
+        assert block.sum() == (out_sel[0].stop - out_sel[0].start) * \
+            (out_sel[1].stop - out_sel[1].start)
+        assert not seen[out_sel].any()
+        seen[out_sel] = True
+    assert seen.all()
+    # a chunk the stride steps over entirely is not visited
+    g2 = ChunkGrid((64,), (8,))
+    idxs = [idx for idx, _c, _o in g2.intersecting(
+        g2.normalize_key((slice(0, None, 24),))[0])]
+    assert idxs == [(0,), (3,), (6,)]    # points 0, 24, 48
+    # full coverage requires step 1 unless the chunk dim is size 1
+    sel, _ = g2.normalize_key((slice(None, None, 2),))
+    assert all(not full for *_x, full in g2.write_plan(sel))
+    g3 = ChunkGrid((4, 1), (2, 1))
+    sel, _ = g3.normalize_key((slice(None), slice(None, None, 3)))
+    assert all(full for *_x, full in g3.write_plan(sel))
+    with pytest.raises(IndexError, match="positive step"):
+        g.normalize_key((slice(None, None, -1),))
+
+
+# ---------------------------------------------------------------------------
+# RMW fetch coalescing + window-bounded write staging
+# ---------------------------------------------------------------------------
+
+def test_rmw_fetches_coalesce_on_posix(tmp_path):
+    """Partial-write RMW fetches route through a whole-chunk ReadPlan:
+    adjacent posix chunks fetch as ONE ranged read, not one per chunk."""
+    from repro.tensorstore import ReadPlan
+    fdb, ts = make_store("posix", tmp_path)
+    v = np.arange(64, dtype=np.float32)
+    ts.save(v, chunks=(8,))              # 8 adjacent chunks, one file
+    arr = ts.open()
+    fetch = ReadPlan.for_chunks(arr, [(i,) for i in range(8)])
+    assert fetch.read_ops() == 1         # all eight coalesce
+    chunks = fetch.read_chunks()
+    np.testing.assert_array_equal(np.concatenate(chunks), v)
+    assert all(c.flags.writeable for c in chunks)
+    # end to end: a strided write (all chunks partial) moves the fetch
+    # bytes through the meter as coalesced reads
+    before = GLOBAL_METER.snapshot()
+    arr[::2] = -1.0
+    reads = _data_reads(GLOBAL_METER.snapshot()[len(before):])
+    assert sum(op.nbytes for op in reads) == v.nbytes   # fetched once
+    v[::2] = -1.0
+    np.testing.assert_array_equal(arr.read(), v)
+    fdb.close()
+
+
+def test_read_plan_for_chunks_missing_fill(tmp_path):
+    from repro.tensorstore import ReadPlan
+    fdb, ts = make_store("daos", tmp_path)
+    arr = ts.create((16,), np.float32, chunks=(4,))
+    arr[0:4] = 7.0                       # only chunk 0 exists
+    chunks = ReadPlan.for_chunks(arr, [(0,), (2,)]).read_chunks()
+    np.testing.assert_array_equal(chunks[0], np.full(4, 7.0, np.float32))
+    np.testing.assert_array_equal(chunks[1], np.zeros(4, np.float32))
+    with pytest.raises(KeyError, match="missing chunk"):
+        ReadPlan.for_chunks(arr, [(2,)], fill_missing=False)
+    with pytest.raises(TypeError, match="read_chunks"):
+        ReadPlan.for_chunks(arr, [(0,)]).execute()
+    fdb.close()
+
+
+def test_write_plan_staged_by_executor_window(tmp_path):
+    """A plan larger than the executor window stages its encodes: one
+    batched posix write per stage (write_ops = ceil(chunks/window)), never
+    the whole plan's tiles at once."""
+    from repro.tensorstore import ChunkExecutor
+    fdb = FDB(FDBConfig(backend="posix", schema="tensor",
+                        root=str(tmp_path / "fdb")))
+    ex = ChunkExecutor(max_workers=2, max_in_flight=2)
+    ts = TensorStore(fdb, {"store": "s", "array": "a", "writer": "w0"},
+                     executor=ex)
+    v = np.arange(64, dtype=np.float32)
+    arr = ts.create(v.shape, v.dtype, chunks=(8,))    # 8 chunks, window 2
+    plan = arr.write_plan((slice(None),), v)
+    assert plan.window == 2
+    assert [len(s) for s in plan.stages] == [2, 2, 2, 2]
+    assert plan.write_ops() == 4 < plan.n_chunks
+    locs = plan.execute()
+    offs = [loc.offset for loc in locs]
+    assert offs == sorted(offs)          # stages append in plan order
+    np.testing.assert_array_equal(arr.read(), v)
+    assert arr.read_plan((slice(None),)).read_ops() == 1
+    ex.shutdown()
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# resharding (ReshardPlan: plan-composed re-layout)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_reshard_byte_equality_roundtrip(backend, tmp_path):
+    """Reshard must produce byte-identical data on the new grid vs a
+    client-side reference rewrite — per chunk object, not just per read."""
+    from repro.tensorstore import chunk_key, get_codec
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.random.default_rng(70).normal(size=(37, 53)).astype(np.float32)
+    ts.save(x, chunks=(16, 16))
+    arr = ts.open()
+    arr.reshard((8, 32))
+    assert arr.chunks == (8, 32) and arr.meta.generation == 1
+    np.testing.assert_array_equal(arr.read(fill_missing=False), x)
+    # a fresh open sees the new layout and identical data
+    arr2 = ts.open()
+    assert arr2.chunks == (8, 32) and arr2.meta.generation == 1
+    np.testing.assert_array_equal(arr2.read(), x)
+    # chunk-object bytes == the reference client-side rewrite's encodes
+    codec = get_codec("raw")
+    for idx in arr2.grid.all_indices():
+        got = fdb.retrieve(arr2.chunk_ident(idx)).read()
+        assert got == codec.encode(x[arr2.grid.chunk_slices(idx)]), idx
+    fdb.close()
+
+
+def test_reshard_posix_ops_below_naive(tmp_path):
+    """Acceptance: reshard read/write op counts on posix stay strictly
+    below the naive one-op-per-chunk rewrite, on the plan AND the meter."""
+    fdb, ts = make_store("posix", tmp_path)
+    x = np.random.default_rng(71).normal(size=(64, 64)).astype(np.float32)
+    ts.save(x, chunks=(16, 16))          # 16 source chunks
+    arr = ts.open()
+    plan = arr.reshard_plan((8, 64))     # 8 dest chunks
+    assert plan.read_ops() < plan.src_chunk_fetches()
+    assert plan.write_ops() < plan.n_dest_chunks
+    plan.execute()
+    assert plan.read_ops_executed == plan.read_ops()
+    assert plan.write_ops_executed == plan.write_ops()
+    np.testing.assert_array_equal(arr.read(), x)
+    fdb.close()
+
+
+def test_reshard_object_backends_stay_object_granular(tmp_path):
+    fdb, ts = make_store("daos", tmp_path)
+    x = np.zeros((64,), np.float32)
+    ts.save(x, chunks=(8,))
+    plan = ts.open().reshard_plan((16,))
+    assert plan.write_ops() == plan.n_dest_chunks == 4
+    assert plan.read_ops() == plan.src_chunk_fetches() == 8
+    fdb.close()
+
+
+@pytest.mark.parametrize("backend", ["posix", "rados"])
+def test_reshard_strided_subsample(backend, tmp_path):
+    """sel= reshards a strided sub-selection — the consumer-subsampled-grid
+    pattern: shape becomes the selection's shape."""
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.random.default_rng(72).normal(size=(40, 60)).astype(np.float32)
+    ts.save(x, chunks=(16, 16))
+    arr = ts.open()
+    arr.reshard((10, 10), sel=(slice(0, None, 2), slice(1, None, 3)))
+    ref = x[::2, 1::3]
+    assert arr.shape == ref.shape
+    np.testing.assert_array_equal(arr.read(fill_missing=False), ref)
+    np.testing.assert_array_equal(ts.open().read(), ref)
+    with pytest.raises(ValueError, match="slices"):
+        arr.reshard_plan((5, 5), sel=(0, slice(None)))
+    fdb.close()
+
+
+def test_reshard_bounded_staging(tmp_path):
+    """The streaming property: a small window splits the reshard into many
+    batches and peak staged bytes stay within one window of dest chunks."""
+    from repro.tensorstore import chunk_rectangles
+    fdb, ts = make_store("posix", tmp_path)
+    x = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
+    ts.save(x, chunks=(8, 8))
+    arr = ts.open()
+    plan = arr.reshard_plan((16, 16), window=2)
+    assert plan.n_batches == 8           # 16 dest chunks / window 2
+    plan.execute()
+    assert plan.peak_staged_bytes <= 2 * 16 * 16 * 4
+    np.testing.assert_array_equal(arr.read(), x)
+    # rectangle splitting covers every chunk exactly once
+    rects = list(chunk_rectangles((3, 4, 5), 7))
+    cover = np.zeros((3, 4, 5), int)
+    for rect in rects:
+        assert np.prod([hi - lo for lo, hi in rect]) <= 7
+        cover[tuple(slice(lo, hi) for lo, hi in rect)] += 1
+    assert (cover == 1).all()
+    assert list(chunk_rectangles((), 4)) == [()]
+    fdb.close()
+
+
+def test_reshard_flush_barrier_and_crash_safety(tmp_path):
+    """Rule 3 through composition: a second client sees the OLD layout
+    until the resharding writer flushes — a reshard interrupted before its
+    commit barrier leaves the old layout fully intact."""
+    root = str(tmp_path / "fdb")
+    fdb, ts = make_store("posix", tmp_path)
+    x = np.arange(64, dtype=np.float32)
+    ts.save(x, chunks=(8,))
+    arr = ts.open()
+    arr.reshard((16,), flush=False)      # archived, not yet committed
+    reader = FDB(FDBConfig(backend="posix", schema="tensor", root=root))
+    rts = TensorStore(reader, {"store": "s", "array": "a", "writer": "w0"})
+    reader.catalogue.refresh()
+    old = rts.open()
+    assert old.chunks == (8,) and old.meta.generation == 0
+    np.testing.assert_array_equal(old.read(), x)
+    fdb.flush()                          # the commit barrier
+    reader.catalogue.refresh()
+    new = rts.open()
+    assert new.chunks == (16,) and new.meta.generation == 1
+    np.testing.assert_array_equal(new.read(), x)
+    reader.close()
+    fdb.close()
+
+
+def test_reshard_noop_and_codec_change(tmp_path):
+    fdb, ts = make_store("daos", tmp_path)
+    x = np.random.default_rng(73).normal(size=(256, 128)).astype(np.float32)
+    ts.save(x, chunks=(128, 128))
+    arr = ts.open()
+    plan = arr.reshard_plan((128, 128))  # identical layout: nothing to move
+    assert plan.noop and plan.n_batches == 0
+    plan.execute()
+    assert arr.meta.generation == 0
+    # codec change forces a real rewrite even on the same grid
+    arr.reshard((128, 128), codec="field16")
+    assert arr.meta.codec == "field16" and arr.meta.generation == 1
+    bound = (x.max() - x.min()) / 65535 * 0.51 + 1e-6
+    assert np.abs(arr.read() - x).max() <= bound
+    fdb.close()
+
+
+def test_create_on_mismatch_retain_bumps_generation(tmp_path):
+    """The versioned-retain policy: a layout change under
+    on_mismatch='retain' forks a fresh generation instead of raising, and
+    old-generation chunks can never shadow the new grid."""
+    from repro.tensorstore import LayoutMismatchError
+    fdb, ts = make_store("daos", tmp_path)
+    ts.save(np.full((8, 8), 3.0, np.float32), chunks=(2, 2))
+    with pytest.raises(LayoutMismatchError):
+        ts.create((8, 8), np.float32, chunks=(4, 4))
+    arr = ts.create((8, 8), np.float32, chunks=(4, 4), on_mismatch="retain")
+    assert arr.meta.generation == 1
+    # the new generation starts empty — the old grid's (2,2) chunks (which
+    # share unprefixed indices like c0.0) must not leak through
+    np.testing.assert_array_equal(arr.read(), np.zeros((8, 8), np.float32))
+    arr.write(np.ones((8, 8), np.float32))
+    np.testing.assert_array_equal(ts.open().read(),
+                                  np.ones((8, 8), np.float32))
+    assert ts.open().meta.generation == 1
+    # unchanged layout keeps the live generation (replace semantics)
+    again = ts.create((8, 8), np.float32, chunks=(4, 4))
+    assert again.meta.generation == 1
+    with pytest.raises(ValueError, match="on_mismatch"):
+        ts.create((8, 8), np.float32, chunks=(4, 4), on_mismatch="wipe")
+    fdb.close()
+
+
+def test_meta_generation_format_versioning():
+    """Generation-0 metadata stays format v1 (readable by pre-generation
+    code); resharded layouts serialise as v2."""
+    import json
+    from repro.tensorstore import ArrayMeta
+    m0 = ArrayMeta(shape=(8,), dtype="float32", chunks=(4,))
+    d0 = json.loads(m0.to_bytes().decode())
+    assert d0["version"] == 1 and "generation" not in d0
+    assert ArrayMeta.from_bytes(m0.to_bytes()) == m0
+    m2 = ArrayMeta(shape=(8,), dtype="float32", chunks=(4,), generation=2)
+    d2 = json.loads(m2.to_bytes().decode())
+    assert d2["version"] == 2 and d2["generation"] == 2
+    assert ArrayMeta.from_bytes(m2.to_bytes()) == m2
+    assert m0.layout_matches(m2)
+    with pytest.raises(ValueError, match="newer"):
+        ArrayMeta.from_bytes(json.dumps({
+            "shape": [8], "dtype": "float32", "chunks": [4],
+            "version": 3}).encode())
+
+
+# ---------------------------------------------------------------------------
+# reshard through the facades (pipeline + checkpoint)
+# ---------------------------------------------------------------------------
+
+def test_field_store_reshard(tmp_path):
+    """Producer grid -> consumer grid through the pipeline facade, with
+    coalesced ops and immediate consumer visibility."""
+    from repro.data import ChunkedFieldStore
+    fs = ChunkedFieldStore("nwp-rs", FDBConfig(backend="posix",
+                                               root=str(tmp_path / "fdb")),
+                           chunks=(32, 32))
+    field = np.random.default_rng(80).normal(size=(96, 96)
+                                             ).astype(np.float32)
+    fs.put_field("t2m", field)
+    fs.commit()
+    arr = fs.reshard("t2m", (96, 16))    # row-major -> column bands
+    assert arr.chunks == (96, 16)
+    np.testing.assert_array_equal(fs.read_window("t2m"), field)
+    # strided subsample on the way through (every other row)
+    fs.reshard("t2m", (48, 48), slice(0, None, 2))
+    np.testing.assert_array_equal(fs.read_window("t2m"), field[::2])
+    # strided window reads/writes through the facade
+    np.testing.assert_array_equal(
+        fs.read_window("t2m", slice(0, None, 3), slice(1, 90, 5)),
+        field[::2][::3, 1:90:5])
+    fs.write_window("t2m", 0.0, slice(0, None, 2))
+    fs.commit()                          # rule 3: visibility needs the flush
+    want = field[::2].copy()
+    want[::2] = 0.0
+    np.testing.assert_array_equal(fs.read_window("t2m"), want)
+    fs.close()
+
+
+def test_field_store_consumer_refresh_after_reshard(tmp_path):
+    """A consumer store that cached its open keeps the old generation
+    (versioned retain keeps it readable) until open_field(refresh=True)
+    picks up the producer's re-layout."""
+    from repro.data import ChunkedFieldStore
+    cfg = FDBConfig(backend="posix", root=str(tmp_path / "fdb"))
+    prod = ChunkedFieldStore("nwp-rf", cfg, chunks=(32, 32))
+    field = np.random.default_rng(84).normal(size=(64, 64)).astype(np.float32)
+    prod.put_field("t2m", field)
+    prod.commit()
+    cons = ChunkedFieldStore("nwp-rf", cfg, chunks=(32, 32))
+    assert cons.open_field("t2m").chunks == (32, 32)   # cached open
+    prod.reshard("t2m", (32, 16), slice(0, None, 2))   # shape halves
+    cons.fdb.catalogue.refresh()
+    stale = cons.open_field("t2m")
+    assert stale.chunks == (32, 32)                    # still the old open
+    np.testing.assert_array_equal(stale.read(), field)
+    fresh = cons.open_field("t2m", refresh=True)
+    assert fresh.chunks == (32, 16) and fresh.meta.generation == 1
+    np.testing.assert_array_equal(cons.read_window("t2m"), field[::2])
+    prod.close()
+    cons.close()
+
+
+def test_checkpoint_topology_change_restore():
+    """Restore onto a different chunking than the checkpoint was saved
+    with: a new-topology checkpointer reshards the saved tensors onto its
+    own banding, then sharded partial reads line up."""
+    from repro.train.checkpoint import FDBCheckpointer
+    w = np.random.default_rng(81).normal(size=(256, 64)).astype(np.float32)
+    mu = np.random.default_rng(82).normal(size=(128, 32)).astype(np.float32)
+    ck4 = FDBCheckpointer("topo", FDBConfig(backend="daos"), n_shards=4)
+    ck4.save(3, {"w": w}, opt_state={"mu": mu})
+    # a 2-shard run opens the 4-band checkpoint as-is...
+    ck2 = FDBCheckpointer("topo", FDBConfig(backend="daos"), n_shards=2)
+    assert ck2.open_tensor(3, "w").n_chunks[0] == 4
+    got = ck2.restore(3, {"w": w})       # whole-tensor restore still works
+    np.testing.assert_array_equal(np.asarray(got["w"]), w)
+    # ...then reshards it onto its own banding
+    ck2.reshard_step(3, {"w": w})
+    ck2.reshard_tensor(3, "mu", kind="opt")
+    assert ck2.open_tensor(3, "w").n_chunks[0] == 2
+    assert ck2.open_tensor(3, "mu", kind="opt").n_chunks[0] == 2
+    np.testing.assert_array_equal(
+        np.asarray(ck2.restore(3, {"w": w})["w"]), w)
+    np.testing.assert_array_equal(
+        np.asarray(ck2.restore(3, {"mu": mu}, kind="opt")["mu"]), mu)
+    # band-aligned partial read on the new topology
+    np.testing.assert_array_equal(ck2.open_tensor(3, "w")[128:256], w[128:])
+    ck4.close()
+    ck2.close()
+
+
+def test_checkpoint_resave_new_banding_bumps_generation():
+    """A re-save of a step under a different n_shards must not fail and
+    must win on restore (create on_mismatch='retain')."""
+    from repro.train.checkpoint import FDBCheckpointer
+    w = np.random.default_rng(83).normal(size=(64, 16)).astype(np.float32)
+    ck4 = FDBCheckpointer("reband", FDBConfig(backend="daos"), n_shards=4)
+    ck4.save(1, {"w": w})
+    ck8 = FDBCheckpointer("reband", FDBConfig(backend="daos"), n_shards=8)
+    ck8.save(1, {"w": w * 2})
+    arr = ck8.open_tensor(1, "w")
+    assert arr.meta.generation == 1 and arr.n_chunks[0] == 8
+    np.testing.assert_array_equal(
+        np.asarray(ck8.restore(1, {"w": w})["w"]), w * 2)
+    ck4.close()
+    ck8.close()
 
 
 # ---------------------------------------------------------------------------
