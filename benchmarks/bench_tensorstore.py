@@ -15,21 +15,31 @@ data file coalesce into fewer store-level ops, while object stores keep one
 op per chunk in flight — the paper's central trade-off, mirroring
 Figs. 4.5-4.7/4.26.
 
-``run(tiny=True)`` is the CI smoke profile: two backends, one cell each,
-enough to keep the perf-trajectory JSON (read_ops/write_ops/reshard
-rows/throughput) honest without a full sweep.
+A **multi-writer contention suite** rides along (writers × window size,
+posix + one object backend): N ``WriterSession``\\ s lease disjoint row
+bands of one array and write them concurrently through one client
+executor, reporting per-writer coalesced ``write_ops`` and the
+``lease_conflicts`` count (expected 0 for disjoint windows) — the
+concurrency-behaviour axis the related DAOS/NWP work says object stores
+win on.
+
+``run(tiny=True)`` is the CI smoke profile: two backends, one cell each
+(plus one contention cell per backend), enough to keep the perf-trajectory
+JSON (read_ops/write_ops/reshard/garbage/contention rows) honest without a
+full sweep.
 """
 from __future__ import annotations
 
 import os
 import shutil
+import threading
 import time
 from typing import List
 
 import numpy as np
 
-from repro.core import (FDB, FDBConfig, Meter, PROFILES, model_run,
-                        reset_engines)
+from repro.core import (FDB, FDBConfig, LeaseConflictError, Meter, PROFILES,
+                        model_run, reset_engines)
 from repro.tensorstore import ChunkExecutor, TensorStore
 from .common import Row
 
@@ -42,6 +52,12 @@ TINY_CHUNK_EDGES = (64,)
 TINY_PARALLELISM = (4,)
 SERVERS = 4
 SHAPE = (256, 256)
+#: contention suite: posix + one object backend (the paper's comparison)
+CONTENTION_BACKENDS = ("posix", "daos")
+CONTENTION_WRITERS = (2, 4, 8)
+CONTENTION_WINDOWS = ("full", "half")   # leased window vs half-band window
+TINY_CONTENTION_WRITERS = (2,)
+TINY_CONTENTION_WINDOWS = ("full",)
 
 
 def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
@@ -126,13 +142,17 @@ def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                 wall_rs = time.perf_counter() - t0
                 ms = model_run(meter.snapshot(), PROFILES[profile],
                                server_nodes=SERVERS)
+                # retained-garbage accounting (catalogue walk only) runs
+                # after the modeled snapshot so the meter stays clean
+                garbage = ts.garbage_report()
                 rows.append(Row(
                     f"{tag}/reshard", wall_rs / max(1, naive_w) * 1e6,
                     f"modeled={ms.write_bw / 2**30:.2f}GiB/s "
                     f"dominant={ms.dominant} "
                     f"read_ops={rplan.read_ops_executed}/{naive_r}naive "
                     f"write_ops={rplan.write_ops_executed}/{naive_w}naive "
-                    f"batches={rplan.n_batches}",
+                    f"batches={rplan.n_batches} "
+                    f"garbage={garbage.garbage_bytes}B",
                     extra={"backend": backend, "chunk_edge": edge,
                            "parallelism": par,
                            "reshard_read_ops": rplan.read_ops_executed,
@@ -140,8 +160,95 @@ def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                            "naive_read_ops": naive_r,
                            "naive_write_ops": naive_w,
                            "reshard_batches": rplan.n_batches,
-                           "peak_staged_bytes": rplan.peak_staged_bytes}))
+                           "peak_staged_bytes": rplan.peak_staged_bytes,
+                           "garbage_chunks": garbage.garbage_chunks,
+                           "garbage_bytes": garbage.garbage_bytes}))
                 executor.shutdown()
+                fdb.close()
+                shutil.rmtree(root, ignore_errors=True)
+    rows.extend(contention_rows(profile, tiny))
+    return rows
+
+
+def contention_rows(profile: str = "gcp", tiny: bool = False) -> List[Row]:
+    """Multi-writer contention scenario: N writer sessions lease disjoint
+    row-band windows of ONE array and write them concurrently through one
+    client executor.  Per cell: total coalesced ``write_ops`` (posix: one
+    batched append per writer stage, far below chunk count; object: one op
+    per chunk, the in-flight parallelism those backends want) and the
+    ``lease_conflicts`` count — 0 by construction for disjoint windows,
+    asserted by the check.sh smoke."""
+    rows: List[Row] = []
+    chunk = 32                           # (8, 8) chunk grid on SHAPE
+    x = np.random.default_rng(1).normal(size=SHAPE).astype(np.float32)
+    writer_axis = TINY_CONTENTION_WRITERS if tiny else CONTENTION_WRITERS
+    window_axis = TINY_CONTENTION_WINDOWS if tiny else CONTENTION_WINDOWS
+    for backend in CONTENTION_BACKENDS:
+        for n_writers in writer_axis:
+            for window in window_axis:
+                band = SHAPE[0] // n_writers
+                rows_per_writer = band if window == "full" else band // 2
+                meter = Meter()
+                reset_engines()
+                root = (f"/tmp/fdb-bench-ts-cont-{backend}-{n_writers}-"
+                        f"{window}-{os.getpid()}")
+                shutil.rmtree(root, ignore_errors=True)
+                fdb = FDB(FDBConfig(backend=backend, schema="tensor",
+                                    root=root), meter=meter)
+                base = {"store": "bench", "array": "shared", "writer": "p0"}
+                TensorStore(fdb, base).create(SHAPE, np.float32,
+                                              chunks=(chunk, chunk))
+                fdb.flush()              # publish metadata to the sessions
+                sessions = [fdb.session(f"w{i}") for i in range(n_writers)]
+                plans, conflicts, errors = [], 0, []
+                for i, sess in enumerate(sessions):
+                    arr = TensorStore(None, base, session=sess).open()
+                    lo = i * band
+                    try:
+                        plans.append(arr.write_plan(
+                            (slice(lo, lo + rows_per_writer), slice(None)),
+                            x[lo:lo + rows_per_writer]))
+                    except LeaseConflictError:
+                        conflicts += 1
+
+                def execute(plan) -> None:
+                    try:
+                        plan.execute(flush=False)
+                    except Exception as e:  # noqa: BLE001
+                        errors.append(e)
+
+                t0 = time.perf_counter()
+                threads = [threading.Thread(target=execute, args=(p,))
+                           for p in plans]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+                fdb.flush()              # one commit barrier for all bands
+                wall = time.perf_counter() - t0
+                if errors:
+                    raise errors[0]
+                m = model_run(meter.snapshot(), PROFILES[profile],
+                              server_nodes=SERVERS)
+                write_ops = sum(p.write_ops() for p in plans)
+                n_chunks = sum(p.n_chunks for p in plans)
+                for sess in sessions:
+                    sess.close()
+                rows.append(Row(
+                    f"tensorstore/{backend}/contention/w{n_writers}/"
+                    f"{window}",
+                    wall / max(1, n_chunks) * 1e6,
+                    f"modeled={m.write_bw / 2**30:.2f}GiB/s "
+                    f"dominant={m.dominant} writers={n_writers} "
+                    f"write_ops={write_ops}/{n_chunks}chunks "
+                    f"conflicts={conflicts}",
+                    extra={"backend": backend, "contention": True,
+                           "writers": n_writers,
+                           "window_rows": rows_per_writer,
+                           "write_ops": write_ops, "n_chunks": n_chunks,
+                           "lease_conflicts": conflicts,
+                           "modeled_write_gib_s": round(
+                               m.write_bw / 2**30, 4)}))
                 fdb.close()
                 shutil.rmtree(root, ignore_errors=True)
     return rows

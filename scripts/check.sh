@@ -4,9 +4,12 @@
 #   2. tier-1 tests — the ROADMAP's verify command (slow marker excluded
 #      via pytest.ini);
 #   3. benchmark smoke — the tiny tensorstore sweep must run end to end and
-#      emit valid perf-trajectory JSON (read_ops/write_ops/reshard rows),
-#      so the BENCH_<n>.json plumbing can't silently rot — and posix
-#      coalescing (write + reshard) must stay below per-chunk counts;
+#      emit valid perf-trajectory JSON (read_ops/write_ops/reshard/
+#      contention rows), so the BENCH_<n>.json plumbing can't silently rot
+#      — posix coalescing (write + reshard) must stay below per-chunk
+#      counts, and the multi-writer contention scenario (N sessions x
+#      disjoint leased windows) must stay conflict-free with write_ops
+#      coalesced per writer;
 #   4. docs gate — README.md/docs/*.md internal links resolve and the
 #      fenced python quickstart blocks actually execute.
 set -euo pipefail
@@ -37,7 +40,15 @@ assert prs and all(r["reshard_read_ops"] < r["naive_read_ops"]
                    and r["reshard_write_ops"] < r["naive_write_ops"]
                    for r in prs), \
     "posix reshard coalescing regressed: ops not below naive per-chunk count"
-print(f"bench smoke OK: {len(rows)} rows")
+assert any("garbage_bytes" in r for r in prs), "no garbage accounting column"
+cont = [r for r in rows if r.get("contention")]
+assert cont, "no multi-writer contention rows"
+assert all(r["lease_conflicts"] == 0 for r in cont), \
+    "disjoint leased windows raised lease conflicts"
+pcont = [r for r in cont if r.get("backend") == "posix"]
+assert pcont and all(r["write_ops"] <= r["writers"] for r in pcont), \
+    "posix contention coalescing regressed: more store writes than writers"
+print(f"bench smoke OK: {len(rows)} rows ({len(cont)} contention)")
 PY
 
 python scripts/docs_check.py

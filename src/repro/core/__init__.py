@@ -8,10 +8,13 @@ Public surface:
 >>> fdb.flush()
 >>> data = fdb.retrieve({...identifier...}).read()
 """
-from .fdb import FDB, FDBConfig, as_identifier, reset_engines, shared_engine
+from .fdb import (FDB, FDBConfig, WriterSession, as_identifier,
+                  reset_engines, shared_engine)
 from .handle import (DataHandle, FieldLocation, FileRangeHandle, MultiHandle,
                      PlacementHandle, ShortReadError, group_mergeable)
 from .interfaces import Catalogue, Store
+from .lease import (Lease, LeaseConflictError, LeaseError, LeaseTable,
+                    StaleLeaseError)
 from .schema import (CHECKPOINT_SCHEMA, DATA_SCHEMA, Identifier,
                      NWP_OBJECT_SCHEMA, NWP_POSIX_SCHEMA, SCHEMAS, Schema,
                      TENSOR_SCHEMA)
@@ -19,10 +22,13 @@ from .engine.meter import GLOBAL_METER, Meter, client_context
 from .engine.costmodel import PROFILES, HardwareProfile, model_run
 
 __all__ = [
-    "FDB", "FDBConfig", "as_identifier", "reset_engines", "shared_engine",
+    "FDB", "FDBConfig", "WriterSession", "as_identifier", "reset_engines",
+    "shared_engine",
     "DataHandle", "FieldLocation", "FileRangeHandle", "MultiHandle",
     "PlacementHandle", "ShortReadError", "group_mergeable",
     "Catalogue", "Store",
+    "Lease", "LeaseTable", "LeaseError", "LeaseConflictError",
+    "StaleLeaseError",
     "Identifier", "Schema", "SCHEMAS",
     "NWP_OBJECT_SCHEMA", "NWP_POSIX_SCHEMA", "CHECKPOINT_SCHEMA",
     "DATA_SCHEMA", "TENSOR_SCHEMA",

@@ -16,6 +16,7 @@ from typing import Dict, Iterator, Mapping, Optional, Set, Tuple
 from ..engine.daos import DaosEngine
 from ..handle import DataHandle, FieldLocation, LazyHandle
 from ..interfaces import Catalogue, Store
+from ..lease import CatalogueLeaseMixin
 from ..schema import Identifier, Schema
 from ..util import stable_hash
 
@@ -104,8 +105,14 @@ class DaosStore(Store):
             self._oid_cache.pop(label, None)
 
 
-class DaosCatalogue(Catalogue):
+class DaosCatalogue(CatalogueLeaseMixin, Catalogue):
     scheme = "daos"
+
+    # chunk-range leases live on the shared engine (one table per simulated
+    # cluster) — the stand-in for a lease KV beside the index KVs; every
+    # client of the deployment sees the same lease state
+    def _lease_host(self) -> object:
+        return self.engine
 
     def __init__(self, engine: DaosEngine, schema: Schema, pool: str = "fdb",
                  root_cont: str = "fdb_root"):

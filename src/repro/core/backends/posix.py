@@ -38,6 +38,7 @@ import msgpack
 from ..engine.meter import GLOBAL_METER, Meter
 from ..handle import DataHandle, FieldLocation, FileRangeHandle
 from ..interfaces import Catalogue, Store
+from ..lease import CatalogueLeaseMixin
 from ..schema import Identifier, Schema
 from ..util import stable_hash
 
@@ -332,8 +333,14 @@ class _PerKeyIndex:
         return i
 
 
-class PosixCatalogue(Catalogue):
+class PosixCatalogue(CatalogueLeaseMixin, Catalogue):
     scheme = "posix"
+
+    # chunk-range leases live on the shared LustreSim (one table per
+    # simulated filesystem) — the stand-in for an LDLM-style range-lock
+    # service; every client on the same root/geometry shares lease state
+    def _lease_host(self) -> object:
+        return self.sim
 
     def __init__(self, sim: LustreSim, schema: Schema):
         self.sim = sim

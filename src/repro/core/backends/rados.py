@@ -31,6 +31,7 @@ from typing import Dict, Iterator, List, Mapping, Optional, Set, Tuple
 from ..engine.rados import RadosEngine
 from ..handle import DataHandle, FieldLocation, LazyHandle
 from ..interfaces import Catalogue, Store
+from ..lease import CatalogueLeaseMixin
 from ..schema import Identifier, Schema
 
 MiB = 1024 ** 2
@@ -162,12 +163,17 @@ def _axis_name(collocation: Identifier, dim: str) -> str:
     return "axis." + hashlib.md5(raw.encode()).hexdigest()
 
 
-class RadosCatalogue(Catalogue):
+class RadosCatalogue(CatalogueLeaseMixin, Catalogue):
     """Omap-based catalogue, mirroring the DAOS KV design (§3.2.1), with the
     one structural improvement RADOS allows: ``list()`` fetches whole omaps
     (keys *and* values) in single RPCs."""
 
     scheme = "rados"
+
+    # chunk-range leases hang off the shared engine (the stand-in for a
+    # lease omap beside the index omaps — same cross-client visibility)
+    def _lease_host(self) -> object:
+        return self.engine
     ROOT_NS = "_fdb_root"
     ROOT_OBJ = "root_kv"
     DATASET_OBJ = "dataset_kv"

@@ -3,6 +3,9 @@
 Store-only: S3 lacks atomic append and KV primitives, so no conforming
 Catalogue is implementable (the thesis drafts and rejects one); an S3 Store
 pairs with any conforming Catalogue (we default to the DAOS catalogue).
+Chunk-range leases (multi-writer tensorstore) ride the paired catalogue
+too — S3 offers no compare-and-swap to build a lease table on, which is
+one more reason the catalogue half lives elsewhere.
 
 Design choices follow the thesis: bucket-per-dataset (cleaner wipes), object
 per field keyed by a unique time/host/pid string, persist-on-PUT (flush is a

@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import weakref
 from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -34,6 +35,7 @@ from .engine.s3 import S3Engine
 from .handle import (DataHandle, FieldLocation, MultiHandle, PlacementHandle,
                      group_mergeable)
 from .interfaces import Catalogue, Store
+from .lease import Lease
 from .schema import (CHECKPOINT_SCHEMA, Identifier, NWP_OBJECT_SCHEMA,
                      NWP_POSIX_SCHEMA, SCHEMAS, Schema)
 
@@ -158,6 +160,19 @@ class FDB:
         self._io_executor = None        # lazily built, see io_executor
         self._io_executor_size = 0
         self._io_lock = threading.Lock()
+        #: serialises flush(): concurrent barriers (two writer sessions
+        #: committing at once) would race the posix catalogue's
+        #: getsize-then-append partial-index bookkeeping
+        self._flush_lock = threading.Lock()
+        #: archive sequence number (with its lock): flush() clears dirty
+        #: flags only when no archive landed since it captured the marker,
+        #: so a chunk archived *during* another session's barrier can never
+        #: be marked clean while still unpublished
+        self._archive_seq = 0
+        self._dirty_lock = threading.Lock()
+        #: live writer sessions of this client (weak: an abandoned session
+        #: must not keep the client's dirty bookkeeping alive)
+        self._sessions: "weakref.WeakSet[WriterSession]" = weakref.WeakSet()
 
     # -- backend wiring ------------------------------------------------------
     def _build_backends(self) -> Tuple[Store, Catalogue]:
@@ -246,8 +261,13 @@ class FDB:
         dataset, collocation, element = split
         loc = self.store.archive(data, dataset, collocation)
         self.catalogue.archive(dataset, collocation, element, loc)
-        self._dirty = True
+        self._mark_dirty()
         return loc
+
+    def _mark_dirty(self) -> None:
+        with self._dirty_lock:
+            self._archive_seq += 1
+            self._dirty = True
 
     def archive_placement(self, identifier: Union[Identifier,
                                                   Mapping[str, object]]
@@ -290,7 +310,7 @@ class FDB:
              for ((dataset, collocation, element), _d), loc
              in zip(split, locs)])
         if split:
-            self._dirty = True
+            self._mark_dirty()
         return locs
 
     @property
@@ -381,9 +401,100 @@ class FDB:
         return self._dirty
 
     def flush(self) -> None:
-        self.store.flush()
-        self.catalogue.flush()
-        self._dirty = False
+        # serialised: two sessions' commit barriers must not interleave
+        # inside the backends (the posix catalogue appends partial-index
+        # records at offsets it just measured)
+        with self._flush_lock:
+            # capture markers FIRST: an archive completing before a marker
+            # is included in the flush below; one completing after bumps
+            # its sequence, so the conditional clear leaves it dirty —
+            # never clean-but-unpublished (the RMW pre-flush depends on it)
+            sessions = list(self._sessions)
+            marks = [(s, s._dirty_mark()) for s in sessions]
+            with self._dirty_lock:
+                client_mark = self._archive_seq
+            self.store.flush()
+            self.catalogue.flush()
+            with self._dirty_lock:
+                if self._archive_seq == client_mark:
+                    self._dirty = False
+            # one store/catalogue flush publishes everything this *client*
+            # archived, whichever session produced it — so every session's
+            # barrier up to its captured marker is satisfied too
+            for session, mark in marks:
+                session._clear_dirty_if(mark)
+
+    # -- writer sessions + chunk-range leases -------------------------------
+    def session(self, writer_id: str) -> "WriterSession":
+        """Open a :class:`WriterSession` — one logical writer identity on
+        this client, with its own dirty/flush-barrier bookkeeping and a
+        ledger of the chunk-range leases it holds.  Several sessions may
+        share one client (the I/O-server pattern: many producer tasks, one
+        FDB connection); their writes into one array are made safe by the
+        catalogue-level lease table, not by schema separation."""
+        if self._closed:
+            raise RuntimeError("FDB client is closed; cannot open a session")
+        session = WriterSession(self, str(writer_id))
+        self._sessions.add(session)
+        return session
+
+    def _lease_split(self, identifier: Union[Identifier,
+                                             Mapping[str, object]]
+                     ) -> Tuple[Identifier, Identifier]:
+        """Split a lease identifier into (dataset, collocation) keys.  The
+        identifier must cover the dataset + collocation dims; element dims
+        are irrelevant (leases are per chunk-id *range*, not per key) and
+        are ignored if present."""
+        ident = as_identifier(identifier)
+        need = self.schema.dataset_dims + self.schema.collocation_dims
+        missing = [d for d in need if d not in ident]
+        if missing:
+            raise KeyError(f"lease identifier {ident!r} missing dims "
+                           f"{missing} of schema {self.schema.name!r}")
+        return (ident.subset(self.schema.dataset_dims),
+                ident.subset(self.schema.collocation_dims))
+
+    def acquire_lease(self, identifier: Union[Identifier,
+                                              Mapping[str, object]],
+                      resource: str, lo: int, hi: int, owner: str) -> int:
+        """Acquire an exclusive epoch-fenced lease on chunk-id range
+        ``[lo, hi)`` of ``resource`` under the identifier's (dataset,
+        collocation) key; returns the epoch.  Raises ``LeaseConflictError``
+        on overlap with another owner.  Usually reached through
+        :meth:`WriterSession.acquire_lease`, which also ledgers the lease
+        for release at session close."""
+        dataset, collocation = self._lease_split(identifier)
+        return self.catalogue.acquire_lease(dataset, collocation, resource,
+                                            lo, hi, owner)
+
+    def release_lease(self, identifier: Union[Identifier,
+                                              Mapping[str, object]],
+                      resource: str, lo: int, hi: int, owner: str) -> None:
+        """Release ``owner``'s leases overlapping ``[lo, hi)``.  Any client
+        may break any owner's lease (the coordinator escape hatch for a
+        presumed-dead writer) — epoch fencing rejects the broken holder's
+        late archives, so breaking is safe, merely rude."""
+        dataset, collocation = self._lease_split(identifier)
+        self.catalogue.release_lease(dataset, collocation, resource, lo, hi,
+                                     owner)
+
+    def lease_holders(self, identifier: Union[Identifier,
+                                              Mapping[str, object]],
+                      resource: str) -> List[Lease]:
+        """All active leases on ``resource`` under the identifier's
+        (dataset, collocation) key — observability for coordinators."""
+        dataset, collocation = self._lease_split(identifier)
+        return self.catalogue.lease_holders(dataset, collocation, resource)
+
+    def check_lease(self, identifier: Union[Identifier,
+                                            Mapping[str, object]],
+                    resource: str, lo: int, hi: int, owner: str,
+                    epoch: int) -> None:
+        """Fencing gate: raise ``StaleLeaseError`` unless ``owner`` still
+        holds a covering lease at exactly ``epoch``."""
+        dataset, collocation = self._lease_split(identifier)
+        self.catalogue.check_lease(dataset, collocation, resource, lo, hi,
+                                   owner, epoch)
 
     def retrieve(self, identifiers: Union[Identifier, Mapping[str, object],
                                           Sequence]) -> MultiHandle:
@@ -474,6 +585,213 @@ class FDB:
                 self._closed = True
 
     def __enter__(self) -> "FDB":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class WriterSession:
+    """One logical writer identity on an FDB client — the unit multi-writer
+    safety is built around.
+
+    A session carries three things a bare client cannot:
+
+    * **identity** — ``writer_id``, the lease *owner* string used by the
+      catalogue-level lease table;
+    * **a lease ledger** — every chunk-range lease acquired through the
+      session is recorded with its epoch, validated by :meth:`check_lease`
+      (epoch fencing) before lease-protected archives commit, and released
+      at :meth:`close`;
+    * **a per-session flush barrier** — :attr:`dirty` tracks whether *this
+      session* archived since the last client flush, so visibility
+      decisions (rule 3: the RMW pre-flush) are made per session, not per
+      client.  That is sound precisely *because* of leases: the chunks a
+      leased writer read-modify-writes are covered by its own lease, so no
+      other session's unflushed archives can be hiding under them —
+      another session's dirty state is irrelevant to this session's reads.
+      ``flush()`` remains a client-level barrier (one store flush publishes
+      everything), which clears every session's dirty flag at once.
+
+    Sessions are cheap; open one per producer task
+    (``fdb.session("rank3")``).  :meth:`close` flushes if the session is
+    dirty *before* releasing its leases — releasing a lease over unflushed
+    chunks would let the next holder RMW stale bytes and race our late
+    flush, the exact silent merge leases exist to prevent.
+    """
+
+    def __init__(self, fdb: FDB, writer_id: str):
+        self.fdb = fdb
+        self.writer_id = writer_id
+        self._dirty = False
+        self._seq = 0           # archive sequence, see FDB.flush's markers
+        self._closed = False
+        self._lock = threading.Lock()
+        #: (dataset, collocation, resource, lo, hi) -> epoch
+        self._held: Dict[Tuple[Identifier, Identifier, str, int, int],
+                         int] = {}
+
+    def _bump_dirty(self) -> None:
+        with self._lock:
+            self._seq += 1
+            self._dirty = True
+
+    def _dirty_mark(self) -> int:
+        with self._lock:
+            return self._seq
+
+    def _clear_dirty_if(self, mark: int) -> None:
+        """Clear dirty unless an archive landed after ``mark`` was captured
+        (that archive may not be covered by the flush that just ran)."""
+        with self._lock:
+            if self._seq == mark:
+                self._dirty = False
+
+    def __repr__(self) -> str:
+        return (f"WriterSession({self.writer_id!r}, "
+                f"leases={len(self._held)}, dirty={self._dirty}"
+                + (", closed" if self._closed else "") + ")")
+
+    def _check_open(self) -> None:
+        if self._closed:
+            raise RuntimeError(
+                f"writer session {self.writer_id!r} is closed")
+
+    # -- leases --------------------------------------------------------------
+    def _ledger_key(self, identifier, resource: str, lo: int, hi: int):
+        dataset, collocation = self.fdb._lease_split(identifier)
+        return (dataset, collocation, str(resource), int(lo), int(hi))
+
+    def holds(self, identifier, resource: str, lo: int, hi: int) -> bool:
+        """True when this session's ledger records a lease on exactly
+        ``[lo, hi)`` (used by plans to tell a fresh acquire from a
+        re-acquire they must not release)."""
+        key = self._ledger_key(identifier, resource, lo, hi)
+        with self._lock:
+            return key in self._held
+
+    def acquire_lease(self, identifier, resource: str, lo: int,
+                      hi: int) -> int:
+        """Acquire ``[lo, hi)`` for this session's writer id and ledger it;
+        returns the epoch.  Raises ``LeaseConflictError`` on overlap with
+        another owner; re-acquiring a ledgered range is idempotent."""
+        self._check_open()
+        epoch = self.fdb.acquire_lease(identifier, resource, lo, hi,
+                                       owner=self.writer_id)
+        key = self._ledger_key(identifier, resource, lo, hi)
+        with self._lock:
+            self._held[key] = epoch
+        return epoch
+
+    def release_lease(self, identifier, resource: str, lo: int,
+                      hi: int) -> None:
+        """Release this session's lease on exactly ``[lo, hi)`` and drop it
+        from the ledger.  Holder-side release is *exact-range*: a session
+        may hold overlapping leases (two plans over intersecting windows),
+        and giving one back must not sweep away its siblings — overlap
+        release is the coordinator's tool (:meth:`FDB.release_lease`)."""
+        dataset, collocation = self.fdb._lease_split(identifier)
+        self.fdb.catalogue.release_lease(dataset, collocation, str(resource),
+                                         lo, hi, self.writer_id, exact=True)
+        with self._lock:
+            self._held.pop((dataset, collocation, str(resource), int(lo),
+                            int(hi)), None)
+
+    def check_lease(self, identifier, resource: str, lo: int, hi: int,
+                    epoch: int) -> None:
+        """Epoch-fencing gate (raises ``StaleLeaseError``) — run before
+        archiving into a leased range."""
+        self.fdb.check_lease(identifier, resource, lo, hi,
+                             owner=self.writer_id, epoch=epoch)
+
+    def check_held(self) -> None:
+        """Validate every ledgered lease is still current (epoch fencing);
+        raises ``StaleLeaseError`` on the first broken one."""
+        with self._lock:
+            held = list(self._held.items())
+        for (dataset, collocation, resource, lo, hi), epoch in held:
+            self.fdb.catalogue.check_lease(dataset, collocation, resource,
+                                           lo, hi, self.writer_id, epoch)
+
+    def lease_holders(self, identifier, resource: str) -> List[Lease]:
+        return self.fdb.lease_holders(identifier, resource)
+
+    @property
+    def held_leases(self) -> List[Tuple[Identifier, Identifier, str, int,
+                                        int, int]]:
+        """Ledger snapshot: (dataset, collocation, resource, lo, hi,
+        epoch) per held lease."""
+        with self._lock:
+            return [k + (e,) for k, e in sorted(self._held.items(),
+                                                key=lambda kv: kv[0][2:])]
+
+    def release_all(self) -> None:
+        """Release every ledgered lease (stale entries release as no-ops)."""
+        with self._lock:
+            held, self._held = list(self._held), {}
+        for dataset, collocation, resource, lo, hi in held:
+            self.fdb.catalogue.release_lease(dataset, collocation, resource,
+                                             lo, hi, self.writer_id,
+                                             exact=True)
+
+    # -- archive / visibility (the FDB surface plans consume) ----------------
+    def archive(self, identifier, data: BytesLike) -> FieldLocation:
+        self._check_open()
+        loc = self.fdb.archive(identifier, data)
+        self._bump_dirty()
+        return loc
+
+    def archive_batch(self, items) -> List[FieldLocation]:
+        self._check_open()
+        locs = self.fdb.archive_batch(items)
+        if items:
+            self._bump_dirty()
+        return locs
+
+    def archive_many(self, items, parallelism: Optional[int] = None,
+                     executor=None) -> List[FieldLocation]:
+        self._check_open()
+        items = list(items)
+        locs = self.fdb.archive_many(items, parallelism=parallelism,
+                                     executor=executor)
+        if items:
+            self._bump_dirty()
+        return locs
+
+    def archive_placement(self, identifier) -> PlacementHandle:
+        return self.fdb.archive_placement(identifier)
+
+    def retrieve(self, identifiers) -> MultiHandle:
+        return self.fdb.retrieve(identifiers)
+
+    def retrieve_handle(self, identifier) -> Optional[DataHandle]:
+        return self.fdb.retrieve_handle(identifier)
+
+    @property
+    def dirty(self) -> bool:
+        """True while *this session* has archived data not yet covered by a
+        client flush — the per-session rule-3 barrier state."""
+        return self._dirty
+
+    def flush(self) -> None:
+        """Client-level flush (publishes everything archived on the client;
+        clears every session's dirty flag, this one's included)."""
+        self.fdb.flush()
+
+    # -- lifecycle -----------------------------------------------------------
+    def close(self) -> None:
+        """Flush if dirty, then release all held leases.  Order matters:
+        a lease released over unflushed chunks would let its next holder
+        RMW bytes that are not yet visible and then race this client's
+        late flush — the silent merge leases exist to prevent."""
+        if self._closed:
+            return
+        if self._dirty:
+            self.fdb.flush()
+        self.release_all()
+        self._closed = True
+
+    def __enter__(self) -> "WriterSession":
         return self
 
     def __exit__(self, *exc) -> None:

@@ -28,12 +28,20 @@ Catalogue
     partial identifier.
   * ``axes`` returns all values indexed along one element dimension for a
     (dataset, collocation) pair, served from summaries, not index scans.
+  * ``acquire_lease`` / ``release_lease`` / ``lease_holders`` /
+    ``check_lease`` — the catalogue-level **chunk-range lease table**
+    (see :mod:`repro.core.lease`): exclusive, epoch-fenced leases on
+    half-open ranges of linearised chunk ids, shared by every client of
+    one deployment.  Lease traffic is control-plane (not metered as
+    data-path ops); overlap raises ``LeaseConflictError`` and a fenced
+    stale epoch raises ``StaleLeaseError``.
 """
 from __future__ import annotations
 
 from typing import Iterator, List, Mapping, Optional, Sequence, Tuple
 
 from .handle import DataHandle, FieldLocation
+from .lease import Lease
 from .schema import Identifier
 
 
@@ -108,6 +116,39 @@ class Catalogue:
 
     def axes(self, dataset: Identifier, collocation: Identifier,
              dim: str) -> frozenset:
+        raise NotImplementedError
+
+    # -- chunk-range leases (multi-writer concurrency control) --------------
+    def acquire_lease(self, dataset: Identifier, collocation: Identifier,
+                      resource: str, lo: int, hi: int, owner: str) -> int:
+        """Acquire an exclusive lease on the half-open chunk-id range
+        ``[lo, hi)`` of ``resource`` for ``owner``; returns the lease
+        *epoch* (monotonic per (dataset, collocation, resource)).  Raises
+        ``LeaseConflictError`` when the range overlaps another owner's
+        active lease; an exact same-owner re-acquire is idempotent."""
+        raise NotImplementedError
+
+    def release_lease(self, dataset: Identifier, collocation: Identifier,
+                      resource: str, lo: int, hi: int, owner: str,
+                      exact: bool = False) -> None:
+        """Release ``owner``'s leases overlapping ``[lo, hi)``.  Any caller
+        may release any owner's lease (the coordinator escape hatch for
+        presumed-dead writers — epoch fencing keeps it safe).
+        ``exact=True`` releases only a lease on exactly ``[lo, hi)`` — the
+        holder-side form, which cannot sweep away the owner's own
+        overlapping sibling leases."""
+        raise NotImplementedError
+
+    def lease_holders(self, dataset: Identifier, collocation: Identifier,
+                      resource: str) -> List[Lease]:
+        """All active leases under (dataset, collocation, resource)."""
+        raise NotImplementedError
+
+    def check_lease(self, dataset: Identifier, collocation: Identifier,
+                    resource: str, lo: int, hi: int, owner: str,
+                    epoch: int) -> None:
+        """Commit-time fencing gate: raise ``StaleLeaseError`` unless
+        ``owner`` still holds a covering lease at exactly ``epoch``."""
         raise NotImplementedError
 
     def datasets(self) -> Iterator[Identifier]:

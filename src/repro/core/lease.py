@@ -1,0 +1,236 @@
+"""Chunk-range leases: the catalogue-level concurrency-control primitive
+that makes the tensorstore safely multi-writer.
+
+The paper's operational workload is inherently multi-writer — many model
+I/O-server tasks archive fields into one FDB concurrently — and the related
+DAOS/NWP work (arXiv:2404.03107, arXiv:2208.06752) shows that *contention
+behaviour*, not single-stream bandwidth, is where object stores win.  The
+FDB's own schema answer (a collocation key per writer process) keeps the
+*index* contention-free but leaves the data racy the moment two writers
+share one logical array: chunk keys collide, and the partial-write RMW path
+turns a silent last-flush-wins race into observable data loss.
+
+A :class:`LeaseTable` closes that gap with the classic range-lock design:
+
+* leases cover **half-open ranges** ``[lo, hi)`` of linearised chunk ids
+  under a ``(dataset, collocation, resource)`` key — the resource names the
+  chunk-id space (the tensorstore uses the array's live layout generation,
+  so leases can never outlive a re-layout);
+* an acquire that **overlaps another owner's** active lease raises
+  :class:`LeaseConflictError` — writers fail fast at *plan* time, before a
+  single byte moves;
+* every acquire is stamped with a key-scoped, monotonically increasing
+  **epoch**.  A lease may be broken by a third party (``release`` takes the
+  owner explicitly — the coordinator pattern for presumed-dead writers);
+  once the range is re-acquired the old holder's epoch can never validate
+  again, so its late archives are rejected with :class:`StaleLeaseError`
+  instead of silently merged — Gray/Lampson-style epoch fencing.
+
+One table per *simulated deployment*: :func:`shared_lease_table` attaches a
+table to the shared engine/sim object (``repro.core.fdb.shared_engine`` /
+``LustreSim``), so every FDB client of one deployment — writer and reader
+"processes" alike — sees the same lease state, exactly like a lease KV
+living inside the real catalogue would behave.  Lease traffic is
+control-plane: it is deliberately *not* metered as data-path ops, so
+planning-time lease acquisition keeps benchmark meters clean.
+
+This module has no ``repro`` imports; both the interfaces and every backend
+reach for it without creating a cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Dict, List, Tuple
+
+Key = Tuple[str, str, str]          # (dataset, collocation, resource) labels
+
+
+class LeaseError(RuntimeError):
+    """Base class for lease-protocol violations."""
+
+
+class LeaseConflictError(LeaseError):
+    """An acquire overlapped another owner's active lease.
+
+    Raised at *plan* time by lease-aware writers (the tensorstore
+    ``WritePlan``): overlapping writers are rejected before any data
+    moves, rather than racing to a last-flush-wins merge."""
+
+
+class StaleLeaseError(LeaseError):
+    """An epoch-fenced commit check failed: the lease backing a write is no
+    longer current (released and/or re-acquired since).  The late writer's
+    archives must be abandoned, not merged."""
+
+
+@dataclasses.dataclass(frozen=True)
+class Lease:
+    """One active lease: ``owner`` holds ``[lo, hi)`` at ``epoch``."""
+    owner: str
+    lo: int
+    hi: int
+    epoch: int
+
+    def overlaps(self, lo: int, hi: int) -> bool:
+        return self.lo < hi and lo < self.hi
+
+    def covers(self, lo: int, hi: int) -> bool:
+        return self.lo <= lo and hi <= self.hi
+
+
+class LeaseTable:
+    """Thread-safe range-lease state for one simulated deployment.
+
+    Keys are ``(dataset, collocation, resource)`` label triples; each key
+    carries its own active-lease list and monotonic epoch counter.  All
+    methods are O(active leases per key) — lease counts are small (one per
+    concurrent writer window), so no interval tree is needed.
+    """
+
+    def __init__(self) -> None:
+        self._leases: Dict[Key, List[Lease]] = {}
+        self._epochs: Dict[Key, int] = {}
+        self._lock = threading.Lock()
+
+    def acquire(self, key: Key, owner: str, lo: int, hi: int) -> int:
+        """Acquire ``[lo, hi)`` for ``owner``; returns the lease epoch.
+
+        Overlap with *another* owner's active lease raises
+        :class:`LeaseConflictError` (listing the holders).  An exact
+        re-acquire of a range the owner already holds is idempotent and
+        returns the existing epoch; a new (even self-overlapping) range
+        records a fresh lease under the next epoch.
+        """
+        if not isinstance(lo, int) or not isinstance(hi, int) or lo >= hi:
+            raise ValueError(f"lease range [{lo}, {hi}) must be a non-empty "
+                             f"half-open int range")
+        with self._lock:
+            active = self._leases.setdefault(key, [])
+            blockers = [l for l in active
+                        if l.owner != owner and l.overlaps(lo, hi)]
+            if blockers:
+                held = ", ".join(f"{l.owner}:[{l.lo},{l.hi})@e{l.epoch}"
+                                 for l in blockers)
+                raise LeaseConflictError(
+                    f"chunk range [{lo}, {hi}) of {key} is leased by "
+                    f"{held}; overlapping writers must wait for release")
+            for l in active:
+                if l.owner == owner and l.lo == lo and l.hi == hi:
+                    return l.epoch          # idempotent re-acquire
+            epoch = self._epochs.get(key, 0) + 1
+            self._epochs[key] = epoch
+            active.append(Lease(owner, lo, hi, epoch))
+            return epoch
+
+    def release(self, key: Key, owner: str, lo: int, hi: int,
+                exact: bool = False) -> None:
+        """Release ``owner``'s leases overlapping ``[lo, hi)`` — or, with
+        ``exact=True``, only a lease on exactly that range.
+
+        Overlap release is the *coordinator* escape hatch for
+        presumed-dead writers (any caller may break any owner's lease;
+        epoch fencing makes that safe — the broken holder's later commit
+        checks fail).  Exact release is what a lease *holder* uses to give
+        back one of its own ranges: an owner may legitimately hold
+        overlapping leases (two plans of one session over intersecting
+        windows), and releasing one must not sweep away its siblings.
+        Releasing a range nobody holds is a no-op.
+        """
+        with self._lock:
+            active = self._leases.get(key)
+            if active is not None:
+                if exact:
+                    active[:] = [l for l in active
+                                 if not (l.owner == owner and l.lo == lo
+                                         and l.hi == hi)]
+                else:
+                    active[:] = [l for l in active
+                                 if not (l.owner == owner
+                                         and l.overlaps(lo, hi))]
+
+    def holders(self, key: Key) -> List[Lease]:
+        """All active leases under ``key`` (snapshot, sorted by range)."""
+        with self._lock:
+            return sorted(self._leases.get(key, ()),
+                          key=lambda l: (l.lo, l.hi, l.owner))
+
+    def check(self, key: Key, owner: str, lo: int, hi: int,
+              epoch: int) -> None:
+        """Fencing check: raise :class:`StaleLeaseError` unless ``owner``
+        still holds an active lease at exactly ``epoch`` covering
+        ``[lo, hi)`` — the commit-time gate a lease-holding writer runs
+        before archiving into its range."""
+        with self._lock:
+            for l in self._leases.get(key, ()):
+                if (l.owner == owner and l.epoch == epoch
+                        and l.covers(lo, hi)):
+                    return
+            current = self._epochs.get(key, 0)
+        raise StaleLeaseError(
+            f"lease [{lo}, {hi})@e{epoch} of {key} held by {owner!r} is no "
+            f"longer current (key epoch {current}); the range was released "
+            f"or re-acquired — abandon this writer's pending archives")
+
+
+#: attribute under which a deployment's shared table hangs off its engine/sim
+_HOST_ATTR = "_fdb_lease_table"
+_HOST_LOCK = threading.Lock()
+
+
+def shared_lease_table(host: object) -> LeaseTable:
+    """The lease table of one simulated deployment, lazily attached to its
+    process-global shared engine/sim object — so every FDB client built on
+    that deployment (``shared_engine`` / ``LustreSim`` identity) shares
+    lease state, like a lease KV inside the real catalogue would."""
+    with _HOST_LOCK:
+        table = getattr(host, _HOST_ATTR, None)
+        if table is None:
+            table = LeaseTable()
+            setattr(host, _HOST_ATTR, table)
+        return table
+
+
+class CatalogueLeaseMixin:
+    """The Catalogue lease methods, implemented once: delegate to the
+    deployment's shared :class:`LeaseTable`.  A backend catalogue mixes
+    this in and implements :meth:`_lease_host` to name the process-global
+    shared object its deployment is keyed on (engine / LustreSim) — the
+    same identity that already makes data visible across FDB clients.
+    ``dataset``/``collocation`` are ``Identifier``-likes (anything with a
+    ``canonical()``)."""
+
+    def _lease_host(self) -> object:
+        raise NotImplementedError
+
+    def _lease_key(self, dataset, collocation, resource: str) -> Key:
+        return (dataset.canonical(), collocation.canonical(), str(resource))
+
+    def _leases(self) -> LeaseTable:
+        return shared_lease_table(self._lease_host())
+
+    def acquire_lease(self, dataset, collocation, resource: str, lo: int,
+                      hi: int, owner: str) -> int:
+        return self._leases().acquire(
+            self._lease_key(dataset, collocation, resource), owner, lo, hi)
+
+    def release_lease(self, dataset, collocation, resource: str, lo: int,
+                      hi: int, owner: str, exact: bool = False) -> None:
+        self._leases().release(
+            self._lease_key(dataset, collocation, resource), owner, lo, hi,
+            exact=exact)
+
+    def lease_holders(self, dataset, collocation,
+                      resource: str) -> List[Lease]:
+        return self._leases().holders(
+            self._lease_key(dataset, collocation, resource))
+
+    def check_lease(self, dataset, collocation, resource: str, lo: int,
+                    hi: int, owner: str, epoch: int) -> None:
+        self._leases().check(
+            self._lease_key(dataset, collocation, resource), owner, lo, hi,
+            epoch)
+
+
+__all__ = ["Lease", "LeaseTable", "LeaseError", "LeaseConflictError",
+           "StaleLeaseError", "shared_lease_table", "CatalogueLeaseMixin"]

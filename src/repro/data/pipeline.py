@@ -14,7 +14,7 @@ from typing import Dict, Iterator, Optional
 
 import numpy as np
 
-from repro.core import FDB, FDBConfig, Identifier
+from repro.core import FDB, FDBConfig, Identifier, WriterSession
 from repro.core.schema import DATA_SCHEMA, TENSOR_SCHEMA
 from repro.tensorstore import (ChunkedArray, LayoutMismatchError,
                                TensorStore)
@@ -55,7 +55,10 @@ class ChunkedFieldStore:
             cfg = dataclasses.replace(cfg, schema=TENSOR_SCHEMA)
         self.fdb = FDB(cfg)
         self.store = store
-        self.writer = writer
+        #: collocation key all producers share (the schema "writer" dim) —
+        #: named writer_key so the :meth:`writer` session factory can keep
+        #: the ISSUE-facing name
+        self.writer_key = writer
         self.codec = codec
         self.chunks = chunks
         # metadata only changes on wipe/re-put/reshard, so opened arrays
@@ -66,7 +69,7 @@ class ChunkedFieldStore:
 
     def _ts(self, name: str) -> TensorStore:
         return TensorStore(self.fdb, {"store": self.store, "array": name,
-                                      "writer": self.writer})
+                                      "writer": self.writer_key})
 
     # -- producer side -----------------------------------------------------
     def put_field(self, name: str, values: np.ndarray,
@@ -182,8 +185,87 @@ class ChunkedFieldStore:
         self._opened.pop(name, None)
         self.fdb.wipe({"store": self.store, "array": name})
 
+    # -- multi-producer side ------------------------------------------------
+    def writer(self, writer_id: str) -> "FieldWriter":
+        """Open a :class:`FieldWriter` — one producer task's session on
+        this store, the multi-writer counterpart of :meth:`write_window`.
+
+        Several writers (e.g. parallel assimilation tasks, ensemble
+        members) may update *one* field concurrently: each writer's window
+        acquires the covering chunk-range leases at plan time, so disjoint
+        windows proceed in parallel — through one FDB client and one
+        bounded executor — while overlapping windows fail fast with
+        ``LeaseConflictError`` instead of racing to a silent last-flush
+        merge.  All writers share this store's collocation key (the
+        ``writer`` schema dim), so consumers read one coherent array; the
+        *session* identity exists for leases and per-session flush
+        barriers, not for placement.
+
+        Use as a context manager; :meth:`FieldWriter.commit` is the
+        visibility barrier, and closing flushes (if dirty) then releases
+        every lease the writer still holds.
+        """
+        return FieldWriter(self, self.fdb.session(writer_id))
+
     def close(self) -> None:
         self.fdb.close()
+
+
+class FieldWriter:
+    """One producer task writing windows of shared fields under chunk-range
+    leases — returned by :meth:`ChunkedFieldStore.writer`."""
+
+    def __init__(self, store: ChunkedFieldStore, session: WriterSession):
+        self._store = store
+        self.session = session
+        #: session-bound opens are cached per field (metadata re-reads are
+        #: pure overhead; layout changes mid-session are not supported)
+        self._opened: Dict[str, ChunkedArray] = {}
+
+    @property
+    def writer_id(self) -> str:
+        return self.session.writer_id
+
+    def _open(self, name: str) -> ChunkedArray:
+        arr = self._opened.get(name)
+        if arr is None:
+            ts = TensorStore(None, {"store": self._store.store,
+                                    "array": name,
+                                    "writer": self._store.writer_key},
+                             session=self.session)
+            arr = self._opened[name] = ts.open()
+        return arr
+
+    def write_window(self, name: str, values, *selection) -> ChunkedArray:
+        """Chunk-aligned in-place update of a field window under this
+        writer's leases: the covering chunk ranges are acquired at plan
+        time (``LeaseConflictError`` if another writer holds any of them,
+        before any byte moves) and stay held until :meth:`close` — a
+        :meth:`commit` publishes the data but deliberately keeps the
+        windows owned, so a producer retains them across commits.  The new
+        chunk versions become visible at :meth:`commit`, exactly like
+        :meth:`ChunkedFieldStore.write_window`.  RMW fetches for partially
+        covered chunks are lease-protected, and this session's earlier
+        unflushed archives pre-flush per *session*, not per client."""
+        arr = self._open(name)
+        arr.write_plan(tuple(selection), values).execute(flush=False)
+        return arr
+
+    def commit(self) -> None:
+        """The visibility barrier for everything this writer archived
+        (client-level flush: FDB rule 3).  Held leases stay held — a
+        writer keeps its windows across commits until it closes."""
+        self.session.flush()
+
+    def close(self) -> None:
+        """Flush if dirty, then release every lease this writer holds."""
+        self.session.close()
+
+    def __enter__(self) -> "FieldWriter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class FDBDataPipeline:

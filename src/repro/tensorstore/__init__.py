@@ -13,20 +13,22 @@
 >>> arr.write_plan((slice(None), slice(None)), field).write_ops()  # the twin
 >>> arr.reshard((30, 420))               # stream onto a consumer chunk grid
 """
+from repro.core import LeaseConflictError, StaleLeaseError, WriterSession
 from .codec import CODECS, Codec, FieldQuantCodec, RawCodec, get_codec
 from .executor import ChunkExecutor, default_executor, sized_executor
-from .grid import ChunkGrid
+from .grid import ChunkGrid, merge_id_ranges
 from .meta import META_CHUNK_KEY, ArrayMeta, auto_chunks
 from .reshard import ReshardPlan, chunk_rectangles
-from .store import (ChunkedArray, LayoutMismatchError, ReadPlan,
-                    TensorStore, WritePlan, chunk_key)
+from .store import (ChunkedArray, GarbageReport, LayoutMismatchError,
+                    ReadPlan, TensorStore, WritePlan, chunk_key)
 
 __all__ = [
     "TensorStore", "ChunkedArray", "ReadPlan", "WritePlan", "ReshardPlan",
     "chunk_key", "chunk_rectangles",
-    "LayoutMismatchError",
+    "LayoutMismatchError", "GarbageReport",
+    "WriterSession", "LeaseConflictError", "StaleLeaseError",
     "ArrayMeta", "auto_chunks", "META_CHUNK_KEY",
-    "ChunkGrid",
+    "ChunkGrid", "merge_id_ranges",
     "Codec", "RawCodec", "FieldQuantCodec", "CODECS", "get_codec",
     "ChunkExecutor", "default_executor", "sized_executor",
 ]

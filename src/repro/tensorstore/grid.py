@@ -21,16 +21,43 @@ field).  A strided selection touches only the chunks holding at least one
 selected point — chunks the stride steps over entirely are skipped — and the
 within-chunk slices keep the stride, so strided scatters/gathers stay single
 numpy slice assignments.  Output (and value) slices are always unit-step:
-selections address a *compact* result array.  Negative steps (reversing
-reads) are rejected — chunk visit order would no longer match output order.
+selections address a *compact* result array.
+
+Negative steps are a *read-path* feature: ``normalize_read_key`` rewrites a
+reversed slice into its positive-step mirror plus a client-side flip axis
+(chunk visit order stays monotone; the assembled output is flipped once at
+the end), which is how ``arr[::-1]`` works without the I/O plan ever seeing
+a descending order.  The write and reshard paths keep rejecting them
+(``NotImplementedError``): a reversed *scatter* would need the value order
+inverted per chunk, and no workload has asked for it.
+
+``linear_id`` maps a chunk index to its row-major scalar id — the chunk-id
+space the catalogue-level lease table (:mod:`repro.core.lease`) covers with
+``[lo, hi)`` ranges; :func:`merge_id_ranges` compacts a touched-chunk set
+into the minimal disjoint ranges a ``WritePlan`` leases.
 """
 from __future__ import annotations
 
 import itertools
-from typing import Iterator, List, Tuple
+from typing import Iterable, Iterator, List, Tuple
 
 Index = Tuple[int, ...]
 Slices = Tuple[slice, ...]
+
+
+def merge_id_ranges(ids: Iterable[int]) -> List[Tuple[int, int]]:
+    """Compact a set of chunk ids into minimal disjoint half-open ranges:
+    ``[0, 1, 2, 7, 8] -> [(0, 3), (7, 9)]`` — the ranges a write plan
+    leases (duplicates tolerated)."""
+    out: List[List[int]] = []
+    for i in sorted(ids):
+        if out and i < out[-1][1]:
+            continue
+        if out and i == out[-1][1]:
+            out[-1][1] = i + 1
+        else:
+            out.append([i, i + 1])
+    return [(lo, hi) for lo, hi in out]
 
 
 class ChunkGrid:
@@ -82,6 +109,17 @@ class ChunkGrid:
             if not 0 <= i < n:
                 raise IndexError(f"chunk index {idx} outside grid {self.n_chunks}")
 
+    def linear_id(self, idx: Index) -> int:
+        """Row-major scalar id of chunk ``idx`` — the chunk-id space lease
+        ranges cover (``[lo, hi)`` over these ids; consecutive ids are
+        row-major neighbours, so rectangular row bands lease as single
+        ranges)."""
+        self._check_index(idx)
+        lid = 0
+        for i, n in zip(idx, self.n_chunks):
+            lid = lid * n + i
+        return lid
+
     # -- selection handling ---------------------------------------------------
     def normalize_key(self, key) -> Tuple[Slices, Tuple[int, ...]]:
         """Normalise a ``__getitem__`` key into per-dim positive-step slices.
@@ -91,7 +129,11 @@ class ChunkGrid:
         is accepted (strided selections); every returned slice has an
         explicit ``step >= 1`` and a ``stop`` normalised to *last selected
         index + 1* (``start`` when empty), so downstream chunk math can rely
-        on ``stop - 1`` being a selected point.  Negative steps are rejected.
+        on ``stop - 1`` being a selected point.  Negative steps raise
+        ``NotImplementedError``: they are a read-only feature served by
+        :meth:`normalize_read_key` (positive-step plan + client-side flip),
+        and the write/reshard paths that call this method do not support
+        reversed scatters.
         """
         if not isinstance(key, tuple):
             key = (key,)
@@ -104,10 +146,12 @@ class ChunkGrid:
             if isinstance(k, slice):
                 start, stop, step = k.indices(size)
                 if step < 1:
-                    raise IndexError(
-                        "tensorstore selections require a positive step "
-                        f"(got {step} on axis {axis}); reversed reads are "
-                        "not supported")
+                    raise NotImplementedError(
+                        "tensorstore write/reshard selections require a "
+                        f"positive step (got {step} on axis {axis}); "
+                        "negative-step selections are supported on the read "
+                        "path only, where they normalise to a positive-step "
+                        "plan plus a client-side flip")
                 count = len(range(start, stop, step))
                 stop = start + (count - 1) * step + 1 if count else start
                 sel.append(slice(start, stop, step))
@@ -121,6 +165,39 @@ class ChunkGrid:
                 sel.append(slice(i, i + 1, 1))
                 squeeze.append(axis)
         return tuple(sel), tuple(squeeze)
+
+    def normalize_read_key(self, key
+                           ) -> Tuple[Slices, Tuple[int, ...],
+                                      Tuple[int, ...]]:
+        """Read-path key normalisation: like :meth:`normalize_key` but
+        negative-step slices are accepted, each rewritten to the
+        positive-step slice selecting the *same points in ascending order*,
+        with its axis recorded in ``flip_axes`` — the caller flips the
+        assembled output once, client-side, so the I/O plan (chunk visit
+        order, coalescing, scatter slices) never sees a descending
+        selection.  Returns ``(slices, squeeze_axes, flip_axes)``."""
+        if not isinstance(key, tuple):
+            key = (key,)
+        if len(key) > self.ndim:
+            raise IndexError(f"too many indices for {self.ndim}-d array")
+        key = key + (slice(None),) * (self.ndim - len(key))
+        flips: List[int] = []
+        rewritten: List[object] = []
+        for axis, (k, size) in enumerate(zip(key, self.shape)):
+            if isinstance(k, slice):
+                start, stop, step = k.indices(size)
+                if step < 0:
+                    count = len(range(start, stop, step))
+                    if count:
+                        first = start + (count - 1) * step  # smallest point
+                        rewritten.append(slice(first, start + 1, -step))
+                        flips.append(axis)
+                    else:
+                        rewritten.append(slice(0, 0, 1))
+                    continue
+            rewritten.append(k)
+        sel, squeeze = self.normalize_key(tuple(rewritten))
+        return sel, squeeze, tuple(flips)
 
     def selection_shape(self, sel: Slices) -> Tuple[int, ...]:
         return tuple(len(range(s.start, s.stop, s.step or 1)) for s in sel)

@@ -48,7 +48,12 @@ paper's object-store/POSIX trade-off, plus their composition:
   before read as zeros (the Zarr fill-value convention).  A ``flush()``
   barrier after the archives preserves FDB visibility rule 3 — and partial
   writes flush *first* as well, so their RMW fetches see this writer's own
-  earlier unflushed chunks.
+  earlier unflushed chunks.  On a *session-bound* store (multi-writer), the
+  plan additionally acquires the chunk-range **leases** covering its
+  selection at plan time — overlap with another writer fails fast with
+  :class:`~repro.core.LeaseConflictError` — and validates its lease epochs
+  before every stage of archives, so a fenced stale writer raises
+  :class:`~repro.core.StaleLeaseError` instead of silently merging.
 * **Reshards** (``arr.reshard(new_chunks)``) compose the two: a
   :class:`~.reshard.ReshardPlan` streams the array onto a new chunk grid —
   destination chunks in bounded rectangular batches, each batch one
@@ -65,11 +70,12 @@ from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core import (FDB, FieldLocation, Identifier, MultiHandle,
+from repro.core import (FDB, FieldLocation, Identifier, LeaseConflictError,
+                        MultiHandle, StaleLeaseError, WriterSession,
                         group_mergeable)
 from .codec import Codec, get_codec
 from .executor import ChunkExecutor
-from .grid import ChunkGrid
+from .grid import ChunkGrid, merge_id_ranges
 from .meta import META_CHUNK_KEY, ArrayMeta, auto_chunks
 
 Index = Tuple[int, ...]
@@ -96,12 +102,33 @@ def chunk_key(idx: Index, generation: int = 0) -> str:
 
 
 class TensorStore:
-    """A named slot for one chunked array inside an FDB."""
+    """A named slot for one chunked array inside an FDB.
 
-    def __init__(self, fdb: FDB, base: Mapping[str, object],
+    ``session`` (optional) binds the slot to a
+    :class:`repro.core.WriterSession`: every :class:`WritePlan` built on it
+    acquires the chunk-range leases covering its selection at *plan* time
+    (failing fast with :class:`repro.core.LeaseConflictError` on overlap
+    with another writer), validates its lease epochs before every stage of
+    archives (:class:`repro.core.StaleLeaseError` fences a writer whose
+    lease was broken and re-acquired), and tracks dirty/flush-barrier state
+    per session — the contract that makes two writers on disjoint chunk
+    ranges of one array provably safe.  Without a session the store keeps
+    the original single-writer behaviour: no leases, client-level barriers.
+    """
+
+    def __init__(self, fdb: Optional[FDB], base: Mapping[str, object],
                  chunk_dim: Optional[str] = None,
-                 executor: Optional[ChunkExecutor] = None):
+                 executor: Optional[ChunkExecutor] = None,
+                 session: Optional[WriterSession] = None):
+        if session is not None:
+            if fdb is None:
+                fdb = session.fdb
+            elif session.fdb is not fdb:
+                raise ValueError("session belongs to a different FDB client")
+        elif fdb is None:
+            raise ValueError("TensorStore needs an FDB client or a session")
         self.fdb = fdb
+        self.session = session
         schema = fdb.schema
         self.chunk_dim = chunk_dim or schema.element_dims[-1]
         if self.chunk_dim not in schema.element_dims:
@@ -126,6 +153,14 @@ class TensorStore:
         if self._executor is not None:
             return self._executor
         return self.fdb.io_executor
+
+    @property
+    def client(self):
+        """What archives and flush barriers route through: the bound
+        :class:`~repro.core.WriterSession` when there is one (per-session
+        dirty tracking), the FDB client otherwise — both expose the same
+        archive/flush/dirty surface."""
+        return self.session if self.session is not None else self.fdb
 
     # -- identifiers -----------------------------------------------------------
     def _ident(self, chunk_value: str) -> Identifier:
@@ -185,7 +220,7 @@ class TensorStore:
                     f"{old} != {meta}; wipe it before re-creating with a "
                     f"different layout, or pass on_mismatch='retain' to "
                     f"version the old chunks out")
-        self.fdb.archive(self._ident(META_CHUNK_KEY), meta.to_bytes())
+        self.client.archive(self._ident(META_CHUNK_KEY), meta.to_bytes())
         return ChunkedArray(self, meta)
 
     def open(self) -> "ChunkedArray":
@@ -204,6 +239,61 @@ class TensorStore:
                           codec=codec)
         arr.write(values)
         return arr
+
+    def garbage_report(self) -> "GarbageReport":
+        """Account the retained old-generation chunk bytes of this array.
+
+        Reshards and ``create(on_mismatch="retain")`` version superseded
+        chunks out instead of deleting them (the FDB API has no per-object
+        delete), so every re-layout leaves the previous generation's chunk
+        objects behind — unreachable, never wrongly readable, but holding
+        space until the array's dataset is wiped.  This walks the
+        catalogue's entries for the array slot (``FDB.list``, index only,
+        no payload I/O) and splits them into the live generation vs
+        everything else — the groundwork for an old-generation reclamation
+        pass (copy live generation + wipe), and a ``bench_tensorstore``
+        column so the retained-garbage cost of a reshard stays visible.
+
+        Only *flushed* entries are visible (rule 3), and only this store's
+        collocation key (its ``writer``/``host`` base value) is scanned.
+        """
+        arr = self.open()       # live generation comes from the metadata
+        live_gen = arr.meta.generation
+        live_chunks = live_bytes = garbage_chunks = garbage_bytes = 0
+        gens = set()
+        for ident, loc in self.fdb.list(dict(self.base)):
+            value = ident[self.chunk_dim]
+            if value == META_CHUNK_KEY:
+                continue
+            gen = 0
+            head = value.split(".", 1)[0]
+            if head.startswith("g") and head[1:].isdigit():
+                gen = int(head[1:])
+            if gen == live_gen:
+                live_chunks += 1
+                live_bytes += loc.length
+            else:
+                garbage_chunks += 1
+                garbage_bytes += loc.length
+                gens.add(gen)
+        return GarbageReport(live_generation=live_gen,
+                             live_chunks=live_chunks, live_bytes=live_bytes,
+                             garbage_chunks=garbage_chunks,
+                             garbage_bytes=garbage_bytes,
+                             garbage_generations=tuple(sorted(gens)))
+
+
+@dataclasses.dataclass(frozen=True)
+class GarbageReport:
+    """What :meth:`TensorStore.garbage_report` found: catalogue-indexed
+    chunk objects of the live layout generation vs retained older
+    generations (bytes are stored object sizes, i.e. encoded)."""
+    live_generation: int
+    live_chunks: int
+    live_bytes: int
+    garbage_chunks: int
+    garbage_bytes: int
+    garbage_generations: Tuple[int, ...]
 
 
 class ChunkedArray:
@@ -309,8 +399,12 @@ class ChunkedArray:
         """Plan a read without moving data: resolves every intersecting
         chunk to its backend handle and groups coalescible ones.  Use
         :meth:`ReadPlan.read_ops` to see the I/O-op count before (or
-        without) executing.  The selection may be strided (``arr[::4]``):
-        only chunks holding a selected point are resolved at all.
+        without) executing.  The selection may be strided (``arr[::4]``),
+        including *negative* steps (``arr[::-1]``, ``arr[50:10:-4]``):
+        reversed slices normalise to their positive-step mirror — the I/O
+        plan visits chunks in ascending order exactly as if the selection
+        were forward — and the assembled output is flipped client-side.
+        Only chunks holding a selected point are resolved at all.
 
         ``fill_missing=True`` (default) reads never-written chunks as zeros
         — the Zarr fill-value convention that makes sparsely-populated
@@ -321,8 +415,9 @@ class ChunkedArray:
         (consumers that require every chunk present, e.g. checkpoint
         restores of dense tensors).
         """
-        sel, squeeze = self.grid.normalize_key(key)
-        return ReadPlan(self, sel, squeeze, fill_missing=fill_missing)
+        sel, squeeze, flips = self.grid.normalize_read_key(key)
+        return ReadPlan(self, sel, squeeze, fill_missing=fill_missing,
+                        flips=flips)
 
     def __getitem__(self, key) -> np.ndarray:
         return self.read_plan(key).execute()
@@ -343,7 +438,16 @@ class ChunkedArray:
         without moving data — see :class:`~.reshard.ReshardPlan`.  Use
         :meth:`~.reshard.ReshardPlan.read_ops` /
         :meth:`~.reshard.ReshardPlan.write_ops` to see the coalesced I/O-op
-        counts before (or without) executing."""
+        counts before (or without) executing.
+
+        Resharding is a whole-array re-layout — a *single-writer*
+        administrative operation, not a leased range write — so it is not
+        available through a writer session."""
+        if self.store.session is not None:
+            raise NotImplementedError(
+                "reshard is a single-writer re-layout of the whole array "
+                "slot and is not supported inside a writer session; run it "
+                "on a session-less TensorStore")
         from .reshard import ReshardPlan
         return ReshardPlan(self, new_chunks, codec=codec, sel=sel,
                            window=window, fill_missing=fill_missing)
@@ -407,6 +511,8 @@ class WritePlan:
         self.array = array
         self.values = values
         store = array.store
+        #: the bound writer session (multi-writer mode) or None
+        self.session: Optional[WriterSession] = store.session
         #: (chunk_idx, within_chunk_slices, value_slices, fully_covered)
         self.tasks = list(array.grid.write_plan(sel))
         #: staging window: most chunks encoded/held at once (executor's
@@ -425,6 +531,62 @@ class WritePlan:
         self.stages: List[List[int]] = [
             list(range(lo, min(lo + self.window, len(self.tasks))))
             for lo in range(0, len(self.tasks), self.window)]
+        #: leases covering the touched chunks: (lo, hi, epoch, created) per
+        #: disjoint linear chunk-id range — acquired HERE, at plan time, so
+        #: overlapping writers fail fast (LeaseConflictError) before any
+        #: byte moves; ``created`` marks ranges this plan acquired (vs
+        #: ranges the session already held, which it must not release)
+        self.leases: List[Tuple[int, int, int, bool]] = []
+        if self.session is not None and self.tasks:
+            grid = array.grid
+            self._lease_ident = array.chunk_ident(self.tasks[0][0])
+            #: lease resource = the live layout generation's chunk-id space
+            #: (a reshard opens a fresh space, so leases die with layouts)
+            self._lease_resource = f"g{array.meta.generation}"
+            acquired: List[Tuple[int, int, int, bool]] = []
+            try:
+                for lo, hi in merge_id_ranges(
+                        grid.linear_id(t[0]) for t in self.tasks):
+                    created = not self.session.holds(
+                        self._lease_ident, self._lease_resource, lo, hi)
+                    epoch = self.session.acquire_lease(
+                        self._lease_ident, self._lease_resource, lo, hi)
+                    acquired.append((lo, hi, epoch, created))
+            except BaseException:
+                # roll back this plan's own acquisitions on a conflict
+                # mid-way, so a failed plan holds nothing
+                for lo, hi, _epoch, created in acquired:
+                    if created:
+                        self.session.release_lease(
+                            self._lease_ident, self._lease_resource, lo, hi)
+                raise
+            self.leases = acquired
+
+    def check_leases(self) -> None:
+        """Epoch-fencing gate (session-bound plans only): raise
+        :class:`~repro.core.StaleLeaseError` unless every lease backing
+        this plan is still current.  :meth:`execute` runs it before the RMW
+        fetches and before each stage's archives, so a writer whose lease
+        was broken and re-acquired aborts instead of committing."""
+        if self.session is not None:
+            for lo, hi, epoch, _created in self.leases:
+                self.session.check_lease(self._lease_ident,
+                                         self._lease_resource, lo, hi, epoch)
+
+    def release_leases(self) -> None:
+        """Release the leases this plan acquired (ranges the session
+        already held stay held).  Called by :meth:`execute` after its
+        commit barrier; call it directly to abandon a planned-but-never-
+        executed write."""
+        if self.session is not None:
+            kept = []
+            for lo, hi, epoch, created in self.leases:
+                if created:
+                    self.session.release_lease(
+                        self._lease_ident, self._lease_resource, lo, hi)
+                else:
+                    kept.append((lo, hi, epoch, created))
+            self.leases = kept
 
     def _stage_groups(self, stage: List[int]) -> List[List[int]]:
         """Positions-into-tasks per batched store write within one stage."""
@@ -456,21 +618,40 @@ class WritePlan:
     def execute(self, flush: bool = True) -> List[FieldLocation]:
         """Stage by stage: fetch-and-patch (coalesced), encode (batched),
         archive (one submission per group), release — and, with
-        ``flush=True``, commit (FDB visibility rule 3).  Returns per-chunk
-        :class:`FieldLocation`\\ s in plan order."""
+        ``flush=True``, commit (FDB visibility rule 3) and release this
+        plan's leases.  Returns per-chunk :class:`FieldLocation`\\ s in
+        plan order.
+
+        Session-bound plans run the epoch-fencing gate before the RMW
+        fetches and before every stage's archives; with ``flush=False`` the
+        leases stay held (the chunks are archived but not yet visible — the
+        session's later flush/close is the commit barrier, and releasing
+        earlier would let the next holder RMW not-yet-visible bytes).
+        """
         if not self.tasks:
             return []
         arr, values = self.array, self.values
         store, codec = arr.store, arr._codec
         fdb = store.fdb
-        if self.rmw_chunks and fdb.dirty:
-            fdb.flush()         # make own unflushed chunks RMW-visible
+        # archives/barriers route per session when one is bound — its
+        # dirty bit decides the RMW pre-flush (sound because the RMW
+        # chunks are covered by OUR lease: no other session's unflushed
+        # archives can be hiding under them).  Deliberately the session
+        # captured at PLAN time, not store.client: the leases recorded on
+        # this plan belong to that session
+        client = self.session or fdb
+        if self.rmw_chunks and client.dirty:
+            client.flush()      # make own unflushed chunks RMW-visible
         locs: List[Optional[FieldLocation]] = [None] * len(self.tasks)
         for stage in self.stages:
             tiles: List[Optional[np.ndarray]] = [None] * len(stage)
             rmw = [(k, pos) for k, pos in enumerate(stage)
                    if not self.tasks[pos][3]]
             if rmw:             # coalesced whole-chunk fetches, then patch
+                # lease-protected fetch: fence before reading bytes we are
+                # about to patch — a broken lease means another writer may
+                # own (and be mid-write on) these chunks
+                self.check_leases()
                 fetch = ReadPlan.for_chunks(
                     arr, [self.tasks[pos][0] for _k, pos in rmw])
                 for (k, pos), tile in zip(rmw, fetch.read_chunks()):
@@ -487,9 +668,14 @@ class WritePlan:
             def put(ks: List[int]) -> List[FieldLocation]:
                 # one store-level submission per group: a posix group lands
                 # as a single buffered append; object groups are singletons
-                return fdb.archive_batch(
+                return client.archive_batch(
                     [(idents[k], blobs[k]) for k in ks])
 
+            # the fencing gate runs per stage, right before its archives: a
+            # stale writer loses at most one in-flight stage to the race
+            # window between check and archive, and can never pass another
+            # barrier after its lease was re-acquired
+            self.check_leases()
             # the one grouping decision lives in _stage_groups — write_ops()
             # accounting and execution must never diverge (check.sh asserts
             # on the plan's claim); stages are contiguous position runs, so
@@ -501,7 +687,8 @@ class WritePlan:
                 for k, loc in zip(ks, batch_locs):
                     locs[stage[k]] = loc
         if flush:
-            fdb.flush()
+            client.flush()
+            self.release_leases()
         return locs             # type: ignore[return-value]
 
 
@@ -525,10 +712,14 @@ class ReadPlan:
     """
 
     def __init__(self, array: "ChunkedArray", sel, squeeze,
-                 fill_missing: bool = True):
+                 fill_missing: bool = True,
+                 flips: Sequence[int] = ()):
         self.array = array
         self.sel = sel
         self.squeeze = squeeze
+        #: axes to reverse client-side after assembly — how negative-step
+        #: selections are served from a positive-step (ascending) I/O plan
+        self.flips = tuple(flips)
         self.tasks = list(array.grid.intersecting(sel))
         self._resolve(fill_missing)
 
@@ -543,6 +734,7 @@ class ReadPlan:
         plan.array = array
         plan.sel = None
         plan.squeeze = ()
+        plan.flips = ()
         plan.tasks = [
             (tuple(idx),
              tuple(slice(0, n, 1) for n in array.grid.chunk_shape(idx)),
@@ -628,6 +820,9 @@ class ReadPlan:
                 out[out_sel] = chunk[chunk_sel]
 
         arr.store.executor.map_ordered(lambda b: run_batch(*b), self.batches)
+        if self.flips:          # negative-step axes: one client-side flip
+            out = out[tuple(slice(None, None, -1) if a in self.flips
+                            else slice(None) for a in range(out.ndim))]
         if self.squeeze:
             out = out.reshape(tuple(
                 s for a, s in enumerate(out.shape) if a not in self.squeeze))

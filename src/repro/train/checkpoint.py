@@ -19,7 +19,11 @@ Semantics used:
 
 Async mode archives from a background thread (the paper's I/O-server
 pattern: compute and storage I/O overlap); ``wait()`` joins before the next
-checkpoint or at exit.
+checkpoint or at exit.  ``save_sharded()`` is the *multi-writer* variant:
+one :class:`~repro.core.WriterSession` per simulated rank, each leasing and
+writing its own chunk band of every tensor concurrently (chunk-range
+leases, ``repro.core.lease``), with a single flush as the step commit
+barrier.
 
 Storage path (``chunked=True``, the default): every tensor is a
 ``repro.tensorstore`` chunked array — the chunk index rides the ``shard``
@@ -211,6 +215,117 @@ class FDBCheckpointer:
         tail = buf[off:].view(np.float32)
         head = np.asarray(ops.field_decode(q, s, m, block=block))
         return np.concatenate([head.reshape(-1), tail]).astype(np.float32)
+
+    def save_sharded(self, step: int, params, opt_state=None,
+                     extra: Optional[Dict[str, Any]] = None) -> None:
+        """Multi-writer checkpoint save: every simulated rank leases and
+        writes its own shard band concurrently — the paper's parallel
+        I/O-server archive pattern on top of writer sessions.
+
+        Each of the ``n_shards`` ranks gets its own
+        :class:`~repro.core.WriterSession`; a rank's row band of every
+        tensor aligns exactly with the tensor's chunk banding
+        (``_tensor_chunks``), so each rank's :class:`WritePlan` acquires
+        the covering chunk-range lease (disjoint across ranks by
+        construction — a misconfigured overlap fails fast with
+        ``LeaseConflictError`` instead of racing), encodes and archives
+        its full-cover chunks with no RMW, and all ranks' chunk I/O flows
+        through the one bounded client executor.  Tensors too small to
+        band (scalars, single rows) are written whole by rank 0.  One
+        client ``flush()`` at the end is the step commit barrier, after
+        which every rank's session closes (releasing its leases).
+
+        Runs synchronously (unlike :meth:`save`, there is no async-queue
+        variant: the ranks *are* the concurrency).  Requires the chunked
+        layout.  Restore is unchanged — the result is byte-identical to a
+        sequential :meth:`save` of the same state.
+
+        Failure atomicity: if any rank fails, *nothing is flushed* — the
+        step's partial archives stay invisible (rule 3) and every rank's
+        leases are released, so a previous good save of the step remains
+        the live one.  Retry the save (same chunk keys re-archive
+        consistently) or :meth:`wipe_step` before the next barrier on this
+        client publishes the leftovers.
+        """
+        if not self.chunked:
+            raise ValueError("save_sharded requires the chunked layout "
+                             "(chunked=True)")
+        n_ranks = max(1, self.n_shards)
+        trees = [("params", jax.tree.map(np.asarray, params))]
+        if opt_state is not None:
+            trees.append(("opt", jax.tree.map(np.asarray, opt_state)))
+        #: per-rank (kind, name, meta, selection, values) write jobs
+        jobs: List[List[Tuple[str, str, Any, tuple, np.ndarray]]] = \
+            [[] for _ in range(n_ranks)]
+        for kind, tree in trees:
+            flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+            for path, leaf in flat:
+                arr = np.asarray(leaf)
+                name = _tensor_name(path)
+                codec = "field8" if self.compress and \
+                    self._compressible(arr) else "raw"
+                chunks = self._tensor_chunks(arr.shape, arr.dtype)
+                created = self._tensor_store(kind, step, name).create(
+                    arr.shape, arr.dtype, chunks=chunks, codec=codec,
+                    on_mismatch="retain")
+                banded = (n_ranks > 1 and arr.ndim >= 1 and arr.shape[0] > 1)
+                if banded:
+                    band = chunks[0]
+                    tail = (slice(None),) * (arr.ndim - 1)
+                    for r in range(n_ranks):
+                        lo, hi = r * band, min((r + 1) * band, arr.shape[0])
+                        if lo < hi:
+                            jobs[r].append((kind, name, created.meta,
+                                            (slice(lo, hi),) + tail,
+                                            arr[lo:hi]))
+                else:
+                    jobs[0].append((kind, name, created.meta,
+                                    (slice(None),) * arr.ndim, arr))
+        sessions = [self.fdb.session(f"rank{r}") for r in range(n_ranks)]
+        errors: List[BaseException] = []
+
+        def run_rank(r: int) -> None:
+            try:
+                for kind, name, meta, sel, values in jobs[r]:
+                    ts = TensorStore(
+                        None, {**self._dataset(kind, step),
+                               "host": self.host, "tensor": name},
+                        chunk_dim="shard", session=sessions[r])
+                    # bind the created metadata directly: it is not
+                    # flushed yet, so an open() could not see it (rule 3)
+                    ChunkedArray(ts, meta).write_plan(
+                        sel, values).execute(flush=False)
+            except BaseException as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=run_rank, args=(r,),
+                                    name=f"ckpt-rank{r}")
+                   for r in range(n_ranks) if jobs[r]]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        if errors:
+            # abandon WITHOUT flushing: a close() here would flush the
+            # dirty sessions and publish a partial checkpoint — versioning
+            # out any previous good save of this step.  The partial
+            # archives stay invisible (rule 3); retrying the save rewrites
+            # the same chunk keys consistently, or wipe_step() discards.
+            for s in sessions:
+                s.release_all()
+            raise errors[0]
+        if extra:
+            for k, v in extra.items():
+                ident = Identifier({**self._dataset("meta", step),
+                                    "host": self.host, "tensor": k,
+                                    "shard": "0"})
+                self.fdb.archive(ident, _pack(np.asarray(v)))
+        # the step commit barrier: one flush publishes every rank's chunks
+        # (and clears every session's dirty flag); closing then releases
+        # each rank's leases without a second flush
+        self.fdb.flush()
+        for s in sessions:
+            s.close()
 
     def save(self, step: int, params, opt_state=None,
              extra: Optional[Dict[str, Any]] = None) -> None:

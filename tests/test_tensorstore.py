@@ -690,8 +690,10 @@ def test_indexing_edge_cases(tmp_path):
     assert arr[2:2].size == 0                                # empty selection
     np.testing.assert_array_equal(arr[::2], x[::2])          # strided reads
     np.testing.assert_array_equal(arr[1::3, :, 4], x[1::3, :, 4])
-    with pytest.raises(IndexError):
-        arr[::-1]                                            # negative steps
+    np.testing.assert_array_equal(arr[::-1], x[::-1])        # reversed reads
+    np.testing.assert_array_equal(arr[8:2:-2, ::-1], x[8:2:-2, ::-1])
+    with pytest.raises(NotImplementedError, match="read path"):
+        arr[::-1] = x[::-1]                 # reversed writes stay rejected
     with pytest.raises(IndexError):
         arr[0, 0, 0, 0]
     fdb.close()
@@ -1049,6 +1051,114 @@ def test_strided_read_skips_strided_over_chunks(tmp_path):
     fdb.close()
 
 
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_negative_step_read_roundtrip(backend, tmp_path):
+    """Reversed reads on every backend: normalised to a positive-step plan
+    plus one client-side flip, so results match numpy exactly."""
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.random.default_rng(11).normal(size=(37, 53)).astype(np.float32)
+    ts.save(x, chunks=(16, 16))
+    arr = ts.open()
+    for sel in [
+        (slice(None, None, -1), slice(None)),
+        (slice(None, None, -1), slice(None, None, -1)),
+        (slice(30, 4, -3), slice(50, None, -7)),
+        (slice(None, None, -16),),           # step larger than the chunk
+        (5, slice(None, None, -2)),          # int squeeze + reversed
+        (slice(2, 2, -1), slice(None)),      # empty reversed slice
+    ]:
+        np.testing.assert_array_equal(arr[sel], x[sel], err_msg=str(sel))
+    # the plan only touches chunks holding selected points, same as the
+    # forward equivalent
+    plan = arr.read_plan((slice(None, None, -16), slice(None, None, -16)))
+    fwd = arr.read_plan((slice(36, None, -16), slice(52, None, -16)))
+    assert plan.n_chunks == fwd.n_chunks
+    # writes and reshards keep rejecting reversed selections
+    with pytest.raises(NotImplementedError, match="read path"):
+        arr.write_plan((slice(None, None, -1), slice(None)), x[::-1])
+    with pytest.raises(NotImplementedError, match="read path"):
+        arr.reshard_plan((8, 53), sel=(slice(None, None, -1), slice(None)))
+    fdb.close()
+
+
+@pytest.mark.parametrize("backend", ["daos", "posix"])
+def test_zero_length_selections(backend, tmp_path):
+    """Empty selections are clean no-ops on read, write and reshard:
+    empty arrays out, empty values in, zero planned I/O ops."""
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.arange(36, dtype=np.float32).reshape(6, 6)
+    ts.save(x, chunks=(2, 2))
+    arr = ts.open()
+    # reads
+    assert arr[3:3].shape == (0, 6)
+    assert arr[5:5:3, 1:4].shape == (0, 3)      # empty strided window
+    assert arr[2:2, 4:4].size == 0
+    rp = arr.read_plan((slice(3, 3), slice(None)))
+    assert rp.n_chunks == 0 and rp.read_ops() == 0
+    # writes: empty value arrays are accepted, nothing is archived
+    wp = arr.write_plan((slice(3, 3), slice(None)),
+                        np.zeros((0, 6), np.float32))
+    assert wp.n_chunks == 0 and wp.write_ops() == 0 and wp.leases == []
+    assert wp.execute() == []
+    arr[4:4] = 7.0                               # broadcast onto empty: noop
+    arr[0:0, 0:0] = np.zeros((0, 0), np.float32)
+    np.testing.assert_array_equal(arr.read(), x)
+    # reshard of an empty sub-selection: a valid empty array, no data I/O
+    arr.reshard((2, 2), sel=(slice(3, 3), slice(None)))
+    assert arr.shape == (0, 6)
+    assert arr.read().shape == (0, 6)
+    fdb.close()
+
+
+@pytest.mark.parametrize("backend", ["daos", "posix"])
+def test_garbage_report_after_reshard_and_recreate(backend, tmp_path):
+    """garbage_report counts retained old-generation chunk bytes — the
+    versioned-retain cost of reshards and on_mismatch='retain' re-creates
+    (and only that: a fresh array reports zero garbage)."""
+    from repro.tensorstore import GarbageReport
+    fdb, ts = make_store(backend, tmp_path)
+    x = np.random.default_rng(5).normal(size=(32, 32)).astype(np.float32)
+    arr = ts.save(x, chunks=(8, 8))              # 16 chunks x 256 B
+    rep = ts.garbage_report()
+    assert isinstance(rep, GarbageReport)
+    assert rep.live_generation == 0 and rep.live_chunks == 16
+    assert rep.live_bytes == x.nbytes and rep.garbage_bytes == 0
+    arr.reshard((16, 32))                        # gen 0 -> versioned garbage
+    rep = ts.garbage_report()
+    assert rep.live_generation == 1 and rep.live_chunks == 2
+    assert rep.garbage_chunks == 16 and rep.garbage_bytes == x.nbytes
+    assert rep.garbage_generations == (0,)
+    # a retain re-create strands generation 1's chunks as well
+    ts.create((32, 32), np.float32, chunks=(4, 4), on_mismatch="retain")
+    fdb.flush()
+    rep = ts.garbage_report()
+    assert rep.live_generation == 2 and rep.live_chunks == 0
+    assert rep.garbage_chunks == 18 and rep.garbage_generations == (0, 1)
+    assert rep.garbage_bytes == 2 * x.nbytes
+    fdb.close()
+
+
+def test_grid_linear_id_and_merge_ranges():
+    from repro.tensorstore import merge_id_ranges
+    g = ChunkGrid((37, 53), (16, 16))            # (3, 4) chunk grid
+    ids = [g.linear_id(idx) for idx in g.all_indices()]
+    assert ids == list(range(12))                # row-major, dense
+    assert g.linear_id((2, 3)) == 11
+    with pytest.raises(IndexError):
+        g.linear_id((3, 0))
+    assert merge_id_ranges([0, 1, 2, 7, 8]) == [(0, 3), (7, 9)]
+    assert merge_id_ranges([3, 1, 1, 2]) == [(1, 4)]     # dups + unsorted
+    assert merge_id_ranges([]) == []
+    # a row band of chunks leases as ONE contiguous range; a column band
+    # fragments into one range per chunk row
+    row_band = [g.linear_id(idx) for idx, _c, _o in g.intersecting(
+        g.normalize_key((slice(0, 16), slice(None)))[0])]
+    assert merge_id_ranges(row_band) == [(0, 4)]
+    col_band = [g.linear_id(idx) for idx, _c, _o in g.intersecting(
+        g.normalize_key((slice(None), slice(0, 16)))[0])]
+    assert merge_id_ranges(col_band) == [(0, 1), (4, 5), (8, 9)]
+
+
 def test_grid_strided_math():
     g = ChunkGrid((37, 53), (16, 16))
     sel, squeeze = g.normalize_key((slice(None, None, 5), slice(1, 50, 9)))
@@ -1078,8 +1188,18 @@ def test_grid_strided_math():
     g3 = ChunkGrid((4, 1), (2, 1))
     sel, _ = g3.normalize_key((slice(None), slice(None, None, 3)))
     assert all(full for *_x, full in g3.write_plan(sel))
-    with pytest.raises(IndexError, match="positive step"):
+    # write/reshard normalisation still rejects negative steps; the read
+    # path serves them via normalize_read_key (positive plan + flip)
+    with pytest.raises(NotImplementedError, match="positive step"):
         g.normalize_key((slice(None, None, -1),))
+    sel, squeeze, flips = g.normalize_read_key(
+        (slice(None, None, -5), slice(49, None, -9)))
+    assert squeeze == () and flips == (0, 1)
+    assert sel[0] == slice(1, 37, 5)     # 36, 31, ... 1 ascending
+    assert sel[1] == slice(4, 50, 9)     # 49, 40, ... 4 ascending
+    sel, _sq, flips = g.normalize_read_key((slice(2, 2, -1), slice(None)))
+    assert g.selection_shape(sel) == (0, 53)    # empty reversed slice
+    assert flips == ()
 
 
 # ---------------------------------------------------------------------------
