@@ -40,6 +40,7 @@ import numpy as np
 
 from repro.core import (FDB, FDBConfig, LeaseConflictError, Meter, PROFILES,
                         model_run, reset_engines)
+from repro.obs.trace import GLOBAL_TRACER, Tracer
 from repro.tensorstore import ChunkExecutor, TensorStore
 from .common import Row
 
@@ -60,6 +61,24 @@ TINY_CONTENTION_WRITERS = (2,)
 TINY_CONTENTION_WINDOWS = ("full",)
 
 
+def _bench_tracer() -> Tracer:
+    """The tracer bench cells record into: the (enabled) global tracer when
+    ``run.py --trace`` switched it on — so the exported trace sees every
+    cell — otherwise a private enabled one, so the phase-attributed
+    ``t_*`` columns are populated either way."""
+    return GLOBAL_TRACER if GLOBAL_TRACER.enabled else Tracer(enabled=True)
+
+
+def _phase_extra(tracer: Tracer, mark: int, wall_s: float):
+    """The phase-attributed latency columns: summed span µs per wall-time
+    phase over the window since ``mark`` (concurrent spans sum, so the
+    totals can exceed ``wall_us`` when the executor overlaps I/O)."""
+    pt = tracer.phase_totals(since=mark)
+    return {"t_queue_us": pt["queue"], "t_io_us": pt["io"],
+            "t_decode_us": pt["decode"], "t_encode_us": pt["encode"],
+            "wall_us": round(wall_s * 1e6, 3)}
+
+
 def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
     rows: List[Row] = []
     x = np.random.default_rng(0).normal(size=SHAPE).astype(np.float32)
@@ -70,29 +89,34 @@ def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
         for edge in edges:
             for par in parallelisms:
                 meter = Meter()
+                tracer = _bench_tracer()
                 reset_engines()
                 root = f"/tmp/fdb-bench-ts-{backend}-{edge}-{par}-{os.getpid()}"
                 shutil.rmtree(root, ignore_errors=True)
                 # parallelism lever: the explicitly sized executor below
                 fdb = FDB(FDBConfig(backend=backend, schema="tensor",
-                                    root=root), meter=meter)
+                                    root=root), meter=meter, tracer=tracer)
                 executor = ChunkExecutor(max_workers=max(par, 1),
                                          max_in_flight=4 * max(par, 1))
                 ts = TensorStore(fdb, {"store": "bench", "array": "field",
                                        "writer": "p0"}, executor=executor)
                 n_chunks = (-(-SHAPE[0] // edge)) * (-(-SHAPE[1] // edge))
 
+                mk_w = tracer.mark()
                 t0 = time.perf_counter()
                 ts.save(x, chunks=(edge, edge))
                 wall_w = time.perf_counter() - t0
+                ph_w = _phase_extra(tracer, mk_w, wall_w)
                 mw = model_run(meter.snapshot(), PROFILES[profile],
                                server_nodes=SERVERS)
 
                 meter.reset()
                 arr = ts.open()
+                mk_r = tracer.mark()
                 t0 = time.perf_counter()
                 arr[96:160, :]           # 64-row window: partial read
                 wall_r = time.perf_counter() - t0
+                ph_r = _phase_extra(tracer, mk_r, wall_r)
                 mr = model_run(meter.snapshot(), PROFILES[profile],
                                server_nodes=SERVERS)
                 # planned I/O-op counts after coalescing, write and read
@@ -107,19 +131,25 @@ def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                     f"{tag}/write", wall_w / n_chunks * 1e6,
                     f"modeled={mw.write_bw / 2**30:.2f}GiB/s "
                     f"dominant={mw.dominant} "
-                    f"write_ops={wplan.write_ops()}/{wplan.n_chunks}chunks",
+                    f"write_ops={wplan.write_ops()}/{wplan.n_chunks}chunks "
+                    f"t_queue={ph_w['t_queue_us']:.0f}us "
+                    f"t_io={ph_w['t_io_us']:.0f}us "
+                    f"t_encode={ph_w['t_encode_us']:.0f}us",
                     extra={"backend": backend, "chunk_edge": edge,
                            "parallelism": par,
                            "write_ops": wplan.write_ops(),
                            "n_chunks": wplan.n_chunks,
                            "modeled_write_gib_s": round(mw.write_bw / 2**30,
-                                                        4)}))
+                                                        4), **ph_w}))
                 rows.append(Row(
                     f"{tag}/window_read", wall_r * 1e6,
                     f"modeled={mr.read_bw / 2**30:.2f}GiB/s "
                     f"dominant={mr.dominant} "
                     f"ops={window.read_ops()}/{window.n_chunks}chunks "
-                    f"full_ops={full.read_ops()}/{full.n_chunks}chunks",
+                    f"full_ops={full.read_ops()}/{full.n_chunks}chunks "
+                    f"t_queue={ph_r['t_queue_us']:.0f}us "
+                    f"t_io={ph_r['t_io_us']:.0f}us "
+                    f"t_decode={ph_r['t_decode_us']:.0f}us",
                     extra={"backend": backend, "chunk_edge": edge,
                            "parallelism": par,
                            "read_ops": window.read_ops(),
@@ -127,7 +157,7 @@ def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                            "full_read_ops": full.read_ops(),
                            "full_n_chunks": full.n_chunks,
                            "modeled_read_gib_s": round(mr.read_bw / 2**30,
-                                                       4)}))
+                                                       4), **ph_r}))
 
                 # reshard: producer grid (edge, edge) -> consumer grid
                 # (edge/2, 2*edge), streamed through composed plans; the
@@ -137,9 +167,11 @@ def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                 rplan = arr.reshard_plan((max(1, edge // 2), 2 * edge))
                 naive_r, naive_w = (rplan.src_chunk_fetches(),
                                     rplan.n_dest_chunks)
+                mk_rs = tracer.mark()
                 t0 = time.perf_counter()
                 rplan.execute()
                 wall_rs = time.perf_counter() - t0
+                ph_rs = _phase_extra(tracer, mk_rs, wall_rs)
                 ms = model_run(meter.snapshot(), PROFILES[profile],
                                server_nodes=SERVERS)
                 # retained-garbage accounting (catalogue walk only) runs
@@ -162,7 +194,8 @@ def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                            "reshard_batches": rplan.n_batches,
                            "peak_staged_bytes": rplan.peak_staged_bytes,
                            "garbage_chunks": garbage.garbage_chunks,
-                           "garbage_bytes": garbage.garbage_bytes}))
+                           "garbage_bytes": garbage.garbage_bytes,
+                           **ph_rs}))
                 executor.shutdown()
                 fdb.close()
                 shutil.rmtree(root, ignore_errors=True)
@@ -189,12 +222,13 @@ def contention_rows(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                 band = SHAPE[0] // n_writers
                 rows_per_writer = band if window == "full" else band // 2
                 meter = Meter()
+                tracer = _bench_tracer()
                 reset_engines()
                 root = (f"/tmp/fdb-bench-ts-cont-{backend}-{n_writers}-"
                         f"{window}-{os.getpid()}")
                 shutil.rmtree(root, ignore_errors=True)
                 fdb = FDB(FDBConfig(backend=backend, schema="tensor",
-                                    root=root), meter=meter)
+                                    root=root), meter=meter, tracer=tracer)
                 base = {"store": "bench", "array": "shared", "writer": "p0"}
                 TensorStore(fdb, base).create(SHAPE, np.float32,
                                               chunks=(chunk, chunk))
@@ -217,6 +251,7 @@ def contention_rows(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                     except Exception as e:  # noqa: BLE001
                         errors.append(e)
 
+                mk = tracer.mark()
                 t0 = time.perf_counter()
                 threads = [threading.Thread(target=execute, args=(p,))
                            for p in plans]
@@ -226,6 +261,7 @@ def contention_rows(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                     t.join()
                 fdb.flush()              # one commit barrier for all bands
                 wall = time.perf_counter() - t0
+                ph = _phase_extra(tracer, mk, wall)
                 if errors:
                     raise errors[0]
                 m = model_run(meter.snapshot(), PROFILES[profile],
@@ -248,7 +284,7 @@ def contention_rows(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                            "write_ops": write_ops, "n_chunks": n_chunks,
                            "lease_conflicts": conflicts,
                            "modeled_write_gib_s": round(
-                               m.write_bw / 2**30, 4)}))
+                               m.write_bw / 2**30, 4), **ph}))
                 fdb.close()
                 shutil.rmtree(root, ignore_errors=True)
     return rows

@@ -5,6 +5,13 @@ dumps the rows (with their structured read_ops/write_ops/throughput fields)
 to a perf-trajectory file — the repo commits one ``BENCH_<n>.json`` per perf
 PR so regressions are diffable.  ``--suites a,b`` selects suites,
 ``--tiny`` switches suites that support it onto their CI smoke profile.
+
+``--trace FILE`` enables the process tracer (:mod:`repro.obs`) for the
+whole run and writes one combined Chrome ``trace_event`` JSON — each suite
+becomes a Perfetto process row (``pid`` = suite index) so the plan
+lifecycle spans (``plan.resolve`` → ``io.fetch``/``codec.decode`` → ...)
+of every benchmark land on one timeline.  Open it at
+https://ui.perfetto.dev.
 """
 from __future__ import annotations
 
@@ -35,6 +42,9 @@ def main(argv=None) -> None:
                     help="also dump rows as JSON to FILE")
     ap.add_argument("--tiny", action="store_true",
                     help="tiny CI profile for suites that support it")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="enable I/O tracing and write a Chrome trace_event "
+                         "JSON (load in https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
 
     wanted = None if args.suites is None else {
@@ -46,11 +56,20 @@ def main(argv=None) -> None:
             sys.exit(f"unknown suites: {sorted(unknown)} "
                      f"(known: {[n for n, _m in SUITES]})")
 
+    tracer = None
+    if args.trace:
+        from repro.obs.trace import GLOBAL_TRACER
+        tracer = GLOBAL_TRACER
+        tracer.enable()
+
     import importlib
     print("name,us_per_call,derived")
     failures = 0
     json_rows = []
-    for name, modname in selected:
+    trace_events = []
+    for pid, (name, modname) in enumerate(selected):
+        if tracer is not None:
+            mark = tracer.mark()
         try:
             mod = importlib.import_module(f"benchmarks.{modname}")
             kwargs = {}
@@ -64,6 +83,21 @@ def main(argv=None) -> None:
             failures += 1
             print(f"{name},,ERROR", flush=True)
             traceback.print_exc()
+        if tracer is not None:
+            trace_events.append({"name": "process_name", "ph": "M",
+                                 "pid": pid, "tid": 0,
+                                 "args": {"name": f"suite:{name}"}})
+            trace_events.extend(tracer.chrome_events(since=mark, pid=pid))
+    if tracer is not None:
+        with open(args.trace, "w") as f:
+            json.dump({"traceEvents": trace_events,
+                       "displayTimeUnit": "ms"}, f)
+        if tracer.dropped:
+            print(f"[trace buffer overflow: {tracer.dropped} oldest spans "
+                  f"evicted — raise repro.obs.trace.DEFAULT_CAPACITY or "
+                  f"trace fewer suites]", file=sys.stderr)
+        print(f"trace written to {args.trace} "
+              f"(open in https://ui.perfetto.dev)", file=sys.stderr)
     if args.json:
         with open(args.json, "w") as f:
             json.dump({"suites": [n for n, _m in selected],

@@ -9,8 +9,13 @@
 #      — posix coalescing (write + reshard) must stay below per-chunk
 #      counts, and the multi-writer contention scenario (N sessions x
 #      disjoint leased windows) must stay conflict-free with write_ops
-#      coalesced per writer;
-#   4. docs gate — README.md/docs/*.md internal links resolve and the
+#      coalesced per writer; the run also exports an I/O trace (--trace)
+#      that must be valid, non-empty Chrome trace_event JSON, and the
+#      phase-attributed t_queue/t_io/t_decode/t_encode columns must be
+#      present and sane on the bench rows;
+#   4. trace smoke — a traced chunked roundtrip on all four backends must
+#      record plan/io/codec spans (and record nothing with tracing off);
+#   5. docs gate — README.md/docs/*.md internal links resolve and the
 #      fenced python quickstart blocks actually execute.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -19,11 +24,12 @@ python -m compileall -q src
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python -m pytest -x -q "$@"
 
 smoke_json=$(mktemp /tmp/bench_smoke.XXXXXX.json)
-trap 'rm -f "$smoke_json"' EXIT
+trace_json=$(mktemp /tmp/bench_trace.XXXXXX.json)
+trap 'rm -f "$smoke_json" "$trace_json"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
     python -m benchmarks.run --suites tensorstore --tiny \
-    --json "$smoke_json" > /dev/null
-python - "$smoke_json" <<'PY'
+    --json "$smoke_json" --trace "$trace_json" > /dev/null
+python - "$smoke_json" "$trace_json" <<'PY'
 import json, sys
 d = json.load(open(sys.argv[1]))
 rows = d["rows"]
@@ -48,7 +54,81 @@ assert all(r["lease_conflicts"] == 0 for r in cont), \
 pcont = [r for r in cont if r.get("backend") == "posix"]
 assert pcont and all(r["write_ops"] <= r["writers"] for r in pcont), \
     "posix contention coalescing regressed: more store writes than writers"
-print(f"bench smoke OK: {len(rows)} rows ({len(cont)} contention)")
+
+# phase-attributed latency columns (repro.obs): every tensorstore bench
+# row must carry them, io time must be nonzero where I/O happened, and
+# the phase sum must stay within a sane multiple of the row's wall time
+# (concurrent spans sum, so the total may exceed wall -- but not absurdly)
+phased = [r for r in rows if "wall_us" in r]
+assert phased, "no phase-attributed (t_*) bench rows"
+for r in phased:
+    for col in ("t_queue_us", "t_io_us", "t_decode_us", "t_encode_us"):
+        assert col in r and r[col] >= 0, f"missing/negative {col}: {r['name']}"
+    total = r["t_queue_us"] + r["t_io_us"] + r["t_decode_us"] + r["t_encode_us"]
+    assert total <= r["wall_us"] * 64, \
+        f"phase totals absurdly above wall: {r['name']} ({total} vs {r['wall_us']}us)"
+writes = [r for r in phased if r["name"].endswith("/write")]
+reads = [r for r in phased if r["name"].endswith("/window_read")]
+assert writes and all(r["t_io_us"] > 0 for r in writes), \
+    "write rows recorded no io.archive span time"
+assert reads and all(r["t_io_us"] > 0 for r in reads), \
+    "read rows recorded no io.fetch span time"
+
+# exported Chrome trace: valid JSON, nonzero complete events, well-formed
+t = json.load(open(sys.argv[2]))
+ev = t["traceEvents"]
+xs = [e for e in ev if e.get("ph") == "X"]
+assert xs, "trace export contains no complete ('X') span events"
+for e in xs[:64]:
+    assert {"name", "ph", "ts", "dur", "pid", "tid"} <= set(e), \
+        f"malformed trace event: {e}"
+names = {e["name"] for e in xs}
+assert "io.archive" in names or "io.fetch" in names, \
+    f"trace has no io spans: {sorted(names)[:20]}"
+print(f"bench smoke OK: {len(rows)} rows ({len(cont)} contention), "
+      f"trace OK: {len(xs)} spans")
+PY
+
+# trace smoke: a traced chunked roundtrip on all four simulated backends
+# must record plan/io/codec spans, and the disabled path must record none
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import numpy as np
+from repro.core import FDB, FDBConfig, reset_engines
+from repro.obs.trace import Tracer
+from repro.tensorstore import TensorStore
+
+for backend in ("daos", "rados", "posix", "s3"):
+    reset_engines()
+    tracer = Tracer(enabled=True)
+    fdb = FDB(FDBConfig(backend=backend, schema="tensor",
+                        root=f"/tmp/trace-smoke-{backend}"), tracer=tracer)
+    ts = TensorStore(fdb, {"store": "smoke", "array": "a", "writer": "w"})
+    x = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
+    ts.save(x, chunks=(32, 32))
+    arr = ts.open()
+    np.testing.assert_array_equal(arr[:, :], x)
+    names = {s.name for s in tracer.spans()}
+    need = {"plan.resolve", "plan.execute", "io.archive", "io.fetch",
+            "codec.encode", "codec.decode", "fdb.flush",
+            f"store.{backend}.archive"}
+    missing = need - names
+    assert not missing, f"{backend}: missing spans {sorted(missing)}"
+    pt = tracer.phase_totals()
+    assert pt["io"] > 0 and pt["encode"] > 0 and pt["decode"] > 0, \
+        f"{backend}: zero phase totals {pt}"
+    fdb.close()
+
+    # disabled tracer: the same roundtrip must record nothing
+    reset_engines()
+    off = Tracer(enabled=False)
+    fdb = FDB(FDBConfig(backend=backend, schema="tensor",
+                        root=f"/tmp/trace-smoke-off-{backend}"), tracer=off)
+    ts = TensorStore(fdb, {"store": "smoke", "array": "a", "writer": "w"})
+    ts.save(x, chunks=(32, 32))
+    np.testing.assert_array_equal(ts.open()[:, :], x)
+    assert not off.spans(), f"{backend}: disabled tracer recorded spans"
+    fdb.close()
+print("trace smoke OK: 4 backends traced, disabled path records nothing")
 PY
 
 python scripts/docs_check.py

@@ -19,6 +19,7 @@ from ..interfaces import Catalogue, Store
 from ..lease import CatalogueLeaseMixin
 from ..schema import Identifier, Schema
 from ..util import stable_hash
+from repro.obs.trace import span as obs_span
 
 ROOT_KV_OID = 0
 #: Index/axis KV OIDs live far above the allocated-array OID space.
@@ -69,11 +70,13 @@ class DaosStore(Store):
                 collocation: Identifier) -> FieldLocation:
         # NOTE: the collocation key does not drive placement on DAOS (§3.1.1);
         # all fields of a dataset share one container.
-        label = dataset.canonical()
-        self._ensure_container(label)
-        oid = self._next_oid(label)
-        self.engine.array_open_with_attr(self.pool, label, oid, self.oclass)
-        self.engine.array_write(self.pool, label, oid, 0, data)
+        with obs_span("store.daos.archive", nbytes=len(data)):
+            label = dataset.canonical()
+            self._ensure_container(label)
+            oid = self._next_oid(label)
+            self.engine.array_open_with_attr(self.pool, label, oid,
+                                             self.oclass)
+            self.engine.array_write(self.pool, label, oid, 0, data)
         return FieldLocation(self.scheme, label, str(oid), 0, len(data),
                              pool=self.pool)
 

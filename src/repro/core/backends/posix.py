@@ -38,6 +38,7 @@ import msgpack
 from ..engine.meter import GLOBAL_METER, Meter
 from ..handle import DataHandle, FieldLocation, FileRangeHandle
 from ..interfaces import Catalogue, Store
+from repro.obs.trace import span as obs_span
 from ..lease import CatalogueLeaseMixin
 from ..schema import Identifier, Schema
 from ..util import stable_hash
@@ -196,7 +197,7 @@ class PosixStore(Store):
 
     def archive(self, data: bytes, dataset: Identifier,
                 collocation: Identifier) -> FieldLocation:
-        with self._lock:
+        with obs_span("store.posix.archive", nbytes=len(data)), self._lock:
             ent = self._entry(dataset, collocation)
             f = self._open_entry(ent, dataset)
             path, _f, offset, unsynced = ent
@@ -226,7 +227,8 @@ class PosixStore(Store):
         reduction the paper's POSIX scaling numbers call for.  Offsets are
         reserved in input order, so per-item locations stay exact."""
         locs: List[Optional[FieldLocation]] = [None] * len(items)
-        with self._lock:
+        with obs_span("store.posix.archive_batch", items=len(items),
+                      nbytes=sum(len(d) for d, _ds, _c in items)), self._lock:
             per_file: Dict[int, Tuple[List, str, List[Tuple[int, bytes]]]] = {}
             for pos, (data, dataset, collocation) in enumerate(items):
                 ent = self._entry(dataset, collocation)

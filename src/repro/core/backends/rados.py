@@ -33,6 +33,7 @@ from ..handle import DataHandle, FieldLocation, LazyHandle
 from ..interfaces import Catalogue, Store
 from ..lease import CatalogueLeaseMixin
 from ..schema import Identifier, Schema
+from repro.obs.trace import span as obs_span
 
 MiB = 1024 ** 2
 _uniq_counter = itertools.count()
@@ -90,6 +91,11 @@ class RadosStore(Store):
     # -- Store interface -----------------------------------------------------------
     def archive(self, data: bytes, dataset: Identifier,
                 collocation: Identifier) -> FieldLocation:
+        with obs_span("store.rados.archive", nbytes=len(data)):
+            return self._archive(data, dataset, collocation)
+
+    def _archive(self, data: bytes, dataset: Identifier,
+                 collocation: Identifier) -> FieldLocation:
         pool, ns = self._locate(dataset)
         if self.object_mode == "per_field":
             name = _unique_name(collocation.canonical())

@@ -26,6 +26,7 @@ from ..engine.s3 import S3Engine
 from ..handle import DataHandle, FieldLocation, LazyHandle
 from ..interfaces import Store
 from ..schema import Identifier
+from repro.obs.trace import span as obs_span
 
 _uniq = itertools.count()
 
@@ -58,6 +59,11 @@ class S3Store(Store):
 
     def archive(self, data: bytes, dataset: Identifier,
                 collocation: Identifier) -> FieldLocation:
+        with obs_span("store.s3.archive", nbytes=len(data)):
+            return self._archive(data, dataset, collocation)
+
+    def _archive(self, data: bytes, dataset: Identifier,
+                 collocation: Identifier) -> FieldLocation:
         bucket = self._bucket(dataset)
         if self.object_mode == "per_field":
             key = (f"{collocation.canonical()}/"

@@ -48,13 +48,36 @@ class Op:
     unit: str = ""   # hot-spot unit (e.g. a KV object key) for contention model
 
 
-class Meter:
-    """Thread-safe op trace + rollup counters."""
+#: default cap on the retained op trace (~1M ops); rollup counters stay
+#: exact past the cap, only the per-op list stops growing
+DEFAULT_MAX_OPS = 1 << 20
 
-    def __init__(self) -> None:
+
+class Meter:
+    """Thread-safe op trace + rollup counters.
+
+    The per-op trace (``ops``) is bounded by ``max_ops`` (None = unbounded):
+    past the cap the meter switches to rollup-only mode — :meth:`record`
+    keeps updating the exact incremental counters that :meth:`summary`
+    reports, but drops the :class:`Op` object instead of appending it.
+    Nothing is evicted, so ``snapshot()`` stays a stable prefix of the run
+    and existing ``snapshot()[len(before):]`` windowing keeps working below
+    the cap.  Truncation is visible via ``dropped_ops`` and the
+    ``trace_truncated`` summary field.
+    """
+
+    def __init__(self, max_ops: Optional[int] = DEFAULT_MAX_OPS) -> None:
         self._lock = threading.Lock()
         self.ops: List[Op] = []
         self.enabled = True
+        self.max_ops = max_ops
+        self._dropped = 0
+        # exact rollups, maintained incrementally so they survive truncation
+        self._kind_count: Counter = Counter()
+        self._kind_bytes: Counter = Counter()
+        self._clients: set = set()
+        self._resources: set = set()
+        self._total = 0
 
     def record(self, resource: str, kind: str, nbytes: int = 0,
                unit: str = "") -> None:
@@ -62,27 +85,45 @@ class Meter:
             return
         op = Op(current_client(), resource, kind, nbytes, unit)
         with self._lock:
-            self.ops.append(op)
+            self._total += 1
+            self._kind_count[kind] += 1
+            self._kind_bytes[kind] += nbytes
+            self._clients.add(op.client)
+            self._resources.add(resource)
+            if self.max_ops is None or len(self.ops) < self.max_ops:
+                self.ops.append(op)
+            else:
+                self._dropped += 1
 
     def reset(self) -> None:
         with self._lock:
             self.ops = []
+            self._dropped = 0
+            self._kind_count = Counter()
+            self._kind_bytes = Counter()
+            self._clients = set()
+            self._resources = set()
+            self._total = 0
+
+    @property
+    def dropped_ops(self) -> int:
+        """Ops counted in rollups but not retained in the trace."""
+        return self._dropped
 
     # Rollups ----------------------------------------------------------------
     def summary(self) -> Dict[str, object]:
         with self._lock:
-            ops = list(self.ops)
-        kinds = Counter(op.kind for op in ops)
-        bytes_by_kind: Counter = Counter()
-        for op in ops:
-            bytes_by_kind[op.kind] += op.nbytes
-        return {
-            "total_ops": len(ops),
-            "ops_by_kind": dict(kinds),
-            "bytes_by_kind": dict(bytes_by_kind),
-            "clients": len({op.client for op in ops}),
-            "resources": len({op.resource for op in ops}),
-        }
+            out = {
+                "total_ops": self._total,
+                "ops_by_kind": dict(self._kind_count),
+                "bytes_by_kind": dict(self._kind_bytes),
+                "clients": len(self._clients),
+                "resources": len(self._resources),
+            }
+            if self._dropped:
+                out["dropped_ops"] = self._dropped
+                out["trace_truncated"] = True
+            return out
 
     def snapshot(self) -> List[Op]:
         with self._lock:

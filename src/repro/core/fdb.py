@@ -35,9 +35,10 @@ from .engine.s3 import S3Engine
 from .handle import (DataHandle, FieldLocation, MultiHandle, PlacementHandle,
                      group_mergeable)
 from .interfaces import Catalogue, Store
-from .lease import Lease
+from .lease import Lease, LeaseConflictError, StaleLeaseError
 from .schema import (CHECKPOINT_SCHEMA, Identifier, NWP_OBJECT_SCHEMA,
                      NWP_POSIX_SCHEMA, SCHEMAS, Schema)
+from repro.obs.trace import GLOBAL_TRACER, Span, Tracer
 
 BytesLike = Union[bytes, bytearray, memoryview, np.ndarray]
 
@@ -146,7 +147,8 @@ class FDB:
     """One FDB client instance ≈ one producer/consumer process."""
 
     def __init__(self, config: Optional[FDBConfig] = None,
-                 meter: Optional[Meter] = None, **overrides):
+                 meter: Optional[Meter] = None,
+                 tracer: Optional[Tracer] = None, **overrides):
         if config is None:
             config = FDBConfig(**overrides)
         elif overrides:
@@ -154,6 +156,10 @@ class FDB:
         self.config = config
         self.schema = config.resolved_schema()
         self.meter = meter or GLOBAL_METER
+        #: structured tracing + metrics (repro.obs); defaults to the shared
+        #: process tracer, disabled out of the box — pass a private
+        #: ``Tracer(enabled=True)`` for an isolated per-client buffer
+        self.tracer = tracer or GLOBAL_TRACER
         self.store, self.catalogue = self._build_backends()
         self._closed = False
         self._dirty = False
@@ -259,8 +265,9 @@ class FDB:
         the shared tail of :meth:`archive`/:meth:`archive_many`, so batch
         paths canonicalise each identifier exactly once."""
         dataset, collocation, element = split
-        loc = self.store.archive(data, dataset, collocation)
-        self.catalogue.archive(dataset, collocation, element, loc)
+        with self.tracer.span("fdb.archive", nbytes=len(data)):
+            loc = self.store.archive(data, dataset, collocation)
+            self.catalogue.archive(dataset, collocation, element, loc)
         self._mark_dirty()
         return loc
 
@@ -302,13 +309,15 @@ class FDB:
     def _archive_batch_split(self, split) -> List[FieldLocation]:
         """Batch-archive pre-split ``((dataset, collocation, element),
         bytes)`` pairs — one store submission + one catalogue batch."""
-        locs = self.store.archive_batch(
-            [(data, dataset, collocation)
-             for (dataset, collocation, _e), data in split])
-        self.catalogue.archive_batch(
-            [(dataset, collocation, element, loc)
-             for ((dataset, collocation, element), _d), loc
-             in zip(split, locs)])
+        with self.tracer.span("fdb.archive_batch", items=len(split),
+                              nbytes=sum(len(d) for _s, d in split)):
+            locs = self.store.archive_batch(
+                [(data, dataset, collocation)
+                 for (dataset, collocation, _e), data in split])
+            self.catalogue.archive_batch(
+                [(dataset, collocation, element, loc)
+                 for ((dataset, collocation, element), _d), loc
+                 in zip(split, locs)])
         if split:
             self._mark_dirty()
         return locs
@@ -404,7 +413,8 @@ class FDB:
         # serialised: two sessions' commit barriers must not interleave
         # inside the backends (the posix catalogue appends partial-index
         # records at offsets it just measured)
-        with self._flush_lock:
+        with self.tracer.span("fdb.flush", backend=self.config.backend,
+                              dirty=self._dirty), self._flush_lock:
             # capture markers FIRST: an archive completing before a marker
             # is included in the flush below; one completing after bumps
             # its sequence, so the conditional clear leaves it dirty —
@@ -464,8 +474,17 @@ class FDB:
         :meth:`WriterSession.acquire_lease`, which also ledgers the lease
         for release at session close."""
         dataset, collocation = self._lease_split(identifier)
-        return self.catalogue.acquire_lease(dataset, collocation, resource,
-                                            lo, hi, owner)
+        m = self.tracer.metrics
+        with self.tracer.span("lease.acquire", resource=resource, lo=lo,
+                              hi=hi, owner=owner):
+            try:
+                epoch = self.catalogue.acquire_lease(dataset, collocation,
+                                                     resource, lo, hi, owner)
+            except LeaseConflictError:
+                m.counter("lease.conflicts").inc()
+                raise
+        m.counter("lease.acquired").inc()
+        return epoch
 
     def release_lease(self, identifier: Union[Identifier,
                                               Mapping[str, object]],
@@ -493,8 +512,12 @@ class FDB:
         """Fencing gate: raise ``StaleLeaseError`` unless ``owner`` still
         holds a covering lease at exactly ``epoch``."""
         dataset, collocation = self._lease_split(identifier)
-        self.catalogue.check_lease(dataset, collocation, resource, lo, hi,
-                                   owner, epoch)
+        try:
+            self.catalogue.check_lease(dataset, collocation, resource, lo,
+                                       hi, owner, epoch)
+        except StaleLeaseError:
+            self.tracer.metrics.counter("lease.stale").inc()
+            raise
 
     def retrieve(self, identifiers: Union[Identifier, Mapping[str, object],
                                           Sequence]) -> MultiHandle:
@@ -569,6 +592,20 @@ class FDB:
         for dataset in self._matching_datasets(dict(dataset_part)):
             self.store.wipe(dataset)
             self.catalogue.wipe(dataset)
+
+    # -- observability -------------------------------------------------------
+    def trace(self, since: int = 0) -> List[Span]:
+        """Finished spans from this client's tracer (oldest first).  Pass a
+        ``tracer.mark()`` value as ``since`` for a window.  Empty unless
+        tracing is enabled (``fdb.tracer.enable()`` or ``--trace``)."""
+        return self.tracer.spans(since)
+
+    def metrics(self) -> Dict[str, Dict[str, object]]:
+        """Snapshot of this client's metrics registry: lease counters,
+        executor queue/in-flight, codec byte counts, per-backend op latency
+        histograms.  Counters (e.g. ``lease.conflicts``) update even while
+        span tracing is disabled."""
+        return self.tracer.metrics.snapshot()
 
     def close(self) -> None:
         if not self._closed:
@@ -776,7 +813,8 @@ class WriterSession:
     def flush(self) -> None:
         """Client-level flush (publishes everything archived on the client;
         clears every session's dirty flag, this one's included)."""
-        self.fdb.flush()
+        with self.fdb.tracer.span("session.commit", writer=self.writer_id):
+            self.fdb.flush()
 
     # -- lifecycle -----------------------------------------------------------
     def close(self) -> None:
@@ -786,9 +824,11 @@ class WriterSession:
         late flush — the silent merge leases exist to prevent."""
         if self._closed:
             return
-        if self._dirty:
-            self.fdb.flush()
-        self.release_all()
+        with self.fdb.tracer.span("session.close", writer=self.writer_id,
+                                  leases=len(self._held)):
+            if self._dirty:
+                self.fdb.flush()
+            self.release_all()
         self._closed = True
 
     def __enter__(self) -> "WriterSession":

@@ -77,19 +77,22 @@ class ChunkedFieldStore:
                   codec: Optional[str] = None) -> ChunkedArray:
         ts = self._ts(name)
         values = np.asarray(values)
-        try:
-            arr = ts.create(values.shape, values.dtype,
-                            chunks=chunks or self.chunks,
-                            codec=codec or self.codec)
-        except LayoutMismatchError:
-            # layout changed: the array's dataset is exactly (store, array),
-            # so a wipe removes every stale chunk before re-creating
-            self.wipe_field(name)
-            arr = ts.create(values.shape, values.dtype,
-                            chunks=chunks or self.chunks,
-                            codec=codec or self.codec)
-        # commit() is the visibility barrier — don't flush per field
-        arr.write(values, flush=False)
+        with self.fdb.tracer.span("field.put", field=name,
+                                  nbytes=values.nbytes):
+            try:
+                arr = ts.create(values.shape, values.dtype,
+                                chunks=chunks or self.chunks,
+                                codec=codec or self.codec)
+            except LayoutMismatchError:
+                # layout changed: the array's dataset is exactly (store,
+                # array), so a wipe removes every stale chunk before
+                # re-creating
+                self.wipe_field(name)
+                arr = ts.create(values.shape, values.dtype,
+                                chunks=chunks or self.chunks,
+                                codec=codec or self.codec)
+            # commit() is the visibility barrier — don't flush per field
+            arr.write(values, flush=False)
         self._opened[name] = arr
         return arr
 
@@ -123,8 +126,9 @@ class ChunkedFieldStore:
         missing chunk means lost or not-yet-committed data.
         """
         arr = self.open_field(name)
-        return arr.read_plan(tuple(selection),
-                             fill_missing=fill_missing).execute()
+        with self.fdb.tracer.span("field.read_window", field=name):
+            return arr.read_plan(tuple(selection),
+                                 fill_missing=fill_missing).execute()
 
     def write_window(self, name: str, values, *selection) -> ChunkedArray:
         """Chunk-aligned in-place update of a field window — the
@@ -147,7 +151,8 @@ class ChunkedFieldStore:
         """
         arr = self.open_field(name)
         # normalize_key pads a short/empty key with full slices
-        arr.write_plan(tuple(selection), values).execute(flush=False)
+        with self.fdb.tracer.span("field.write_window", field=name):
+            arr.write_plan(tuple(selection), values).execute(flush=False)
         return arr
 
     def reshard(self, name: str, new_chunks, *selection,
@@ -248,7 +253,10 @@ class FieldWriter:
         covered chunks are lease-protected, and this session's earlier
         unflushed archives pre-flush per *session*, not per client."""
         arr = self._open(name)
-        arr.write_plan(tuple(selection), values).execute(flush=False)
+        tracer = self.session.fdb.tracer
+        with tracer.span("field.write_window", field=name,
+                         writer=self.writer_id):
+            arr.write_plan(tuple(selection), values).execute(flush=False)
         return arr
 
     def commit(self) -> None:
@@ -289,7 +297,9 @@ class FDBDataPipeline:
             [batch["tokens"].reshape(-1), batch["labels"].reshape(-1)])
         meta = np.array(batch["tokens"].shape, np.int64)
         payload = meta.tobytes() + packed.astype(np.int32).tobytes()
-        self.fdb.archive(self._ident(shard, batch_idx), payload)
+        with self.fdb.tracer.span("data.put_batch", shard=shard,
+                                  batch=batch_idx, nbytes=len(payload)):
+            self.fdb.archive(self._ident(shard, batch_idx), payload)
 
     def commit(self) -> None:
         self.fdb.flush()
@@ -302,10 +312,12 @@ class FDBDataPipeline:
 
     def get_batch(self, shard: int, batch_idx: int
                   ) -> Optional[Dict[str, np.ndarray]]:
-        h = self.fdb.retrieve(self._ident(shard, batch_idx))
-        if h.length() == 0:
-            return None
-        raw = h.read()
+        with self.fdb.tracer.span("data.get_batch", shard=shard,
+                                  batch=batch_idx):
+            h = self.fdb.retrieve(self._ident(shard, batch_idx))
+            if h.length() == 0:
+                return None
+            raw = h.read()
         meta = np.frombuffer(raw[:16], np.int64)
         B, S = int(meta[0]), int(meta[1])
         flat = np.frombuffer(raw[16:], np.int32)

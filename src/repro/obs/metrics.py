@@ -1,0 +1,224 @@
+"""Dependency-free metrics primitives: counters, gauges, fixed-bucket
+histograms, and the registry that names them.
+
+The tracing layer (:mod:`.trace`) answers "where did *this* operation's
+time go"; metrics answer the aggregate questions a trace buffer is the
+wrong shape for — how many lease conflicts since the client opened, what
+the executor's queue-depth high-water mark was, the latency distribution
+of every DAOS archive op.  Everything here is stdlib-only and thread-safe
+(one small lock per instrument), so the hot paths that record — the chunk
+executor, the FDB facade, the I/O plans — pay a dict lookup and a locked
+integer bump, nothing more.
+
+Naming convention (dotted, lowercase): ``<layer>.<what>[_<unit>]`` —
+``lease.conflicts``, ``executor.queue_us``, ``io.posix.fetch_us``,
+``codec.bytes_decoded``.  The full taxonomy lives in
+``docs/observability.md``.
+"""
+from __future__ import annotations
+
+import bisect
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+#: default histogram bucket upper bounds in microseconds — roughly
+#: logarithmic from "cached metadata hit" to "something is very wrong"
+DEFAULT_LATENCY_BUCKETS_US: Tuple[float, ...] = (
+    10, 25, 50, 100, 250, 500, 1_000, 2_500, 5_000, 10_000, 25_000,
+    50_000, 100_000, 250_000, 1_000_000)
+
+
+class Counter:
+    """Monotonically increasing count (ops, bytes, conflicts)."""
+
+    __slots__ = ("name", "_value", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0
+        self._lock = threading.Lock()
+
+    def inc(self, n: int = 1) -> None:
+        with self._lock:
+            self._value += n
+
+    @property
+    def value(self) -> int:
+        return self._value
+
+    def snapshot(self) -> Dict[str, object]:
+        return {"type": "counter", "value": self._value}
+
+
+class Gauge:
+    """Point-in-time level (queue depth, in-flight ops) with a high-water
+    mark — ``max`` survives after the level drops back, which is what the
+    bench columns want."""
+
+    __slots__ = ("name", "_value", "_max", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._value = 0.0
+        self._max = 0.0
+        self._lock = threading.Lock()
+
+    def set(self, value: float) -> None:
+        with self._lock:
+            self._value = value
+            if value > self._max:
+                self._max = value
+
+    def add(self, delta: float) -> None:
+        with self._lock:
+            self._value += delta
+            if self._value > self._max:
+                self._max = self._value
+
+    @property
+    def value(self) -> float:
+        return self._value
+
+    @property
+    def max(self) -> float:
+        return self._max
+
+    def snapshot(self) -> Dict[str, object]:
+        return {"type": "gauge", "value": self._value, "max": self._max}
+
+
+class Histogram:
+    """Fixed-bucket histogram (no deps, O(log buckets) observe).
+
+    ``buckets`` are inclusive upper bounds; one implicit overflow bucket
+    catches everything beyond the last bound.  Tracks count/sum/min/max
+    exactly, so means stay honest even when the distribution saturates a
+    bucket.
+    """
+
+    __slots__ = ("name", "bounds", "counts", "_count", "_sum", "_min",
+                 "_max", "_lock")
+
+    def __init__(self, name: str,
+                 buckets: Sequence[float] = DEFAULT_LATENCY_BUCKETS_US):
+        if not buckets or list(buckets) != sorted(buckets):
+            raise ValueError(f"histogram buckets must be ascending, "
+                             f"got {buckets!r}")
+        self.name = name
+        self.bounds: Tuple[float, ...] = tuple(buckets)
+        self.counts: List[int] = [0] * (len(self.bounds) + 1)
+        self._count = 0
+        self._sum = 0.0
+        self._min: Optional[float] = None
+        self._max: Optional[float] = None
+        self._lock = threading.Lock()
+
+    def observe(self, value: float) -> None:
+        i = bisect.bisect_left(self.bounds, value)
+        with self._lock:
+            self.counts[i] += 1
+            self._count += 1
+            self._sum += value
+            if self._min is None or value < self._min:
+                self._min = value
+            if self._max is None or value > self._max:
+                self._max = value
+
+    @property
+    def count(self) -> int:
+        return self._count
+
+    @property
+    def sum(self) -> float:
+        return self._sum
+
+    @property
+    def mean(self) -> float:
+        return self._sum / self._count if self._count else 0.0
+
+    def percentile(self, p: float) -> float:
+        """Approximate p-quantile (0 < p <= 100): the upper bound of the
+        bucket holding the p-th observation (the true max for the overflow
+        bucket)."""
+        with self._lock:
+            count, counts = self._count, list(self.counts)
+            hi = self._max
+        if not count:
+            return 0.0
+        rank = max(1, int(round(p / 100.0 * count)))
+        seen = 0
+        for i, c in enumerate(counts):
+            seen += c
+            if seen >= rank:
+                return self.bounds[i] if i < len(self.bounds) else (hi or 0.0)
+        return hi or 0.0
+
+    def snapshot(self) -> Dict[str, object]:
+        with self._lock:
+            buckets = {f"le_{b:g}": c
+                       for b, c in zip(self.bounds, self.counts)}
+            buckets[f"gt_{self.bounds[-1]:g}"] = self.counts[-1]
+            return {"type": "histogram", "count": self._count,
+                    "sum": round(self._sum, 3), "min": self._min,
+                    "max": self._max,
+                    "mean": round(self.mean, 3), "buckets": buckets}
+
+
+class MetricsRegistry:
+    """Get-or-create registry of named instruments.
+
+    One registry per :class:`~repro.obs.trace.Tracer` (and therefore per
+    FDB client, or shared via the global tracer).  Asking for an existing
+    name with a different instrument type raises — a name means one thing.
+    """
+
+    def __init__(self) -> None:
+        self._metrics: Dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, cls, *args):
+        m = self._metrics.get(name)
+        if m is None:
+            with self._lock:
+                m = self._metrics.get(name)
+                if m is None:
+                    m = self._metrics[name] = cls(name, *args)
+        if not isinstance(m, cls):
+            raise TypeError(f"metric {name!r} already registered as "
+                            f"{type(m).__name__}, not {cls.__name__}")
+        return m
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str,
+                  buckets: Optional[Sequence[float]] = None) -> Histogram:
+        if buckets is None:
+            return self._get(name, Histogram)
+        return self._get(name, Histogram, buckets)
+
+    def get(self, name: str):
+        """The instrument registered under ``name``, or None."""
+        return self._metrics.get(name)
+
+    def names(self) -> List[str]:
+        with self._lock:
+            return sorted(self._metrics)
+
+    def snapshot(self) -> Dict[str, Dict[str, object]]:
+        """Point-in-time dump of every instrument, keyed by name — what
+        :meth:`repro.core.FDB.metrics` returns."""
+        with self._lock:
+            items = list(self._metrics.items())
+        return {name: m.snapshot() for name, m in sorted(items)}
+
+    def clear(self) -> None:
+        with self._lock:
+            self._metrics.clear()
+
+
+__all__ = ["Counter", "Gauge", "Histogram", "MetricsRegistry",
+           "DEFAULT_LATENCY_BUCKETS_US"]

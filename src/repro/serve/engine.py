@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.models import lm
 from repro.models.config import ArchConfig
+from repro.obs.trace import GLOBAL_TRACER, Tracer
 
 
 @dataclasses.dataclass
@@ -33,9 +34,10 @@ class Request:
 class ServeEngine:
     def __init__(self, cfg: ArchConfig, params, batch_slots: int = 4,
                  max_len: int = 256, dtype=jnp.float32,
-                 greedy: bool = True):
+                 greedy: bool = True, tracer: Optional[Tracer] = None):
         self.cfg = cfg
         self.params = params
+        self.tracer = tracer or GLOBAL_TRACER
         self.slots = batch_slots
         self.max_len = max_len
         self.greedy = greedy
@@ -65,37 +67,48 @@ class ServeEngine:
                 or not self.queue.empty():
             wave = [r for r in self.active.values() if r is not None]
             plen = max(len(r.prompt) for r in wave)
-            tokens = np.zeros((self.slots, plen), np.int32)
-            for i, (slot, r) in enumerate(self.active.items()):
-                if r is not None:
-                    tokens[slot, plen - len(r.prompt):] = r.prompt
-            # prefill = sequential decode over prompt tokens (correct for
-            # every family incl. recurrent; simple for the example driver)
-            self.cache = lm.init_cache(self.cfg, self.slots, self.max_len,
-                                       jnp.float32)
-            logits = None
-            for t in range(plen):
-                logits, self.cache = self._decode(
-                    self.params, jnp.asarray(tokens[:, t:t + 1]),
-                    self.cache, jnp.asarray(t, jnp.int32))
-            self.stats["prefill_tokens"] += plen * len(wave)
-            # decode loop
-            max_new = max(r.max_new_tokens for r in wave)
-            cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            for step in range(min(max_new, max_steps)):
-                for slot, r in self.active.items():
-                    if r is not None and len(r.out_tokens) < r.max_new_tokens:
-                        r.out_tokens.append(int(cur[slot]))
-                logits, self.cache = self._decode(
-                    self.params, cur[:, None], self.cache,
-                    jnp.asarray(plen + step, jnp.int32))
+            with self.tracer.span("serve.wave", requests=len(wave),
+                                  prompt_len=plen):
+                tokens = np.zeros((self.slots, plen), np.int32)
+                for i, (slot, r) in enumerate(self.active.items()):
+                    if r is not None:
+                        tokens[slot, plen - len(r.prompt):] = r.prompt
+                # prefill = sequential decode over prompt tokens (correct for
+                # every family incl. recurrent; simple for the example driver)
+                self.cache = lm.init_cache(self.cfg, self.slots, self.max_len,
+                                           jnp.float32)
+                logits = None
+                with self.tracer.span("serve.prefill",
+                                      tokens=plen * len(wave)):
+                    for t in range(plen):
+                        logits, self.cache = self._decode(
+                            self.params, jnp.asarray(tokens[:, t:t + 1]),
+                            self.cache, jnp.asarray(t, jnp.int32))
+                self.stats["prefill_tokens"] += plen * len(wave)
+                # decode loop
+                max_new = max(r.max_new_tokens for r in wave)
                 cur = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-                self.stats["decode_steps"] += 1
-            for slot, r in list(self.active.items()):
-                if r is not None:
-                    r.done = True
-                    retired.append(r)
-                    self.stats["retired"] += 1
-                    self.active[slot] = None
+                with self.tracer.span("serve.decode", max_new=max_new) as sp:
+                    steps = 0
+                    for step in range(min(max_new, max_steps)):
+                        for slot, r in self.active.items():
+                            if r is not None \
+                                    and len(r.out_tokens) < r.max_new_tokens:
+                                r.out_tokens.append(int(cur[slot]))
+                        logits, self.cache = self._decode(
+                            self.params, cur[:, None], self.cache,
+                            jnp.asarray(plen + step, jnp.int32))
+                        cur = jnp.argmax(logits[:, -1],
+                                         axis=-1).astype(jnp.int32)
+                        self.stats["decode_steps"] += 1
+                        steps += 1
+                    if sp is not None:
+                        sp.attrs["steps"] = steps
+                for slot, r in list(self.active.items()):
+                    if r is not None:
+                        r.done = True
+                        retired.append(r)
+                        self.stats["retired"] += 1
+                        self.active[slot] = None
             self._admit()
         return retired

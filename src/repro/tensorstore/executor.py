@@ -7,18 +7,31 @@ half of that — ``submit()`` admits at most ``max_in_flight`` outstanding
 tasks (queued + running) and blocks the producer beyond that, bounding the
 memory held by encoded chunks while keeping the pipe full.
 
-Callers' :mod:`contextvars` context (the engine meter's ``client_context``)
-is propagated into worker threads so op attribution survives the hop.
+Callers' :mod:`contextvars` context (the engine meter's ``client_context``
+and the obs layer's active span) is propagated into worker threads so op
+attribution — and span parentage — survives the hop.
 
-This module deliberately has no ``repro`` imports: :mod:`repro.core.fdb`
-reaches for it lazily without creating an import cycle.
+This module's only ``repro`` import is the dependency-free
+:mod:`repro.obs` package: :mod:`repro.core.fdb` reaches for the executor
+lazily without creating an import cycle, and ``repro.obs`` imports nothing
+back.
+
+When a caller submits from inside a traced span, the time between
+``submit()`` and the task starting on a worker is recorded as an
+``executor.queue`` span (parented under the caller's span) plus an
+``executor.queue_us`` histogram and ``executor.in_flight`` gauge — the
+``t_queue`` phase of the bench columns.  Untraced submissions skip all of
+it via one context-var read.
 """
 from __future__ import annotations
 
 import contextvars
 import threading
+import time
 from concurrent.futures import Future, ThreadPoolExecutor
 from typing import Any, Callable, Iterable, List, Optional
+
+from repro.obs import trace as _obs
 
 DEFAULT_WORKERS = 8
 
@@ -46,9 +59,28 @@ class ChunkExecutor:
         with self._lock:
             self._in_flight += 1
             self.peak_in_flight = max(self.peak_in_flight, self._in_flight)
+            depth = self._in_flight
         ctx = contextvars.copy_context()
+        parent = _obs.current_span()
+        if parent is not None and parent.tracer.enabled:
+            tracer = parent.tracer
+            tracer.metrics.gauge("executor.in_flight").set(depth)
+            t_submit = time.perf_counter_ns()
+
+            def task(_fn=fn, _args=args, _kw=kw):
+                now = time.perf_counter_ns()
+                tracer.record_complete("executor.queue", t_submit, now,
+                                       parent=parent)
+                tracer.metrics.histogram("executor.queue_us").observe(
+                    (now - t_submit) / 1_000.0)
+                return _fn(*_args, **_kw)
+        else:
+            task = None
         try:
-            fut = self._pool.submit(ctx.run, fn, *args, **kw)
+            if task is not None:
+                fut = self._pool.submit(ctx.run, task)
+            else:
+                fut = self._pool.submit(ctx.run, fn, *args, **kw)
         except BaseException:
             self._leave()
             raise

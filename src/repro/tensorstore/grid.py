@@ -23,13 +23,16 @@ within-chunk slices keep the stride, so strided scatters/gathers stay single
 numpy slice assignments.  Output (and value) slices are always unit-step:
 selections address a *compact* result array.
 
-Negative steps are a *read-path* feature: ``normalize_read_key`` rewrites a
-reversed slice into its positive-step mirror plus a client-side flip axis
-(chunk visit order stays monotone; the assembled output is flipped once at
-the end), which is how ``arr[::-1]`` works without the I/O plan ever seeing
-a descending order.  The write and reshard paths keep rejecting them
-(``NotImplementedError``): a reversed *scatter* would need the value order
-inverted per chunk, and no workload has asked for it.
+Negative steps are served by ``normalize_read_key``: it rewrites a reversed
+slice into its positive-step mirror plus a client-side flip axis (chunk
+visit order stays monotone), which is how ``arr[::-1]`` works without the
+I/O plan ever seeing a descending order.  Reads flip the assembled output
+once at the end; writes (``ChunkedArray.write_plan``) flip the broadcast
+*values* once before planning, so reversed assignment shares the same
+positive-step machinery.  Only the reshard path keeps rejecting them
+(``NotImplementedError`` via ``normalize_key``): a reshard re-layouts
+storage, where a reversed source selection has no meaning beyond reading
+reversed first.
 
 ``linear_id`` maps a chunk index to its row-major scalar id — the chunk-id
 space the catalogue-level lease table (:mod:`repro.core.lease`) covers with
@@ -130,10 +133,10 @@ class ChunkGrid:
         explicit ``step >= 1`` and a ``stop`` normalised to *last selected
         index + 1* (``start`` when empty), so downstream chunk math can rely
         on ``stop - 1`` being a selected point.  Negative steps raise
-        ``NotImplementedError``: they are a read-only feature served by
+        ``NotImplementedError``: they are served by
         :meth:`normalize_read_key` (positive-step plan + client-side flip),
-        and the write/reshard paths that call this method do not support
-        reversed scatters.
+        which the read and write paths use — the reshard path, which calls
+        this method, does not support reversed selections.
         """
         if not isinstance(key, tuple):
             key = (key,)
@@ -147,11 +150,11 @@ class ChunkGrid:
                 start, stop, step = k.indices(size)
                 if step < 1:
                     raise NotImplementedError(
-                        "tensorstore write/reshard selections require a "
+                        "tensorstore reshard selections require a "
                         f"positive step (got {step} on axis {axis}); "
                         "negative-step selections are supported on the read "
-                        "path only, where they normalise to a positive-step "
-                        "plan plus a client-side flip")
+                        "and write paths, where they normalise to a "
+                        "positive-step plan plus a client-side flip")
                 count = len(range(start, stop, step))
                 stop = start + (count - 1) * step + 1 if count else start
                 sel.append(slice(start, stop, step))

@@ -212,26 +212,35 @@ class ReshardPlan:
         fdb = store.fdb
         if self.noop:
             return arr
-        if fdb.dirty:
-            fdb.flush()         # source chunks must be visible to our reads
-        dest = ChunkedArray(store, self.dest_meta)
-        read_ops = write_ops = 0
-        for region in self.regions:
-            rp = ReadPlan(arr, self._src_sel(region), (),
-                          fill_missing=self.fill_missing)
-            data = rp.execute()
-            self.peak_staged_bytes = max(self.peak_staged_bytes, data.nbytes)
-            wp = WritePlan(dest, region, data)
-            wp.execute(flush=False)
-            read_ops += rp.read_ops()
-            write_ops += wp.write_ops()
-        self.read_ops_executed = read_ops
-        self.write_ops_executed = write_ops
-        # the flip: one transactional metadata replace (rule 5) moves
-        # readers onto the new generation's chunk keys
-        fdb.archive(store._ident(META_CHUNK_KEY), self.dest_meta.to_bytes())
-        if flush:
-            fdb.flush()
+        tracer = fdb.tracer
+        with tracer.span("plan.reshard", batches=self.n_batches,
+                         dest_chunks=self.n_dest_chunks,
+                         generation=self.dest_meta.generation):
+            if fdb.dirty:
+                fdb.flush()     # source chunks must be visible to our reads
+            dest = ChunkedArray(store, self.dest_meta)
+            read_ops = write_ops = 0
+            for ri, region in enumerate(self.regions):
+                # the inner Read/Write plans open their own plan.* spans,
+                # which nest as children of this per-batch span
+                with tracer.span("reshard.batch", batch=ri):
+                    rp = ReadPlan(arr, self._src_sel(region), (),
+                                  fill_missing=self.fill_missing)
+                    data = rp.execute()
+                    self.peak_staged_bytes = max(self.peak_staged_bytes,
+                                                 data.nbytes)
+                    wp = WritePlan(dest, region, data)
+                    wp.execute(flush=False)
+                    read_ops += rp.read_ops()
+                    write_ops += wp.write_ops()
+            self.read_ops_executed = read_ops
+            self.write_ops_executed = write_ops
+            # the flip: one transactional metadata replace (rule 5) moves
+            # readers onto the new generation's chunk keys
+            fdb.archive(store._ident(META_CHUNK_KEY),
+                        self.dest_meta.to_bytes())
+            if flush:
+                fdb.flush()
         arr.meta = self.dest_meta
         arr.grid = self.dest_grid
         arr._codec = get_codec(self.dest_meta.codec)

@@ -343,9 +343,14 @@ class ChunkedArray:
         ``values`` broadcasts against the selection shape (so
         ``arr[10:20, :] = 0.0`` works).  The selection may be strided
         (``arr[::2] = v``): stride gaps are preserved via read-modify-write
-        of the touched chunks.
+        of the touched chunks.  Negative steps work too
+        (``arr[::-1] = v``, ``arr[50:10:-4] = v``): like the read path,
+        the selection normalises to its positive-step mirror — the I/O
+        plan visits chunks in ascending order — and ``values`` is flipped
+        once client-side so elements land exactly where NumPy assignment
+        would put them.
         """
-        sel, squeeze = self.grid.normalize_key(key)
+        sel, squeeze, flips = self.grid.normalize_read_key(key)
         sel_shape = self.grid.selection_shape(sel)
         values = np.asarray(values)
         if squeeze and values.ndim == len(sel_shape) - len(squeeze):
@@ -353,6 +358,14 @@ class ChunkedArray:
             values = np.expand_dims(values, tuple(squeeze))
         values = np.broadcast_to(values.astype(self.dtype, copy=False),
                                  sel_shape)
+        if flips:
+            # reversed axes: the plan's selection ascends, so the flipped
+            # view of the (already broadcast) values pairs values[0] with
+            # the selection's *last* point — NumPy's reversed-assignment
+            # order — while the I/O below stays the positive-step plan
+            values = values[tuple(slice(None, None, -1) if a in flips
+                                  else slice(None)
+                                  for a in range(values.ndim))]
         return WritePlan(self, sel, values)
 
     def write(self, values, flush: bool = True) -> List[FieldLocation]:
@@ -511,8 +524,19 @@ class WritePlan:
         self.array = array
         self.values = values
         store = array.store
+        #: this client's tracer (repro.obs) — plan lifecycle spans
+        self.tracer = store.fdb.tracer
         #: the bound writer session (multi-writer mode) or None
         self.session: Optional[WriterSession] = store.session
+        with self.tracer.span("plan.resolve", kind="write") as sp:
+            self._resolve_plan(sel, store)
+            if sp is not None:
+                sp.attrs["chunks"] = len(self.tasks)
+
+    def _resolve_plan(self, sel, store: TensorStore) -> None:
+        """Placement + staging + lease acquisition — the no-data-I/O half
+        of the plan, wrapped in the ``plan.resolve`` span."""
+        array = self.array
         #: (chunk_idx, within_chunk_slices, value_slices, fully_covered)
         self.tasks = list(array.grid.write_plan(sel))
         #: staging window: most chunks encoded/held at once (executor's
@@ -630,9 +654,16 @@ class WritePlan:
         """
         if not self.tasks:
             return []
+        with self.tracer.span("plan.execute", kind="write",
+                              chunks=self.n_chunks, stages=len(self.stages),
+                              rmw=self.rmw_chunks):
+            return self._execute(flush)
+
+    def _execute(self, flush: bool) -> List[FieldLocation]:
         arr, values = self.array, self.values
         store, codec = arr.store, arr._codec
         fdb = store.fdb
+        metrics = self.tracer.metrics
         # archives/barriers route per session when one is bound — its
         # dirty bit decides the RMW pre-flush (sound because the RMW
         # chunks are covered by OUR lease: no other session's unflushed
@@ -643,53 +674,73 @@ class WritePlan:
         if self.rmw_chunks and client.dirty:
             client.flush()      # make own unflushed chunks RMW-visible
         locs: List[Optional[FieldLocation]] = [None] * len(self.tasks)
-        for stage in self.stages:
-            tiles: List[Optional[np.ndarray]] = [None] * len(stage)
-            rmw = [(k, pos) for k, pos in enumerate(stage)
-                   if not self.tasks[pos][3]]
-            if rmw:             # coalesced whole-chunk fetches, then patch
-                # lease-protected fetch: fence before reading bytes we are
-                # about to patch — a broken lease means another writer may
-                # own (and be mid-write on) these chunks
-                self.check_leases()
+        for si, stage in enumerate(self.stages):
+            with self.tracer.span("plan.stage", stage=si,
+                                  chunks=len(stage)):
+                self._run_stage(stage, locs, client, codec, values, metrics)
+        if flush:
+            client.flush()
+            self.release_leases()
+        return locs             # type: ignore[return-value]
+
+    def _run_stage(self, stage: List[int], locs, client, codec,
+                   values: np.ndarray, metrics) -> None:
+        arr, store = self.array, self.array.store
+        tiles: List[Optional[np.ndarray]] = [None] * len(stage)
+        rmw = [(k, pos) for k, pos in enumerate(stage)
+               if not self.tasks[pos][3]]
+        if rmw:             # coalesced whole-chunk fetches, then patch
+            # lease-protected fetch: fence before reading bytes we are
+            # about to patch — a broken lease means another writer may
+            # own (and be mid-write on) these chunks
+            self.check_leases()
+            metrics.counter("rmw.fetched_chunks").inc(len(rmw))
+            with self.tracer.span("rmw.fetch", chunks=len(rmw)):
                 fetch = ReadPlan.for_chunks(
                     arr, [self.tasks[pos][0] for _k, pos in rmw])
                 for (k, pos), tile in zip(rmw, fetch.read_chunks()):
                     _idx, chunk_sel, val_sel, _full = self.tasks[pos]
                     tile[chunk_sel] = values[val_sel]
                     tiles[k] = tile
-            for k, pos in enumerate(stage):
-                _idx, _chunk_sel, val_sel, full = self.tasks[pos]
-                if full:
-                    tiles[k] = values[val_sel]
+        for k, pos in enumerate(stage):
+            _idx, _chunk_sel, val_sel, full = self.tasks[pos]
+            if full:
+                tiles[k] = values[val_sel]
+        with self.tracer.span("codec.encode", chunks=len(stage),
+                              codec=codec.name) as sp:
             blobs = codec.encode_batch(tiles)
-            idents = [arr.chunk_ident(self.tasks[pos][0]) for pos in stage]
+            nbytes = sum(len(b) for b in blobs)
+            if sp is not None:
+                sp.attrs["nbytes"] = nbytes
+        metrics.counter("codec.bytes_encoded").inc(nbytes)
+        idents = [arr.chunk_ident(self.tasks[pos][0]) for pos in stage]
 
-            def put(ks: List[int]) -> List[FieldLocation]:
-                # one store-level submission per group: a posix group lands
-                # as a single buffered append; object groups are singletons
-                return client.archive_batch(
+        def put(ks: List[int]) -> List[FieldLocation]:
+            # one store-level submission per group: a posix group lands
+            # as a single buffered append; object groups are singletons
+            with self.tracer.span("io.archive", chunks=len(ks),
+                                  backend=store.fdb.config.backend) as sp:
+                batch_locs = client.archive_batch(
                     [(idents[k], blobs[k]) for k in ks])
+                if sp is not None:
+                    sp.attrs["nbytes"] = sum(len(blobs[k]) for k in ks)
+            return batch_locs
 
-            # the fencing gate runs per stage, right before its archives: a
-            # stale writer loses at most one in-flight stage to the race
-            # window between check and archive, and can never pass another
-            # barrier after its lease was re-acquired
-            self.check_leases()
-            # the one grouping decision lives in _stage_groups — write_ops()
-            # accounting and execution must never diverge (check.sh asserts
-            # on the plan's claim); stages are contiguous position runs, so
-            # stage-local index = position - stage[0]
-            kgroups = [[pos - stage[0] for pos in group]
-                       for group in self._stage_groups(stage)]
-            batches = store.executor.map_ordered(put, kgroups)
-            for ks, batch_locs in zip(kgroups, batches):
-                for k, loc in zip(ks, batch_locs):
-                    locs[stage[k]] = loc
-        if flush:
-            client.flush()
-            self.release_leases()
-        return locs             # type: ignore[return-value]
+        # the fencing gate runs per stage, right before its archives: a
+        # stale writer loses at most one in-flight stage to the race
+        # window between check and archive, and can never pass another
+        # barrier after its lease was re-acquired
+        self.check_leases()
+        # the one grouping decision lives in _stage_groups — write_ops()
+        # accounting and execution must never diverge (check.sh asserts
+        # on the plan's claim); stages are contiguous position runs, so
+        # stage-local index = position - stage[0]
+        kgroups = [[pos - stage[0] for pos in group]
+                   for group in self._stage_groups(stage)]
+        batches = store.executor.map_ordered(put, kgroups)
+        for ks, batch_locs in zip(kgroups, batches):
+            for k, loc in zip(ks, batch_locs):
+                locs[stage[k]] = loc
 
 
 class ReadPlan:
@@ -717,11 +768,14 @@ class ReadPlan:
         self.array = array
         self.sel = sel
         self.squeeze = squeeze
+        self.tracer = array.store.fdb.tracer
         #: axes to reverse client-side after assembly — how negative-step
         #: selections are served from a positive-step (ascending) I/O plan
         self.flips = tuple(flips)
         self.tasks = list(array.grid.intersecting(sel))
-        self._resolve(fill_missing)
+        with self.tracer.span("plan.resolve", kind="read",
+                              chunks=len(self.tasks)):
+            self._resolve(fill_missing)
 
     @classmethod
     def for_chunks(cls, array: "ChunkedArray", indices: Sequence[Index],
@@ -735,12 +789,15 @@ class ReadPlan:
         plan.sel = None
         plan.squeeze = ()
         plan.flips = ()
+        plan.tracer = array.store.fdb.tracer
         plan.tasks = [
             (tuple(idx),
              tuple(slice(0, n, 1) for n in array.grid.chunk_shape(idx)),
              None)
             for idx in indices]
-        plan._resolve(fill_missing)
+        with plan.tracer.span("plan.resolve", kind="chunks",
+                              chunks=len(plan.tasks)):
+            plan._resolve(fill_missing)
         return plan
 
     def _resolve(self, fill_missing: bool) -> None:
@@ -791,12 +848,30 @@ class ReadPlan:
         def run_batch(positions: List[int], mh: MultiHandle) -> None:
             shapes = [grid.chunk_shape(self.tasks[pos][0])
                       for pos in positions]
-            chunks = codec.decode_batch(mh.read_parts(), shapes, arr.dtype)
+            parts = self._fetch(mh, len(positions))
+            with self.tracer.span("codec.decode", chunks=len(positions),
+                                  codec=codec.name):
+                chunks = codec.decode_batch(parts, shapes, arr.dtype)
             for pos, chunk in zip(positions, chunks):
                 out[pos] = chunk if chunk.flags.writeable else chunk.copy()
 
         arr.store.executor.map_ordered(lambda b: run_batch(*b), self.batches)
         return out              # type: ignore[return-value]
+
+    def _fetch(self, mh: MultiHandle, n_chunks: int) -> List[bytes]:
+        """One coalesced backend read, wrapped in the ``io.fetch`` span
+        (the ``t_io`` phase) and counted into ``codec.bytes_decoded`` —
+        shared by both consumption modes, and running on an executor worker
+        thread with the caller's span context propagated."""
+        backend = self.array.store.fdb.config.backend
+        with self.tracer.span("io.fetch", ops=mh.read_ops(),
+                              chunks=n_chunks, backend=backend) as sp:
+            parts = mh.read_parts()
+            nbytes = sum(len(p) for p in parts)
+            if sp is not None:
+                sp.attrs["nbytes"] = nbytes
+        self.tracer.metrics.counter("codec.bytes_decoded").inc(nbytes)
+        return parts
 
     def execute(self) -> np.ndarray:
         if self.sel is None:
@@ -804,22 +879,31 @@ class ReadPlan:
                             "to assemble; use read_chunks()")
         arr = self.array
         grid, codec = arr.grid, arr._codec
-        out = np.empty(grid.selection_shape(self.sel), arr.dtype)
-        for pos in self.missing:
-            out[self.tasks[pos][2]] = 0
+        with self.tracer.span("plan.execute", kind="read",
+                              chunks=self.n_chunks,
+                              batches=len(self.batches)):
+            out = np.empty(grid.selection_shape(self.sel), arr.dtype)
+            for pos in self.missing:
+                out[self.tasks[pos][2]] = 0
 
-        def run_batch(positions: List[int], mh: MultiHandle) -> None:
-            # one coalesced read per batch, one batched decode (equal-shape
-            # chunks share a kernel launch); per-chunk payloads scatter into
-            # disjoint output regions → concurrent assembly is safe
-            shapes = [grid.chunk_shape(self.tasks[pos][0])
-                      for pos in positions]
-            chunks = codec.decode_batch(mh.read_parts(), shapes, arr.dtype)
-            for pos, chunk in zip(positions, chunks):
-                _idx, chunk_sel, out_sel = self.tasks[pos]
-                out[out_sel] = chunk[chunk_sel]
+            def run_batch(positions: List[int], mh: MultiHandle) -> None:
+                # one coalesced read per batch, one batched decode
+                # (equal-shape chunks share a kernel launch); per-chunk
+                # payloads scatter into disjoint output regions →
+                # concurrent assembly is safe
+                shapes = [grid.chunk_shape(self.tasks[pos][0])
+                          for pos in positions]
+                parts = self._fetch(mh, len(positions))
+                with self.tracer.span("codec.decode",
+                                      chunks=len(positions),
+                                      codec=codec.name):
+                    chunks = codec.decode_batch(parts, shapes, arr.dtype)
+                for pos, chunk in zip(positions, chunks):
+                    _idx, chunk_sel, out_sel = self.tasks[pos]
+                    out[out_sel] = chunk[chunk_sel]
 
-        arr.store.executor.map_ordered(lambda b: run_batch(*b), self.batches)
+            arr.store.executor.map_ordered(lambda b: run_batch(*b),
+                                           self.batches)
         if self.flips:          # negative-step axes: one client-side flip
             out = out[tuple(slice(None, None, -1) if a in self.flips
                             else slice(None) for a in range(out.ndim))]

@@ -52,6 +52,7 @@ old grid's.
 """
 from __future__ import annotations
 
+import contextvars
 import io
 import queue
 import socket
@@ -251,6 +252,12 @@ class FDBCheckpointer:
             raise ValueError("save_sharded requires the chunked layout "
                              "(chunked=True)")
         n_ranks = max(1, self.n_shards)
+        with self.fdb.tracer.span("ckpt.save_sharded", step=step,
+                                  ranks=n_ranks):
+            self._save_sharded(step, n_ranks, params, opt_state, extra)
+
+    def _save_sharded(self, step: int, n_ranks: int, params, opt_state,
+                      extra) -> None:
         trees = [("params", jax.tree.map(np.asarray, params))]
         if opt_state is not None:
             trees.append(("opt", jax.tree.map(np.asarray, opt_state)))
@@ -298,8 +305,12 @@ class FDBCheckpointer:
             except BaseException as e:  # noqa: BLE001
                 errors.append(e)
 
-        threads = [threading.Thread(target=run_rank, args=(r,),
-                                    name=f"ckpt-rank{r}")
+        # run each rank in a copy of this context so the obs span context
+        # (and meter client tags) survive the thread hop, exactly like
+        # ChunkExecutor.submit does for pool workers
+        threads = [threading.Thread(
+                       target=contextvars.copy_context().run,
+                       args=(run_rank, r), name=f"ckpt-rank{r}")
                    for r in range(n_ranks) if jobs[r]]
         for t in threads:
             t.start()
@@ -339,6 +350,10 @@ class FDBCheckpointer:
             self._do_save(*job[1:])
 
     def _do_save(self, step, params, opt_state, extra) -> None:
+        with self.fdb.tracer.span("ckpt.save", step=step):
+            self._do_save_traced(step, params, opt_state, extra)
+
+    def _do_save_traced(self, step, params, opt_state, extra) -> None:
         self._archive_tree("params", step, params)
         if opt_state is not None:
             self._archive_tree("opt", step, opt_state)
@@ -463,11 +478,14 @@ class FDBCheckpointer:
         """Rebuild a pytree like ``template`` from archived tensors."""
         flat, treedef = jax.tree_util.tree_flatten_with_path(template)
         leaves = []
-        for path, leaf in flat:
-            ref = np.asarray(leaf)
-            arr = self._restore_tensor(step, kind, _tensor_name(path), ref)
-            arr = arr.reshape(ref.shape) if arr.size == ref.size else arr
-            leaves.append(arr.astype(ref.dtype))
+        with self.fdb.tracer.span("ckpt.restore", step=step, kind=kind,
+                                  tensors=len(flat)):
+            for path, leaf in flat:
+                ref = np.asarray(leaf)
+                arr = self._restore_tensor(step, kind, _tensor_name(path),
+                                           ref)
+                arr = arr.reshape(ref.shape) if arr.size == ref.size else arr
+                leaves.append(arr.astype(ref.dtype))
         return treedef.unflatten(
             [jax.numpy.asarray(a) for a in leaves])
 

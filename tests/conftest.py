@@ -2,16 +2,22 @@ import pytest
 
 from repro.core import reset_engines
 from repro.core.engine.meter import GLOBAL_METER
+from repro.obs.trace import GLOBAL_TRACER
 
 
 @pytest.fixture(autouse=True)
 def fresh_engines():
-    """Each test gets pristine in-process storage engines + meter."""
+    """Each test gets pristine in-process storage engines + meter, and a
+    disabled, empty global tracer."""
     reset_engines()
     GLOBAL_METER.reset()
+    GLOBAL_TRACER.disable()
+    GLOBAL_TRACER.clear()
     yield
     reset_engines()
     GLOBAL_METER.reset()
+    GLOBAL_TRACER.disable()
+    GLOBAL_TRACER.clear()
 
 
 @pytest.fixture

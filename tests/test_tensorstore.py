@@ -692,8 +692,8 @@ def test_indexing_edge_cases(tmp_path):
     np.testing.assert_array_equal(arr[1::3, :, 4], x[1::3, :, 4])
     np.testing.assert_array_equal(arr[::-1], x[::-1])        # reversed reads
     np.testing.assert_array_equal(arr[8:2:-2, ::-1], x[8:2:-2, ::-1])
-    with pytest.raises(NotImplementedError, match="read path"):
-        arr[::-1] = x[::-1]                 # reversed writes stay rejected
+    arr[::-1] = x[::-1]                     # reversed writes: roundtrip
+    np.testing.assert_array_equal(arr[:, :, :], x)
     with pytest.raises(IndexError):
         arr[0, 0, 0, 0]
     fdb.close()
@@ -1073,11 +1073,45 @@ def test_negative_step_read_roundtrip(backend, tmp_path):
     plan = arr.read_plan((slice(None, None, -16), slice(None, None, -16)))
     fwd = arr.read_plan((slice(36, None, -16), slice(52, None, -16)))
     assert plan.n_chunks == fwd.n_chunks
-    # writes and reshards keep rejecting reversed selections
-    with pytest.raises(NotImplementedError, match="read path"):
-        arr.write_plan((slice(None, None, -1), slice(None)), x[::-1])
-    with pytest.raises(NotImplementedError, match="read path"):
+    # only reshards keep rejecting reversed selections (a re-layout has no
+    # meaning for a descending source order)
+    with pytest.raises(NotImplementedError, match="positive step"):
         arr.reshard_plan((8, 53), sel=(slice(None, None, -1), slice(None)))
+    fdb.close()
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_negative_step_write_roundtrip(backend, tmp_path):
+    """Reversed assignment on every backend: the values flip client-side
+    against the positive-step mirror plan, so results match numpy's
+    reversed-assignment semantics exactly."""
+    fdb, ts = make_store(backend, tmp_path)
+    rng = np.random.default_rng(63)
+    x = rng.normal(size=(37, 53)).astype(np.float32)
+    ts.save(x, chunks=(16, 16))
+    arr = ts.open()
+    for sel in [
+        (slice(None, None, -1), slice(None)),        # full reverse
+        (slice(30, 4, -3), slice(None)),             # strided reverse
+        (slice(None, None, -2), slice(50, 3, -7)),   # both axes reversed
+        (slice(None, None, -16),),                   # step > chunk
+        (5, slice(None, None, -2)),                  # int squeeze + reverse
+    ]:
+        v = rng.normal(size=x[sel].shape).astype(np.float32)
+        arr[sel] = v
+        x[sel] = v
+        np.testing.assert_array_equal(arr.read(), x, err_msg=str(sel))
+    # broadcast onto a reversed selection (scalar and row)
+    arr[::-1, ::2] = 3.5
+    x[::-1, ::2] = 3.5
+    np.testing.assert_array_equal(arr.read(), x)
+    row = rng.normal(size=(53,)).astype(np.float32)
+    arr[10:2:-4] = row
+    x[10:2:-4] = row
+    np.testing.assert_array_equal(arr.read(), x)
+    # empty reversed selection: clean no-op
+    arr[2:2:-1] = 99.0
+    np.testing.assert_array_equal(arr.read(), x)
     fdb.close()
 
 
