@@ -15,7 +15,10 @@
 #      present and sane on the bench rows;
 #   4. trace smoke — a traced chunked roundtrip on all four backends must
 #      record plan/io/codec spans (and record nothing with tracing off);
-#   5. docs gate — README.md/docs/*.md internal links resolve and the
+#   5. lint gate — the repo-invariant linter (repro.analysis.lint) in
+#      strict mode: zero unsuppressed findings, zero unused suppressions
+#      (docs/analysis.md has the rule catalogue);
+#   6. docs gate — README.md/docs/*.md internal links resolve and the
 #      fenced python quickstart blocks actually execute.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -130,5 +133,8 @@ for backend in ("daos", "rados", "posix", "s3"):
     fdb.close()
 print("trace smoke OK: 4 backends traced, disabled path records nothing")
 PY
+
+# lint gate: repo invariants, strict (prints the suppression count)
+python scripts/lint.py src --strict
 
 python scripts/docs_check.py

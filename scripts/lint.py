@@ -1,0 +1,68 @@
+#!/usr/bin/env python
+"""Run the repo-invariant linter (repro.analysis.lint) over source trees.
+
+Usage::
+
+    python scripts/lint.py [PATH ...] [--strict] [--json]
+
+Defaults to linting ``src``.  Output is machine-readable, one finding
+per line (``path:line: RULE message``), followed by a suppression
+summary.  ``--strict`` (the CI gate in ``scripts/check.sh``) exits
+non-zero on any unsuppressed finding *or* any unused suppression, so
+the baseline can only shrink.  ``--json`` dumps the full result
+(findings, baselined findings, suppressions) as JSON instead.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.analysis.lint import lint_paths  # noqa: E402
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files/directories to lint (default: src)")
+    ap.add_argument("--strict", action="store_true",
+                    help="exit 1 on any finding or unused suppression")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="emit the full result as JSON")
+    args = ap.parse_args(argv)
+
+    paths = [Path(p) if Path(p).is_absolute() else ROOT / p
+             for p in args.paths]
+    result = lint_paths(paths, root=ROOT)
+
+    if args.as_json:
+        print(json.dumps({
+            "findings": [dataclasses.asdict(f) for f in result.findings],
+            "suppressed": [dataclasses.asdict(f) for f in result.suppressed],
+            "suppressions": [dataclasses.asdict(s)
+                             for s in result.suppressions],
+        }, indent=2))
+    else:
+        for f in result.findings:
+            print(f)
+        n_sup = len(result.suppressions)
+        n_used = sum(1 for s in result.suppressions if s.used)
+        print(f"lint: {len(result.findings)} finding(s), "
+              f"{len(result.suppressed)} baselined via {n_used}/{n_sup} "
+              f"suppression(s)")
+        for s in result.unused_suppressions:
+            print(f"{s.path}:{s.line}: unused suppression "
+                  f"(disable={','.join(s.rules)})")
+
+    if args.strict and (result.findings or result.unused_suppressions):
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,42 @@
+#!/usr/bin/env python
+"""Regenerate the roofline tables inside ``EXPERIMENTS.md``.
+
+Reads every dry-run artifact under ``dryrun_artifacts/*.json`` (skipping
+``__opt`` variants), renders the single-pod and multi-pod roofline
+tables via :func:`benchmarks.roofline.table`, and splices them into
+``EXPERIMENTS.md`` after the ``<!-- ROOFLINE_TABLE -->`` marker —
+replacing any previously generated block up to the "Reading of the
+baseline table" heading.  Paths are resolved relative to the repo root,
+so it can be run from anywhere::
+
+    python scripts/update_experiments.py
+"""
+import glob
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from benchmarks.roofline import table  # noqa: E402
+
+cells = [json.load(open(f)) for f in sorted(glob.glob(
+    os.path.join(ROOT, "dryrun_artifacts", "*.json"))) if "__opt" not in f]
+lines = ["", "### Single-pod (16×16 = 256 chips) baseline", "", "```"]
+lines += table(cells, "single")
+lines += ["```", "", "### Multi-pod (2×16×16 = 512 chips) baseline", "", "```"]
+lines += table(cells, "multi")
+lines += ["```", ""]
+block = "\n".join(lines)
+
+experiments_md = os.path.join(ROOT, "EXPERIMENTS.md")
+src = open(experiments_md).read()
+marker = "<!-- ROOFLINE_TABLE -->"
+assert marker in src
+pre, rest = src.split(marker, 1)
+# drop any previously generated table (up to the next ### Reading heading)
+tail_key = "### Reading of the baseline table"
+tail = rest[rest.index(tail_key):] if tail_key in rest else rest
+open(experiments_md, "w").write(pre + marker + "\n" + block + "\n" + tail)
+print("table updated:", len(cells), "artifacts")

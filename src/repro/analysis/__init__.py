@@ -1,0 +1,23 @@
+"""Correctness tooling: repo-invariant linter + concurrency protocol checker.
+
+Two halves, both offline with respect to the data path:
+
+* :mod:`repro.analysis.lint` — an AST-based static pass enforcing the
+  repo's layering and concurrency conventions (rule catalogue:
+  ``docs/analysis.md``), driven by ``scripts/lint.py`` and the CI gate.
+* :mod:`repro.analysis.protocol` — a dynamic sanitizer that replays a
+  trace window (``repro.obs`` spans + metrics) and asserts the
+  multi-writer lease/flush contract, plus a lock-order recorder over the
+  named FDB/backend locks.
+
+This package sits at the top of the layer DAG and imports only
+``repro.obs`` — it *reads* traces; it never touches storage.
+"""
+from .lint import Finding, Linter, lint_paths
+from .protocol import (LockOrderRecorder, Violation, check_protocol,
+                       protocol_guard)
+
+__all__ = [
+    "Finding", "Linter", "lint_paths",
+    "LockOrderRecorder", "Violation", "check_protocol", "protocol_guard",
+]

@@ -1,0 +1,330 @@
+"""Trace-driven concurrency protocol checker (the dynamic sanitizer).
+
+:func:`check_protocol` replays a window of finished ``repro.obs`` spans —
+the ``lease.*`` / ``fdb.flush`` / ``io.archive`` / ``rmw.fetch`` events the
+facade and the plans record — and asserts the multi-writer contract of the
+writer-session layer (``docs/architecture.md`` → *Invariants*):
+
+* **archive-without-lease** — every chunk a *session-bound* plan archives
+  is covered, at archive time, by a live lease of that owner for the
+  array's live generation (the ``resource``);
+* **epoch-regression** — epochs per exact ``(scope, resource, lo, hi)``
+  range never decrease (idempotent re-acquires legitimately repeat an
+  epoch; a fresh acquire after release must advance it);
+* **release-before-flush** — a lease release never leaves an *unflushed*
+  (dirty) chunk of its owner uncovered: close/commit must flush before
+  releasing, or the next holder can read-modify-write bytes that are not
+  yet visible and race the late flush;
+* **rmw-unvalidated** — a read-modify-write fetch is preceded by a
+  *successful* epoch-fencing check, re-run after the owner's lease state
+  last changed;
+* **executor-over-window** — the ``executor.in_flight`` gauge's high-water
+  mark never exceeds the configured window.
+
+Events are ordered by their span timestamps (``perf_counter_ns`` is one
+process-wide monotonic clock, so cross-thread ordering is meaningful):
+acquires take effect when the acquire returns (``t1``), releases and
+coverage checks when they begin (``t0``), flush barriers when the barrier
+completes (``t1``).  The checker is a *sanitizer*, not a verifier: it
+reports contract violations it can prove from the trace and stays silent
+on windows it cannot order (e.g. spans evicted from a bounded
+``TraceBuffer``).
+
+The lock half: :class:`LockOrderRecorder` hooks the
+:class:`repro.obs.locks.NamedLock` observer, builds the acquisition-order
+graph (edge ``a -> b`` when some thread acquired ``b`` while holding
+``a``), and flags cycles — the classic deadlock precondition —
+as **lock-cycle** violations.
+
+Usage: ``fdb.check_protocol()`` (per-client convenience),
+:func:`protocol_guard` (the pytest-fixture body wrapping the lease/obs
+concurrency tests), or :func:`check_protocol` on any span list.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Iterator, List, Optional, Sequence, Set, Tuple
+
+from repro.obs.locks import set_lock_observer
+from repro.obs.trace import Span, Tracer
+
+#: the rule identifiers check_protocol / LockOrderRecorder can emit
+RULES = ("archive-without-lease", "epoch-regression",
+         "release-before-flush", "rmw-unvalidated",
+         "executor-over-window", "lock-cycle")
+
+
+@dataclasses.dataclass
+class Violation:
+    """One proven protocol violation: ``rule`` names the broken invariant,
+    ``t_ns`` the event time (span clock), ``details`` the correlating
+    attrs (owner, scope, chunk ids, ...)."""
+    rule: str
+    message: str
+    t_ns: int = 0
+    details: Dict[str, object] = dataclasses.field(default_factory=dict)
+
+    def __str__(self) -> str:
+        return f"[{self.rule}] {self.message}"
+
+
+# (scope, resource) -> {(owner, lo, hi): epoch}   -- live leases
+_LiveKey = Tuple[str, str]
+_Range = Tuple[str, int, int]
+
+
+def _covered(ranges: Sequence[_Range], owner: str, chunk_id: int) -> bool:
+    return any(o == owner and lo <= chunk_id < hi for o, lo, hi in ranges)
+
+
+def check_protocol(spans: Sequence[Span], metrics=None,
+                   max_in_flight: Optional[int] = None) -> List[Violation]:
+    """Replay ``spans`` (any order; they are sorted by time) and return
+    every provable violation of the lease/flush contract.  ``metrics`` is
+    a ``MetricsRegistry`` or its ``snapshot()`` dict; together with
+    ``max_in_flight`` it enables the executor-window rule (skipped when
+    either is ``None``)."""
+    out: List[Violation] = []
+    # -- build the time-ordered event list ---------------------------------
+    # kinds: acquire@t1, release@t0, check@t0, flush@t1, rmw@t0,
+    #        archive coverage@t0 + archive dirty-marking@t1
+    events: List[Tuple[int, int, str, Span]] = []
+    for i, s in enumerate(spans):
+        a = s.attrs
+        if s.name == "lease.acquire" and "error" not in a and "epoch" in a:
+            events.append((s.t1_ns, i, "acquire", s))
+        elif s.name == "lease.release":
+            events.append((s.t0_ns, i, "release", s))
+        elif s.name == "lease.check" and "error" not in a:
+            events.append((s.t0_ns, i, "check", s))
+        elif s.name == "fdb.flush":
+            events.append((s.t1_ns, i, "flush", s))
+        elif s.name == "rmw.fetch" and "owner" in a:
+            events.append((s.t0_ns, i, "rmw", s))
+        elif s.name == "io.archive" and "owner" in a:
+            events.append((s.t0_ns, i, "archive", s))
+            events.append((s.t1_ns, i, "dirty", s))
+    events.sort(key=lambda e: (e[0], e[1]))
+
+    live: Dict[_LiveKey, Dict[_Range, int]] = {}
+    #: highest epoch ever granted per exact range
+    epoch_high: Dict[Tuple[str, str, int, int], int] = {}
+    #: (scope, resource, owner) -> {chunk_id: client} archived, unflushed
+    dirty: Dict[Tuple[str, str, str], Dict[int, Optional[str]]] = {}
+    #: (owner, scope, resource) -> time of last successful fencing check /
+    #: last change to the owner's lease set
+    last_check: Dict[Tuple[str, str, str], int] = {}
+    last_change: Dict[Tuple[str, str, str], int] = {}
+
+    for t, _i, kind, s in events:
+        a = s.attrs
+        scope = str(a.get("scope", ""))
+        res = str(a.get("resource", ""))
+        owner = str(a.get("owner", ""))
+        key: _LiveKey = (scope, res)
+        if kind == "acquire":
+            lo, hi, epoch = int(a["lo"]), int(a["hi"]), int(a["epoch"])
+            rng_key = (scope, res, lo, hi)
+            high = epoch_high.get(rng_key)
+            if high is not None and epoch < high:
+                out.append(Violation(
+                    "epoch-regression",
+                    f"range [{lo}, {hi}) of {scope}/{res} granted at epoch "
+                    f"{epoch} after epoch {high}: epochs must be monotonic",
+                    t, {"scope": scope, "resource": res, "lo": lo, "hi": hi,
+                        "epoch": epoch, "prev_epoch": high}))
+            epoch_high[rng_key] = max(high or 0, epoch)
+            live.setdefault(key, {})[(owner, lo, hi)] = epoch
+            last_change[(owner, scope, res)] = t
+        elif kind == "release":
+            lo, hi = int(a["lo"]), int(a["hi"])
+            held = live.get(key, {})
+            if a.get("exact"):
+                removed = held.pop((owner, lo, hi), None) is not None
+            else:
+                hit = [r for r in held
+                       if r[0] == owner and r[1] < hi and lo < r[2]]
+                removed = bool(hit)
+                for r in hit:
+                    held.pop(r)
+            if removed:
+                last_change[(owner, scope, res)] = t
+            # a release must never orphan the owner's unflushed chunks:
+            # every dirty chunk has to stay covered by a remaining lease
+            # (sibling overlapping leases keep their chunks protected)
+            d = dirty.get((scope, res, owner))
+            if d:
+                remaining = list(held)
+                orphaned = sorted(c for c in d
+                                  if not _covered(remaining, owner, c))
+                if orphaned:
+                    for c in orphaned:
+                        d.pop(c)        # report each orphaning once
+                    out.append(Violation(
+                        "release-before-flush",
+                        f"{owner!r} released [{lo}, {hi}) of {scope}/{res} "
+                        f"leaving unflushed chunks {orphaned} uncovered: "
+                        f"flush must precede release",
+                        t, {"scope": scope, "resource": res, "owner": owner,
+                            "chunk_ids": orphaned}))
+        elif kind == "check":
+            last_check[(owner, scope, res)] = t
+        elif kind == "flush":
+            client = a.get("client")
+            for d in dirty.values():
+                for c in [c for c, cl in d.items() if cl == client]:
+                    d.pop(c)
+        elif kind == "rmw":
+            ka = (owner, scope, res)
+            chk, chg = last_check.get(ka), last_change.get(ka)
+            if chk is None or (chg is not None and chk < chg):
+                out.append(Violation(
+                    "rmw-unvalidated",
+                    f"{owner!r} ran a read-modify-write fetch on "
+                    f"{scope}/{res} without a successful lease check after "
+                    f"its lease state last changed",
+                    t, {"scope": scope, "resource": res, "owner": owner,
+                        "last_check": chk, "last_change": chg}))
+        elif kind == "archive":
+            held = list(live.get(key, {}))
+            missing = sorted(int(c) for c in a.get("chunk_ids", ())
+                             if not _covered(held, owner, int(c)))
+            if missing:
+                out.append(Violation(
+                    "archive-without-lease",
+                    f"{owner!r} archived chunks {missing} of {scope}/{res} "
+                    f"with no live covering lease at archive time",
+                    t, {"scope": scope, "resource": res, "owner": owner,
+                        "chunk_ids": missing}))
+        elif kind == "dirty":
+            d = dirty.setdefault((scope, res, owner), {})
+            client = a.get("client")
+            for c in a.get("chunk_ids", ()):
+                d[int(c)] = client
+
+    # -- executor window (from the metrics gauge's high-water mark) --------
+    if metrics is not None and max_in_flight is not None:
+        snap = metrics.snapshot() if hasattr(metrics, "snapshot") else metrics
+        g = snap.get("executor.in_flight")
+        if g and g.get("max", 0) > max_in_flight:
+            out.append(Violation(
+                "executor-over-window",
+                f"executor.in_flight reached {g['max']} > configured "
+                f"window {max_in_flight}",
+                0, {"max": g["max"], "window": max_in_flight}))
+    return out
+
+
+class LockOrderRecorder:
+    """Acquisition-order recorder over the named locks
+    (:class:`repro.obs.locks.NamedLock`).
+
+    While installed, every acquisition attempt adds edges ``held -> about
+    to acquire`` to a directed graph; :meth:`cycles` flags any cycle —
+    two code paths taking the same locks in opposite orders, the deadlock
+    precondition — and :meth:`violations` wraps them as ``lock-cycle``
+    :class:`Violation`\\ s.  Install/uninstall nests: the previous
+    observer is chained, so a recorder inside a recorder sees everything.
+    """
+
+    def __init__(self) -> None:
+        self.edges: Dict[str, Set[str]] = {}
+        self._mu = threading.Lock()     # plain: must not observe itself
+        self._prev = None
+        self._installed = False
+
+    def _observe(self, held: Tuple[str, ...], acquiring: str) -> None:
+        prev = self._prev
+        if prev is not None:
+            prev(held, acquiring)
+        if held:
+            with self._mu:
+                for h in held:
+                    if h != acquiring:
+                        self.edges.setdefault(h, set()).add(acquiring)
+
+    def install(self) -> "LockOrderRecorder":
+        if not self._installed:
+            self._prev = set_lock_observer(self._observe)
+            self._installed = True
+        return self
+
+    def uninstall(self) -> None:
+        if self._installed:
+            set_lock_observer(self._prev)
+            self._prev = None
+            self._installed = False
+
+    def __enter__(self) -> "LockOrderRecorder":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+    def cycles(self) -> List[List[str]]:
+        """Every elementary cycle reachable in the recorded graph (one
+        representative per back edge found by DFS), as name paths like
+        ``["a", "b", "a"]``."""
+        with self._mu:
+            edges = {k: sorted(v) for k, v in self.edges.items()}
+        found: List[List[str]] = []
+        seen_cycles: Set[Tuple[str, ...]] = set()
+
+        def dfs(node: str, stack: List[str], on_stack: Set[str],
+                done: Set[str]) -> None:
+            stack.append(node)
+            on_stack.add(node)
+            for nxt in edges.get(node, ()):
+                if nxt in on_stack:
+                    cyc = stack[stack.index(nxt):] + [nxt]
+                    canon = tuple(sorted(set(cyc)))
+                    if canon not in seen_cycles:
+                        seen_cycles.add(canon)
+                        found.append(cyc)
+                elif nxt not in done:
+                    dfs(nxt, stack, on_stack, done)
+            stack.pop()
+            on_stack.discard(node)
+            done.add(node)
+
+        done: Set[str] = set()
+        for start in sorted(edges):
+            if start not in done:
+                dfs(start, [], set(), done)
+        return found
+
+    def violations(self) -> List[Violation]:
+        return [Violation("lock-cycle",
+                          "lock acquisition order cycle: "
+                          + " -> ".join(c), 0, {"cycle": c})
+                for c in self.cycles()]
+
+
+@contextlib.contextmanager
+def protocol_guard(tracer: Tracer,
+                   max_in_flight: Optional[int] = None,
+                   lock_order: bool = True
+                   ) -> Iterator[LockOrderRecorder]:
+    """Wrap a block (the pytest fixture body): record a trace mark and the
+    lock acquisition order, run the block, then assert the window is
+    violation-free.  Exceptions from the block propagate unmasked; the
+    assertion only runs on a clean exit."""
+    mark = tracer.mark()
+    recorder = LockOrderRecorder()
+    if lock_order:
+        recorder.install()
+    try:
+        yield recorder
+    finally:
+        recorder.uninstall()
+    violations = check_protocol(tracer.spans(mark), tracer.metrics,
+                                max_in_flight=max_in_flight)
+    violations += recorder.violations()
+    assert not violations, "concurrency protocol violations:\n" + "\n".join(
+        f"  {v}" for v in violations)
+
+
+__all__ = ["RULES", "Violation", "check_protocol", "LockOrderRecorder",
+           "protocol_guard"]

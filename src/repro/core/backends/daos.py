@@ -20,6 +20,7 @@ from ..lease import CatalogueLeaseMixin
 from ..schema import Identifier, Schema
 from ..util import stable_hash
 from repro.obs.trace import span as obs_span
+from repro.obs.locks import NamedLock
 
 ROOT_KV_OID = 0
 #: Index/axis KV OIDs live far above the allocated-array OID space.
@@ -47,7 +48,7 @@ class DaosStore(Store):
         engine.pool_connect(pool)
         self._known_conts: Set[str] = set()
         self._oid_cache: Dict[str, Tuple[int, int]] = {}  # label -> (next, left)
-        self._lock = threading.Lock()
+        self._lock = NamedLock("store.daos")
 
     def _ensure_container(self, label: str) -> None:
         if label not in self._known_conts:
@@ -132,7 +133,7 @@ class DaosCatalogue(CatalogueLeaseMixin, Catalogue):
         self._axis_seen: Set[Tuple[str, str, str, str]] = set()
         #: pre-loaded axes per (dataset, collocation) (§3.1.2 axis pre-loading)
         self._axes_cache: Dict[Tuple[str, str], Dict[str, frozenset]] = {}
-        self._lock = threading.Lock()
+        self._lock = NamedLock("catalogue.daos")
 
     # -- helpers ---------------------------------------------------------------
     def _ensure_dataset(self, dataset: Identifier) -> str:

@@ -34,6 +34,7 @@ from ..interfaces import Catalogue, Store
 from ..lease import CatalogueLeaseMixin
 from ..schema import Identifier, Schema
 from repro.obs.trace import span as obs_span
+from repro.obs.locks import NamedLock
 
 MiB = 1024 ** 2
 _uniq_counter = itertools.count()
@@ -72,7 +73,7 @@ class RadosStore(Store):
         # span/single_large state: (ns, ckey) -> (object name, next offset, part)
         self._spans: Dict[Tuple[str, str], Tuple[str, int, int]] = {}
         self._pending: List[Tuple[str, str, str, int, bytes]] = []
-        self._lock = threading.Lock()
+        self._lock = NamedLock("store.rados")
 
     # -- placement of datasets --------------------------------------------------
     def _locate(self, dataset: Identifier) -> Tuple[str, str]:
@@ -198,7 +199,7 @@ class RadosCatalogue(CatalogueLeaseMixin, Catalogue):
         self._axis_seen: Set[Tuple[str, str, str, str]] = set()
         self._axes_cache: Dict[Tuple[str, str], Dict[str, frozenset]] = {}
         self._pending: List[Tuple[str, str, Dict[str, bytes]]] = []
-        self._lock = threading.Lock()
+        self._lock = NamedLock("catalogue.rados")
 
     def _omap_set(self, ns: str, obj: str, kvs: Dict[str, bytes],
                   defer: bool = True) -> None:

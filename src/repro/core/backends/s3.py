@@ -27,6 +27,7 @@ from ..handle import DataHandle, FieldLocation, LazyHandle
 from ..interfaces import Store
 from ..schema import Identifier
 from repro.obs.trace import span as obs_span
+from repro.obs.locks import NamedLock
 
 _uniq = itertools.count()
 
@@ -47,7 +48,7 @@ class S3Store(Store):
         self._known_buckets: Set[str] = set()
         # multipart state: (bucket, ckey) -> (upload_id, key, offset, part_no)
         self._mpu: Dict[Tuple[str, str], list] = {}
-        self._lock = threading.Lock()
+        self._lock = NamedLock("store.s3")
 
     def _bucket(self, dataset: Identifier) -> str:
         b = _bucket_name(dataset)

@@ -22,6 +22,7 @@ generation-prefixed chunk keys) rather than delete them.
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import threading
 import weakref
 from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple, Union
@@ -38,9 +39,14 @@ from .interfaces import Catalogue, Store
 from .lease import Lease, LeaseConflictError, StaleLeaseError
 from .schema import (CHECKPOINT_SCHEMA, Identifier, NWP_OBJECT_SCHEMA,
                      NWP_POSIX_SCHEMA, SCHEMAS, Schema)
+from repro.obs.locks import NamedLock
 from repro.obs.trace import GLOBAL_TRACER, Span, Tracer
 
 BytesLike = Union[bytes, bytearray, memoryview, np.ndarray]
+
+#: process-wide FDB client sequence — client_id labels in spans ("c3")
+#: distinguish clients when several share one tracer (GLOBAL_TRACER)
+_CLIENT_SEQ = itertools.count(1)
 
 
 def _as_bytes(data: BytesLike) -> bytes:
@@ -160,22 +166,26 @@ class FDB:
         #: process tracer, disabled out of the box — pass a private
         #: ``Tracer(enabled=True)`` for an isolated per-client buffer
         self.tracer = tracer or GLOBAL_TRACER
+        #: stable per-process client label carried on flush/archive spans,
+        #: so the protocol checker can attribute barriers when several
+        #: clients share one tracer
+        self.client_id = f"c{next(_CLIENT_SEQ)}"
         self.store, self.catalogue = self._build_backends()
         self._closed = False
         self._dirty = False
         self._io_executor = None        # lazily built, see io_executor
         self._io_executor_size = 0
-        self._io_lock = threading.Lock()
+        self._io_lock = NamedLock("fdb.io")
         #: serialises flush(): concurrent barriers (two writer sessions
         #: committing at once) would race the posix catalogue's
         #: getsize-then-append partial-index bookkeeping
-        self._flush_lock = threading.Lock()
+        self._flush_lock = NamedLock("fdb.flush")
         #: archive sequence number (with its lock): flush() clears dirty
         #: flags only when no archive landed since it captured the marker,
         #: so a chunk archived *during* another session's barrier can never
         #: be marked clean while still unpublished
         self._archive_seq = 0
-        self._dirty_lock = threading.Lock()
+        self._dirty_lock = NamedLock("fdb.dirty")
         #: live writer sessions of this client (weak: an abandoned session
         #: must not keep the client's dirty bookkeeping alive)
         self._sessions: "weakref.WeakSet[WriterSession]" = weakref.WeakSet()
@@ -329,6 +339,8 @@ class FDB:
         per FDB instead of one per call, rebuilt if the configured depth
         changes, shut down in :meth:`close`.  A closed client refuses to
         mint a fresh pool (nothing would ever shut it down again)."""
+        # lint: disable=L001 -- documented cycle-breaker: lazy import so
+        # core never loads tensorstore at module import time
         from repro.tensorstore.executor import ChunkExecutor
         size = max(1, self.config.io_parallelism)
         with self._io_lock:
@@ -342,6 +354,8 @@ class FDB:
             ex = self._io_executor
             if ex is None or self._io_executor_size != size:
                 if ex is not None:
+                    # lint: disable=L003 -- resize path: the drained pool
+                    # must be gone before a caller can see the new one
                     ex.shutdown(wait=True)
                 ex = self._io_executor = ChunkExecutor(max_workers=size)
                 self._io_executor_size = size
@@ -380,6 +394,8 @@ class FDB:
                 # explicit non-default depth: use the shared process-global
                 # pool of that size (not owned by this client, never shut
                 # down here)
+                # lint: disable=L001 -- documented cycle-breaker: lazy
+                # import keeps core free of tensorstore at module load
                 from repro.tensorstore.executor import sized_executor
                 executor = sized_executor(parallelism)
         # canonicalise + split each identifier exactly once; both the
@@ -414,7 +430,8 @@ class FDB:
         # inside the backends (the posix catalogue appends partial-index
         # records at offsets it just measured)
         with self.tracer.span("fdb.flush", backend=self.config.backend,
-                              dirty=self._dirty), self._flush_lock:
+                              dirty=self._dirty,
+                              client=self.client_id), self._flush_lock:
             # capture markers FIRST: an archive completing before a marker
             # is included in the flush below; one completing after bumps
             # its sequence, so the conditional clear leaves it dirty —
@@ -423,8 +440,10 @@ class FDB:
             marks = [(s, s._dirty_mark()) for s in sessions]
             with self._dirty_lock:
                 client_mark = self._archive_seq
+            # lint: disable=L003 -- flush IS the serialised barrier: the
+            # held _flush_lock is what gives rule-3 its atomicity
             self.store.flush()
-            self.catalogue.flush()
+            self.catalogue.flush()  # lint: disable=L003 -- same barrier
             with self._dirty_lock:
                 if self._archive_seq == client_mark:
                     self._dirty = False
@@ -464,6 +483,20 @@ class FDB:
         return (ident.subset(self.schema.dataset_dims),
                 ident.subset(self.schema.collocation_dims))
 
+    def lease_scope(self, identifier: Union[Identifier,
+                                            Mapping[str, object]]) -> str:
+        """Canonical label of the identifier's (dataset, collocation) lease
+        key — the ``scope`` attr every ``lease.*`` span carries, so the
+        protocol checker (``repro.analysis.protocol``) can correlate lease
+        events with the archives they cover."""
+        dataset, collocation = self._lease_split(identifier)
+        return self._lease_scope_split(dataset, collocation)
+
+    @staticmethod
+    def _lease_scope_split(dataset: Identifier,
+                           collocation: Identifier) -> str:
+        return f"{dataset.canonical()}|{collocation.canonical()}"
+
     def acquire_lease(self, identifier: Union[Identifier,
                                               Mapping[str, object]],
                       resource: str, lo: int, hi: int, owner: str) -> int:
@@ -475,14 +508,18 @@ class FDB:
         for release at session close."""
         dataset, collocation = self._lease_split(identifier)
         m = self.tracer.metrics
-        with self.tracer.span("lease.acquire", resource=resource, lo=lo,
-                              hi=hi, owner=owner):
+        with self.tracer.span(
+                "lease.acquire", resource=resource, lo=lo, hi=hi,
+                owner=owner,
+                scope=self._lease_scope_split(dataset, collocation)) as sp:
             try:
                 epoch = self.catalogue.acquire_lease(dataset, collocation,
                                                      resource, lo, hi, owner)
             except LeaseConflictError:
                 m.counter("lease.conflicts").inc()
                 raise
+            if sp is not None:
+                sp.attrs["epoch"] = epoch
         m.counter("lease.acquired").inc()
         return epoch
 
@@ -494,8 +531,23 @@ class FDB:
         presumed-dead writer) — epoch fencing rejects the broken holder's
         late archives, so breaking is safe, merely rude."""
         dataset, collocation = self._lease_split(identifier)
-        self.catalogue.release_lease(dataset, collocation, resource, lo, hi,
-                                     owner)
+        self._release_lease_split(dataset, collocation, resource, lo, hi,
+                                  owner, exact=False)
+
+    def _release_lease_split(self, dataset: Identifier,
+                             collocation: Identifier, resource: str,
+                             lo: int, hi: int, owner: str,
+                             exact: bool) -> None:
+        """The one release path (facade + sessions): every lease release
+        emits a ``lease.release`` span, the event the protocol checker
+        orders against flush barriers."""
+        with self.tracer.span(
+                "lease.release", resource=str(resource), lo=lo, hi=hi,
+                owner=owner, exact=exact,
+                scope=self._lease_scope_split(dataset, collocation)):
+            self.catalogue.release_lease(dataset, collocation,
+                                         str(resource), lo, hi, owner,
+                                         exact=exact)
 
     def lease_holders(self, identifier: Union[Identifier,
                                               Mapping[str, object]],
@@ -512,12 +564,16 @@ class FDB:
         """Fencing gate: raise ``StaleLeaseError`` unless ``owner`` still
         holds a covering lease at exactly ``epoch``."""
         dataset, collocation = self._lease_split(identifier)
-        try:
-            self.catalogue.check_lease(dataset, collocation, resource, lo,
-                                       hi, owner, epoch)
-        except StaleLeaseError:
-            self.tracer.metrics.counter("lease.stale").inc()
-            raise
+        with self.tracer.span(
+                "lease.check", resource=resource, lo=lo, hi=hi, owner=owner,
+                epoch=epoch,
+                scope=self._lease_scope_split(dataset, collocation)):
+            try:
+                self.catalogue.check_lease(dataset, collocation, resource,
+                                           lo, hi, owner, epoch)
+            except StaleLeaseError:
+                self.tracer.metrics.counter("lease.stale").inc()
+                raise
 
     def retrieve(self, identifiers: Union[Identifier, Mapping[str, object],
                                           Sequence]) -> MultiHandle:
@@ -607,6 +663,23 @@ class FDB:
         span tracing is disabled."""
         return self.tracer.metrics.snapshot()
 
+    def check_protocol(self, since: int = 0):
+        """Replay this client's trace window through the concurrency
+        protocol checker (``repro.analysis.protocol.check_protocol``) and
+        return its list of violations — empty on a healthy run.  Requires
+        tracing to have been enabled for the window; spans record the
+        lease/flush/archive events the checker orders."""
+        # upward import by design: analysis sits above core in the layer
+        # DAG, and this convenience hook must not make core depend on it
+        # at module load
+        from repro.analysis.protocol import check_protocol  # lint: disable=L001 -- lazy convenience hook; core must not import analysis at module load
+        window = None
+        if self._io_executor is not None:
+            window = self._io_executor.max_in_flight
+        return check_protocol(self.tracer.spans(since),
+                              self.tracer.metrics.snapshot(),
+                              max_in_flight=window)
+
     def close(self) -> None:
         if not self._closed:
             self.flush()
@@ -616,6 +689,8 @@ class FDB:
                 # _closed flips under _io_lock so io_executor's guard and
                 # this shutdown are atomic with respect to each other
                 if self._io_executor is not None:
+                    # lint: disable=L003 -- teardown: _closed must flip
+                    # atomically with the pool draining (see io_executor)
                     self._io_executor.shutdown(wait=True)
                     self._io_executor = None
                     self._io_executor_size = 0
@@ -663,7 +738,7 @@ class WriterSession:
         self._dirty = False
         self._seq = 0           # archive sequence, see FDB.flush's markers
         self._closed = False
-        self._lock = threading.Lock()
+        self._lock = NamedLock("fdb.session")
         #: (dataset, collocation, resource, lo, hi) -> epoch
         self._held: Dict[Tuple[Identifier, Identifier, str, int, int],
                          int] = {}
@@ -728,8 +803,8 @@ class WriterSession:
         and giving one back must not sweep away its siblings — overlap
         release is the coordinator's tool (:meth:`FDB.release_lease`)."""
         dataset, collocation = self.fdb._lease_split(identifier)
-        self.fdb.catalogue.release_lease(dataset, collocation, str(resource),
-                                         lo, hi, self.writer_id, exact=True)
+        self.fdb._release_lease_split(dataset, collocation, str(resource),
+                                      lo, hi, self.writer_id, exact=True)
         with self._lock:
             self._held.pop((dataset, collocation, str(resource), int(lo),
                             int(hi)), None)
@@ -767,9 +842,9 @@ class WriterSession:
         with self._lock:
             held, self._held = list(self._held), {}
         for dataset, collocation, resource, lo, hi in held:
-            self.fdb.catalogue.release_lease(dataset, collocation, resource,
-                                             lo, hi, self.writer_id,
-                                             exact=True)
+            self.fdb._release_lease_split(dataset, collocation, resource,
+                                          lo, hi, self.writer_id,
+                                          exact=True)
 
     # -- archive / visibility (the FDB surface plans consume) ----------------
     def archive(self, identifier, data: BytesLike) -> FieldLocation:

@@ -34,14 +34,17 @@ living inside the real catalogue would behave.  Lease traffic is
 control-plane: it is deliberately *not* metered as data-path ops, so
 planning-time lease acquisition keeps benchmark meters clean.
 
-This module has no ``repro`` imports; both the interfaces and every backend
-reach for it without creating a cycle.
+This module imports nothing above ``repro.obs`` (the stdlib-only bottom
+layer); both the interfaces and every backend reach for it without
+creating a cycle.  Its locks are :class:`repro.obs.locks.NamedLock`\\ s
+(``lease.table`` / ``lease.host``) so the lock-order recorder sees them.
 """
 from __future__ import annotations
 
 import dataclasses
-import threading
 from typing import Dict, List, Tuple
+
+from repro.obs.locks import NamedLock
 
 Key = Tuple[str, str, str]          # (dataset, collocation, resource) labels
 
@@ -91,7 +94,7 @@ class LeaseTable:
     def __init__(self) -> None:
         self._leases: Dict[Key, List[Lease]] = {}
         self._epochs: Dict[Key, int] = {}
-        self._lock = threading.Lock()
+        self._lock = NamedLock("lease.table")
 
     def acquire(self, key: Key, owner: str, lo: int, hi: int) -> int:
         """Acquire ``[lo, hi)`` for ``owner``; returns the lease epoch.
@@ -175,7 +178,7 @@ class LeaseTable:
 
 #: attribute under which a deployment's shared table hangs off its engine/sim
 _HOST_ATTR = "_fdb_lease_table"
-_HOST_LOCK = threading.Lock()
+_HOST_LOCK = NamedLock("lease.host")
 
 
 def shared_lease_table(host: object) -> LeaseTable:

@@ -343,6 +343,8 @@ class FDBDataPipeline:
                     return
                 i += 1
 
+        # lint: disable=L005 -- single daemon prefetch thread feeding a
+        # bounded queue; not chunk I/O, so ChunkExecutor doesn't fit
         t = threading.Thread(target=fill, daemon=True)
         t.start()
         while True:

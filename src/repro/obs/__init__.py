@@ -5,6 +5,7 @@ plans, facade) can import this package without creating a cycle or a
 dependency.  See ``docs/observability.md`` for the span taxonomy and the
 metric name registry.
 """
+from .locks import NamedLock, held_locks, set_lock_observer
 from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
                       DEFAULT_LATENCY_BUCKETS_US)
 from .trace import (GLOBAL_TRACER, PHASE_SPANS, Span, TraceBuffer, Tracer,
@@ -15,4 +16,5 @@ __all__ = [
     "DEFAULT_LATENCY_BUCKETS_US",
     "GLOBAL_TRACER", "PHASE_SPANS", "Span", "TraceBuffer", "Tracer",
     "current_span", "current_tracer", "span",
+    "NamedLock", "held_locks", "set_lock_observer",
 ]

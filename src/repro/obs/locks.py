@@ -1,0 +1,96 @@
+"""Named locks with an acquisition-order observer hook.
+
+``NamedLock`` is a drop-in ``threading.Lock`` replacement that carries a
+stable name and, *only when an observer is installed*, reports every
+acquisition attempt together with the names of the locks the acquiring
+thread already holds.  That is exactly the signal a lock-order recorder
+needs to build the acquisition-order graph (``repro.analysis.protocol.
+LockOrderRecorder``) and flag cycles — potential deadlocks — without any
+runtime cost on the default path: with no observer the overhead is one
+module-global read plus thread-local held-list bookkeeping.
+
+Stdlib-only, like the rest of ``repro.obs``.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable, Optional, Tuple
+
+#: observer signature: (names of locks already held by this thread,
+#: name of the lock about to be acquired) — called BEFORE blocking on the
+#: lock, so a recorder sees the ordering even if the acquire then waits.
+Observer = Callable[[Tuple[str, ...], str], None]
+
+_observer: Optional[Observer] = None
+_held = threading.local()
+
+
+def set_lock_observer(observer: Optional[Observer]) -> Optional[Observer]:
+    """Install (or, with ``None``, remove) the process-wide acquisition
+    observer; returns the previous one so callers can restore it."""
+    global _observer
+    prev = _observer
+    _observer = observer
+    return prev
+
+
+def held_locks() -> Tuple[str, ...]:
+    """Names of the :class:`NamedLock`\\ s the calling thread holds, in
+    acquisition order (innermost last)."""
+    return tuple(getattr(_held, "names", ()))
+
+
+class NamedLock:
+    """A ``threading.Lock`` with a name and an acquisition-order hook.
+
+    Supports the full lock protocol (``acquire``/``release``/context
+    manager, including ``acquire(blocking=False)``), so it substitutes for
+    a plain lock anywhere — the FDB facade and the backends name their
+    internal locks with it (``fdb.flush``, ``lease.table``,
+    ``store.posix``, ...).
+    """
+
+    __slots__ = ("name", "_lock")
+
+    def __init__(self, name: str):
+        self.name = name
+        self._lock = threading.Lock()
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        obs = _observer
+        if obs is not None:
+            obs(held_locks(), self.name)
+        ok = self._lock.acquire(blocking, timeout)
+        if ok:
+            names = getattr(_held, "names", None)
+            if names is None:
+                names = _held.names = []
+            names.append(self.name)
+        return ok
+
+    def release(self) -> None:
+        self._lock.release()
+        names = getattr(_held, "names", None)
+        if names and self.name in names:
+            # remove the innermost occurrence (re-entrant naming is not,
+            # but out-of-order release is, legal for plain locks)
+            for i in range(len(names) - 1, -1, -1):
+                if names[i] == self.name:
+                    del names[i]
+                    break
+
+    def locked(self) -> bool:
+        return self._lock.locked()
+
+    def __enter__(self) -> bool:
+        return self.acquire()
+
+    def __exit__(self, *exc) -> None:
+        self.release()
+
+    def __repr__(self) -> str:
+        state = "locked" if self._lock.locked() else "unlocked"
+        return f"NamedLock({self.name!r}, {state})"
+
+
+__all__ = ["NamedLock", "set_lock_observer", "held_locks"]

@@ -567,6 +567,10 @@ class WritePlan:
             #: lease resource = the live layout generation's chunk-id space
             #: (a reshard opens a fresh space, so leases die with layouts)
             self._lease_resource = f"g{array.meta.generation}"
+            #: protocol-checker correlation attrs (docs/analysis.md): the
+            #: canonical lease scope + the owning writer id, stamped on
+            #: this plan's io.archive / rmw.fetch spans
+            self._lease_scope = store.fdb.lease_scope(self._lease_ident)
             acquired: List[Tuple[int, int, int, bool]] = []
             try:
                 for lo, hi in merge_id_ranges(
@@ -611,6 +615,18 @@ class WritePlan:
                 else:
                     kept.append((lo, hi, epoch, created))
             self.leases = kept
+
+    def _protocol_attrs(self) -> dict:
+        """Correlation attrs for the protocol checker (docs/analysis.md):
+        which writer archived under which lease scope/resource on which
+        client.  Empty on the single-writer (sessionless) path — there is
+        no lease contract to check."""
+        if self.session is None:
+            return {}
+        return {"owner": self.session.writer_id,
+                "scope": self._lease_scope,
+                "resource": self._lease_resource,
+                "client": self.session.fdb.client_id}
 
     def _stage_groups(self, stage: List[int]) -> List[List[int]]:
         """Positions-into-tasks per batched store write within one stage."""
@@ -695,7 +711,8 @@ class WritePlan:
             # own (and be mid-write on) these chunks
             self.check_leases()
             metrics.counter("rmw.fetched_chunks").inc(len(rmw))
-            with self.tracer.span("rmw.fetch", chunks=len(rmw)):
+            with self.tracer.span("rmw.fetch", chunks=len(rmw),
+                                  **self._protocol_attrs()):
                 fetch = ReadPlan.for_chunks(
                     arr, [self.tasks[pos][0] for _k, pos in rmw])
                 for (k, pos), tile in zip(rmw, fetch.read_chunks()):
@@ -714,16 +731,23 @@ class WritePlan:
                 sp.attrs["nbytes"] = nbytes
         metrics.counter("codec.bytes_encoded").inc(nbytes)
         idents = [arr.chunk_ident(self.tasks[pos][0]) for pos in stage]
+        #: linear chunk ids per stage position — io.archive spans carry
+        #: them so the checker can test lease coverage per archived chunk
+        lin = ([arr.grid.linear_id(self.tasks[pos][0]) for pos in stage]
+               if self.session is not None else None)
 
         def put(ks: List[int]) -> List[FieldLocation]:
             # one store-level submission per group: a posix group lands
             # as a single buffered append; object groups are singletons
             with self.tracer.span("io.archive", chunks=len(ks),
-                                  backend=store.fdb.config.backend) as sp:
+                                  backend=store.fdb.config.backend,
+                                  **self._protocol_attrs()) as sp:
                 batch_locs = client.archive_batch(
                     [(idents[k], blobs[k]) for k in ks])
                 if sp is not None:
                     sp.attrs["nbytes"] = sum(len(blobs[k]) for k in ks)
+                    if lin is not None:
+                        sp.attrs["chunk_ids"] = [lin[k] for k in ks]
             return batch_locs
 
         # the fencing gate runs per stage, right before its archives: a

@@ -20,6 +20,31 @@ def fresh_engines():
     GLOBAL_TRACER.clear()
 
 
+#: modules whose tests run under the dynamic protocol sanitizer
+#: (repro.analysis.protocol).  The tracer is force-enabled only for the
+#: lease suite — test_obs asserts the disabled-by-default contract, so
+#: there the guard still records lock order but sees no spans.
+_PROTOCOL_GUARDED = {"test_leases", "test_obs"}
+_TRACED = {"test_leases"}
+
+
+@pytest.fixture(autouse=True)
+def protocol_check(request, fresh_engines):
+    """Replay every guarded test's trace window through the concurrency
+    protocol checker and fail on any contract violation (archive without
+    a live lease, release-before-flush, stale RMW, lock-order cycles,
+    executor over window)."""
+    module = request.module.__name__.rpartition(".")[2]
+    if module not in _PROTOCOL_GUARDED:
+        yield
+        return
+    from repro.analysis.protocol import protocol_guard
+    if module in _TRACED:
+        GLOBAL_TRACER.enable()
+    with protocol_guard(GLOBAL_TRACER):
+        yield
+
+
 @pytest.fixture
 def nwp_identifier():
     return {

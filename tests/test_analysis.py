@@ -1,0 +1,464 @@
+"""repro.analysis: seeded-violation tests for the protocol checker and
+unit tests for the repo-invariant linter.
+
+Each protocol rule is proven to *fire* on a synthetic trace seeded with
+exactly that violation, and to stay silent on the healthy variant; one
+violation is driven through the real FDB/tensorstore stack
+(``execute(flush=False)`` then release) and caught by
+``fdb.check_protocol()``.  The linter is exercised against tiny
+synthetic repos under ``tmp_path`` — one per rule — plus the live
+check that ``src/`` itself is lint-clean with every suppression pinned.
+"""
+import textwrap
+
+import numpy as np
+import pytest
+
+from repro.analysis.lint import Linter, lint_paths, load_span_taxonomy
+from repro.analysis.protocol import (LockOrderRecorder, Violation,
+                                     check_protocol, protocol_guard)
+from repro.core import FDB, FDBConfig
+from repro.obs.locks import NamedLock
+from repro.obs.trace import GLOBAL_TRACER, Tracer
+from repro.tensorstore import TensorStore
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+
+# ---------------------------------------------------------------------------
+# protocol checker: seeded traces, rule by rule
+# ---------------------------------------------------------------------------
+
+S = dict(scope="ds|col", resource="g0")     # one (scope, resource) key
+
+
+def tracer():
+    return Tracer(enabled=True)
+
+
+def test_archive_without_lease_fires():
+    t = tracer()
+    t.record_complete("io.archive", 10, 20, owner="w1", client="c1",
+                      chunk_ids=[0, 1], **S)
+    v = check_protocol(t.spans())
+    assert [x.rule for x in v] == ["archive-without-lease"]
+    assert v[0].details["chunk_ids"] == [0, 1]
+    assert "no live covering lease" in str(v[0])
+
+
+def test_archive_under_live_lease_full_lifecycle_is_clean():
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("io.archive", 10, 20, owner="w1", client="c1",
+                      chunk_ids=[0, 3], **S)
+    t.record_complete("fdb.flush", 30, 40, client="c1")
+    t.record_complete("lease.release", 50, 55, owner="w1", lo=0, hi=4,
+                      exact=True, **S)
+    assert check_protocol(t.spans()) == []
+
+
+def test_archive_outside_leased_range_fires():
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("io.archive", 10, 20, owner="w1", client="c1",
+                      chunk_ids=[3, 4], **S)         # 4 is outside [0, 4)
+    v = check_protocol(t.spans())
+    assert [x.rule for x in v] == ["archive-without-lease"]
+    assert v[0].details["chunk_ids"] == [4]
+
+
+def test_epoch_regression_fires_but_idempotent_reacquire_does_not():
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=7, **S)
+    t.record_complete("lease.acquire", 10, 15, owner="w1", lo=0, hi=4,
+                      epoch=7, **S)                  # idempotent: same epoch
+    t.record_complete("lease.release", 20, 22, owner="w1", lo=0, hi=4,
+                      exact=True, **S)
+    t.record_complete("lease.acquire", 30, 35, owner="w2", lo=0, hi=4,
+                      epoch=3, **S)                  # regression: 3 < 7
+    v = check_protocol(t.spans())
+    assert [x.rule for x in v] == ["epoch-regression"]
+    assert v[0].details == {"scope": "ds|col", "resource": "g0", "lo": 0,
+                            "hi": 4, "epoch": 3, "prev_epoch": 7}
+
+
+def test_release_before_flush_fires():
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("io.archive", 10, 20, owner="w1", client="c1",
+                      chunk_ids=[1, 2], **S)
+    t.record_complete("lease.release", 30, 35, owner="w1", lo=0, hi=4,
+                      exact=True, **S)               # dirty chunks orphaned
+    v = check_protocol(t.spans())
+    assert [x.rule for x in v] == ["release-before-flush"]
+    assert v[0].details["chunk_ids"] == [1, 2]
+
+
+def test_release_after_flush_is_clean():
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("io.archive", 10, 20, owner="w1", client="c1",
+                      chunk_ids=[1, 2], **S)
+    t.record_complete("fdb.flush", 25, 28, client="c1")
+    t.record_complete("lease.release", 30, 35, owner="w1", lo=0, hi=4,
+                      exact=True, **S)
+    assert check_protocol(t.spans()) == []
+
+
+def test_sibling_lease_keeps_dirty_chunks_covered():
+    """Exact release of one of two overlapping same-owner leases is clean
+    while the sibling still covers the dirty chunk — releasing the
+    sibling too (still unflushed) then fires."""
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("lease.acquire", 6, 8, owner="w1", lo=2, hi=6,
+                      epoch=2, **S)
+    t.record_complete("io.archive", 10, 20, owner="w1", client="c1",
+                      chunk_ids=[3], **S)            # covered by both
+    t.record_complete("lease.release", 30, 32, owner="w1", lo=2, hi=6,
+                      exact=True, **S)               # sibling still covers 3
+    assert check_protocol(t.spans()) == []
+    t.record_complete("lease.release", 40, 42, owner="w1", lo=0, hi=4,
+                      exact=True, **S)               # now 3 is orphaned
+    v = check_protocol(t.spans())
+    assert [x.rule for x in v] == ["release-before-flush"]
+    assert v[0].details["chunk_ids"] == [3]
+
+
+def test_rmw_without_lease_check_fires():
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("rmw.fetch", 10, 20, owner="w1", client="c1", **S)
+    v = check_protocol(t.spans())
+    assert [x.rule for x in v] == ["rmw-unvalidated"]
+
+
+def test_rmw_after_fencing_check_is_clean():
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("lease.check", 8, 9, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("rmw.fetch", 10, 20, owner="w1", client="c1", **S)
+    assert check_protocol(t.spans()) == []
+
+
+def test_rmw_with_stale_check_fires():
+    """A check that predates the owner's last lease-state change does not
+    validate a later RMW fetch — it must be re-run."""
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("lease.check", 8, 9, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("lease.acquire", 12, 15, owner="w1", lo=4, hi=8,
+                      epoch=2, **S)                  # state changed at t=15
+    t.record_complete("rmw.fetch", 20, 30, owner="w1", client="c1", **S)
+    v = check_protocol(t.spans())
+    assert [x.rule for x in v] == ["rmw-unvalidated"]
+    assert v[0].details["last_check"] == 8
+    assert v[0].details["last_change"] == 15
+
+
+def test_executor_over_window_fires_from_gauge_high_water():
+    t = tracer()
+    t.metrics.gauge("executor.in_flight").set(9)
+    t.metrics.gauge("executor.in_flight").set(2)     # level drops, max stays
+    v = check_protocol([], t.metrics, max_in_flight=8)
+    assert [x.rule for x in v] == ["executor-over-window"]
+    assert v[0].details == {"max": 9, "window": 8}
+    assert check_protocol([], t.metrics, max_in_flight=16) == []
+    assert check_protocol([], None, max_in_flight=8) == []       # skipped
+    assert check_protocol([], t.metrics, max_in_flight=None) == []
+
+
+def test_lock_cycle_recorder_flags_opposite_orders():
+    a, b = NamedLock("La"), NamedLock("Lb")
+    rec = LockOrderRecorder()
+    with rec:
+        with a:
+            with b:
+                pass
+        with b:
+            with a:                                  # opposite order
+                pass
+    cycles = rec.cycles()
+    assert len(cycles) == 1 and set(cycles[0]) == {"La", "Lb"}
+    v = rec.violations()
+    assert [x.rule for x in v] == ["lock-cycle"]
+
+
+def test_lock_order_consistent_is_clean():
+    a, b = NamedLock("La"), NamedLock("Lb")
+    with LockOrderRecorder() as rec:
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+    assert rec.cycles() == [] and rec.violations() == []
+
+
+def test_protocol_guard_raises_on_seeded_violation():
+    t = tracer()
+    with pytest.raises(AssertionError, match="archive-without-lease"):
+        with protocol_guard(t, lock_order=False):
+            t.record_complete("io.archive", 10, 20, owner="w1",
+                              chunk_ids=[0], **S)
+
+
+def test_protocol_guard_clean_block_passes_and_body_errors_propagate():
+    t = tracer()
+    with protocol_guard(t):
+        with t.span("io.fetch"):
+            pass
+    with pytest.raises(ValueError, match="boom"):    # not swallowed
+        with protocol_guard(t):
+            raise ValueError("boom")
+
+
+def test_violation_str_format():
+    v = Violation("epoch-regression", "msg", 5, {"k": 1})
+    assert str(v) == "[epoch-regression] msg"
+
+
+# ---------------------------------------------------------------------------
+# protocol checker against the real FDB/tensorstore stack
+# ---------------------------------------------------------------------------
+
+BASE = {"store": "s", "array": "a", "writer": "w0"}
+
+
+def make_fdb(tmp_path):
+    return FDB(FDBConfig(backend="posix", schema="tensor",
+                         root=str(tmp_path / "fdb")))
+
+
+def test_real_stack_release_before_flush_detected(tmp_path):
+    """Drive the actual contract break through the public API: a session
+    plan archives with ``flush=False`` and then abandons its leases
+    without flushing — ``fdb.check_protocol()`` must catch it."""
+    GLOBAL_TRACER.enable()
+    fdb = make_fdb(tmp_path)
+    x = np.arange(64 * 48, dtype=np.float32).reshape(64, 48)
+    TensorStore(fdb, BASE).create(x.shape, x.dtype, chunks=(16, 16))
+    fdb.flush()
+    sa = fdb.session("A")
+    arr = TensorStore(None, BASE, session=sa).open()
+    plan = arr.write_plan((slice(0, 32), slice(None)), x[:32])
+    plan.execute(flush=False)                        # chunks stay dirty
+    plan.release_leases()                            # ...and get orphaned
+    v = fdb.check_protocol()
+    assert any(x.rule == "release-before-flush" for x in v)
+    assert all(x.rule == "release-before-flush" for x in v)
+    sa.close()
+    fdb.close()
+
+
+def test_real_stack_healthy_two_writer_run_is_clean(tmp_path):
+    GLOBAL_TRACER.enable()
+    fdb = make_fdb(tmp_path)
+    x = np.arange(64 * 48, dtype=np.float32).reshape(64, 48)
+    arr = TensorStore(fdb, BASE).create(x.shape, x.dtype, chunks=(16, 16))
+    fdb.flush()
+    sa, sb = fdb.session("A"), fdb.session("B")
+    aa = TensorStore(None, BASE, session=sa).open()
+    ab = TensorStore(None, BASE, session=sb).open()
+    aa.write_plan((slice(0, 32), slice(None)), x[:32]).execute(flush=False)
+    ab.write_plan((slice(32, 64), slice(None)), x[32:]).execute(flush=False)
+    sa.flush()                                       # publishes both
+    sa.close()
+    sb.close()
+    np.testing.assert_array_equal(arr.read(), x)
+    assert fdb.check_protocol() == []
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# linter: one synthetic mini-repo per rule
+# ---------------------------------------------------------------------------
+
+DOCS = textwrap.dedent("""\
+    # Observability
+
+    ## Span taxonomy
+
+    | Span | Layer | Meaning |
+    |---|---|---|
+    | `io.fetch` | tensorstore | reads |
+    | `plan.write` / `plan.stage` | tensorstore | stages |
+    | `store.<backend>.archive[_batch]` | backends | writes |
+
+    ## Metric names
+    """)
+
+
+def mkrepo(tmp_path, files):
+    (tmp_path / "docs").mkdir(exist_ok=True)
+    (tmp_path / "docs" / "observability.md").write_text(DOCS)
+    for rel, text in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(text))
+    return lint_paths([tmp_path / "src"], root=tmp_path)
+
+
+def rules(result):
+    return [f.rule for f in result.findings]
+
+
+def test_lint_layer_violations(tmp_path):
+    res = mkrepo(tmp_path, {
+        "src/repro/core/x.py": "from repro.tensorstore import store\n",
+        "src/repro/obs/y.py": "import numpy\n",
+        "src/repro/data/ok.py": "from repro.core import FDB\n",
+        "src/repro/obs/ok.py": "import json\nfrom .y import thing\n",
+    })
+    assert rules(res) == ["L001", "L001"]
+    assert {f.path for f in res.findings} == \
+        {"src/repro/core/x.py", "src/repro/obs/y.py"}
+    assert "stdlib-only" in res.findings[1].message
+
+
+def test_lint_byte_ops_outside_facade(tmp_path):
+    body = "def f(x, b):\n    x.store.archive(b)\n    x.catalogue.flush()\n"
+    res = mkrepo(tmp_path, {
+        "src/repro/data/x.py": body,        # not a facade/plan module
+        "src/repro/core/fdb.py": body,      # the facade itself: allowed
+    })
+    assert rules(res) == ["L002", "L002"]
+    assert all(f.path == "src/repro/data/x.py" for f in res.findings)
+
+
+def test_lint_blocking_call_under_lock(tmp_path):
+    res = mkrepo(tmp_path, {
+        "src/repro/core/backends/b.py": """\
+            def f(self, data):
+                with self._lock:
+                    self.f.write(data)
+                self.f.write(data)      # outside the lock: fine
+            """,
+        "src/repro/tensorstore/t.py": """\
+            def f(self, data):
+                with self._lock:
+                    self.f.write(data)  # rule scoped to fdb/backends only
+            """,
+    })
+    assert rules(res) == ["L003"]
+    assert res.findings[0].path == "src/repro/core/backends/b.py"
+
+
+def test_lint_span_discipline(tmp_path):
+    res = mkrepo(tmp_path, {
+        "src/repro/train/x.py": """\
+            def f(tracer):
+                cm = tracer.span("io.fetch")          # not a CM: flagged
+                with tracer.span("bogus.name"):       # undocumented name
+                    pass
+                with tracer.span("io.fetch"):         # fine
+                    pass
+                with tracer.span("store.daos.archive_batch"):  # wildcard
+                    pass
+            """,
+    })
+    assert rules(res) == ["L004", "L004"]
+    assert "context manager" in res.findings[0].message
+    assert "bogus.name" in res.findings[1].message
+
+
+def test_lint_bare_thread(tmp_path):
+    res = mkrepo(tmp_path, {
+        "src/repro/serve/x.py":
+            "import threading\n\nt = threading.Thread(target=print)\n",
+        "src/repro/tensorstore/executor.py":
+            "import threading\n\nt = threading.Thread(target=print)\n",
+    })
+    assert rules(res) == ["L005"]
+    assert res.findings[0].path == "src/repro/serve/x.py"
+
+
+def test_lint_metered_lease_path(tmp_path):
+    res = mkrepo(tmp_path, {
+        "src/repro/core/lease.py": """\
+            def acquire(self):
+                self.meter.record("op", 1)
+            """,
+        "src/repro/core/fdb.py": """\
+            def archive(self):
+                self.meter.record("op", 1)  # data path: metering is fine
+            def acquire_lease(self):
+                GLOBAL_METER.record("op", 1)
+            """,
+    })
+    assert set(rules(res)) == {"L006"}
+    assert {f.path for f in res.findings} == \
+        {"src/repro/core/lease.py", "src/repro/core/fdb.py"}
+
+
+def test_lint_repo_layout(tmp_path):
+    res = mkrepo(tmp_path, {
+        "stray.py": "x = 1\n",
+        "conftest.py": "x = 1\n",           # allow-listed
+    })
+    assert rules(res) == ["L007"]
+    assert "stray.py" in res.findings[0].message
+
+
+def test_lint_suppression_matching_and_l008(tmp_path):
+    res = mkrepo(tmp_path, {
+        "src/repro/serve/a.py": """\
+            import threading
+
+            # lint: disable=L005 -- deliberate single helper thread
+            t = threading.Thread(target=print)
+            """,
+        "src/repro/serve/b.py": """\
+            import threading
+
+            t = threading.Thread(target=print)  # lint: disable=L005
+            """,
+        "src/repro/serve/c.py": """\
+            import threading  # lint: disable=L001 -- never fires
+            """,
+    })
+    # a.py: baselined by a comment-block pragma with rationale.
+    # b.py: suppressed but the bare pragma is itself an L008 finding.
+    # c.py: a suppression that matches nothing is reported unused.
+    assert rules(res) == ["L008"]
+    assert res.findings[0].path == "src/repro/serve/b.py"
+    assert [f.path for f in res.suppressed] == ["src/repro/serve/a.py",
+                                                "src/repro/serve/b.py"]
+    assert [s.path for s in res.unused_suppressions] == \
+        ["src/repro/serve/c.py"]
+
+
+def test_load_span_taxonomy_expansion(tmp_path):
+    doc = tmp_path / "observability.md"
+    doc.write_text(DOCS)
+    exact, patterns = load_span_taxonomy(doc)
+    assert {"io.fetch", "plan.write", "plan.stage"} <= exact
+    assert any(p.fullmatch("store.rados.archive") for p in patterns)
+    assert any(p.fullmatch("store.rados.archive_batch") for p in patterns)
+    assert not any(p.fullmatch("store.rados.retrieve") for p in patterns)
+
+
+def test_repo_src_is_lint_clean():
+    """The live gate: the repo's own src/ has zero unsuppressed findings
+    and no stale suppressions (mirrors `scripts/lint.py src --strict`)."""
+    res = lint_paths([REPO / "src"], root=REPO)
+    assert res.findings == []
+    assert res.unused_suppressions == []
+    assert all(s.rationale for s in res.suppressions)
+
+
+def test_linter_uses_real_taxonomy():
+    linter = Linter(root=REPO)
+    assert linter._span_name_ok("lease.release")
+    assert linter._span_name_ok("store.posix.archive_batch")
+    assert not linter._span_name_ok("made.up.name")
