@@ -23,10 +23,19 @@ executor, reporting per-writer coalesced ``write_ops`` and the
 concurrency-behaviour axis the related DAOS/NWP work says object stores
 win on.
 
+A **chaos suite** closes the run: the same archive workload driven under
+a *seeded fault schedule* (``FaultInjector`` — scripted transient archive
+faults, a catalogue-flush failure, latency spikes) with the facade
+``RetryPolicy`` healing them.  Reported per cell: ``retries`` (facade
+re-attempts), ``goodput_mib_s`` (payload bytes over degraded wall time),
+``faults_injected``, and ``lost_chunks`` — which must be 0: every chunk
+reads back byte-identical despite the faults (asserted by the check.sh
+chaos smoke).
+
 ``run(tiny=True)`` is the CI smoke profile: two backends, one cell each
-(plus one contention cell per backend), enough to keep the perf-trajectory
-JSON (read_ops/write_ops/reshard/garbage/contention rows) honest without a
-full sweep.
+(plus one contention cell and one chaos cell per backend), enough to keep
+the perf-trajectory JSON (read_ops/write_ops/reshard/garbage/contention/
+chaos rows) honest without a full sweep.
 """
 from __future__ import annotations
 
@@ -38,8 +47,9 @@ from typing import List
 
 import numpy as np
 
-from repro.core import (FDB, FDBConfig, LeaseConflictError, Meter, PROFILES,
-                        model_run, reset_engines)
+from repro.core import (FDB, FDBConfig, FaultInjector, LeaseConflictError,
+                        Meter, PROFILES, RetryPolicy, model_run,
+                        reset_engines)
 from repro.obs.trace import GLOBAL_TRACER, Tracer
 from repro.tensorstore import ChunkExecutor, TensorStore
 from .common import Row
@@ -59,6 +69,10 @@ CONTENTION_WRITERS = (2, 4, 8)
 CONTENTION_WINDOWS = ("full", "half")   # leased window vs half-band window
 TINY_CONTENTION_WRITERS = (2,)
 TINY_CONTENTION_WINDOWS = ("full",)
+#: chaos suite: posix + one object backend, seeded so the schedule (and
+#: therefore the retry/goodput columns) is reproducible run to run
+CHAOS_BACKENDS = ("posix", "daos")
+CHAOS_SEED = 1107
 
 
 def _bench_tracer() -> Tracer:
@@ -200,6 +214,7 @@ def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                 fdb.close()
                 shutil.rmtree(root, ignore_errors=True)
     rows.extend(contention_rows(profile, tiny))
+    rows.extend(fault_rows(profile, tiny))
     return rows
 
 
@@ -287,4 +302,71 @@ def contention_rows(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                                m.write_bw / 2**30, 4), **ph}))
                 fdb.close()
                 shutil.rmtree(root, ignore_errors=True)
+    return rows
+
+
+def fault_rows(profile: str = "gcp", tiny: bool = False) -> List[Row]:
+    """Goodput under a seeded fault schedule: archive + read back one
+    array while the injector drops transient errors into the data path
+    (scripted ``first=N`` floor so every run retries, plus a
+    probabilistic tail and latency spikes) and the facade
+    ``RetryPolicy`` heals them.  The contract column is ``lost_chunks``:
+    after the faulted write, every chunk must read back byte-identical
+    to the source — 0 by construction, asserted by the check.sh chaos
+    smoke alongside ``retries > 0``."""
+    rows: List[Row] = []
+    edge = 64
+    x = np.random.default_rng(2).normal(size=SHAPE).astype(np.float32)
+    for backend in CHAOS_BACKENDS:
+        meter = Meter()
+        tracer = _bench_tracer()
+        reset_engines()
+        root = f"/tmp/fdb-bench-ts-chaos-{backend}-{os.getpid()}"
+        shutil.rmtree(root, ignore_errors=True)
+        inj = (FaultInjector(seed=CHAOS_SEED)
+               .fail("store.archive", rate=0.08, first=2)
+               .fail("store.retrieve", first=1)
+               .fail("catalogue.flush", first=1)
+               .delay("store.archive", 0.0005, rate=0.2))
+        retry = RetryPolicy(seed=CHAOS_SEED, base_delay=0.0005,
+                            max_delay=0.005)
+        fdb = FDB(FDBConfig(backend=backend, schema="tensor", root=root),
+                  meter=meter, tracer=tracer, retry=retry, faults=inj)
+        ts = TensorStore(fdb, {"store": "bench", "array": "chaos",
+                               "writer": "p0"})
+        mk = tracer.mark()
+        t0 = time.perf_counter()
+        ts.save(x, chunks=(edge, edge))
+        wall = time.perf_counter() - t0
+        ph = _phase_extra(tracer, mk, wall)
+        n_chunks = (-(-SHAPE[0] // edge)) * (-(-SHAPE[1] // edge))
+
+        # zero-loss audit: every chunk window must read back byte-equal
+        arr = ts.open()
+        lost = 0
+        for i in range(-(-SHAPE[0] // edge)):
+            for j in range(-(-SHAPE[1] // edge)):
+                sl = (slice(i * edge, min(SHAPE[0], (i + 1) * edge)),
+                      slice(j * edge, min(SHAPE[1], (j + 1) * edge)))
+                try:
+                    if not np.array_equal(arr[sl], x[sl]):
+                        lost += 1
+                except Exception:  # noqa: BLE001 — a lost chunk, not a bug
+                    lost += 1
+
+        snap = fdb.metrics()
+        retries = snap.get("retry.attempts", {}).get("value", 0)
+        giveups = snap.get("retry.giveups", {}).get("value", 0)
+        goodput = x.nbytes / wall / 2**20
+        rows.append(Row(
+            f"tensorstore/{backend}/chaos", wall / n_chunks * 1e6,
+            f"goodput={goodput:.1f}MiB/s retries={retries} "
+            f"faults={inj.injected} lost_chunks={lost} giveups={giveups}",
+            extra={"backend": backend, "chaos": True, "seed": CHAOS_SEED,
+                   "retries": retries, "giveups": giveups,
+                   "goodput_mib_s": round(goodput, 3),
+                   "faults_injected": inj.injected,
+                   "lost_chunks": lost, "n_chunks": n_chunks, **ph}))
+        fdb.close()
+        shutil.rmtree(root, ignore_errors=True)
     return rows

@@ -12,13 +12,19 @@
 #      coalesced per writer; the run also exports an I/O trace (--trace)
 #      that must be valid, non-empty Chrome trace_event JSON, and the
 #      phase-attributed t_queue/t_io/t_decode/t_encode columns must be
-#      present and sane on the bench rows;
+#      present and sane on the bench rows; the chaos rows (seeded fault
+#      schedule healed by the retry layer) must report nonzero retries,
+#      zero giveups and zero lost chunks;
 #   4. trace smoke — a traced chunked roundtrip on all four backends must
 #      record plan/io/codec spans (and record nothing with tracing off);
-#   5. lint gate — the repo-invariant linter (repro.analysis.lint) in
+#   5. chaos smoke — a writer crash-killed between archive and flush
+#      (InjectedCrash) must leave torn state that fdb.recover() fully
+#      mops up (expired lease purged, orphan intents quarantined) so a
+#      second writer completes byte-identical, protocol-clean;
+#   6. lint gate — the repo-invariant linter (repro.analysis.lint) in
 #      strict mode: zero unsuppressed findings, zero unused suppressions
 #      (docs/analysis.md has the rule catalogue);
-#   6. docs gate — README.md/docs/*.md internal links resolve and the
+#   7. docs gate — README.md/docs/*.md internal links resolve and the
 #      fenced python quickstart blocks actually execute.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -58,6 +64,21 @@ pcont = [r for r in cont if r.get("backend") == "posix"]
 assert pcont and all(r["write_ops"] <= r["writers"] for r in pcont), \
     "posix contention coalescing regressed: more store writes than writers"
 
+# chaos rows: the seeded fault schedule must have actually fired and the
+# retry layer must have healed every fault -- goodput under degradation
+# with zero data loss is the robustness contract (docs/robustness.md)
+chaos = [r for r in rows if r.get("chaos")]
+assert chaos, "no chaos (seeded fault schedule) rows"
+assert all(r["faults_injected"] > 0 for r in chaos), \
+    "chaos rows injected no faults: the schedule is dead"
+assert all(r["retries"] > 0 for r in chaos), \
+    "chaos rows show zero retries: faults bypassed the retry layer"
+assert all(r["giveups"] == 0 for r in chaos), \
+    "chaos rows gave up retrying: transient schedule exceeded the policy"
+assert all(r["lost_chunks"] == 0 for r in chaos), \
+    "CHAOS DATA LOSS: chunks failed to read back byte-identical"
+assert all(r["goodput_mib_s"] > 0 for r in chaos), "zero chaos goodput"
+
 # phase-attributed latency columns (repro.obs): every tensorstore bench
 # row must carry them, io time must be nonzero where I/O happened, and
 # the phase sum must stay within a sane multiple of the row's wall time
@@ -88,8 +109,8 @@ for e in xs[:64]:
 names = {e["name"] for e in xs}
 assert "io.archive" in names or "io.fetch" in names, \
     f"trace has no io spans: {sorted(names)[:20]}"
-print(f"bench smoke OK: {len(rows)} rows ({len(cont)} contention), "
-      f"trace OK: {len(xs)} spans")
+print(f"bench smoke OK: {len(rows)} rows ({len(cont)} contention, "
+      f"{len(chaos)} chaos), trace OK: {len(xs)} spans")
 PY
 
 # trace smoke: a traced chunked roundtrip on all four simulated backends
@@ -132,6 +153,64 @@ for backend in ("daos", "rados", "posix", "s3"):
     assert not off.spans(), f"{backend}: disabled tracer recorded spans"
     fdb.close()
 print("trace smoke OK: 4 backends traced, disabled path records nothing")
+PY
+
+# chaos smoke: kill a writer between archive and flush, let its lease TTL
+# lapse, then fdb.recover() must purge the lease + quarantine the orphan
+# intents so a second writer completes byte-identical, protocol-clean
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import time
+import numpy as np
+from repro.core import (FDB, FDBConfig, FaultInjector, InjectedCrash,
+                        RetryPolicy, reset_engines)
+from repro.obs.trace import GLOBAL_TRACER
+from repro.tensorstore import TensorStore
+
+GLOBAL_TRACER.enable()
+reset_engines()
+base = {"store": "smoke", "array": "crash", "writer": "w0"}
+cfg = dict(backend="rados", schema="tensor", root="/tmp/chaos-smoke-rados")
+x = np.random.default_rng(7).normal(size=(64, 48)).astype(np.float32)
+
+setup = FDB(FDBConfig(**cfg))
+arr = TensorStore(setup, base).create(x.shape, x.dtype, chunks=(16, 16))
+setup.flush()
+
+inj = FaultInjector().crash_on("store.flush", call=1)
+fdb_a = FDB(FDBConfig(**cfg), faults=inj,
+            retry=RetryPolicy(sleep=lambda _s: None, seed=0))
+sa = fdb_a.session("A", lease_ttl=0.2)
+aa = TensorStore(None, base, session=sa).open()
+aa.write_plan((slice(0, 32), slice(None)), x[:32]).execute(flush=False)
+try:
+    sa.flush()
+    raise SystemExit("chaos smoke: injected crash did not fire")
+except InjectedCrash:
+    pass
+sa.abandon()                                   # the process is dead
+
+time.sleep(0.45)                               # let the TTL lapse
+fdb_b = FDB(FDBConfig(**cfg))
+report = TensorStore(fdb_b, base).recover()
+assert any(e["owner"] == "A" for e in report.expired), \
+    "recover() missed the crashed writer's expired lease"
+assert report.orphan_chunks == 6, \
+    f"recover() quarantined {report.orphan_chunks} orphans, expected 6"
+assert TensorStore(fdb_b, base).recover().clean, "second sweep not clean"
+
+sb = fdb_b.session("B")
+ab = TensorStore(None, base, session=sb).open()
+ab.write_plan((slice(0, 32), slice(None)), x[:32]).execute(flush=False)
+ab.write_plan((slice(32, 64), slice(None)), x[32:]).execute(flush=False)
+sb.flush()
+sb.close()
+np.testing.assert_array_equal(arr.read(), x)
+violations = fdb_b.check_protocol()
+assert violations == [], f"chaos smoke protocol violations: {violations}"
+setup.close(); fdb_a.close(); fdb_b.close()
+GLOBAL_TRACER.disable(); GLOBAL_TRACER.clear()
+print("chaos smoke OK: crash-killed writer recovered, rewrite "
+      "byte-identical, protocol clean")
 PY
 
 # lint gate: repo invariants, strict (prints the suppression count)

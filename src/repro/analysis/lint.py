@@ -24,6 +24,10 @@ prose + examples in ``docs/analysis.md``):
 ``L007``  repo-root layout: no stray top-level ``*.py`` files.
 ``L008``  every suppression pragma carries a rationale
           (``-- <reason>``); a bare one is itself a finding.
+``L009``  retries live in one place: no bare ``time.sleep`` and no
+          hand-rolled retry loops (``except: ... continue`` inside a
+          loop) outside ``core/retry.py`` / ``core/faults.py`` — go
+          through ``RetryPolicy`` (bounded, jittered, deadline-aware).
 ========  =============================================================
 
 Suppression syntax — trailing on the offending line, or in the comment
@@ -98,6 +102,11 @@ LEASE_FILES = ("core/lease.py", "core/fdb.py", "core/backends/")
 #: span-taxonomy rule exemptions (L004): obs defines the machinery,
 #: analysis replays it
 SPAN_EXEMPT = ("obs/", "analysis/")
+
+#: files that own sleeping/backoff (L009): the retry layer itself and the
+#: fault injector's latency spikes — everywhere else, a sleep is either a
+#: hand-rolled retry (use RetryPolicy) or a poll (use an Event/Condition)
+RETRY_FILES = ("core/retry.py", "core/faults.py")
 
 #: allowed repo-root python files (L007)
 ROOT_PY_ALLOWED = {"conftest.py", "setup.py"}
@@ -258,6 +267,7 @@ class Linter:
         self._rule_spans(rel, sub, tree)
         self._rule_threads(rel, sub, tree)
         self._rule_lease_metering(rel, sub, tree)
+        self._rule_sleep_retry(rel, sub, tree)
 
     # -- L001 --------------------------------------------------------------
     def _resolve_import(self, sub: str, node: ast.ImportFrom
@@ -428,6 +438,40 @@ class Linter:
                                f"lease traffic must never be metered as "
                                f"data-path ops")
 
+    # -- L009 --------------------------------------------------------------
+    def _rule_sleep_retry(self, rel: str, sub: str, tree: ast.AST) -> None:
+        if any(sub == p for p in RETRY_FILES):
+            return
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "sleep"
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id == "time"):
+                self._emit(rel, node.lineno, "L009",
+                           "bare time.sleep(...) outside the retry layer — "
+                           "route backoff through core.retry.RetryPolicy "
+                           "(bounded, jittered, deadline-aware) or wait on "
+                           "an Event/Condition")
+        # hand-rolled retry: a loop whose try/except swallows the error
+        # and continues the iteration (the shape RetryPolicy replaces)
+        loop_tries: Dict[int, ast.Try] = {}
+        for node in ast.walk(tree):
+            if isinstance(node, (ast.While, ast.For)):
+                for t in ast.walk(node):
+                    if isinstance(t, ast.Try):
+                        loop_tries[id(t)] = t
+        for t in loop_tries.values():
+            for h in t.handlers:
+                if any(isinstance(x, ast.Continue)
+                       for b in h.body for x in ast.walk(b)):
+                    self._emit(rel, h.lineno, "L009",
+                               "hand-rolled retry loop ('except: ... "
+                               "continue' inside a loop) — route retries "
+                               "through core.retry.RetryPolicy so attempts "
+                               "are bounded and metered")
+                    break
+
     # -- L007 --------------------------------------------------------------
     def lint_repo_layout(self) -> None:
         for p in sorted(self.root.glob("*.py")):
@@ -484,4 +528,5 @@ def lint_paths(paths: Sequence[Path],
 
 
 __all__ = ["Finding", "Suppression", "LintResult", "Linter", "lint_paths",
-           "load_span_taxonomy", "LAYER_DAG", "BYTE_OPS", "BLOCKING_CALLS"]
+           "load_span_taxonomy", "LAYER_DAG", "BYTE_OPS", "BLOCKING_CALLS",
+           "RETRY_FILES"]

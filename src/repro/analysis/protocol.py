@@ -19,7 +19,12 @@ writer-session layer (``docs/architecture.md`` → *Invariants*):
   *successful* epoch-fencing check, re-run after the owner's lease state
   last changed;
 * **executor-over-window** — the ``executor.in_flight`` gauge's high-water
-  mark never exceeds the configured window.
+  mark never exceeds the configured window;
+* **recover-live-lease** — a recovery sweep (``fdb.recover``) never purges
+  a lease whose TTL was still live at sweep time: the last extension the
+  trace shows (acquire or ``lease.renew`` heartbeat, with its ``ttl``)
+  must have lapsed before the sweep began, otherwise recovery raced a
+  live writer's heartbeat and may quarantine chunks it is about to flush.
 
 Events are ordered by their span timestamps (``perf_counter_ns`` is one
 process-wide monotonic clock, so cross-thread ordering is meaningful):
@@ -53,7 +58,7 @@ from repro.obs.trace import Span, Tracer
 #: the rule identifiers check_protocol / LockOrderRecorder can emit
 RULES = ("archive-without-lease", "epoch-regression",
          "release-before-flush", "rmw-unvalidated",
-         "executor-over-window", "lock-cycle")
+         "executor-over-window", "lock-cycle", "recover-live-lease")
 
 
 @dataclasses.dataclass
@@ -89,7 +94,9 @@ def check_protocol(spans: Sequence[Span], metrics=None,
     out: List[Violation] = []
     # -- build the time-ordered event list ---------------------------------
     # kinds: acquire@t1, release@t0, check@t0, flush@t1, rmw@t0,
-    #        archive coverage@t0 + archive dirty-marking@t1
+    #        archive coverage@t0 + archive dirty-marking@t1,
+    #        renew@t1, recover@t0 (a sweep's purge decision is made against
+    #        the lease table as it stood when the sweep began)
     events: List[Tuple[int, int, str, Span]] = []
     for i, s in enumerate(spans):
         a = s.attrs
@@ -99,13 +106,19 @@ def check_protocol(spans: Sequence[Span], metrics=None,
             events.append((s.t0_ns, i, "release", s))
         elif s.name == "lease.check" and "error" not in a:
             events.append((s.t0_ns, i, "check", s))
-        elif s.name == "fdb.flush":
+        elif s.name == "fdb.flush" and "error" not in a:
+            # a flush that raised (crashed writer, permanent backend
+            # error) published nothing — it is not a barrier
             events.append((s.t1_ns, i, "flush", s))
         elif s.name == "rmw.fetch" and "owner" in a:
             events.append((s.t0_ns, i, "rmw", s))
         elif s.name == "io.archive" and "owner" in a:
             events.append((s.t0_ns, i, "archive", s))
             events.append((s.t1_ns, i, "dirty", s))
+        elif s.name == "lease.renew" and "error" not in a:
+            events.append((s.t1_ns, i, "renew", s))
+        elif s.name == "fdb.recover" and "error" not in a:
+            events.append((s.t0_ns, i, "recover", s))
     events.sort(key=lambda e: (e[0], e[1]))
 
     live: Dict[_LiveKey, Dict[_Range, int]] = {}
@@ -117,6 +130,9 @@ def check_protocol(spans: Sequence[Span], metrics=None,
     #: last change to the owner's lease set
     last_check: Dict[Tuple[str, str, str], int] = {}
     last_change: Dict[Tuple[str, str, str], int] = {}
+    #: (scope, resource, owner) -> (t_ns, ttl_s) of the last TTL extension
+    #: the trace shows (TTL'd acquire or heartbeat renewal)
+    last_extend: Dict[Tuple[str, str, str], Tuple[int, float]] = {}
 
     for t, _i, kind, s in events:
         a = s.attrs
@@ -138,6 +154,8 @@ def check_protocol(spans: Sequence[Span], metrics=None,
             epoch_high[rng_key] = max(high or 0, epoch)
             live.setdefault(key, {})[(owner, lo, hi)] = epoch
             last_change[(owner, scope, res)] = t
+            if a.get("ttl") is not None:
+                last_extend[(scope, res, owner)] = (t, float(a["ttl"]))
         elif kind == "release":
             lo, hi = int(a["lo"]), int(a["hi"])
             held = live.get(key, {})
@@ -203,6 +221,43 @@ def check_protocol(spans: Sequence[Span], metrics=None,
             client = a.get("client")
             for c in a.get("chunk_ids", ()):
                 d[int(c)] = client
+        elif kind == "renew":
+            # a heartbeat renewal re-arms the TTL but is NOT a lease-set
+            # change: epochs are preserved, fenced archives stay valid, so
+            # last_change is untouched.  renewed == 0 extends nothing.
+            if a.get("renewed"):
+                ka = (scope, res, owner)
+                ttl = a.get("ttl")
+                if ttl is None and ka in last_extend:
+                    ttl = last_extend[ka][1]    # renew(ttl=None) re-arms
+                if ttl is not None:             # the lease's existing TTL
+                    last_extend[ka] = (t, float(ttl))
+        elif kind == "recover":
+            for e in a.get("expired", ()):
+                r_res, r_owner = str(e["resource"]), str(e["owner"])
+                ext = last_extend.get((scope, r_res, r_owner))
+                if ext is not None and ext[0] + ext[1] * 1e9 > t:
+                    out.append(Violation(
+                        "recover-live-lease",
+                        f"recovery sweep purged {r_owner!r}'s lease "
+                        f"[{e['lo']}, {e['hi']}) of {scope}/{r_res} whose "
+                        f"TTL ({ext[1]}s, last extended "
+                        f"{(t - ext[0]) / 1e9:.3f}s before the sweep) was "
+                        f"still live: recovery raced a heartbeat",
+                        t, {"scope": scope, "resource": r_res,
+                            "owner": r_owner, "lo": e["lo"], "hi": e["hi"],
+                            "ttl": ext[1]}))
+                live.get((scope, r_res), {}).pop(
+                    (r_owner, int(e["lo"]), int(e["hi"])), None)
+                last_change[(r_owner, scope, r_res)] = t
+            for o in a.get("orphans", ()):
+                # quarantined intents are accounted for: the dead client's
+                # archives were never published, so they are no longer
+                # chunks a later release could orphan
+                d = dirty.get((scope, str(o["resource"]), str(o["owner"])))
+                if d:
+                    for c in o.get("chunk_ids", ()):
+                        d.pop(int(c), None)
 
     # -- executor window (from the metrics gauge's high-water mark) --------
     if metrics is not None and max_in_flight is not None:

@@ -8,13 +8,17 @@ Public surface:
 >>> fdb.flush()
 >>> data = fdb.retrieve({...identifier...}).read()
 """
-from .fdb import (FDB, FDBConfig, WriterSession, as_identifier,
-                  reset_engines, shared_engine)
+from .faults import (FaultInjector, FaultSpec, InjectedCrash,
+                     PermanentStorageError)
+from .fdb import (FDB, FDBConfig, RecoveryReport, WriterSession,
+                  as_identifier, reset_engines, shared_engine)
 from .handle import (DataHandle, FieldLocation, FileRangeHandle, MultiHandle,
                      PlacementHandle, ShortReadError, group_mergeable)
 from .interfaces import Catalogue, Store
 from .lease import (Lease, LeaseConflictError, LeaseError, LeaseTable,
-                    StaleLeaseError)
+                    StaleLeaseError, set_lease_clock)
+from .retry import (Deadline, DeadlineExceeded, RetryPolicy,
+                    TransientStorageError, current_deadline, deadline_scope)
 from .schema import (CHECKPOINT_SCHEMA, DATA_SCHEMA, Identifier,
                      NWP_OBJECT_SCHEMA, NWP_POSIX_SCHEMA, SCHEMAS, Schema,
                      TENSOR_SCHEMA)
@@ -28,7 +32,11 @@ __all__ = [
     "PlacementHandle", "ShortReadError", "group_mergeable",
     "Catalogue", "Store",
     "Lease", "LeaseTable", "LeaseError", "LeaseConflictError",
-    "StaleLeaseError",
+    "StaleLeaseError", "set_lease_clock",
+    "FaultInjector", "FaultSpec", "InjectedCrash", "PermanentStorageError",
+    "RecoveryReport",
+    "RetryPolicy", "Deadline", "DeadlineExceeded", "TransientStorageError",
+    "current_deadline", "deadline_scope",
     "Identifier", "Schema", "SCHEMAS",
     "NWP_OBJECT_SCHEMA", "NWP_POSIX_SCHEMA", "CHECKPOINT_SCHEMA",
     "DATA_SCHEMA", "TENSOR_SCHEMA",

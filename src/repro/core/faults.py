@@ -1,0 +1,284 @@
+"""Deterministic fault injection for the Store/Catalogue pair.
+
+The paper's operational claims are about storage that *misbehaves* —
+slow OSTs, transient object-store errors, writers that die mid-commit.
+This module makes those failure modes reproducible: a seeded
+:class:`FaultInjector` wraps any backend's ``Store``/``Catalogue`` pair
+(:class:`FaultyStore` / :class:`FaultyCatalogue` mirror the interfaces
+one-to-one) and injects, per op class:
+
+* **transient errors** (:class:`~repro.core.retry.TransientStorageError`)
+  by probability (``fail(op, rate=...)``) or scripted schedule
+  (``fail(op, first=N)`` — the first N calls fail, then heal), the shape
+  retry policies are tested against;
+* **permanent errors** (:class:`PermanentStorageError` or any exception
+  type) that no retry may paper over;
+* **latency spikes** (``delay(op, seconds, rate)``) for goodput-under-
+  degradation benchmarking;
+* **crash points** (``crash_on(op, call=N)``) raising
+  :class:`InjectedCrash` — a ``BaseException``, so no retry policy can
+  swallow it — which kills a writer *between archive and flush*, leaving
+  genuinely torn state (archived-but-unflushed chunks, held leases,
+  dirty intents) for ``fdb.recover()`` to find.
+
+Op classes are dotted names mirroring the interface:
+``store.archive``, ``store.archive_batch`` (falls back to the
+``store.archive`` spec, so one schedule covers both shapes),
+``store.retrieve`` (faults at handle-build time), ``store.flush``,
+``catalogue.archive``, ``catalogue.archive_batch``, ``catalogue.flush``,
+``catalogue.retrieve``.  Placement, listing, lease traffic and close are
+deliberately fault-free: they are control-plane, and the retry layer
+does not wrap them.
+
+Wiring: ``FDB(config, faults=injector)`` wraps its freshly built
+backends; everything above the facade is oblivious.  The injector is
+shareable across clients (thread-safe, one seeded RNG) and its
+:attr:`injected` / :attr:`counts` feed the bench's ``faults_injected``
+column.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+import threading
+import time
+from typing import Dict, Optional, Tuple, Type
+
+from .retry import TransientStorageError
+
+
+class PermanentStorageError(RuntimeError):
+    """An injected *non-retryable* storage failure: the retry layer must
+    propagate it immediately (only ``TransientStorageError`` retries)."""
+
+
+class InjectedCrash(BaseException):
+    """A writer killed at an injected crash point.
+
+    Deliberately a ``BaseException``: it models process death, so no
+    retry policy or ``except Exception`` cleanup path may swallow it —
+    the torn state it leaves behind (held leases, unflushed archives,
+    dirty intents) is exactly what ``fdb.recover()`` exists to mop up.
+    """
+
+
+@dataclasses.dataclass
+class FaultSpec:
+    """Injection schedule for one op class (see :meth:`FaultInjector.fail`)."""
+    rate: float = 0.0                       # P(transient fault) per call
+    first: int = 0                          # scripted: fail the first N calls
+    error: Type[BaseException] = TransientStorageError
+    delay_s: float = 0.0                    # injected latency per spiked call
+    delay_rate: float = 0.0                 # P(latency spike) per call
+    crash_call: Optional[int] = None        # 1-based call number to crash on
+
+
+class FaultInjector:
+    """Seeded, thread-safe fault source shared by a Store/Catalogue pair.
+
+    All decisions draw from one ``random.Random(seed)`` under a lock, so
+    a given (seed, schedule, call order) replays identically — the
+    property the fault-matrix tests and the chaos bench column rely on.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self._rng = random.Random(seed)
+        self._specs: Dict[str, FaultSpec] = {}
+        self._counts: Dict[str, int] = {}
+        self._injected: Dict[str, int] = {}
+        self._lock = threading.Lock()
+
+    # -- schedule construction (chainable) -----------------------------------
+    def fail(self, op: str, rate: float = 0.0, first: int = 0,
+             error: Type[BaseException] = TransientStorageError
+             ) -> "FaultInjector":
+        """Inject ``error`` on ``op``: with probability ``rate`` per call
+        and/or unconditionally on the first ``first`` calls."""
+        spec = self._specs.setdefault(op, FaultSpec())
+        spec.rate, spec.first, spec.error = rate, first, error
+        return self
+
+    def delay(self, op: str, seconds: float,
+              rate: float = 1.0) -> "FaultInjector":
+        """Inject a latency spike of ``seconds`` on ``op`` with
+        probability ``rate`` per call (before the op runs)."""
+        spec = self._specs.setdefault(op, FaultSpec())
+        spec.delay_s, spec.delay_rate = seconds, rate
+        return self
+
+    def crash_on(self, op: str, call: int = 1) -> "FaultInjector":
+        """Raise :class:`InjectedCrash` on the ``call``-th invocation of
+        ``op`` (1-based, counted per op class) — one-shot."""
+        self._specs.setdefault(op, FaultSpec()).crash_call = call
+        return self
+
+    # -- observation ---------------------------------------------------------
+    @property
+    def counts(self) -> Dict[str, int]:
+        """Calls seen per op class (faulted or not)."""
+        with self._lock:
+            return dict(self._counts)
+
+    @property
+    def injected(self) -> int:
+        """Total faults injected (errors + crashes, not latency spikes)."""
+        with self._lock:
+            return sum(self._injected.values())
+
+    def injected_by_op(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._injected)
+
+    # -- the injection point -------------------------------------------------
+    def hit(self, op: str, fallback: Optional[str] = None) -> None:
+        """Count one call of ``op`` and raise/delay per its spec (or the
+        ``fallback`` op's spec when ``op`` has none — batched variants
+        fall back to their per-item op class)."""
+        with self._lock:
+            spec = self._specs.get(op)
+            if spec is None and fallback is not None:
+                op, spec = fallback, self._specs.get(fallback)
+            n = self._counts.get(op, 0) + 1
+            self._counts[op] = n
+            if spec is None:
+                return
+            crash = spec.crash_call is not None and n == spec.crash_call
+            fault = (not crash
+                     and (n <= spec.first
+                          or (spec.rate > 0
+                              and self._rng.random() < spec.rate)))
+            spike = (spec.delay_s > 0
+                     and (spec.delay_rate >= 1.0
+                          or self._rng.random() < spec.delay_rate))
+            if crash or fault:
+                self._injected[op] = self._injected.get(op, 0) + 1
+        if spike:
+            time.sleep(spec.delay_s)
+        if crash:
+            raise InjectedCrash(
+                f"injected crash at {op!r} call #{n}: writer killed "
+                f"between archive and flush")
+        if fault:
+            raise spec.error(f"injected {spec.error.__name__} on {op!r} "
+                             f"call #{n}")
+
+    def wrap(self, store, catalogue) -> Tuple["FaultyStore",
+                                              "FaultyCatalogue"]:
+        """Wrap a backend pair (what ``FDB(..., faults=...)`` calls)."""
+        return FaultyStore(store, self), FaultyCatalogue(catalogue, self)
+
+
+class FaultyStore:
+    """A ``Store`` that consults a :class:`FaultInjector` before each
+    data-path op, then delegates to the wrapped backend."""
+
+    def __init__(self, inner, injector: FaultInjector):
+        self.inner = inner
+        self.injector = injector
+
+    @property
+    def scheme(self) -> str:
+        return self.inner.scheme
+
+    def archive(self, data, dataset, collocation):
+        self.injector.hit("store.archive")
+        return self.inner.archive(data, dataset, collocation)
+
+    def placement(self, dataset, collocation):
+        return self.inner.placement(dataset, collocation)
+
+    def archive_batch(self, items):
+        self.injector.hit("store.archive_batch", fallback="store.archive")
+        return self.inner.archive_batch(items)
+
+    def flush(self) -> None:
+        self.injector.hit("store.flush")
+        self.inner.flush()
+
+    def retrieve(self, location):
+        # faulted at handle-build time: a torn read presents as a failed
+        # retrieve, and posix range-handle merging stays intact downstream
+        self.injector.hit("store.retrieve")
+        return self.inner.retrieve(location)
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def wipe(self, dataset) -> None:
+        self.inner.wipe(dataset)
+
+
+class FaultyCatalogue:
+    """A ``Catalogue`` twin of :class:`FaultyStore`.  Lease traffic and
+    listings pass through un-faulted (control-plane)."""
+
+    def __init__(self, inner, injector: FaultInjector):
+        self.inner = inner
+        self.injector = injector
+
+    @property
+    def scheme(self) -> str:
+        return self.inner.scheme
+
+    def archive(self, dataset, collocation, element, location) -> None:
+        self.injector.hit("catalogue.archive")
+        self.inner.archive(dataset, collocation, element, location)
+
+    def archive_batch(self, entries) -> None:
+        self.injector.hit("catalogue.archive_batch",
+                          fallback="catalogue.archive")
+        self.inner.archive_batch(entries)
+
+    def flush(self) -> None:
+        self.injector.hit("catalogue.flush")
+        self.inner.flush()
+
+    def close(self) -> None:
+        self.inner.close()
+
+    def retrieve(self, dataset, collocation, element):
+        self.injector.hit("catalogue.retrieve")
+        return self.inner.retrieve(dataset, collocation, element)
+
+    def list(self, dataset, partial):
+        return self.inner.list(dataset, partial)
+
+    def axes(self, dataset, collocation, dim):
+        return self.inner.axes(dataset, collocation, dim)
+
+    def datasets(self):
+        return self.inner.datasets()
+
+    def wipe(self, dataset) -> None:
+        self.inner.wipe(dataset)
+
+    # -- leases: pure passthrough (control-plane) ----------------------------
+    def acquire_lease(self, dataset, collocation, resource, lo, hi, owner,
+                      ttl=None, block=False, timeout=None):
+        return self.inner.acquire_lease(dataset, collocation, resource,
+                                        lo, hi, owner, ttl=ttl, block=block,
+                                        timeout=timeout)
+
+    def release_lease(self, dataset, collocation, resource, lo, hi, owner,
+                      exact=False):
+        self.inner.release_lease(dataset, collocation, resource, lo, hi,
+                                 owner, exact=exact)
+
+    def lease_holders(self, dataset, collocation, resource):
+        return self.inner.lease_holders(dataset, collocation, resource)
+
+    def check_lease(self, dataset, collocation, resource, lo, hi, owner,
+                    epoch):
+        self.inner.check_lease(dataset, collocation, resource, lo, hi,
+                               owner, epoch)
+
+    def lease_table(self):
+        return self.inner.lease_table()
+
+    def lease_key(self, dataset, collocation, resource):
+        return self.inner.lease_key(dataset, collocation, resource)
+
+
+__all__ = ["FaultInjector", "FaultSpec", "FaultyStore", "FaultyCatalogue",
+           "InjectedCrash", "PermanentStorageError"]

@@ -21,11 +21,14 @@ generation-prefixed chunk keys) rather than delete them.
 """
 from __future__ import annotations
 
+import contextvars
 import dataclasses
 import itertools
+import re
 import threading
 import weakref
-from typing import Dict, Iterator, List, Mapping, Optional, Sequence, Tuple, Union
+from typing import (Callable, Dict, Iterator, List, Mapping, Optional,
+                    Sequence, Tuple, Union)
 
 import numpy as np
 
@@ -33,10 +36,12 @@ from .engine.daos import DaosEngine
 from .engine.meter import GLOBAL_METER, Meter
 from .engine.rados import RadosEngine
 from .engine.s3 import S3Engine
+from .faults import FaultInjector
 from .handle import (DataHandle, FieldLocation, MultiHandle, PlacementHandle,
                      group_mergeable)
 from .interfaces import Catalogue, Store
 from .lease import Lease, LeaseConflictError, StaleLeaseError
+from .retry import RetryPolicy
 from .schema import (CHECKPOINT_SCHEMA, Identifier, NWP_OBJECT_SCHEMA,
                      NWP_POSIX_SCHEMA, SCHEMAS, Schema)
 from repro.obs.locks import NamedLock
@@ -47,6 +52,19 @@ BytesLike = Union[bytes, bytearray, memoryview, np.ndarray]
 #: process-wide FDB client sequence — client_id labels in spans ("c3")
 #: distinguish clients when several share one tracer (GLOBAL_TRACER)
 _CLIENT_SEQ = itertools.count(1)
+
+#: ambient re-validation hook for facade-level retries: a WriterSession
+#: installs its lease re-validation (``check_held``) here around its
+#: archive calls, so a retried archive re-fences its epochs *before*
+#: re-archiving — a broken lease aborts the retry with StaleLeaseError
+#: instead of silently double-archiving into a re-acquired range.  A
+#: ContextVar so it survives the executor's context hand-off.
+_ON_RETRY: "contextvars.ContextVar[Optional[Callable[[], None]]]" = \
+    contextvars.ContextVar("fdb_retry_revalidate", default=None)
+
+#: element values of generation-versioned chunk keys ("g2.c0.1") — the
+#: stale-generation scan recover() runs after a half-flipped reshard
+_GEN_RE = re.compile(r"g(\d+)\.")
 
 
 def _as_bytes(data: BytesLike) -> bytes:
@@ -154,7 +172,9 @@ class FDB:
 
     def __init__(self, config: Optional[FDBConfig] = None,
                  meter: Optional[Meter] = None,
-                 tracer: Optional[Tracer] = None, **overrides):
+                 tracer: Optional[Tracer] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 faults: Optional[FaultInjector] = None, **overrides):
         if config is None:
             config = FDBConfig(**overrides)
         elif overrides:
@@ -166,11 +186,26 @@ class FDB:
         #: process tracer, disabled out of the box — pass a private
         #: ``Tracer(enabled=True)`` for an isolated per-client buffer
         self.tracer = tracer or GLOBAL_TRACER
+        #: facade-level retry policy: transient backend errors on the
+        #: archive / flush / retrieve-handle paths are re-driven through it
+        #: (safe per rule 5 — re-archiving transactionally replaces)
+        self.retry = retry if retry is not None else RetryPolicy()
+        #: fault injection (tests/chaos bench): wraps the freshly built
+        #: backend pair so every data-path op consults the injector
+        self.faults = faults
         #: stable per-process client label carried on flush/archive spans,
         #: so the protocol checker can attribute barriers when several
         #: clients share one tracer
         self.client_id = f"c{next(_CLIENT_SEQ)}"
         self.store, self.catalogue = self._build_backends()
+        if faults is not None:
+            self.store, self.catalogue = faults.wrap(self.store,
+                                                     self.catalogue)
+        # count TTL expiries on this client's metrics (the listener fires
+        # whichever client's purge sweep finds them)
+        _m = self.tracer.metrics
+        self.catalogue.lease_table().add_expiry_listener(
+            lambda leases: _m.counter("lease.expired").inc(len(leases)))
         self._closed = False
         self._dirty = False
         self._io_executor = None        # lazily built, see io_executor
@@ -273,11 +308,22 @@ class FDB:
     def _archive_split(self, split, data: bytes) -> FieldLocation:
         """Archive one pre-split (dataset, collocation, element) triple —
         the shared tail of :meth:`archive`/:meth:`archive_many`, so batch
-        paths canonicalise each identifier exactly once."""
+        paths canonicalise each identifier exactly once.
+
+        The whole store-archive + catalogue-index unit is the retry scope:
+        rule 5 (re-archiving transactionally replaces) makes re-driving it
+        idempotent even when the first attempt died between the two."""
         dataset, collocation, element = split
-        with self.tracer.span("fdb.archive", nbytes=len(data)):
-            loc = self.store.archive(data, dataset, collocation)
-            self.catalogue.archive(dataset, collocation, element, loc)
+
+        def attempt() -> FieldLocation:
+            with self.tracer.span("fdb.archive", nbytes=len(data)):
+                loc = self.store.archive(data, dataset, collocation)
+                self.catalogue.archive(dataset, collocation, element, loc)
+            return loc
+
+        loc = self.retry.call(attempt, op="fdb.archive",
+                              metrics=self.tracer.metrics,
+                              on_retry=_ON_RETRY.get())
         self._mark_dirty()
         return loc
 
@@ -318,16 +364,25 @@ class FDB:
 
     def _archive_batch_split(self, split) -> List[FieldLocation]:
         """Batch-archive pre-split ``((dataset, collocation, element),
-        bytes)`` pairs — one store submission + one catalogue batch."""
-        with self.tracer.span("fdb.archive_batch", items=len(split),
-                              nbytes=sum(len(d) for _s, d in split)):
-            locs = self.store.archive_batch(
-                [(data, dataset, collocation)
-                 for (dataset, collocation, _e), data in split])
-            self.catalogue.archive_batch(
-                [(dataset, collocation, element, loc)
-                 for ((dataset, collocation, element), _d), loc
-                 in zip(split, locs)])
+        bytes)`` pairs — one store submission + one catalogue batch.  The
+        whole batch is one retry unit (idempotent per rule 5, like
+        :meth:`_archive_split`)."""
+
+        def attempt() -> List[FieldLocation]:
+            with self.tracer.span("fdb.archive_batch", items=len(split),
+                                  nbytes=sum(len(d) for _s, d in split)):
+                locs = self.store.archive_batch(
+                    [(data, dataset, collocation)
+                     for (dataset, collocation, _e), data in split])
+                self.catalogue.archive_batch(
+                    [(dataset, collocation, element, loc)
+                     for ((dataset, collocation, element), _d), loc
+                     in zip(split, locs)])
+            return locs
+
+        locs = self.retry.call(attempt, op="fdb.archive_batch",
+                               metrics=self.tracer.metrics,
+                               on_retry=_ON_RETRY.get())
         if split:
             self._mark_dirty()
         return locs
@@ -440,13 +495,29 @@ class FDB:
             marks = [(s, s._dirty_mark()) for s in sessions]
             with self._dirty_lock:
                 client_mark = self._archive_seq
-            # lint: disable=L003 -- flush IS the serialised barrier: the
-            # held _flush_lock is what gives rule-3 its atomicity
-            self.store.flush()
-            self.catalogue.flush()  # lint: disable=L003 -- same barrier
+
+            def barrier() -> None:
+                # retried as one unit: a re-driven store flush is a no-op
+                # for already-persistent data, so a transient catalogue
+                # failure cannot leave the pair half-committed
+                # lint: disable=L003 -- flush IS the serialised barrier: the
+                # held _flush_lock is what gives rule-3 its atomicity
+                self.store.flush()
+                self.catalogue.flush()  # lint: disable=L003 -- same barrier
+
+            self.retry.call(barrier, op="fdb.flush",
+                            metrics=self.tracer.metrics)
+            clean = False
             with self._dirty_lock:
                 if self._archive_seq == client_mark:
                     self._dirty = False
+                    clean = True
+            if clean:
+                # barrier covered every archive this client journaled; an
+                # archive racing the barrier keeps the journal (and dirty
+                # flag) until the next flush — never clean-but-unpublished
+                self.catalogue.lease_table().clear_dirty_client(
+                    self.client_id)
             # one store/catalogue flush publishes everything this *client*
             # archived, whichever session produced it — so every session's
             # barrier up to its captured marker is satisfied too
@@ -454,16 +525,25 @@ class FDB:
                 session._clear_dirty_if(mark)
 
     # -- writer sessions + chunk-range leases -------------------------------
-    def session(self, writer_id: str) -> "WriterSession":
+    def session(self, writer_id: str, lease_ttl: Optional[float] = None,
+                heartbeat_interval: Optional[float] = None
+                ) -> "WriterSession":
         """Open a :class:`WriterSession` — one logical writer identity on
         this client, with its own dirty/flush-barrier bookkeeping and a
         ledger of the chunk-range leases it holds.  Several sessions may
         share one client (the I/O-server pattern: many producer tasks, one
         FDB connection); their writes into one array are made safe by the
-        catalogue-level lease table, not by schema separation."""
+        catalogue-level lease table, not by schema separation.
+
+        ``lease_ttl`` makes every lease the session acquires expire unless
+        renewed (crash safety: a dead writer's ranges free themselves);
+        ``heartbeat_interval`` starts a daemon thread renewing them every
+        that-many seconds (requires ``lease_ttl``; pick interval well under
+        the TTL — a third is conventional)."""
         if self._closed:
             raise RuntimeError("FDB client is closed; cannot open a session")
-        session = WriterSession(self, str(writer_id))
+        session = WriterSession(self, str(writer_id), lease_ttl=lease_ttl,
+                                heartbeat_interval=heartbeat_interval)
         self._sessions.add(session)
         return session
 
@@ -499,22 +579,32 @@ class FDB:
 
     def acquire_lease(self, identifier: Union[Identifier,
                                               Mapping[str, object]],
-                      resource: str, lo: int, hi: int, owner: str) -> int:
+                      resource: str, lo: int, hi: int, owner: str,
+                      ttl: Optional[float] = None, block: bool = False,
+                      timeout: Optional[float] = None) -> int:
         """Acquire an exclusive epoch-fenced lease on chunk-id range
         ``[lo, hi)`` of ``resource`` under the identifier's (dataset,
         collocation) key; returns the epoch.  Raises ``LeaseConflictError``
-        on overlap with another owner.  Usually reached through
-        :meth:`WriterSession.acquire_lease`, which also ledgers the lease
-        for release at session close."""
+        on overlap with another owner.  ``ttl`` bounds the lease's life
+        between :meth:`renew_lease` heartbeats (expiry = release, on the
+        deployment's shared lease clock); ``block=True`` queues on a
+        conflicting range until it frees — or its holder's TTL lapses —
+        giving up with ``LeaseConflictError`` after ``timeout`` seconds.
+        Usually reached through :meth:`WriterSession.acquire_lease`, which
+        also ledgers the lease for release at session close."""
         dataset, collocation = self._lease_split(identifier)
         m = self.tracer.metrics
+        attrs = {} if ttl is None else {"ttl": ttl}
         with self.tracer.span(
                 "lease.acquire", resource=resource, lo=lo, hi=hi,
                 owner=owner,
-                scope=self._lease_scope_split(dataset, collocation)) as sp:
+                scope=self._lease_scope_split(dataset, collocation),
+                **attrs) as sp:
             try:
                 epoch = self.catalogue.acquire_lease(dataset, collocation,
-                                                     resource, lo, hi, owner)
+                                                     resource, lo, hi, owner,
+                                                     ttl=ttl, block=block,
+                                                     timeout=timeout)
             except LeaseConflictError:
                 m.counter("lease.conflicts").inc()
                 raise
@@ -522,6 +612,47 @@ class FDB:
                 sp.attrs["epoch"] = epoch
         m.counter("lease.acquired").inc()
         return epoch
+
+    def renew_lease(self, identifier: Union[Identifier,
+                                            Mapping[str, object]],
+                    resource: str, owner: str,
+                    ttl: Optional[float] = None) -> int:
+        """Heartbeat: re-arm the TTL of every lease ``owner`` holds on
+        ``resource`` under the identifier's (dataset, collocation) key,
+        preserving epochs (a renewal is *not* a re-acquire — fenced archives
+        stay valid across it).  Returns the number of leases renewed; 0
+        means the owner holds nothing there any more (expired and possibly
+        re-leased — the writer must re-acquire and re-fence)."""
+        dataset, collocation = self._lease_split(identifier)
+        return self._renew_split(dataset, collocation, str(resource), owner,
+                                 ttl)
+
+    def _renew_split(self, dataset: Identifier, collocation: Identifier,
+                     resource: str, owner: str,
+                     ttl: Optional[float]) -> int:
+        with self.tracer.span(
+                "lease.renew", resource=resource, owner=owner, ttl=ttl,
+                scope=self._lease_scope_split(dataset, collocation)) as sp:
+            n = self.catalogue.lease_table().renew(
+                self.catalogue.lease_key(dataset, collocation, resource),
+                owner, ttl)
+            if sp is not None:
+                sp.attrs["renewed"] = n
+        return n
+
+    def mark_dirty_chunks(self, identifier: Union[Identifier,
+                                                  Mapping[str, object]],
+                          resource: str, owner: str,
+                          chunk_ids: Sequence[int]) -> None:
+        """Journal a leased writer's archived-but-unflushed chunk ids in
+        the deployment-shared dirty-intent journal (on the lease table, so
+        *other* clients can see them).  ``flush()`` clears this client's
+        intents once the barrier publishes; intents left behind by a writer
+        whose leases lapsed are what :meth:`recover` quarantines."""
+        dataset, collocation = self._lease_split(identifier)
+        self.catalogue.lease_table().mark_dirty(
+            self.catalogue.lease_key(dataset, collocation, str(resource)),
+            owner, chunk_ids, self.client_id)
 
     def release_lease(self, identifier: Union[Identifier,
                                               Mapping[str, object]],
@@ -575,6 +706,67 @@ class FDB:
                 self.tracer.metrics.counter("lease.stale").inc()
                 raise
 
+    # -- crash recovery ------------------------------------------------------
+    def recover(self, identifier: Union[Identifier, Mapping[str, object]],
+                live_resource: Optional[str] = None) -> "RecoveryReport":
+        """Scan the identifier's (dataset, collocation) lease scope for the
+        wreckage of dead writers and mop it up:
+
+        * **expired leases** are purged (epoch fencing already fences their
+          holders' late archives; purging just frees the ranges);
+        * **orphaned dirty intents** — chunk ids a writer journaled as
+          archived-but-unflushed and then stopped heartbeating for — are
+          *quarantined*: their archives lived only in the dead client's
+          unflushed state (rule 3), so there is nothing to repair; the
+          report tells the coordinator which chunks must be re-driven.
+          Intents whose owner still holds a live lease are left alone (a
+          slow writer mid-commit is not a crash);
+        * with ``live_resource`` (the array's live layout generation, e.g.
+          ``"g1"``), catalogue entries from *newer* generations — the
+          debris of a half-flipped reshard that died between archiving
+          ``g2`` chunks and replacing the array metadata — are reported as
+          stale so the coordinator can re-run or ignore the reshard.
+
+        Safe to run any time, from any client: it never touches live
+        leases, and recovery of a healthy scope returns a clean report.
+        Every sweep is emitted as a ``fdb.recover`` span whose ``expired``
+        / ``orphans`` attrs let the protocol checker verify the recovery
+        invariants (no purge under a live heartbeat)."""
+        dataset, collocation = self._lease_split(identifier)
+        prefix = (dataset.canonical(), collocation.canonical())
+        tbl = self.catalogue.lease_table()
+        m = self.tracer.metrics
+        with self.tracer.span(
+                "fdb.recover", client=self.client_id,
+                scope=self._lease_scope_split(dataset, collocation)) as sp:
+            expired = [
+                {"resource": key[2], "owner": lease.owner, "lo": lease.lo,
+                 "hi": lease.hi, "epoch": lease.epoch}
+                for key, lease in tbl.purge_expired(prefix)]
+            orphans = [
+                {"resource": key[2], "owner": owner,
+                 "chunk_ids": list(chunk_ids), "client": client}
+                for key, owner, chunk_ids, client in tbl.take_orphans(prefix)]
+            n_orphans = sum(len(o["chunk_ids"]) for o in orphans)
+            if n_orphans:
+                m.counter("recover.orphans").inc(n_orphans)
+            stale: List[str] = []
+            if live_resource is not None:
+                mt = _GEN_RE.match(f"{live_resource}.")
+                live_gen = int(mt.group(1)) if mt else 0
+                for ident, _loc in self.catalogue.list(dataset,
+                                                       dict(collocation)):
+                    for value in ident.values():
+                        g = _GEN_RE.match(value)
+                        if g and int(g.group(1)) > live_gen:
+                            stale.append(value)
+            if sp is not None:
+                sp.attrs["expired"] = expired
+                sp.attrs["orphans"] = orphans
+                sp.attrs["stale"] = len(stale)
+        return RecoveryReport(self._lease_scope_split(dataset, collocation),
+                              expired, orphans, sorted(set(stale)))
+
     def retrieve(self, identifiers: Union[Identifier, Mapping[str, object],
                                           Sequence]) -> MultiHandle:
         if isinstance(identifiers, (Identifier, Mapping)):
@@ -601,8 +793,13 @@ class FDB:
         """
         ident = as_identifier(identifier)
         dataset, collocation, element = self.schema.split(ident)
-        loc = self.catalogue.retrieve(dataset, collocation, element)
-        return None if loc is None else self.store.retrieve(loc)
+
+        def attempt() -> Optional[DataHandle]:
+            loc = self.catalogue.retrieve(dataset, collocation, element)
+            return None if loc is None else self.store.retrieve(loc)
+
+        return self.retry.call(attempt, op="fdb.retrieve",
+                               metrics=self.tracer.metrics)
 
     def _expand(self, ident: Identifier) -> List[Identifier]:
         """Expand multi-value expressions (lists) via axes (§2.7.1 axis())."""
@@ -703,6 +900,31 @@ class FDB:
         self.close()
 
 
+@dataclasses.dataclass
+class RecoveryReport:
+    """What one :meth:`FDB.recover` sweep found (see its docstring).
+
+    ``expired``: purged TTL-lapsed leases, as dicts with ``resource`` /
+    ``owner`` / ``lo`` / ``hi`` / ``epoch``.  ``quarantined``: orphaned
+    dirty intents — dicts with ``resource`` / ``owner`` / ``chunk_ids`` /
+    ``client`` — whose chunks must be re-driven by a live writer.
+    ``stale``: catalogue element values from layout generations newer than
+    the live one (half-flipped reshard debris), report-only.
+    """
+    scope: str
+    expired: List[Dict[str, object]]
+    quarantined: List[Dict[str, object]]
+    stale: List[str]
+
+    @property
+    def clean(self) -> bool:
+        return not (self.expired or self.quarantined or self.stale)
+
+    @property
+    def orphan_chunks(self) -> int:
+        return sum(len(q["chunk_ids"]) for q in self.quarantined)
+
+
 class WriterSession:
     """One logical writer identity on an FDB client — the unit multi-writer
     safety is built around.
@@ -732,9 +954,12 @@ class WriterSession:
     flush, the exact silent merge leases exist to prevent.
     """
 
-    def __init__(self, fdb: FDB, writer_id: str):
+    def __init__(self, fdb: FDB, writer_id: str,
+                 lease_ttl: Optional[float] = None,
+                 heartbeat_interval: Optional[float] = None):
         self.fdb = fdb
         self.writer_id = writer_id
+        self.lease_ttl = lease_ttl
         self._dirty = False
         self._seq = 0           # archive sequence, see FDB.flush's markers
         self._closed = False
@@ -742,6 +967,57 @@ class WriterSession:
         #: (dataset, collocation, resource, lo, hi) -> epoch
         self._held: Dict[Tuple[Identifier, Identifier, str, int, int],
                          int] = {}
+        self._hb_stop = threading.Event()
+        self._hb_thread: Optional["threading.Thread"] = None
+        if heartbeat_interval is not None:
+            if lease_ttl is None:
+                raise ValueError("heartbeat_interval requires lease_ttl "
+                                 "(there is nothing to renew without one)")
+            # lint: disable=L005 -- the lease-heartbeat daemon is part of
+            # the session lifecycle, stopped/joined in close(); Event.wait
+            # paces it so stop is prompt and no bare sleep is involved
+            self._hb_thread = threading.Thread(
+                target=self._heartbeat_loop, args=(heartbeat_interval,),
+                name=f"lease-heartbeat-{writer_id}", daemon=True)
+            self._hb_thread.start()
+
+    def _heartbeat_loop(self, interval: float) -> None:
+        while not self._hb_stop.wait(interval):
+            try:
+                self.heartbeat()
+            except Exception:
+                # the daemon must not die on a transient renew hiccup; a
+                # genuinely lost lease surfaces at the next fencing gate
+                # (check_held / check_lease), with full context
+                pass
+
+    def _stop_heartbeat(self) -> None:
+        self._hb_stop.set()
+        thread, self._hb_thread = self._hb_thread, None
+        if thread is not None:
+            thread.join(timeout=5)
+
+    def heartbeat(self, ttl: Optional[float] = None) -> int:
+        """Renew the TTL on every (dataset, collocation, resource) group
+        this session's ledger covers, preserving epochs; returns the number
+        of leases renewed.  0 with a non-empty ledger means the TTLs
+        already lapsed — the session's next fencing gate will raise."""
+        ttl = ttl if ttl is not None else self.lease_ttl
+        with self._lock:
+            groups = {(d, c, r) for (d, c, r, _lo, _hi) in self._held}
+        renewed = 0
+        for dataset, collocation, resource in groups:
+            renewed += self.fdb._renew_split(dataset, collocation, resource,
+                                             self.writer_id, ttl)
+        return renewed
+
+    def abandon(self) -> None:
+        """Simulate writer death (test/chaos hook): stop heartbeating and
+        mark the session closed WITHOUT flushing or releasing anything —
+        its leases must lapse by TTL and its journaled dirty intents wait
+        for :meth:`FDB.recover`."""
+        self._stop_heartbeat()
+        self._closed = True
 
     def _bump_dirty(self) -> None:
         with self._lock:
@@ -782,14 +1058,20 @@ class WriterSession:
         with self._lock:
             return key in self._held
 
-    def acquire_lease(self, identifier, resource: str, lo: int,
-                      hi: int) -> int:
+    def acquire_lease(self, identifier, resource: str, lo: int, hi: int,
+                      block: bool = False,
+                      timeout: Optional[float] = None) -> int:
         """Acquire ``[lo, hi)`` for this session's writer id and ledger it;
         returns the epoch.  Raises ``LeaseConflictError`` on overlap with
-        another owner; re-acquiring a ledgered range is idempotent."""
+        another owner; re-acquiring a ledgered range is idempotent (and
+        re-arms its TTL).  ``block=True`` queues on a conflicting range
+        until it frees or ``timeout`` seconds pass.  The session's
+        ``lease_ttl`` (if any) applies to every lease acquired here."""
         self._check_open()
         epoch = self.fdb.acquire_lease(identifier, resource, lo, hi,
-                                       owner=self.writer_id)
+                                       owner=self.writer_id,
+                                       ttl=self.lease_ttl, block=block,
+                                       timeout=timeout)
         key = self._ledger_key(identifier, resource, lo, hi)
         with self._lock:
             self._held[key] = epoch
@@ -846,16 +1128,36 @@ class WriterSession:
                                           lo, hi, self.writer_id,
                                           exact=True)
 
+    def mark_dirty_chunks(self, identifier, resource: str,
+                          chunk_ids: Sequence[int]) -> None:
+        """Journal this writer's archived-but-unflushed ``chunk_ids`` in
+        the deployment-shared dirty-intent journal (crash-recovery
+        breadcrumbs for :meth:`FDB.recover`); cleared by the client's next
+        published flush."""
+        self.fdb.mark_dirty_chunks(identifier, resource, self.writer_id,
+                                   chunk_ids)
+
     # -- archive / visibility (the FDB surface plans consume) ----------------
+    # each archive entry point installs the session's lease re-validation
+    # as the facade retry's on_retry hook: a retried archive re-fences
+    # before re-archiving (StaleLeaseError beats silent double-archive)
     def archive(self, identifier, data: BytesLike) -> FieldLocation:
         self._check_open()
-        loc = self.fdb.archive(identifier, data)
+        token = _ON_RETRY.set(self.check_held)
+        try:
+            loc = self.fdb.archive(identifier, data)
+        finally:
+            _ON_RETRY.reset(token)
         self._bump_dirty()
         return loc
 
     def archive_batch(self, items) -> List[FieldLocation]:
         self._check_open()
-        locs = self.fdb.archive_batch(items)
+        token = _ON_RETRY.set(self.check_held)
+        try:
+            locs = self.fdb.archive_batch(items)
+        finally:
+            _ON_RETRY.reset(token)
         if items:
             self._bump_dirty()
         return locs
@@ -864,8 +1166,12 @@ class WriterSession:
                      executor=None) -> List[FieldLocation]:
         self._check_open()
         items = list(items)
-        locs = self.fdb.archive_many(items, parallelism=parallelism,
-                                     executor=executor)
+        token = _ON_RETRY.set(self.check_held)
+        try:
+            locs = self.fdb.archive_many(items, parallelism=parallelism,
+                                         executor=executor)
+        finally:
+            _ON_RETRY.reset(token)
         if items:
             self._bump_dirty()
         return locs
@@ -899,6 +1205,7 @@ class WriterSession:
         late flush — the silent merge leases exist to prevent."""
         if self._closed:
             return
+        self._stop_heartbeat()
         with self.fdb.tracer.span("session.close", writer=self.writer_id,
                                   leases=len(self._held)):
             if self._dirty:

@@ -120,12 +120,18 @@ class Catalogue:
 
     # -- chunk-range leases (multi-writer concurrency control) --------------
     def acquire_lease(self, dataset: Identifier, collocation: Identifier,
-                      resource: str, lo: int, hi: int, owner: str) -> int:
+                      resource: str, lo: int, hi: int, owner: str,
+                      ttl: Optional[float] = None, block: bool = False,
+                      timeout: Optional[float] = None) -> int:
         """Acquire an exclusive lease on the half-open chunk-id range
         ``[lo, hi)`` of ``resource`` for ``owner``; returns the lease
         *epoch* (monotonic per (dataset, collocation, resource)).  Raises
         ``LeaseConflictError`` when the range overlaps another owner's
-        active lease; an exact same-owner re-acquire is idempotent."""
+        active lease; an exact same-owner re-acquire is idempotent.
+        ``ttl`` bounds the lease's life between heartbeat renewals
+        (expiry behaves like a release, on the deployment's shared lease
+        clock); ``block=True`` queues on a conflicting range until it
+        frees or ``timeout`` seconds pass (then ``LeaseConflictError``)."""
         raise NotImplementedError
 
     def release_lease(self, dataset: Identifier, collocation: Identifier,
@@ -149,6 +155,18 @@ class Catalogue:
                     epoch: int) -> None:
         """Commit-time fencing gate: raise ``StaleLeaseError`` unless
         ``owner`` still holds a covering lease at exactly ``epoch``."""
+        raise NotImplementedError
+
+    def lease_table(self):
+        """The deployment's shared :class:`repro.core.lease.LeaseTable`
+        — the facade's direct line for TTL renewal, expiry sweeps and
+        the crash-recovery dirty-intent journal."""
+        raise NotImplementedError
+
+    def lease_key(self, dataset: Identifier, collocation: Identifier,
+                  resource: str):
+        """The lease-table key triple for (dataset, collocation,
+        resource)."""
         raise NotImplementedError
 
     def datasets(self) -> Iterator[Identifier]:

@@ -42,11 +42,37 @@ creating a cycle.  Its locks are :class:`repro.obs.locks.NamedLock`\\ s
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Tuple
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.obs.locks import NamedLock
 
 Key = Tuple[str, str, str]          # (dataset, collocation, resource) labels
+
+#: the deployment's shared lease clock (seconds).  ``time.perf_counter``
+#: by design: the same clock domain as span timestamps
+#: (``perf_counter_ns``), so the protocol checker can order lease expiry
+#: (TTLs on ``lease.acquire``/``lease.renew`` spans) against traced
+#: ``fdb.recover`` events.  Unit tests may install a fake clock via
+#: :func:`set_lease_clock`; protocol-checked tests must not (the span
+#: clock stays real, and the two domains would diverge).
+_CLOCK: Callable[[], float] = time.perf_counter
+
+
+def set_lease_clock(clock: Optional[Callable[[], float]] = None
+                    ) -> Callable[[], float]:
+    """Install a fake lease clock (``None`` restores ``perf_counter``);
+    returns the previous clock so tests can restore it."""
+    global _CLOCK
+    prev = _CLOCK
+    _CLOCK = time.perf_counter if clock is None else clock
+    return prev
+
+
+def lease_clock() -> float:
+    """Now, on the deployment's shared lease clock."""
+    return _CLOCK()
 
 
 class LeaseError(RuntimeError):
@@ -69,17 +95,30 @@ class StaleLeaseError(LeaseError):
 
 @dataclasses.dataclass(frozen=True)
 class Lease:
-    """One active lease: ``owner`` holds ``[lo, hi)`` at ``epoch``."""
+    """One active lease: ``owner`` holds ``[lo, hi)`` at ``epoch``.
+
+    ``expires_at`` (lease-clock seconds; None = no TTL) is the liveness
+    bound: past it the lease is treated as released everywhere — a
+    crashed writer's ranges free themselves without a coordinator.  A
+    live holder keeps its TTL ahead via heartbeat renewal
+    (:meth:`LeaseTable.renew`); epoch fencing makes expiry safe exactly
+    like a third-party release — the expired holder's late commit
+    checks fail ``StaleLeaseError``.
+    """
     owner: str
     lo: int
     hi: int
     epoch: int
+    expires_at: Optional[float] = None
 
     def overlaps(self, lo: int, hi: int) -> bool:
         return self.lo < hi and lo < self.hi
 
     def covers(self, lo: int, hi: int) -> bool:
         return self.lo <= lo and hi <= self.hi
+
+    def expired(self, now: float) -> bool:
+        return self.expires_at is not None and now >= self.expires_at
 
 
 class LeaseTable:
@@ -95,36 +134,117 @@ class LeaseTable:
         self._leases: Dict[Key, List[Lease]] = {}
         self._epochs: Dict[Key, int] = {}
         self._lock = NamedLock("lease.table")
+        #: release/expiry wake-ups for blocking acquires
+        self._cond = threading.Condition(self._lock)
+        #: expiry listeners, called OUTSIDE the table lock with the list
+        #: of (key, lease) pairs just purged — FDB clients hang their
+        #: ``lease.expired`` counters here
+        self._listeners: List[Callable[[List[Tuple[Key, Lease]]], None]] = []
+        #: dirty-intent journal: chunk ids archived under a lease but not
+        #: yet covered by a flush barrier, per key -> owner -> (ids,
+        #: archiving client).  Deployment-shared (it lives on this table)
+        #: so ``fdb.recover()`` on *any* client can see a dead writer's
+        #: torn state — the backends' own unflushed archives are
+        #: client-local and invisible.
+        self._dirty: Dict[Key, Dict[str, Tuple[Set[int], str]]] = {}
 
-    def acquire(self, key: Key, owner: str, lo: int, hi: int) -> int:
+    # -- expiry plumbing -----------------------------------------------------
+    def add_expiry_listener(self, fn: Callable[[List[Tuple[Key, Lease]]],
+                                               None]) -> None:
+        """Register ``fn`` to observe every batch of TTL-purged leases."""
+        with self._lock:
+            self._listeners.append(fn)
+
+    def _notify_expired(self, expired: List[Tuple[Key, Lease]]) -> None:
+        # outside the table lock: listeners bump metrics/log freely
+        if expired:
+            for fn in list(self._listeners):
+                fn(expired)
+
+    def _purge_locked(self) -> List[Tuple[Key, Lease]]:
+        """Drop every expired lease (all keys — tables are small) and
+        return them; wakes blocking acquires.  Caller holds the lock and
+        must run :meth:`_notify_expired` after releasing it."""
+        now = _CLOCK()
+        out: List[Tuple[Key, Lease]] = []
+        for key, active in self._leases.items():
+            gone = [l for l in active if l.expired(now)]
+            if gone:
+                active[:] = [l for l in active if not l.expired(now)]
+                out.extend((key, l) for l in gone)
+        if out:
+            self._cond.notify_all()
+        return out
+
+    def acquire(self, key: Key, owner: str, lo: int, hi: int,
+                ttl: Optional[float] = None, block: bool = False,
+                timeout: Optional[float] = None) -> int:
         """Acquire ``[lo, hi)`` for ``owner``; returns the lease epoch.
 
         Overlap with *another* owner's active lease raises
-        :class:`LeaseConflictError` (listing the holders).  An exact
-        re-acquire of a range the owner already holds is idempotent and
-        returns the existing epoch; a new (even self-overlapping) range
-        records a fresh lease under the next epoch.
+        :class:`LeaseConflictError` (listing the holders) — unless
+        ``block=True``, in which case the acquire queues: it waits for
+        release or TTL expiry of every blocker, up to ``timeout`` seconds
+        (None = wait forever), then raises ``LeaseConflictError`` with
+        the timeout noted.  An exact re-acquire of a range the owner
+        already holds is idempotent — it returns the existing epoch and
+        re-arms the TTL; a new (even self-overlapping) range records a
+        fresh lease under the next epoch.  ``ttl`` (lease-clock seconds,
+        None = no expiry) bounds the lease's life between renewals.
         """
         if not isinstance(lo, int) or not isinstance(hi, int) or lo >= hi:
             raise ValueError(f"lease range [{lo}, {hi}) must be a non-empty "
                              f"half-open int range")
-        with self._lock:
-            active = self._leases.setdefault(key, [])
-            blockers = [l for l in active
-                        if l.owner != owner and l.overlaps(lo, hi)]
-            if blockers:
-                held = ", ".join(f"{l.owner}:[{l.lo},{l.hi})@e{l.epoch}"
-                                 for l in blockers)
-                raise LeaseConflictError(
-                    f"chunk range [{lo}, {hi}) of {key} is leased by "
-                    f"{held}; overlapping writers must wait for release")
-            for l in active:
-                if l.owner == owner and l.lo == lo and l.hi == hi:
-                    return l.epoch          # idempotent re-acquire
-            epoch = self._epochs.get(key, 0) + 1
-            self._epochs[key] = epoch
-            active.append(Lease(owner, lo, hi, epoch))
-            return epoch
+        deadline = None if timeout is None else _CLOCK() + timeout
+        expired: List[Tuple[Key, Lease]] = []
+        try:
+            with self._cond:
+                while True:
+                    expired.extend(self._purge_locked())
+                    now = _CLOCK()
+                    active = self._leases.setdefault(key, [])
+                    blockers = [l for l in active
+                                if l.owner != owner and l.overlaps(lo, hi)]
+                    if not blockers:
+                        for i, l in enumerate(active):
+                            if (l.owner == owner and l.lo == lo
+                                    and l.hi == hi):
+                                # idempotent re-acquire: TTL re-arms
+                                active[i] = dataclasses.replace(
+                                    l, expires_at=(None if ttl is None
+                                                   else now + ttl))
+                                return l.epoch
+                        epoch = self._epochs.get(key, 0) + 1
+                        self._epochs[key] = epoch
+                        active.append(Lease(owner, lo, hi, epoch,
+                                            None if ttl is None
+                                            else now + ttl))
+                        return epoch
+                    held = ", ".join(f"{l.owner}:[{l.lo},{l.hi})@e{l.epoch}"
+                                     for l in blockers)
+                    if not block:
+                        raise LeaseConflictError(
+                            f"chunk range [{lo}, {hi}) of {key} is leased "
+                            f"by {held}; overlapping writers must wait for "
+                            f"release")
+                    remaining = None if deadline is None else deadline - now
+                    if remaining is not None and remaining <= 0:
+                        raise LeaseConflictError(
+                            f"blocking acquire of [{lo}, {hi}) on {key} "
+                            f"timed out after {timeout}s; still leased by "
+                            f"{held}")
+                    # wake on release/expiry notifies, the earliest
+                    # blocker TTL, or a short poll (a fake lease clock
+                    # cannot drive the real condvar timeout)
+                    waits = [0.05]
+                    if remaining is not None:
+                        waits.append(remaining)
+                    waits.extend(l.expires_at - now for l in blockers
+                                 if l.expires_at is not None
+                                 and l.expires_at > now)
+                    self._cond.wait(max(0.001, min(waits)))
+        finally:
+            self._notify_expired(expired)
 
     def release(self, key: Key, owner: str, lo: int, hi: int,
                 exact: bool = False) -> None:
@@ -151,29 +271,139 @@ class LeaseTable:
                     active[:] = [l for l in active
                                  if not (l.owner == owner
                                          and l.overlaps(lo, hi))]
+                self._cond.notify_all()     # blocked acquires may proceed
 
     def holders(self, key: Key) -> List[Lease]:
-        """All active leases under ``key`` (snapshot, sorted by range)."""
-        with self._lock:
-            return sorted(self._leases.get(key, ()),
-                          key=lambda l: (l.lo, l.hi, l.owner))
+        """All active (unexpired) leases under ``key`` (snapshot, sorted
+        by range)."""
+        expired: List[Tuple[Key, Lease]] = []
+        try:
+            with self._lock:
+                expired.extend(self._purge_locked())
+                return sorted(self._leases.get(key, ()),
+                              key=lambda l: (l.lo, l.hi, l.owner))
+        finally:
+            self._notify_expired(expired)
 
     def check(self, key: Key, owner: str, lo: int, hi: int,
               epoch: int) -> None:
         """Fencing check: raise :class:`StaleLeaseError` unless ``owner``
         still holds an active lease at exactly ``epoch`` covering
         ``[lo, hi)`` — the commit-time gate a lease-holding writer runs
-        before archiving into its range."""
-        with self._lock:
-            for l in self._leases.get(key, ()):
-                if (l.owner == owner and l.epoch == epoch
-                        and l.covers(lo, hi)):
-                    return
-            current = self._epochs.get(key, 0)
+        before archiving into its range.  An expired lease fails exactly
+        like a released one (expiry purges first)."""
+        expired: List[Tuple[Key, Lease]] = []
+        try:
+            with self._lock:
+                expired.extend(self._purge_locked())
+                for l in self._leases.get(key, ()):
+                    if (l.owner == owner and l.epoch == epoch
+                            and l.covers(lo, hi)):
+                        return
+                current = self._epochs.get(key, 0)
+        finally:
+            self._notify_expired(expired)
         raise StaleLeaseError(
             f"lease [{lo}, {hi})@e{epoch} of {key} held by {owner!r} is no "
             f"longer current (key epoch {current}); the range was released "
             f"or re-acquired — abandon this writer's pending archives")
+
+    def renew(self, key: Key, owner: str,
+              ttl: Optional[float] = None) -> int:
+        """Heartbeat: re-arm the TTL of every active lease ``owner``
+        holds under ``key`` (epochs preserved — renewal is not a
+        re-acquire).  Returns the number of leases renewed; 0 means the
+        owner holds nothing live (its leases expired — the heartbeat
+        arrived too late and the next commit check will fence it)."""
+        expired: List[Tuple[Key, Lease]] = []
+        try:
+            with self._lock:
+                expired.extend(self._purge_locked())
+                now = _CLOCK()
+                active = self._leases.get(key, [])
+                n = 0
+                for i, l in enumerate(active):
+                    if l.owner == owner:
+                        active[i] = dataclasses.replace(
+                            l, expires_at=(None if ttl is None
+                                           else now + ttl))
+                        n += 1
+                return n
+        finally:
+            self._notify_expired(expired)
+
+    def purge_expired(self, prefix: Optional[Tuple[str, str]] = None
+                      ) -> List[Tuple[Key, Lease]]:
+        """Purge every expired lease now and return the purged pairs —
+        filtered to keys whose (dataset, collocation) labels match
+        ``prefix`` when given (the whole table is still purged).  The
+        explicit entry point ``fdb.recover()`` drives."""
+        with self._lock:
+            expired = self._purge_locked()
+        self._notify_expired(expired)
+        if prefix is not None:
+            expired = [(k, l) for k, l in expired if k[:2] == tuple(prefix)]
+        return expired
+
+    # -- dirty-intent journal (crash recovery) -------------------------------
+    def mark_dirty(self, key: Key, owner: str, chunk_ids, client: str
+                   ) -> None:
+        """Journal chunk ids ``owner`` archived under ``key`` through
+        ``client`` that are not yet covered by that client's flush
+        barrier.  Cleared by :meth:`clear_dirty_client` at flush; what
+        survives with no live lease is a dead writer's torn state, found
+        by :meth:`take_orphans`."""
+        with self._lock:
+            per_owner = self._dirty.setdefault(key, {})
+            chunks, _client = per_owner.get(owner, (set(), client))
+            per_owner[owner] = (chunks | {int(c) for c in chunk_ids},
+                                str(client))
+
+    def clear_dirty_client(self, client: str) -> None:
+        """Drop every dirty intent archived through ``client`` — its
+        flush barrier just published those chunks (client-level, like
+        the barrier itself: one flush covers all the client's owners)."""
+        with self._lock:
+            for key in list(self._dirty):
+                per_owner = self._dirty[key]
+                for owner in list(per_owner):
+                    if per_owner[owner][1] == client:
+                        del per_owner[owner]
+                if not per_owner:
+                    del self._dirty[key]
+
+    def dirty_intents(self, key: Key) -> Dict[str, List[int]]:
+        """Snapshot of the journal under ``key``: owner -> chunk ids."""
+        with self._lock:
+            return {o: sorted(cs)
+                    for o, (cs, _c) in self._dirty.get(key, {}).items()}
+
+    def take_orphans(self, prefix: Optional[Tuple[str, str]] = None
+                     ) -> List[Tuple[Key, str, List[int], str]]:
+        """Remove and return every dirty intent whose owner no longer
+        holds *any* active lease under its key — the archived-but-
+        unflushed chunks of dead (expired/released) writers, as
+        ``(key, owner, chunk_ids, client)``.  Intents under a live lease
+        are left alone: their writer may still be flushing."""
+        expired: List[Tuple[Key, Lease]] = []
+        out: List[Tuple[Key, str, List[int], str]] = []
+        try:
+            with self._lock:
+                expired.extend(self._purge_locked())
+                for key in list(self._dirty):
+                    if prefix is not None and key[:2] != tuple(prefix):
+                        continue
+                    live = {l.owner for l in self._leases.get(key, ())}
+                    per_owner = self._dirty[key]
+                    for owner in list(per_owner):
+                        if owner not in live:
+                            chunks, client = per_owner.pop(owner)
+                            out.append((key, owner, sorted(chunks), client))
+                    if not per_owner:
+                        del self._dirty[key]
+            return out
+        finally:
+            self._notify_expired(expired)
 
 
 #: attribute under which a deployment's shared table hangs off its engine/sim
@@ -213,9 +443,12 @@ class CatalogueLeaseMixin:
         return shared_lease_table(self._lease_host())
 
     def acquire_lease(self, dataset, collocation, resource: str, lo: int,
-                      hi: int, owner: str) -> int:
+                      hi: int, owner: str, ttl: Optional[float] = None,
+                      block: bool = False,
+                      timeout: Optional[float] = None) -> int:
         return self._leases().acquire(
-            self._lease_key(dataset, collocation, resource), owner, lo, hi)
+            self._lease_key(dataset, collocation, resource), owner, lo, hi,
+            ttl=ttl, block=block, timeout=timeout)
 
     def release_lease(self, dataset, collocation, resource: str, lo: int,
                       hi: int, owner: str, exact: bool = False) -> None:
@@ -234,6 +467,18 @@ class CatalogueLeaseMixin:
             self._lease_key(dataset, collocation, resource), owner, lo, hi,
             epoch)
 
+    def lease_table(self) -> LeaseTable:
+        """The deployment's shared lease table — the facade reaches it
+        directly for renewal, expiry sweeps and the dirty-intent journal
+        (keeping the Catalogue interface to the four lease verbs)."""
+        return self._leases()
+
+    def lease_key(self, dataset, collocation, resource: str) -> Key:
+        """The table key for (dataset, collocation, resource) — public
+        twin of ``_lease_key`` for facade-level recovery code."""
+        return self._lease_key(dataset, collocation, resource)
+
 
 __all__ = ["Lease", "LeaseTable", "LeaseError", "LeaseConflictError",
-           "StaleLeaseError", "shared_lease_table", "CatalogueLeaseMixin"]
+           "StaleLeaseError", "shared_lease_table", "CatalogueLeaseMixin",
+           "set_lease_clock", "lease_clock"]

@@ -1,0 +1,209 @@
+"""Retry/backoff + deadlines: the facade-level answer to transient
+storage faults.
+
+Operational NWP archiving cannot stop because one object write hit a
+transient backend error (PAPERS.md: arXiv 2404.03107 on I/O contention,
+arXiv 2208.06752 on DAOS operational behaviour) — but naive retry loops
+scattered through the stack are how systems double-archive, spin on
+permanent failures, and hide deadlocks.  This module centralises the
+policy; lint rule ``L009`` bans ``time.sleep``/hand-rolled retry loops
+everywhere else, so every backoff in the repo goes through here.
+
+Design points, in FDB terms:
+
+* **retry only what is idempotent** — the facade retries whole archive
+  units (store archive + catalogue index together): FDB rule 5
+  (re-archiving an identifier *transactionally replaces* it) makes a
+  re-driven archive safe even when the first attempt died between store
+  and catalogue.  Retries never span a flush barrier.
+* **retries compose with epoch fencing** — ``RetryPolicy.call`` takes an
+  ``on_retry`` hook, run *before* every re-attempt; writer sessions
+  install their lease re-validation there, so a retried archive whose
+  lease was broken mid-backoff raises ``StaleLeaseError`` instead of
+  silently double-archiving into a re-acquired range.
+* **bounded, decorrelated** — attempts are capped, and backoff uses
+  decorrelated jitter (``delay = U(base, prev * mult)``, capped), the
+  AWS-style schedule that avoids retry synchronisation across writers.
+* **deadlines are ambient** — a plan sets one per-plan
+  :class:`Deadline` via :func:`deadline_scope`; it rides the
+  ``contextvars`` context through the ``ChunkExecutor`` hand-off, so
+  every facade-level retry under that plan gives up with
+  :class:`DeadlineExceeded` when the *plan's* budget runs out, not just
+  its own op's.
+
+Observability: every re-attempt bumps the ``retry.attempts`` counter and
+(when tracing) records a ``retry.backoff`` span around the sleep; a
+bounded give-up bumps ``retry.giveups`` and re-raises the last error with
+the attempt count attached as a note.
+
+Stdlib + ``repro.obs`` only (core's bottom-layer discipline).
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+import random
+import time
+from typing import Callable, Optional, Tuple, Type
+
+from repro.obs import trace as _trace
+from repro.obs.metrics import MetricsRegistry
+
+
+def _annotate(e: BaseException, note: str) -> None:
+    """``add_note`` on 3.11+; an extra ``args`` element (visible in the
+    rendered message) on 3.10."""
+    add = getattr(e, "add_note", None)
+    if add is not None:
+        add(note)
+    else:
+        e.args = e.args + (note,)
+
+
+class TransientStorageError(RuntimeError):
+    """A storage op failed in a way that is expected to heal on its own
+    (slow OST, transient network error, backend hiccup) — the *retryable*
+    error class.  Backends and the fault injector raise it; permanent
+    errors use any other exception type and propagate immediately."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """An op (or the plan above it) ran out of its deadline budget while
+    retrying.  ``__cause__`` carries the last underlying error."""
+
+
+class Deadline:
+    """A wall-clock budget on the shared ``perf_counter`` clock.
+
+    Created from a relative budget in seconds; :meth:`remaining` counts
+    down from there.  The same clock domain as span timestamps and lease
+    expiry, so traces, leases and deadlines order consistently.
+    """
+
+    __slots__ = ("seconds", "_expiry")
+
+    def __init__(self, seconds: float):
+        self.seconds = float(seconds)
+        self._expiry = time.perf_counter() + self.seconds
+
+    def remaining(self) -> float:
+        return self._expiry - time.perf_counter()
+
+    @property
+    def expired(self) -> bool:
+        return self.remaining() <= 0
+
+    def __repr__(self) -> str:
+        return f"Deadline({self.seconds}s, {self.remaining():.3f}s left)"
+
+
+#: the ambient per-plan deadline (see :func:`deadline_scope`) — a
+#: ContextVar so it survives the executor's ``copy_context()`` hand-off
+_DEADLINE: contextvars.ContextVar[Optional[Deadline]] = \
+    contextvars.ContextVar("repro_retry_deadline", default=None)
+
+
+def current_deadline() -> Optional[Deadline]:
+    """The ambient deadline of this context, or None."""
+    return _DEADLINE.get()
+
+
+@contextlib.contextmanager
+def deadline_scope(deadline):
+    """Install ``deadline`` (a :class:`Deadline`, a float budget in
+    seconds, or None for "no budget") as the ambient deadline for the
+    duration of the block — what ``plan.execute(deadline=...)`` wraps its
+    body in, so every retried facade op under the plan shares one budget.
+    """
+    if deadline is not None and not isinstance(deadline, Deadline):
+        deadline = Deadline(deadline)
+    token = _DEADLINE.set(deadline)
+    try:
+        yield deadline
+    finally:
+        _DEADLINE.reset(token)
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounded retry with decorrelated-jitter backoff.
+
+    One policy per FDB client (``FDB(..., retry=RetryPolicy(...))``);
+    the default is always safe because it only engages when an op raises
+    a retryable error.  ``seed`` pins the jitter sequence for
+    reproducible fault-schedule tests; ``sleep`` is injectable so unit
+    tests run instantly.
+    """
+
+    max_attempts: int = 4
+    base_delay: float = 0.005       # first backoff lower bound (seconds)
+    max_delay: float = 0.25         # per-sleep cap (seconds)
+    multiplier: float = 3.0         # decorrelated-jitter growth factor
+    retryable: Tuple[Type[Exception], ...] = (TransientStorageError,)
+    seed: Optional[int] = None
+    sleep: Callable[[float], None] = time.sleep
+    op_timeout: Optional[float] = None   # per-op deadline across attempts
+
+    def __post_init__(self) -> None:
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        self._rng = random.Random(self.seed)
+
+    def call(self, fn: Callable[[], object], *, op: str,
+             metrics: Optional[MetricsRegistry] = None,
+             on_retry: Optional[Callable[[], None]] = None,
+             deadline: Optional[Deadline] = None):
+        """Run ``fn()`` under this policy and return its result.
+
+        Retryable errors are re-attempted up to ``max_attempts`` total,
+        sleeping a decorrelated-jitter backoff in between; any other
+        exception propagates immediately (``InjectedCrash`` is a
+        ``BaseException`` precisely so no policy can swallow it).
+
+        ``on_retry`` runs before each re-attempt; an exception it raises
+        aborts the retry (a session's lease re-validation raising
+        ``StaleLeaseError`` must win over the retry loop).  The op gives
+        up with :class:`DeadlineExceeded` when the tightest of
+        ``deadline``, the ambient :func:`deadline_scope` deadline, and
+        the policy's ``op_timeout`` runs out; on plain attempt
+        exhaustion it bumps ``retry.giveups`` and re-raises the last
+        error with the attempt count noted.
+        """
+        metrics = metrics if metrics is not None else _trace.GLOBAL_TRACER.metrics
+        deadlines = [d for d in (deadline, _DEADLINE.get()) if d is not None]
+        if self.op_timeout is not None:
+            deadlines.append(Deadline(self.op_timeout))
+        prev_delay = self.base_delay
+        for attempt in range(1, self.max_attempts + 1):
+            try:
+                return fn()
+            except self.retryable as e:
+                if attempt >= self.max_attempts:
+                    metrics.counter("retry.giveups").inc()
+                    _annotate(e, f"op {op!r} gave up after {attempt} "
+                                 f"attempt(s) ({type(e).__name__})")
+                    raise
+                budget = min((d.remaining() for d in deadlines),
+                             default=None)
+                if budget is not None and budget <= 0:
+                    raise DeadlineExceeded(
+                        f"op {op!r} exceeded its deadline after {attempt} "
+                        f"attempt(s)") from e
+                metrics.counter("retry.attempts").inc()
+                delay = min(self.max_delay,
+                            self._rng.uniform(self.base_delay,
+                                              prev_delay * self.multiplier))
+                prev_delay = delay
+                if budget is not None:
+                    delay = min(delay, max(0.0, budget))
+                if on_retry is not None:
+                    on_retry()      # e.g. lease re-validation; may raise
+                with _trace.span("retry.backoff", op=op, attempt=attempt,
+                                 delay_us=int(delay * 1e6)):
+                    self.sleep(delay)
+        raise AssertionError("unreachable")  # loop always returns or raises
+
+
+__all__ = ["TransientStorageError", "DeadlineExceeded", "Deadline",
+           "deadline_scope", "current_deadline", "RetryPolicy"]

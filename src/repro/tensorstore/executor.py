@@ -36,6 +36,17 @@ from repro.obs import trace as _obs
 DEFAULT_WORKERS = 8
 
 
+def annotate_error(e: BaseException, note: str) -> None:
+    """Attach ``note`` to an in-flight exception without re-raising a new
+    one: ``add_note`` on 3.11+, an extra ``args`` element (visible in the
+    rendered message) on 3.10."""
+    add = getattr(e, "add_note", None)
+    if add is not None:
+        add(note)
+    else:
+        e.args = e.args + (note,)
+
+
 class ChunkExecutor:
     def __init__(self, max_workers: int = DEFAULT_WORKERS,
                  max_in_flight: Optional[int] = None):
@@ -98,7 +109,9 @@ class ChunkExecutor:
             return self._in_flight
 
     def map_ordered(self, fn: Callable[[Any], Any],
-                    items: Iterable[Any]) -> List[Any]:
+                    items: Iterable[Any],
+                    describe: Optional[Callable[[Any], str]] = None
+                    ) -> List[Any]:
         """Run ``fn`` over ``items`` concurrently; results in input order.
 
         Items may be wildly mixed-size units of work — the tensorstore write
@@ -107,18 +120,35 @@ class ChunkExecutor:
         reads — the bounded window simply admits whatever comes next.
 
         The first raised exception propagates (after all futures settle, so
-        no task outlives the call with shared state in hand).
+        no task outlives the call with shared state in hand) — annotated
+        with which item failed (its input position, ``describe(item)`` when
+        a describer is given, and how many sibling tasks also failed), so a
+        retried-then-exhausted chunk op surfaces with its context instead
+        of a bare backend error.
         """
+        items = list(items)
         futures = [self.submit(fn, item) for item in items]
-        results, first_error = [], None
-        for fut in futures:
+        results: List[Any] = []
+        first_error, first_pos, n_failed = None, -1, 0
+        for pos, fut in enumerate(futures):
             try:
                 results.append(fut.result())
             except BaseException as e:  # noqa: BLE001
+                n_failed += 1
                 if first_error is None:
-                    first_error = e
+                    first_error, first_pos = e, pos
                 results.append(None)
         if first_error is not None:
+            label = ""
+            if describe is not None:
+                try:
+                    label = f" ({describe(items[first_pos])})"
+                except Exception:   # a broken describer must not mask
+                    label = ""      # the real failure
+            annotate_error(
+                first_error,
+                f"first failure of {n_failed}/{len(futures)} executor "
+                f"task(s): item {first_pos}{label}")
             raise first_error
         return results
 

@@ -36,6 +36,8 @@ from __future__ import annotations
 import itertools
 from typing import Iterator, List, Optional, Sequence, Tuple
 
+from repro.core import deadline_scope
+
 from .codec import get_codec
 from .meta import META_CHUNK_KEY, ArrayMeta, auto_chunks
 
@@ -201,11 +203,14 @@ class ReshardPlan:
         return self._read_stats()[1]
 
     # -- execution -----------------------------------------------------------
-    def execute(self, flush: bool = True):
+    def execute(self, flush: bool = True, deadline: Optional[float] = None):
         """Stream every batch (coalesced read → coalesced write), then flip
         the metadata to the new layout and — with ``flush=True`` — commit
         (FDB rule 3: chunks and metadata publish together).  Returns the
-        source array, mutated onto the new layout."""
+        source array, mutated onto the new layout.  ``deadline`` (seconds)
+        is the whole reshard's shared retry budget — every facade-level
+        retry under any batch draws from it (ambient
+        :func:`repro.core.deadline_scope`)."""
         from .store import ChunkedArray, ReadPlan, WritePlan
         arr = self.array
         store = arr.store
@@ -215,7 +220,8 @@ class ReshardPlan:
         tracer = fdb.tracer
         with tracer.span("plan.reshard", batches=self.n_batches,
                          dest_chunks=self.n_dest_chunks,
-                         generation=self.dest_meta.generation):
+                         generation=self.dest_meta.generation), \
+                deadline_scope(deadline):
             if fdb.dirty:
                 fdb.flush()     # source chunks must be visible to our reads
             dest = ChunkedArray(store, self.dest_meta)

@@ -72,7 +72,7 @@ import numpy as np
 
 from repro.core import (FDB, FieldLocation, Identifier, LeaseConflictError,
                         MultiHandle, StaleLeaseError, WriterSession,
-                        group_mergeable)
+                        deadline_scope, group_mergeable)
 from .codec import Codec, get_codec
 from .executor import ChunkExecutor
 from .grid import ChunkGrid, merge_id_ranges
@@ -239,6 +239,22 @@ class TensorStore:
                           codec=codec)
         arr.write(values)
         return arr
+
+    def recover(self):
+        """Crash-recovery sweep of this array slot's lease scope
+        (:meth:`repro.core.FDB.recover`): purge TTL-expired leases,
+        quarantine dead writers' archived-but-unflushed chunk intents, and
+        — when the array exists — report chunk keys from layout
+        generations *newer* than the live one (the debris of a reshard
+        that died before its metadata flip).  Returns the
+        :class:`repro.core.RecoveryReport`."""
+        live = None
+        handle = self.fdb.retrieve(self._ident(META_CHUNK_KEY))
+        if handle.length():
+            meta = ArrayMeta.from_bytes(handle.read())
+            live = f"g{meta.generation}"
+        return self.fdb.recover(self._ident(META_CHUNK_KEY),
+                                live_resource=live)
 
     def garbage_report(self) -> "GarbageReport":
         """Account the retained old-generation chunk bytes of this array.
@@ -655,7 +671,8 @@ class WritePlan:
         :meth:`ReadPlan.read_ops`."""
         return sum(len(self._stage_groups(stage)) for stage in self.stages)
 
-    def execute(self, flush: bool = True) -> List[FieldLocation]:
+    def execute(self, flush: bool = True,
+                deadline: Optional[float] = None) -> List[FieldLocation]:
         """Stage by stage: fetch-and-patch (coalesced), encode (batched),
         archive (one submission per group), release — and, with
         ``flush=True``, commit (FDB visibility rule 3) and release this
@@ -667,13 +684,20 @@ class WritePlan:
         leases stay held (the chunks are archived but not yet visible — the
         session's later flush/close is the commit barrier, and releasing
         earlier would let the next holder RMW not-yet-visible bytes).
+
+        ``deadline`` (seconds) is the *plan's* retry budget: it rides the
+        ambient :func:`repro.core.deadline_scope` through the executor
+        hand-off, so every facade-level retry under this plan gives up with
+        :class:`repro.core.DeadlineExceeded` once the shared budget runs
+        out rather than each op backing off independently.
         """
         if not self.tasks:
             return []
         with self.tracer.span("plan.execute", kind="write",
                               chunks=self.n_chunks, stages=len(self.stages),
                               rmw=self.rmw_chunks):
-            return self._execute(flush)
+            with deadline_scope(deadline):
+                return self._execute(flush)
 
     def _execute(self, flush: bool) -> List[FieldLocation]:
         arr, values = self.array, self.values
@@ -748,6 +772,14 @@ class WritePlan:
                     sp.attrs["nbytes"] = sum(len(blobs[k]) for k in ks)
                     if lin is not None:
                         sp.attrs["chunk_ids"] = [lin[k] for k in ks]
+            if lin is not None:
+                # crash-recovery breadcrumb: these chunks are archived but
+                # not yet flushed — journal them deployment-wide so
+                # fdb.recover() can quarantine them if this writer dies
+                # before its commit barrier (flush clears the journal)
+                self.session.mark_dirty_chunks(
+                    self._lease_ident, self._lease_resource,
+                    [lin[k] for k in ks])
             return batch_locs
 
         # the fencing gate runs per stage, right before its archives: a
@@ -761,7 +793,12 @@ class WritePlan:
         # stage-local index = position - stage[0]
         kgroups = [[pos - stage[0] for pos in group]
                    for group in self._stage_groups(stage)]
-        batches = store.executor.map_ordered(put, kgroups)
+        batches = store.executor.map_ordered(
+            put, kgroups,
+            describe=lambda ks: (
+                f"op=io.archive backend={store.fdb.config.backend} "
+                f"chunk_ids="
+                f"{[lin[k] for k in ks] if lin is not None else [stage[k] for k in ks]}"))
         for ks, batch_locs in zip(kgroups, batches):
             for k, loc in zip(ks, batch_locs):
                 locs[stage[k]] = loc
@@ -879,7 +916,11 @@ class ReadPlan:
             for pos, chunk in zip(positions, chunks):
                 out[pos] = chunk if chunk.flags.writeable else chunk.copy()
 
-        arr.store.executor.map_ordered(lambda b: run_batch(*b), self.batches)
+        arr.store.executor.map_ordered(
+            lambda b: run_batch(*b), self.batches,
+            describe=lambda b: (
+                f"op=io.fetch backend={arr.store.fdb.config.backend} "
+                f"chunks={[self.tasks[pos][0] for pos in b[0]]}"))
         return out              # type: ignore[return-value]
 
     def _fetch(self, mh: MultiHandle, n_chunks: int) -> List[bytes]:
@@ -897,7 +938,10 @@ class ReadPlan:
         self.tracer.metrics.counter("codec.bytes_decoded").inc(nbytes)
         return parts
 
-    def execute(self) -> np.ndarray:
+    def execute(self, deadline: Optional[float] = None) -> np.ndarray:
+        """Assemble the selection.  ``deadline`` (seconds) bounds the
+        plan's facade-level retries via the ambient
+        :func:`repro.core.deadline_scope`, like the write side."""
         if self.sel is None:
             raise TypeError("whole-chunk plan (for_chunks) has no selection "
                             "to assemble; use read_chunks()")
@@ -905,7 +949,8 @@ class ReadPlan:
         grid, codec = arr.grid, arr._codec
         with self.tracer.span("plan.execute", kind="read",
                               chunks=self.n_chunks,
-                              batches=len(self.batches)):
+                              batches=len(self.batches)), \
+                deadline_scope(deadline):
             out = np.empty(grid.selection_shape(self.sel), arr.dtype)
             for pos in self.missing:
                 out[self.tasks[pos][2]] = 0
@@ -926,8 +971,11 @@ class ReadPlan:
                     _idx, chunk_sel, out_sel = self.tasks[pos]
                     out[out_sel] = chunk[chunk_sel]
 
-            arr.store.executor.map_ordered(lambda b: run_batch(*b),
-                                           self.batches)
+            arr.store.executor.map_ordered(
+                lambda b: run_batch(*b), self.batches,
+                describe=lambda b: (
+                    f"op=io.fetch backend={arr.store.fdb.config.backend} "
+                    f"chunks={[self.tasks[pos][0] for pos in b[0]]}"))
         if self.flips:          # negative-step axes: one client-side flip
             out = out[tuple(slice(None, None, -1) if a in self.flips
                             else slice(None) for a in range(out.ndim))]

@@ -94,7 +94,7 @@ class FDBCheckpointer:
     def __init__(self, run: str, fdb_config: Optional[FDBConfig] = None,
                  n_shards: int = 1, asynchronous: bool = False,
                  compress: bool = False, host: Optional[str] = None,
-                 chunked: bool = True):
+                 chunked: bool = True, shutdown_timeout: float = 5.0):
         cfg = fdb_config or FDBConfig(backend="daos")
         if cfg.resolved_schema().name != "ckpt":
             import dataclasses
@@ -106,6 +106,7 @@ class FDBCheckpointer:
         self.chunked = chunked
         self.host = host or socket.gethostname()
         self.asynchronous = asynchronous
+        self.shutdown_timeout = shutdown_timeout
         self._q: "queue.Queue" = queue.Queue()
         self._worker: Optional[threading.Thread] = None
         self._errors: List[BaseException] = []
@@ -506,5 +507,17 @@ class FDBCheckpointer:
             self.wait()
             self._q.put(None)
             if self._worker:
-                self._worker.join(timeout=5)
+                self._worker.join(timeout=self.shutdown_timeout)
+                if self._worker.is_alive():
+                    # a silently-dropped join here would let close() return
+                    # with a save possibly still archiving — the caller
+                    # would tear down (or exit) under a half-written,
+                    # unflushed step believing it durable
+                    raise RuntimeError(
+                        f"checkpoint async worker failed to shut down "
+                        f"within {self.shutdown_timeout}s "
+                        f"({max(0, self._q.unfinished_tasks - 1)} save "
+                        f"job(s) still "
+                        f"pending); a save may still be in flight — "
+                        f"the step is NOT durable until flush")
         self.fdb.close()

@@ -167,6 +167,95 @@ def test_rmw_with_stale_check_fires():
     assert v[0].details["last_change"] == 15
 
 
+def test_recover_live_lease_fires_when_ttl_not_lapsed():
+    """A recovery sweep that purges a lease whose TTL (per the trace's
+    last extension) had not yet lapsed raced a live heartbeat."""
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, ttl=1.0, **S)         # expires at 5 + 1e9
+    t.record_complete("fdb.recover", 1000, 2000, client="c2",
+                      scope="ds|col",
+                      expired=[{"resource": "g0", "owner": "w1", "lo": 0,
+                                "hi": 4, "epoch": 1}],
+                      orphans=[], stale=0)           # 1000 < 5 + 1e9
+    v = check_protocol(t.spans())
+    assert [x.rule for x in v] == ["recover-live-lease"]
+    assert v[0].details["owner"] == "w1"
+    assert "raced a heartbeat" in str(v[0])
+
+
+def test_recover_after_ttl_lapse_is_clean_and_clears_dirty():
+    """A sweep after the TTL genuinely lapsed is clean; its quarantined
+    orphans stop counting as dirty (no release-before-flush afterwards),
+    and a later writer may re-lease the range at a higher epoch."""
+    t = tracer()
+    ttl_ns = int(0.001 * 1e9)                        # 1 ms TTL
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, ttl=0.001, **S)
+    t.record_complete("io.archive", 10, 20, owner="w1", client="c1",
+                      chunk_ids=[1, 2], **S)         # journaled, unflushed
+    t_sweep = 5 + ttl_ns + 100                       # past expiry
+    t.record_complete("fdb.recover", t_sweep, t_sweep + 10, client="c2",
+                      scope="ds|col",
+                      expired=[{"resource": "g0", "owner": "w1", "lo": 0,
+                                "hi": 4, "epoch": 1}],
+                      orphans=[{"resource": "g0", "owner": "w1",
+                                "chunk_ids": [1, 2], "client": "c1"}],
+                      stale=0)
+    t.record_complete("lease.acquire", t_sweep + 20, t_sweep + 25,
+                      owner="w2", lo=0, hi=4, epoch=2, **S)
+    assert check_protocol(t.spans()) == []
+
+
+def test_renew_extends_ttl_so_recover_after_it_fires():
+    """A heartbeat renewal re-arms the TTL: a sweep that would have been
+    legal against the acquire time races the renewed lease."""
+    t = tracer()
+    ttl_ns = int(0.001 * 1e9)
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, ttl=0.001, **S)
+    t_renew = 5 + ttl_ns // 2
+    t.record_complete("lease.renew", t_renew, t_renew + 2, owner="w1",
+                      ttl=0.001, renewed=1, **S)     # re-armed at t_renew+2
+    t_sweep = 5 + ttl_ns + 100                       # past the *acquire* TTL
+    t.record_complete("fdb.recover", t_sweep, t_sweep + 10, client="c2",
+                      scope="ds|col",
+                      expired=[{"resource": "g0", "owner": "w1", "lo": 0,
+                                "hi": 4, "epoch": 1}],
+                      orphans=[], stale=0)
+    v = check_protocol(t.spans())
+    assert [x.rule for x in v] == ["recover-live-lease"]
+    # a renewal that extended nothing (renewed=0) does not re-arm
+    t2 = tracer()
+    t2.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                       epoch=1, ttl=0.001, **S)
+    t2.record_complete("lease.renew", 10, 12, owner="w1", ttl=0.001,
+                       renewed=0, **S)
+    t2.record_complete("fdb.recover", 5 + ttl_ns + 100, 5 + ttl_ns + 110,
+                       client="c2", scope="ds|col",
+                       expired=[{"resource": "g0", "owner": "w1", "lo": 0,
+                                 "hi": 4, "epoch": 1}],
+                       orphans=[], stale=0)
+    assert check_protocol(t2.spans()) == []
+
+
+def test_failed_flush_is_not_a_barrier():
+    """A flush span carrying an error attr (crashed or failed barrier)
+    published nothing: the owner's dirty chunks stay dirty, so a release
+    right after it still fires release-before-flush."""
+    t = tracer()
+    t.record_complete("lease.acquire", 0, 5, owner="w1", lo=0, hi=4,
+                      epoch=1, **S)
+    t.record_complete("io.archive", 10, 20, owner="w1", client="c1",
+                      chunk_ids=[1], **S)
+    t.record_complete("fdb.flush", 25, 28, client="c1",
+                      error="InjectedCrash")
+    t.record_complete("lease.release", 30, 35, owner="w1", lo=0, hi=4,
+                      exact=True, **S)
+    v = check_protocol(t.spans())
+    assert [x.rule for x in v] == ["release-before-flush"]
+
+
 def test_executor_over_window_fires_from_gauge_high_water():
     t = tracer()
     t.metrics.gauge("executor.in_flight").set(9)
@@ -436,6 +525,48 @@ def test_lint_suppression_matching_and_l008(tmp_path):
                                                 "src/repro/serve/b.py"]
     assert [s.path for s in res.unused_suppressions] == \
         ["src/repro/serve/c.py"]
+
+
+def test_lint_sleep_and_hand_rolled_retry(tmp_path):
+    res = mkrepo(tmp_path, {
+        "src/repro/data/x.py": """\
+            import time
+
+            def poll(self):
+                time.sleep(0.1)             # bare sleep: flagged
+                for _ in range(3):
+                    try:
+                        self.op()
+                    except Exception:
+                        continue            # hand-rolled retry: flagged
+            """,
+        "src/repro/core/retry.py": """\
+            import time
+
+            def backoff(self, s):
+                time.sleep(s)               # the retry layer itself: fine
+            """,
+        "src/repro/core/faults.py": """\
+            import time
+
+            def spike(self, s):
+                time.sleep(s)               # latency injection: fine
+            """,
+        "src/repro/train/ok.py": """\
+            def drain(self):
+                while True:
+                    try:
+                        self.step()
+                    except Exception:
+                        pass                # swallow-and-fall-through: fine
+                    if self.done:
+                        break
+            """,
+    })
+    assert rules(res) == ["L009", "L009"]
+    assert all(f.path == "src/repro/data/x.py" for f in res.findings)
+    assert "time.sleep" in res.findings[0].message
+    assert "hand-rolled retry" in res.findings[1].message
 
 
 def test_load_span_taxonomy_expansion(tmp_path):

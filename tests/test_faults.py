@@ -1,0 +1,420 @@
+"""Robustness: fault injection, retry/backoff, lease TTL expiry, crash
+recovery.
+
+Covers the PR acceptance criteria: the fault matrix (four backends ×
+{transient archive, transient retrieve, catalogue flush failure, crash
+between archive and flush}) heals to byte-identical results vs a
+fault-free run; a writer killed at an injected crash point leaves torn
+state that ``fdb.recover()`` mops up after its lease TTL lapses, a second
+writer completes, and ``fdb.check_protocol()`` proves the recovery obeyed
+the lease contract; plus the RetryPolicy unit surface (deadlines,
+give-ups, on_retry fencing, permanent-error passthrough), blocking lease
+acquisition, the heartbeat thread, the executor's failure-context
+annotation, and the checkpointer's detected (no longer silent) shutdown
+timeout.
+
+These tests run on the real lease clock (no fakes): the protocol checker
+orders recovery events against genuine TTL expiry, so TTLs here are
+small-but-real (0.1–0.3 s) and expiry waits sleep past them.
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import (FDB, FDBConfig, Deadline, DeadlineExceeded,
+                        FaultInjector, InjectedCrash, LeaseConflictError,
+                        PermanentStorageError, RetryPolicy,
+                        TransientStorageError, current_deadline,
+                        deadline_scope)
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.trace import GLOBAL_TRACER
+from repro.tensorstore import TensorStore
+from repro.tensorstore.executor import ChunkExecutor
+
+BACKENDS = ["daos", "rados", "posix", "s3"]
+BASE = {"store": "s", "array": "a", "writer": "w0"}
+
+
+def make_fdb(backend, tmp_path, **kw):
+    return FDB(FDBConfig(backend=backend, schema="tensor",
+                         root=str(tmp_path / "fdb")), **kw)
+
+
+def fast_retry(**kw):
+    """A policy that never really sleeps — unit tests run instantly."""
+    kw.setdefault("sleep", lambda _s: None)
+    kw.setdefault("seed", 0)
+    return RetryPolicy(**kw)
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy unit surface
+# ---------------------------------------------------------------------------
+
+def test_retry_heals_transient_and_counts_attempts():
+    m = MetricsRegistry()
+    calls = []
+
+    def fn():
+        calls.append(1)
+        if len(calls) < 3:
+            raise TransientStorageError("hiccup")
+        return "ok"
+
+    assert fast_retry(max_attempts=4).call(fn, op="t", metrics=m) == "ok"
+    assert len(calls) == 3
+    assert m.snapshot()["retry.attempts"]["value"] == 2
+    assert "retry.giveups" not in m.snapshot()
+
+
+def test_retry_gives_up_bounded_and_annotates():
+    m = MetricsRegistry()
+
+    def fn():
+        raise TransientStorageError("always")
+
+    with pytest.raises(TransientStorageError) as ei:
+        fast_retry(max_attempts=2).call(fn, op="fdb.archive", metrics=m)
+    rendered = " ".join(str(a) for a in ei.value.args) \
+        + " ".join(getattr(ei.value, "__notes__", ()))
+    assert "gave up after 2 attempt(s)" in rendered
+    assert m.snapshot()["retry.giveups"]["value"] == 1
+    assert m.snapshot()["retry.attempts"]["value"] == 1
+
+
+def test_retry_permanent_error_propagates_immediately():
+    m = MetricsRegistry()
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise PermanentStorageError("disk on fire")
+
+    with pytest.raises(PermanentStorageError):
+        fast_retry().call(fn, op="t", metrics=m)
+    assert len(calls) == 1                  # never re-attempted
+    assert "retry.attempts" not in m.snapshot()
+
+
+def test_retry_injected_crash_is_uncatchable():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise InjectedCrash("writer killed")
+
+    with pytest.raises(InjectedCrash):
+        fast_retry().call(fn, op="t", metrics=MetricsRegistry())
+    assert len(calls) == 1
+
+
+def test_retry_explicit_deadline_exceeded_chains_cause():
+    def fn():
+        raise TransientStorageError("slow")
+
+    with pytest.raises(DeadlineExceeded) as ei:
+        fast_retry(max_attempts=10).call(fn, op="t",
+                                         metrics=MetricsRegistry(),
+                                         deadline=Deadline(0.0))
+    assert isinstance(ei.value.__cause__, TransientStorageError)
+
+
+def test_retry_ambient_deadline_scope():
+    assert current_deadline() is None
+    with deadline_scope(0.0) as d:
+        assert current_deadline() is d and d.expired
+        with pytest.raises(DeadlineExceeded):
+            fast_retry(max_attempts=10).call(
+                lambda: (_ for _ in ()).throw(TransientStorageError("x")),
+                op="t", metrics=MetricsRegistry())
+    assert current_deadline() is None
+
+
+def test_retry_on_retry_hook_aborts_the_loop():
+    calls = []
+
+    def fn():
+        calls.append(1)
+        raise TransientStorageError("transient")
+
+    def fenced():
+        raise RuntimeError("lease no longer current")
+
+    with pytest.raises(RuntimeError, match="no longer current"):
+        fast_retry(max_attempts=5).call(fn, op="t",
+                                        metrics=MetricsRegistry(),
+                                        on_retry=fenced)
+    assert len(calls) == 1                  # fencing beat the re-attempt
+
+
+# ---------------------------------------------------------------------------
+# the fault matrix: 4 backends x transient fault shapes, byte-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("faulted_op", ["store.archive", "store.retrieve",
+                                        "catalogue.flush"])
+def test_fault_matrix_transients_heal_byte_identical(backend, faulted_op,
+                                                     tmp_path):
+    """A scripted burst of transient faults on each data-path op class is
+    healed by the facade retry: the array reads back exactly, and every
+    chunk object is byte-identical to a fault-free reference write."""
+    inj = FaultInjector(seed=7)
+    fdb = make_fdb(backend, tmp_path, faults=inj, retry=fast_retry())
+    x = np.random.default_rng(3).normal(size=(48, 32)).astype(np.float32)
+    if faulted_op == "store.retrieve":
+        arr = TensorStore(fdb, BASE).save(x, chunks=(16, 16))
+        inj.fail(faulted_op, first=2)
+    else:
+        inj.fail(faulted_op, first=2)
+        arr = TensorStore(fdb, BASE).save(x, chunks=(16, 16))
+    np.testing.assert_array_equal(arr.read(), x)
+    assert inj.injected >= 2
+    assert fdb.metrics()["retry.attempts"]["value"] >= 2
+    assert fdb.metrics().get("retry.giveups", {"value": 0})["value"] == 0
+    # per-chunk byte identity against a fault-free reference write
+    ref = TensorStore(fdb, dict(BASE, array="ref")).save(x, chunks=(16, 16))
+    for idx in arr.grid.all_indices():
+        faulty = fdb.retrieve(arr.chunk_ident(idx)).read()
+        clean = fdb.retrieve(ref.chunk_ident(idx)).read()
+        assert faulty == clean, f"chunk {idx} bytes differ"
+    fdb.close()
+
+
+def test_permanent_fault_fails_the_write(tmp_path):
+    """Permanent errors must surface, not burn the retry budget."""
+    inj = FaultInjector().fail("store.archive", first=1,
+                               error=PermanentStorageError)
+    fdb = make_fdb("posix", tmp_path, faults=inj, retry=fast_retry())
+    with pytest.raises(PermanentStorageError):
+        TensorStore(fdb, BASE).save(np.zeros((8, 8), np.float32),
+                                    chunks=(4, 4))
+    assert fdb.metrics().get("retry.attempts", {"value": 0})["value"] == 0
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# lease TTL expiry, blocking acquisition, heartbeat
+# ---------------------------------------------------------------------------
+
+def test_lease_ttl_expiry_frees_range_for_second_writer(tmp_path):
+    fdb, fdb2 = make_fdb("daos", tmp_path), make_fdb("daos", tmp_path)
+    a = fdb.session("A", lease_ttl=0.1)
+    e1 = a.acquire_lease(BASE, "g0", 0, 4)
+    b = fdb2.session("B")
+    with pytest.raises(LeaseConflictError):     # still live
+        b.acquire_lease(BASE, "g0", 2, 6)
+    time.sleep(0.25)                            # past the TTL, no heartbeat
+    e2 = b.acquire_lease(BASE, "g0", 2, 6)      # expiry freed [0, 4)
+    assert e2 > e1
+    assert fdb2.metrics()["lease.expired"]["value"] >= 1
+    b.close()
+    a.abandon()                                 # its lease is long gone
+    fdb.close()
+    fdb2.close()
+
+
+def test_blocking_acquire_times_out_then_succeeds_after_release(tmp_path):
+    fdb = make_fdb("posix", tmp_path)
+    fdb.acquire_lease(BASE, "g0", 0, 4, owner="A")
+    t0 = time.perf_counter()
+    with pytest.raises(LeaseConflictError, match="timed out"):
+        fdb.acquire_lease(BASE, "g0", 0, 4, owner="B", block=True,
+                          timeout=0.15)
+    assert time.perf_counter() - t0 >= 0.1
+
+    def free_it():
+        time.sleep(0.1)
+        fdb.release_lease(BASE, "g0", 0, 4, owner="A")
+
+    t = threading.Thread(target=free_it)
+    t.start()
+    epoch = fdb.acquire_lease(BASE, "g0", 0, 4, owner="B", block=True,
+                              timeout=5.0)
+    t.join()
+    assert epoch > 1
+    fdb.close()
+
+
+def test_blocking_acquire_wakes_on_blocker_ttl_expiry(tmp_path):
+    """A blocked writer completes as soon as the holder's TTL lapses —
+    no release, no coordinator intervention."""
+    fdb = make_fdb("posix", tmp_path)
+    fdb.acquire_lease(BASE, "g0", 0, 4, owner="A", ttl=0.15)
+    epoch = fdb.acquire_lease(BASE, "g0", 0, 4, owner="B", block=True,
+                              timeout=5.0)
+    assert epoch > 1
+    assert [l.owner for l in fdb.lease_holders(BASE, "g0")] == ["B"]
+    fdb.close()
+
+
+def test_heartbeat_keeps_lease_alive_past_ttl(tmp_path):
+    fdb, fdb2 = make_fdb("s3", tmp_path), make_fdb("s3", tmp_path)
+    a = fdb.session("A", lease_ttl=0.12, heartbeat_interval=0.04)
+    a.acquire_lease(BASE, "g0", 0, 4)
+    b = fdb2.session("B")
+    time.sleep(0.4)                             # > 3x TTL
+    with pytest.raises(LeaseConflictError):     # heartbeat kept it live
+        b.acquire_lease(BASE, "g0", 0, 4)
+    a.close()                                   # stops the heartbeat too
+    assert b.acquire_lease(BASE, "g0", 0, 4) > 1
+    b.close()
+    fdb.close()
+    fdb2.close()
+
+
+def test_heartbeat_requires_ttl(tmp_path):
+    fdb = make_fdb("posix", tmp_path)
+    with pytest.raises(ValueError, match="requires lease_ttl"):
+        fdb.session("A", heartbeat_interval=0.1)
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# crash recovery: the acceptance scenario, all four backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_crash_killed_writer_recover_second_writer_completes(backend,
+                                                             tmp_path):
+    """Writer A archives its chunks, is killed at the injected crash point
+    between archive and flush, and stops heartbeating; after its TTL
+    lapses, ``fdb.recover()`` purges the expired lease and quarantines the
+    journaled orphan chunks; writer B then completes the write, and the
+    result is byte-identical to an uninterrupted run.  The whole trace
+    passes ``fdb.check_protocol()`` — including the new recovery rule."""
+    GLOBAL_TRACER.enable()
+    setup = make_fdb(backend, tmp_path)
+    x = np.random.default_rng(5).normal(size=(64, 48)).astype(np.float32)
+    arr = TensorStore(setup, BASE).create(x.shape, x.dtype, chunks=(16, 16))
+    setup.flush()
+
+    inj = FaultInjector().crash_on("store.flush", call=1)
+    fdb_a = make_fdb(backend, tmp_path, faults=inj, retry=fast_retry())
+    sa = fdb_a.session("A", lease_ttl=0.2)
+    aa = TensorStore(None, BASE, session=sa).open()
+    plan = aa.write_plan((slice(0, 32), slice(None)), x[:32])
+    plan.execute(flush=False)                   # archived + journaled
+    with pytest.raises(InjectedCrash):
+        sa.flush()                              # killed mid-barrier
+    sa.abandon()                                # the process is dead
+
+    time.sleep(0.45)                            # let the TTL lapse
+    fdb_b = make_fdb(backend, tmp_path)
+    report = TensorStore(fdb_b, BASE).recover()
+    assert any(e["owner"] == "A" for e in report.expired)
+    assert sorted(c for q in report.quarantined
+                  for c in q["chunk_ids"]) == list(range(6))
+    assert report.stale == []
+    assert not report.clean
+    assert fdb_b.metrics()["recover.orphans"]["value"] == 6
+    assert fdb_b.metrics()["lease.expired"]["value"] >= 1
+    # a second sweep finds a healthy scope
+    assert TensorStore(fdb_b, BASE).recover().clean
+
+    sb = fdb_b.session("B")
+    ab = TensorStore(None, BASE, session=sb).open()
+    ab.write_plan((slice(0, 32), slice(None)), x[:32]).execute(flush=False)
+    ab.write_plan((slice(32, 64), slice(None)), x[32:]).execute(flush=False)
+    sb.flush()
+    sb.close()
+    np.testing.assert_array_equal(arr.read(), x)
+
+    # byte identity vs an uninterrupted single-writer reference
+    ref = TensorStore(setup, dict(BASE, array="ref")).save(x,
+                                                           chunks=(16, 16))
+    for idx in arr.grid.all_indices():
+        recovered = fdb_b.retrieve(arr.chunk_ident(idx)).read()
+        clean = fdb_b.retrieve(ref.chunk_ident(idx)).read()
+        assert recovered == clean, f"chunk {idx} bytes differ"
+
+    # the full window — crash, expiry, recovery, rewrite — is contract-clean
+    assert fdb_b.check_protocol() == []
+    setup.close()
+    fdb_a.close()
+    fdb_b.close()
+
+
+def test_recover_reports_stale_generations(tmp_path):
+    """Half-flipped reshard debris: chunks of a generation newer than the
+    live metadata are reported (report-only quarantine)."""
+    fdb = make_fdb("posix", tmp_path)
+    TensorStore(fdb, BASE).save(np.zeros(8, np.float32), chunks=(4,))
+    # a g1 chunk landed and was flushed, but the metadata flip never ran:
+    # the live generation is still 0
+    fdb.archive(dict(BASE, chunk="g1.0"), b"\x01\x02")
+    fdb.flush()
+    report = TensorStore(fdb, BASE).recover()
+    assert report.stale == ["g1.0"]
+    assert report.expired == [] and report.quarantined == []
+    assert not report.clean
+    fdb.close()
+
+
+def test_recover_on_healthy_scope_is_clean(tmp_path):
+    fdb = make_fdb("daos", tmp_path)
+    TensorStore(fdb, BASE).save(np.zeros((8, 8), np.float32), chunks=(4, 4))
+    report = TensorStore(fdb, BASE).recover()
+    assert report.clean
+    assert report.orphan_chunks == 0
+    fdb.close()
+
+
+# ---------------------------------------------------------------------------
+# executor failure context; checkpointer shutdown detection
+# ---------------------------------------------------------------------------
+
+def test_map_ordered_annotates_first_failure_with_describe():
+    with ChunkExecutor(max_workers=2) as ex:
+        def task(i):
+            if i in (1, 4):
+                raise RuntimeError("boom")
+            return i
+
+        with pytest.raises(RuntimeError) as ei:
+            ex.map_ordered(task, range(6), describe=lambda i: f"op=t#{i}")
+    rendered = " ".join(str(a) for a in ei.value.args) \
+        + " ".join(getattr(ei.value, "__notes__", ()))
+    assert "first failure of 2/6" in rendered
+    assert "item 1" in rendered and "op=t#1" in rendered
+
+
+def test_map_ordered_broken_describer_does_not_mask_error():
+    with ChunkExecutor(max_workers=2) as ex:
+        def task(i):
+            raise ValueError("real error")
+
+        def bad_describe(_i):
+            raise KeyError("describer is broken")
+
+        with pytest.raises(ValueError, match="real error"):
+            ex.map_ordered(task, [0], describe=bad_describe)
+
+
+def test_checkpointer_shutdown_timeout_raises(tmp_path):
+    from repro.train.checkpoint import FDBCheckpointer
+    ck = FDBCheckpointer("run", FDBConfig(backend="posix",
+                                          root=str(tmp_path / "fdb")),
+                         asynchronous=True, shutdown_timeout=0.05)
+    hang = threading.Event()
+    stuck = threading.Thread(target=hang.wait, daemon=True)
+    stuck.start()
+    real = ck._worker
+    ck._worker = stuck                  # simulate a wedged drain thread
+    with pytest.raises(RuntimeError, match="failed to shut down"):
+        ck.close()
+    hang.set()
+    real.join(timeout=5)                # the real worker exits cleanly
+    ck.fdb.close()
+
+
+def test_checkpointer_clean_async_close(tmp_path):
+    from repro.train.checkpoint import FDBCheckpointer
+    ck = FDBCheckpointer("run", FDBConfig(backend="posix",
+                                          root=str(tmp_path / "fdb")),
+                         asynchronous=True)
+    ck.save(0, {"w": np.arange(4.0, dtype=np.float32)})
+    ck.wait()
+    ck.close()                          # joins within the timeout: no raise
