@@ -1,0 +1,93 @@
+"""Operational NWP workflow benchmark: one seeded cycle per backend.
+
+Drives :class:`repro.workflows.NWPCycle` — concurrent leased assimilation
+writers, a strict-read forecast with sharded checkpoints, and a fan-out
+product-reader pool — on each simulated backend, and reports one row per
+stage: wall latency per task, payload throughput, and the lease-contention
+column (blocking acquires + total time queued on other writers' leases,
+from the ``lease.wait_us`` histogram).
+
+A final ``chaos_gate`` row per backend reruns the *identical* seeded
+cycle under a fault schedule plus a mid-cycle writer crash
+(:func:`repro.workflows.run_chaos_gate`) and reports the byte-identity /
+zero-loss / clean-protocol verdict — the robustness gate ``check.sh``
+asserts on.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+from typing import List
+
+from repro.core import reset_engines
+from repro.workflows import ChaosSchedule, NWPCycle, WorkflowConfig, \
+    run_chaos_gate
+
+from .common import Row
+
+BACKENDS = ["daos", "rados", "posix", "s3"]
+CHAOS_SEED = 1107
+
+#: full profile: a 96x96 grid, 6 overlapping writers, 3 leads, 8 readers
+FULL = dict(shape=(96, 96), chunks=(16, 16), n_writers=6, halo=6,
+            leads=3, n_shards=2, n_readers=8, reads_per_reader=8)
+#: CI smoke profile — same shape of workload, tiny sizes
+TINY = dict(shape=(32, 32), chunks=(8, 8), n_writers=3, halo=3,
+            leads=2, n_shards=2, n_readers=4, reads_per_reader=4)
+
+
+def _config(backend: str, tag: str, tiny: bool) -> WorkflowConfig:
+    root = f"/tmp/fdb-bench-wf-{backend}-{tag}-{os.getpid()}"
+    shutil.rmtree(root, ignore_errors=True)
+    return WorkflowConfig(backend=backend, root=root, seed=CHAOS_SEED,
+                          **(TINY if tiny else FULL))
+
+
+def run(tiny: bool = False) -> List[Row]:
+    rows: List[Row] = []
+    for backend in BACKENDS:
+        reset_engines()
+        report = NWPCycle(_config(backend, "clean", tiny)).run()
+        for stage, stats in report.stages.items():
+            rows.append(Row(
+                f"workflow/{backend}/{stage}",
+                stats.wall_s / max(1, stats.tasks) * 1e6,
+                f"{stats.mib_s:.1f}MiB/s tasks={stats.tasks} "
+                f"lease_waits={stats.lease_waits} "
+                f"lease_wait={stats.lease_wait_us / 1e3:.1f}ms",
+                extra={"backend": backend, "stage": stage,
+                       "wall_us": round(stats.wall_s * 1e6, 1),
+                       "mib_s": round(stats.mib_s, 3),
+                       "nbytes": stats.nbytes, "tasks": stats.tasks,
+                       "lease_waits": stats.lease_waits,
+                       "lease_wait_us": round(stats.lease_wait_us, 1)}))
+        assert report.clean, (backend, report.protocol_violations)
+        assert report.lost_chunks == 0, (backend, report.lost_chunks)
+
+        reset_engines()
+        gate = run_chaos_gate(_config(backend, "chaos", tiny),
+                              ChaosSchedule(seed=CHAOS_SEED))
+        identical = gate.clean.digests == gate.chaos.digests
+        rows.append(Row(
+            f"workflow/{backend}/chaos_gate",
+            gate.chaos.wall_s * 1e6,
+            f"identical={identical} lost={gate.chaos.lost_chunks} "
+            f"protocol_clean={not gate.chaos.protocol_violations} "
+            f"orphans={gate.chaos.recovery['orphan_chunks']} "
+            f"faults={gate.chaos.faults_injected} "
+            f"retries={gate.chaos.retries} ok={gate.ok}",
+            extra={"backend": backend, "chaos": True, "seed": CHAOS_SEED,
+                   "identical": identical, "ok": gate.ok,
+                   "lost_chunks": gate.chaos.lost_chunks,
+                   "faults_injected": gate.chaos.faults_injected,
+                   "retries": gate.chaos.retries,
+                   "crashed_writer": gate.chaos.crashed_writer,
+                   "failures": gate.failures}))
+        assert gate.ok, (backend, gate.failures)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run(tiny=True):
+        print(row.line())

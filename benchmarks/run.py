@@ -30,6 +30,7 @@ SUITES = [
     ("redundancy", "bench_redundancy"),        # Figs. 4.27-4.28
     ("ckpt", "bench_ckpt"),                    # §3.1.3 operational pattern
     ("tensorstore", "bench_tensorstore"),      # chunk size x parallelism
+    ("workflow", "bench_workflow"),            # NWP cycle + chaos gate
     ("roofline", "roofline"),                  # §Roofline deliverable
 ]
 

@@ -14,7 +14,11 @@
 #      phase-attributed t_queue/t_io/t_decode/t_encode columns must be
 #      present and sane on the bench rows; the chaos rows (seeded fault
 #      schedule healed by the retry layer) must report nonzero retries,
-#      zero giveups and zero lost chunks;
+#      zero giveups and zero lost chunks; the tiny workflow suite (NWP
+#      cycle: assimilation -> forecast -> products) must report per-stage
+#      latency/throughput/lease-wait columns on all four backends and
+#      pass its per-backend chaos gate — the chaos rerun byte-identical
+#      to the fault-free cycle, zero lost chunks, protocol clean;
 #   4. trace smoke — a traced chunked roundtrip on all four backends must
 #      record plan/io/codec spans (and record nothing with tracing off);
 #   5. chaos smoke — a writer crash-killed between archive and flush
@@ -36,7 +40,7 @@ smoke_json=$(mktemp /tmp/bench_smoke.XXXXXX.json)
 trace_json=$(mktemp /tmp/bench_trace.XXXXXX.json)
 trap 'rm -f "$smoke_json" "$trace_json"' EXIT
 PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} \
-    python -m benchmarks.run --suites tensorstore --tiny \
+    python -m benchmarks.run --suites tensorstore,workflow --tiny \
     --json "$smoke_json" --trace "$trace_json" > /dev/null
 python - "$smoke_json" "$trace_json" <<'PY'
 import json, sys
@@ -67,7 +71,7 @@ assert pcont and all(r["write_ops"] <= r["writers"] for r in pcont), \
 # chaos rows: the seeded fault schedule must have actually fired and the
 # retry layer must have healed every fault -- goodput under degradation
 # with zero data loss is the robustness contract (docs/robustness.md)
-chaos = [r for r in rows if r.get("chaos")]
+chaos = [r for r in rows if r.get("chaos") and r["suite"] == "tensorstore"]
 assert chaos, "no chaos (seeded fault schedule) rows"
 assert all(r["faults_injected"] > 0 for r in chaos), \
     "chaos rows injected no faults: the schedule is dead"
@@ -83,7 +87,7 @@ assert all(r["goodput_mib_s"] > 0 for r in chaos), "zero chaos goodput"
 # row must carry them, io time must be nonzero where I/O happened, and
 # the phase sum must stay within a sane multiple of the row's wall time
 # (concurrent spans sum, so the total may exceed wall -- but not absurdly)
-phased = [r for r in rows if "wall_us" in r]
+phased = [r for r in rows if r["suite"] == "tensorstore" and "wall_us" in r]
 assert phased, "no phase-attributed (t_*) bench rows"
 for r in phased:
     for col in ("t_queue_us", "t_io_us", "t_decode_us", "t_encode_us"):
@@ -98,6 +102,38 @@ assert writes and all(r["t_io_us"] > 0 for r in writes), \
 assert reads and all(r["t_io_us"] > 0 for r in reads), \
     "read rows recorded no io.fetch span time"
 
+# workflow rows: the NWP cycle must report per-stage latency/throughput/
+# lease-wait columns for all four backends, and the per-backend chaos
+# gate must hold -- byte-identical products under the fault schedule,
+# zero lost chunks, clean protocol window (docs/workflows.md)
+wf = [r for r in rows if r["suite"] == "workflow"]
+wf_backends = {"daos", "rados", "posix", "s3"}
+for backend in sorted(wf_backends):
+    for stage in ("assimilation", "forecast", "products"):
+        srow = [r for r in wf if r.get("backend") == backend
+                and r.get("stage") == stage]
+        assert srow, f"no workflow {stage} row for {backend}"
+        r = srow[0]
+        assert r["wall_us"] > 0 and r["tasks"] > 0, \
+            f"empty workflow stage row: {r['name']}"
+        assert r["mib_s"] > 0, f"zero workflow throughput: {r['name']}"
+        assert "lease_waits" in r and "lease_wait_us" in r, \
+            f"missing lease-wait columns: {r['name']}"
+    arow = [r for r in wf if r.get("backend") == backend
+            and r.get("stage") == "assimilation"][0]
+    assert arow["lease_waits"] > 0, \
+        f"{backend}: overlapping writers recorded no blocking lease waits"
+wf_gate = [r for r in wf if r.get("chaos")]
+assert {r["backend"] for r in wf_gate} == wf_backends, \
+    "workflow chaos gate missing backends"
+for r in wf_gate:
+    assert r["ok"] and r["identical"], \
+        f"WORKFLOW CHAOS GATE FAILED on {r['backend']}: {r['failures']}"
+    assert r["lost_chunks"] == 0, \
+        f"WORKFLOW CHAOS DATA LOSS on {r['backend']}"
+    assert r["faults_injected"] > 0 and r["crashed_writer"] is not None, \
+        f"workflow chaos schedule dead on {r['backend']}"
+
 # exported Chrome trace: valid JSON, nonzero complete events, well-formed
 t = json.load(open(sys.argv[2]))
 ev = t["traceEvents"]
@@ -110,7 +146,8 @@ names = {e["name"] for e in xs}
 assert "io.archive" in names or "io.fetch" in names, \
     f"trace has no io spans: {sorted(names)[:20]}"
 print(f"bench smoke OK: {len(rows)} rows ({len(cont)} contention, "
-      f"{len(chaos)} chaos), trace OK: {len(xs)} spans")
+      f"{len(chaos)} chaos, {len(wf)} workflow incl. {len(wf_gate)} "
+      f"chaos-gate), trace OK: {len(xs)} spans")
 PY
 
 # trace smoke: a traced chunked roundtrip on all four simulated backends

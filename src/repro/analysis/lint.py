@@ -70,6 +70,8 @@ LAYER_DAG: Dict[str, Set[str]] = {
     "serve": {"models"},
     "launch": {"configs", "core", "data", "models", "serve", "sharding",
                "train", "tensorstore"},
+    # workflow drivers compose the storage facades end to end
+    "workflows": {"core", "data", "tensorstore", "train"},
 }
 #: importable from every layer (cross-cutting observability)
 UNIVERSAL = {"obs"}

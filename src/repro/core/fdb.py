@@ -26,6 +26,7 @@ import dataclasses
 import itertools
 import re
 import threading
+import time
 import weakref
 from typing import (Callable, Dict, Iterator, List, Mapping, Optional,
                     Sequence, Tuple, Union)
@@ -526,7 +527,9 @@ class FDB:
 
     # -- writer sessions + chunk-range leases -------------------------------
     def session(self, writer_id: str, lease_ttl: Optional[float] = None,
-                heartbeat_interval: Optional[float] = None
+                heartbeat_interval: Optional[float] = None,
+                lease_block: bool = False,
+                lease_timeout: Optional[float] = None
                 ) -> "WriterSession":
         """Open a :class:`WriterSession` — one logical writer identity on
         this client, with its own dirty/flush-barrier bookkeeping and a
@@ -539,11 +542,18 @@ class FDB:
         renewed (crash safety: a dead writer's ranges free themselves);
         ``heartbeat_interval`` starts a daemon thread renewing them every
         that-many seconds (requires ``lease_ttl``; pick interval well under
-        the TTL — a third is conventional)."""
+        the TTL — a third is conventional).
+
+        ``lease_block=True`` makes every lease the session acquires *queue*
+        on conflicting ranges (bounded by ``lease_timeout`` seconds) instead
+        of failing fast — the workflow-stage posture, where transient
+        overlap between concurrent writers is waited out, not errored."""
         if self._closed:
             raise RuntimeError("FDB client is closed; cannot open a session")
         session = WriterSession(self, str(writer_id), lease_ttl=lease_ttl,
-                                heartbeat_interval=heartbeat_interval)
+                                heartbeat_interval=heartbeat_interval,
+                                lease_block=lease_block,
+                                lease_timeout=lease_timeout)
         self._sessions.add(session)
         return session
 
@@ -600,14 +610,26 @@ class FDB:
                 owner=owner,
                 scope=self._lease_scope_split(dataset, collocation),
                 **attrs) as sp:
+            # blocking acquires meter their queueing delay: the lease-wait
+            # histogram is the workflow-level contention signal (how long
+            # did assimilation writers wait on each other's windows)
+            t0 = time.perf_counter() if block else 0.0
             try:
                 epoch = self.catalogue.acquire_lease(dataset, collocation,
                                                      resource, lo, hi, owner,
                                                      ttl=ttl, block=block,
                                                      timeout=timeout)
             except LeaseConflictError:
+                if block:
+                    m.histogram("lease.wait_us").observe(
+                        (time.perf_counter() - t0) * 1e6)
                 m.counter("lease.conflicts").inc()
                 raise
+            if block:
+                wait_us = (time.perf_counter() - t0) * 1e6
+                m.histogram("lease.wait_us").observe(wait_us)
+                if sp is not None:
+                    sp.attrs["wait_us"] = round(wait_us, 1)
             if sp is not None:
                 sp.attrs["epoch"] = epoch
         m.counter("lease.acquired").inc()
@@ -877,6 +899,25 @@ class FDB:
                               self.tracer.metrics.snapshot(),
                               max_in_flight=window)
 
+    def abandon(self) -> None:
+        """Simulate whole-client death (test/chaos hook), the client-level
+        analogue of :meth:`WriterSession.abandon`: every open session is
+        abandoned (leases left to lapse by TTL, dirty intents left for
+        :meth:`recover`), nothing is flushed — a crashed process never
+        reaches its commit barrier — and only *local* resources (the I/O
+        pool) are torn down."""
+        for session in list(self._sessions):
+            if not session._closed:
+                session.abandon()
+        with self._io_lock:
+            if self._io_executor is not None:
+                # lint: disable=L003 -- teardown: _closed must flip
+                # atomically with the pool draining (see close())
+                self._io_executor.shutdown(wait=True)
+                self._io_executor = None
+                self._io_executor_size = 0
+            self._closed = True
+
     def close(self) -> None:
         if not self._closed:
             self.flush()
@@ -956,10 +997,17 @@ class WriterSession:
 
     def __init__(self, fdb: FDB, writer_id: str,
                  lease_ttl: Optional[float] = None,
-                 heartbeat_interval: Optional[float] = None):
+                 heartbeat_interval: Optional[float] = None,
+                 lease_block: bool = False,
+                 lease_timeout: Optional[float] = None):
         self.fdb = fdb
         self.writer_id = writer_id
         self.lease_ttl = lease_ttl
+        #: session-level acquire posture: plans and bare acquire_lease()
+        #: calls default to these, so a "workflow" session waits out
+        #: transient overlap instead of raising LeaseConflictError
+        self.lease_block = lease_block
+        self.lease_timeout = lease_timeout
         self._dirty = False
         self._seq = 0           # archive sequence, see FDB.flush's markers
         self._closed = False
@@ -1059,15 +1107,20 @@ class WriterSession:
             return key in self._held
 
     def acquire_lease(self, identifier, resource: str, lo: int, hi: int,
-                      block: bool = False,
+                      block: Optional[bool] = None,
                       timeout: Optional[float] = None) -> int:
         """Acquire ``[lo, hi)`` for this session's writer id and ledger it;
         returns the epoch.  Raises ``LeaseConflictError`` on overlap with
         another owner; re-acquiring a ledgered range is idempotent (and
         re-arms its TTL).  ``block=True`` queues on a conflicting range
-        until it frees or ``timeout`` seconds pass.  The session's
+        until it frees or ``timeout`` seconds pass; both default to the
+        session's ``lease_block``/``lease_timeout`` posture.  The session's
         ``lease_ttl`` (if any) applies to every lease acquired here."""
         self._check_open()
+        if block is None:
+            block = self.lease_block
+        if timeout is None:
+            timeout = self.lease_timeout
         epoch = self.fdb.acquire_lease(identifier, resource, lo, hi,
                                        owner=self.writer_id,
                                        ttl=self.lease_ttl, block=block,

@@ -48,12 +48,16 @@ class ChunkedFieldStore:
     def __init__(self, store: str = "nwp",
                  fdb_config: Optional[FDBConfig] = None,
                  writer: str = "prod0", codec: str = "raw",
-                 chunks: Optional[tuple] = None):
+                 chunks: Optional[tuple] = None,
+                 tracer=None, faults=None, retry=None):
         cfg = fdb_config or FDBConfig(backend="daos")
         if cfg.resolved_schema().name != "tensor":
             import dataclasses
             cfg = dataclasses.replace(cfg, schema=TENSOR_SCHEMA)
-        self.fdb = FDB(cfg)
+        # tracer/faults/retry pass straight through to the FDB client, so
+        # workflow drivers can observe and chaos-test the field path without
+        # reaching around the facade
+        self.fdb = FDB(cfg, tracer=tracer, faults=faults, retry=retry)
         self.store = store
         #: collocation key all producers share (the schema "writer" dim) —
         #: named writer_key so the :meth:`writer` session factory can keep
@@ -191,7 +195,10 @@ class ChunkedFieldStore:
         self.fdb.wipe({"store": self.store, "array": name})
 
     # -- multi-producer side ------------------------------------------------
-    def writer(self, writer_id: str) -> "FieldWriter":
+    def writer(self, writer_id: str, lease_ttl: Optional[float] = None,
+               heartbeat_interval: Optional[float] = None,
+               lease_block: bool = False,
+               lease_timeout: Optional[float] = None) -> "FieldWriter":
         """Open a :class:`FieldWriter` — one producer task's session on
         this store, the multi-writer counterpart of :meth:`write_window`.
 
@@ -206,11 +213,21 @@ class ChunkedFieldStore:
         *session* identity exists for leases and per-session flush
         barriers, not for placement.
 
+        ``lease_block=True`` flips the overlap posture from fail-fast to
+        wait: plan-time acquires queue (up to ``lease_timeout`` seconds)
+        on conflicting windows until their holder releases or its
+        ``lease_ttl`` lapses — how workflow assimilation stages serialise
+        overlapping analysis windows instead of erroring
+        (``docs/workflows.md``).
+
         Use as a context manager; :meth:`FieldWriter.commit` is the
         visibility barrier, and closing flushes (if dirty) then releases
         every lease the writer still holds.
         """
-        return FieldWriter(self, self.fdb.session(writer_id))
+        return FieldWriter(self, self.fdb.session(
+            writer_id, lease_ttl=lease_ttl,
+            heartbeat_interval=heartbeat_interval,
+            lease_block=lease_block, lease_timeout=lease_timeout))
 
     def close(self) -> None:
         self.fdb.close()

@@ -94,12 +94,15 @@ class FDBCheckpointer:
     def __init__(self, run: str, fdb_config: Optional[FDBConfig] = None,
                  n_shards: int = 1, asynchronous: bool = False,
                  compress: bool = False, host: Optional[str] = None,
-                 chunked: bool = True, shutdown_timeout: float = 5.0):
+                 chunked: bool = True, shutdown_timeout: float = 5.0,
+                 tracer=None, faults=None, retry=None):
         cfg = fdb_config or FDBConfig(backend="daos")
         if cfg.resolved_schema().name != "ckpt":
             import dataclasses
             cfg = dataclasses.replace(cfg, schema=CHECKPOINT_SCHEMA)
-        self.fdb = FDB(cfg)
+        # tracer/faults/retry flow to the client so workflow forecast
+        # stages can trace + chaos-test sharded checkpoints end to end
+        self.fdb = FDB(cfg, tracer=tracer, faults=faults, retry=retry)
         self.run = run
         self.n_shards = n_shards
         self.compress = compress

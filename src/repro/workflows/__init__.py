@@ -1,0 +1,24 @@
+"""Operational NWP workflow scenarios over the storage facades.
+
+The paper's headline claims (DAOS/Ceph vs Lustre) are about *workflows*,
+not single ops.  This package drives a deterministic, seedable
+assimilation → forecast → products cycle — N concurrent leased writers
+patching overlapping analysis windows, a strict-read forecast step with
+sharded checkpoints, and a fan-out pool of product readers (the
+million-user proxy) — all racing on one shared simulated deployment per
+backend, with per-stage ``workflow.*`` spans and the ``lease.wait_us``
+contention histogram.  ``repro.workflows.chaos`` reruns the identical
+seeded cycle under a fault schedule plus a mid-cycle writer crash and
+gates on byte-identical products.  See ``docs/workflows.md``.
+"""
+from .chaos import ChaosGateResult, ChaosSchedule, run_chaos_gate
+from .cycle import (CycleReport, NWPCycle, StageStats, WorkflowConfig,
+                    analysis_truth, assimilation_windows, forecast_states,
+                    step_model)
+
+__all__ = [
+    "ChaosGateResult", "ChaosSchedule", "CycleReport", "NWPCycle",
+    "StageStats", "WorkflowConfig", "analysis_truth",
+    "assimilation_windows", "forecast_states", "run_chaos_gate",
+    "step_model",
+]

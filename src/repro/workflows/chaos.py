@@ -1,0 +1,122 @@
+"""Chaos variant of the NWP cycle: same seed, same bytes — under fire.
+
+:func:`run_chaos_gate` runs the *identical* seeded cycle twice on one
+deployment: once fault-free, once under a seeded
+:class:`~repro.core.FaultInjector` schedule (transient archive/fetch
+faults healed by a fast :class:`~repro.core.RetryPolicy`) plus one
+injected mid-cycle writer crash — the designated assimilation writer
+dies on its commit barrier (``InjectedCrash`` on ``store.flush``),
+its client is abandoned unflushed, its lease lapses by TTL, and the
+cycle re-drives the window and runs ``recover()``.
+
+The gate is the repo's strongest end-to-end robustness claim
+(``docs/workflows.md``): the chaos run's final fields and products
+digest must be **byte-identical** to the fault-free run's, with **zero
+lost chunks** and a **clean protocol window** — degradation may cost
+latency, never bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+from repro.core import FaultInjector, RetryPolicy
+from repro.obs.trace import Tracer
+
+from .cycle import CycleReport, NWPCycle, WorkflowConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSchedule:
+    """One seeded fault schedule for a chaos cycle.  ``seed`` pins the
+    injector's coin flips and the retry jitter; the ``first`` knobs make
+    the schedule *guaranteed live* (a rate alone could fire zero faults
+    on a tiny run, making the gate vacuous)."""
+
+    seed: int = 0
+    archive_fail_first: int = 2
+    archive_fail_rate: float = 0.03
+    fetch_fail_first: int = 2
+    fetch_fail_rate: float = 0.03
+    crash_writer: int = 0          # which assimilation task dies mid-cycle
+    max_attempts: int = 8
+
+    def injector(self) -> FaultInjector:
+        """Transient-fault schedule for the cycle's live clients."""
+        return (FaultInjector(seed=self.seed)
+                .fail("store.archive", rate=self.archive_fail_rate,
+                      first=self.archive_fail_first)
+                .fail("store.fetch", rate=self.fetch_fail_rate,
+                      first=self.fetch_fail_first))
+
+    def crash_injector(self) -> FaultInjector:
+        """The doomed writer's client dies on its first commit barrier —
+        after archiving its window, before publishing it."""
+        return FaultInjector(seed=self.seed).crash_on("store.flush", call=1)
+
+    def retry_policy(self) -> RetryPolicy:
+        """Seeded jitter, injected no-op sleep: chaos runs heal at full
+        speed and reproduce from the seed."""
+        return RetryPolicy(max_attempts=self.max_attempts, seed=self.seed,
+                           sleep=lambda _s: None)
+
+
+@dataclasses.dataclass
+class ChaosGateResult:
+    """Verdict of one chaos-gate run: the two reports plus every
+    violated invariant (empty ``failures`` == gate passed)."""
+    clean: CycleReport
+    chaos: CycleReport
+    failures: List[str] = dataclasses.field(default_factory=list)
+
+    @property
+    def ok(self) -> bool:
+        return not self.failures
+
+
+def run_chaos_gate(config: WorkflowConfig,
+                   schedule: Optional[ChaosSchedule] = None,
+                   ) -> ChaosGateResult:
+    """Run the fault-free and chaos variants of one seeded cycle (each
+    under its own dataset namespace and tracer, on one shared
+    deployment) and check every gate invariant."""
+    schedule = schedule or ChaosSchedule(seed=config.seed)
+    clean = NWPCycle(
+        dataclasses.replace(config, store=f"{config.store}-clean"),
+        tracer=Tracer(enabled=True)).run()
+    chaos = NWPCycle(
+        dataclasses.replace(config, store=f"{config.store}-chaos"),
+        tracer=Tracer(enabled=True),
+        faults=schedule.injector(), retry=schedule.retry_policy(),
+        crash_writer=schedule.crash_writer,
+        crash_faults=schedule.crash_injector()).run()
+
+    result = ChaosGateResult(clean=clean, chaos=chaos)
+    fail = result.failures.append
+    for name, digest in clean.digests.items():
+        if chaos.digests.get(name) != digest:
+            fail(f"digest mismatch on {name!r}: chaos run is not "
+                 f"byte-identical to the fault-free run")
+    if clean.lost_chunks:
+        fail(f"fault-free run lost {clean.lost_chunks} chunks")
+    if chaos.lost_chunks:
+        fail(f"chaos run lost {chaos.lost_chunks} chunks")
+    if clean.protocol_violations:
+        fail(f"fault-free protocol violations: {clean.protocol_violations}")
+    if chaos.protocol_violations:
+        fail(f"chaos protocol violations: {chaos.protocol_violations}")
+    if chaos.faults_injected == 0:
+        fail("fault schedule injected nothing: the gate ran vacuously")
+    if chaos.giveups:
+        fail(f"retry layer gave up {chaos.giveups} time(s)")
+    if chaos.crashed_writer is None:
+        fail("injected writer crash never fired")
+    rec = chaos.recovery or {}
+    if not rec.get("clean_after", False):
+        fail(f"recovery sweep did not converge: {rec}")
+    if not (clean.ckpt_roundtrip and chaos.ckpt_roundtrip):
+        fail("sharded checkpoint restore was not byte-identical")
+    return result
+
+
+__all__ = ["ChaosGateResult", "ChaosSchedule", "run_chaos_gate"]

@@ -1,0 +1,466 @@
+"""Deterministic, seedable NWP-cycle driver over the storage facades.
+
+One :class:`NWPCycle` run is one operational cycle on one simulated
+deployment:
+
+* **assimilation** — ``n_writers`` concurrent
+  :meth:`~repro.data.pipeline.ChunkedFieldStore.writer` sessions patch
+  overlapping analysis windows (row bands + halo rows) of one shared
+  field.  Overlap is *waited out*, not errored: every session runs with
+  ``lease_block=True``, so plan-time acquires queue on a neighbour's
+  chunk ranges until its holder flushes and releases (or its TTL lapses)
+  — the time spent queueing lands in the ``lease.wait_us`` histogram.
+* **forecast** — a strict ``fill_missing=False`` read of the assimilated
+  state, ``leads`` steps of a toy advection–diffusion model, each lead
+  archived as a field and checkpointed via
+  :meth:`~repro.train.checkpoint.FDBCheckpointer.save_sharded`
+  (``n_shards`` concurrent rank sessions on the same deployment).
+* **products** — a fan-out pool of ``n_readers`` readers, each issuing
+  many small strided :meth:`read_window` calls against the forecast
+  fields (the million-user proxy), digesting every byte they see.
+
+**Determinism contract** (the chaos gate in :mod:`.chaos` depends on
+it): with a fixed :class:`WorkflowConfig`, the bytes of every field and
+the products digest are independent of thread scheduling.  Overlapping
+assimilation windows write *identical* values in their overlap (each
+writer writes rows of one global truth field), and lease serialisation
+makes every read-modify-write of a shared chunk see its previous
+holder's flushed rows — so any acquisition order converges to the same
+truth bytes.  Product selections are derived from per-reader seeded RNG
+streams, and per-reader digests combine in pool-order.  The full
+argument is written out in ``docs/workflows.md``.
+
+Span taxonomy added by this module (``docs/observability.md``):
+``workflow.cycle``, ``workflow.assimilation``, ``workflow.forecast``,
+``workflow.products``, ``workflow.recovery``, ``workflow.task``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import time
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import InjectedCrash, FDBConfig
+from repro.data.pipeline import ChunkedFieldStore
+from repro.obs.trace import Tracer
+from repro.tensorstore import TensorStore
+from repro.tensorstore.executor import ChunkExecutor
+from repro.train.checkpoint import FDBCheckpointer
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkflowConfig:
+    """One cycle's full parameterisation — everything the determinism
+    contract ranges over.  Two runs with equal configs (on any thread
+    schedule, with or without a healed fault schedule) must produce
+    byte-identical fields and products digests."""
+
+    backend: str = "posix"
+    root: str = "/tmp/fdb-workflow"
+    store: str = "wf"                   # dataset namespace on the deployment
+    shape: Tuple[int, int] = (64, 64)   # analysis grid (rows, cols)
+    chunks: Tuple[int, int] = (16, 16)
+    codec: str = "raw"
+    seed: int = 0
+    # assimilation
+    n_writers: int = 4
+    halo: int = 4                       # rows of overlap with each neighbour
+    lease_timeout: float = 30.0         # blocking-acquire bound (seconds)
+    # forecast
+    leads: int = 2
+    dt: float = 0.1
+    n_shards: int = 2                   # checkpoint rank sessions
+    # products
+    n_readers: int = 6
+    reads_per_reader: int = 8
+    # chaos (used when a crash writer is armed)
+    crash_ttl: float = 0.25             # dead writer's lease TTL (seconds)
+
+    def fdb_config(self) -> FDBConfig:
+        return FDBConfig(backend=self.backend, schema="tensor",
+                         root=self.root)
+
+    def field_names(self) -> List[str]:
+        return ["analysis"] + [f"fcst{lead:02d}"
+                               for lead in range(1, self.leads + 1)]
+
+
+def analysis_truth(cfg: WorkflowConfig) -> np.ndarray:
+    """The global analysis field every assimilation writer patches rows
+    of — seeded, so overlapping windows agree byte-for-byte."""
+    rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, 11]))
+    return rng.normal(size=cfg.shape).astype(np.float32)
+
+
+def background(cfg: WorkflowConfig) -> np.ndarray:
+    """Deterministic first-guess field the cycle starts from; fully
+    overwritten by the assimilation bands, but its presence makes every
+    halo write a genuine read-modify-write of committed chunks."""
+    r = np.arange(cfg.shape[0], dtype=np.float32)[:, None]
+    c = np.arange(cfg.shape[1], dtype=np.float32)[None, :]
+    return np.sin(r / 7.0) * np.cos(c / 5.0)
+
+
+def step_model(x: np.ndarray, dt: float = 0.1) -> np.ndarray:
+    """One toy forecast step: periodic diffusion + zonal advection.
+    float32 ndarray ops on one thread — bit-deterministic."""
+    lap = (np.roll(x, 1, 0) + np.roll(x, -1, 0) +
+           np.roll(x, 1, 1) + np.roll(x, -1, 1) - 4.0 * x)
+    adv = 0.5 * (np.roll(x, 1, 1) - np.roll(x, -1, 1))
+    return (x + dt * lap + 0.5 * dt * adv).astype(np.float32)
+
+
+def forecast_states(cfg: WorkflowConfig) -> List[np.ndarray]:
+    """The expected state at each lead time (index 0 = the analysis) —
+    what the audit compares stored fields against."""
+    states = [analysis_truth(cfg)]
+    for _lead in range(cfg.leads):
+        states.append(step_model(states[-1], cfg.dt))
+    return states
+
+
+def assimilation_windows(cfg: WorkflowConfig) -> List[Tuple[int, int]]:
+    """Row windows ``[lo, hi)`` per writer: contiguous bands plus
+    ``halo`` rows of deliberate overlap with each neighbour."""
+    rows = cfg.shape[0]
+    band = -(-rows // cfg.n_writers)
+    out = []
+    for i in range(cfg.n_writers):
+        lo = max(0, i * band - cfg.halo)
+        hi = min(rows, (i + 1) * band + cfg.halo)
+        if lo < hi:
+            out.append((lo, hi))
+    return out
+
+
+@dataclasses.dataclass
+class StageStats:
+    """Per-stage roll-up the bench columns are built from."""
+    wall_s: float = 0.0
+    tasks: int = 0
+    nbytes: int = 0                 # payload bytes written/read by the stage
+    lease_waits: int = 0            # blocking acquires during the stage
+    lease_wait_us: float = 0.0      # total time queued on others' leases
+
+    @property
+    def mib_s(self) -> float:
+        return (self.nbytes / (1 << 20)) / self.wall_s if self.wall_s else 0.0
+
+
+@dataclasses.dataclass
+class CycleReport:
+    """Everything one cycle run asserts on: per-stage stats, the
+    determinism digests, the loss audit, and the protocol verdict."""
+    backend: str
+    store: str
+    seed: int
+    wall_s: float = 0.0
+    stages: Dict[str, StageStats] = dataclasses.field(default_factory=dict)
+    #: sha256 per field plus the combined ``products`` digest
+    digests: Dict[str, str] = dataclasses.field(default_factory=dict)
+    #: chunks that read back missing or different from the expected state
+    lost_chunks: int = 0
+    ckpt_roundtrip: bool = False
+    crashed_writer: Optional[int] = None
+    recovery: Optional[Dict[str, object]] = None
+    faults_injected: int = 0
+    retries: int = 0
+    giveups: int = 0
+    lease_wait: Dict[str, float] = dataclasses.field(default_factory=dict)
+    protocol_violations: List[object] = dataclasses.field(
+        default_factory=list)
+
+    @property
+    def products_digest(self) -> str:
+        return self.digests.get("products", "")
+
+    @property
+    def clean(self) -> bool:
+        return self.lost_chunks == 0 and not self.protocol_violations
+
+
+def _lease_wait_totals(metrics) -> Tuple[int, float]:
+    h = metrics.get("lease.wait_us")
+    return (0, 0.0) if h is None else (h.count, h.sum)
+
+
+class NWPCycle:
+    """Drive one assimilation → forecast → products cycle on one shared
+    deployment (see the module docstring for the stage model).
+
+    ``faults``/``retry`` apply to every client the cycle opens (producer,
+    consumer pool, checkpointer) — the chaos schedule's hook.  Arming
+    ``crash_writer`` routes that assimilation task through a dedicated
+    client wearing ``crash_faults`` (default: die on its first flush),
+    abandons it mid-cycle, waits the dead lease out via a blocking
+    re-drive writer, then runs :meth:`~repro.core.FDB.recover` — the
+    recovery path of ``docs/robustness.md`` exercised inside a live
+    workflow.  All clients share one tracer, so
+    ``fdb.check_protocol()`` at the end of :meth:`run` sees the whole
+    cycle."""
+
+    def __init__(self, config: WorkflowConfig, tracer: Optional[Tracer] = None,
+                 faults=None, retry=None, crash_writer: Optional[int] = None,
+                 crash_faults=None):
+        self.cfg = config
+        self.tracer = tracer if tracer is not None else Tracer(enabled=True)
+        self.faults = faults
+        self.retry = retry
+        self.crash_writer = crash_writer
+        self.crash_faults = crash_faults
+        self.report = CycleReport(backend=config.backend, store=config.store,
+                                  seed=config.seed)
+        self._truth = analysis_truth(config)
+        self._states = forecast_states(config)
+        self._windows = assimilation_windows(config)
+        self._crash_store: Optional[ChunkedFieldStore] = None
+
+    # -- clients -------------------------------------------------------------
+    def _open_clients(self) -> None:
+        cfg = self.cfg
+        self.producer = ChunkedFieldStore(
+            store=cfg.store, fdb_config=cfg.fdb_config(), codec=cfg.codec,
+            chunks=cfg.chunks, tracer=self.tracer, faults=self.faults,
+            retry=self.retry)
+        self.consumer = ChunkedFieldStore(
+            store=cfg.store, fdb_config=cfg.fdb_config(), codec=cfg.codec,
+            chunks=cfg.chunks, tracer=self.tracer, faults=self.faults,
+            retry=self.retry)
+        self.ckpt = FDBCheckpointer(
+            run=f"{cfg.store}-fc", fdb_config=cfg.fdb_config(),
+            n_shards=cfg.n_shards, chunked=True, tracer=self.tracer,
+            faults=self.faults, retry=self.retry)
+        if self.crash_writer is not None:
+            # the doomed writer gets its own client: a crashed *process*
+            # takes its whole connection with it, and its unflushed state
+            # must never ride another writer's commit barrier
+            self._crash_store = ChunkedFieldStore(
+                store=cfg.store, fdb_config=cfg.fdb_config(),
+                codec=cfg.codec, chunks=cfg.chunks, tracer=self.tracer,
+                faults=self.crash_faults, retry=self.retry)
+
+    def _close_clients(self) -> None:
+        for client in ("producer", "consumer", "ckpt"):
+            store = getattr(self, client, None)
+            if store is not None:
+                store.close()
+        # the crash client was abandoned mid-cycle (never flushed); if the
+        # crash did not fire (e.g. no flush happened), close it normally
+        if self._crash_store is not None \
+                and not self._crash_store.fdb._closed:
+            self._crash_store.close()
+
+    # -- stages --------------------------------------------------------------
+    def _stage(self, name: str) -> StageStats:
+        return self.report.stages.setdefault(name, StageStats())
+
+    def _assimilate_one(self, i: int) -> Dict[str, object]:
+        cfg = self.cfg
+        lo, hi = self._windows[i]
+        crashing = (i == self.crash_writer and self._crash_store is not None)
+        store = self._crash_store if crashing else self.producer
+        writer = store.writer(
+            f"assim{i:02d}",
+            lease_ttl=cfg.crash_ttl if crashing else None,
+            lease_block=True, lease_timeout=cfg.lease_timeout)
+        values = self._truth[lo:hi]
+        with self.tracer.span("workflow.task", stage="assimilation",
+                              worker=i, rows=hi - lo):
+            try:
+                writer.write_window("analysis", values,
+                                    slice(lo, hi), slice(None))
+                writer.commit()
+                writer.close()
+            except InjectedCrash:
+                # the simulated process is gone: no flush, no release —
+                # its lease lapses by TTL, its dirty intents wait for
+                # recover()
+                writer.session.abandon()
+                store.fdb.abandon()
+                return {"writer": i, "crashed": True, "nbytes": 0}
+        return {"writer": i, "crashed": False, "nbytes": values.nbytes}
+
+    def _redrive(self, i: int) -> None:
+        """Re-drive a crashed writer's window with a fresh blocking
+        session.  The plan-time ``block=True`` acquire doubles as the
+        TTL-expiry barrier: it wakes exactly when the dead writer's lease
+        lapses (no polling, real lease clock), after which the rewrite
+        proceeds and :meth:`~repro.tensorstore.TensorStore.recover`
+        quarantines the dead session's orphaned intents."""
+        cfg = self.cfg
+        lo, hi = self._windows[i]
+        with self.tracer.span("workflow.recovery", worker=i):
+            writer = self.producer.writer(
+                f"assim{i:02d}r", lease_block=True,
+                lease_timeout=cfg.lease_timeout + 4 * cfg.crash_ttl)
+            writer.write_window("analysis", self._truth[lo:hi],
+                                slice(lo, hi), slice(None))
+            writer.commit()
+            writer.close()
+            base = {"store": cfg.store, "array": "analysis",
+                    "writer": self.producer.writer_key}
+            sweep = TensorStore(self.producer.fdb, base).recover()
+            again = TensorStore(self.producer.fdb, base).recover()
+            self.report.recovery = {
+                "expired": len(sweep.expired),
+                "orphan_chunks": sweep.orphan_chunks,
+                "stale": len(sweep.stale),
+                "clean_after": again.clean,
+            }
+
+    def _assimilation(self) -> None:
+        cfg = self.cfg
+        stats = self._stage("assimilation")
+        metrics = self.tracer.metrics
+        self.producer.put_field("analysis", background(cfg))
+        self.producer.commit()
+        w0, t0 = _lease_wait_totals(metrics), time.perf_counter()
+        with self.tracer.span("workflow.assimilation",
+                              writers=cfg.n_writers):
+            with ChunkExecutor(max_workers=cfg.n_writers) as pool:
+                results = pool.map_ordered(
+                    self._assimilate_one, range(len(self._windows)),
+                    describe=lambda i: f"assim{i:02d}")
+            crashed = [r["writer"] for r in results if r["crashed"]]
+            for i in crashed:
+                self.report.crashed_writer = i
+                self._redrive(i)
+        stats.wall_s = time.perf_counter() - t0
+        stats.tasks = len(results) + len(crashed)
+        stats.nbytes = sum(r["nbytes"] for r in results) + sum(
+            self._truth[lo:hi].nbytes
+            for i in crashed for lo, hi in [self._windows[i]])
+        w1 = _lease_wait_totals(metrics)
+        stats.lease_waits = w1[0] - w0[0]
+        stats.lease_wait_us = w1[1] - w0[1]
+
+    def _forecast(self) -> None:
+        cfg = self.cfg
+        stats = self._stage("forecast")
+        t0 = time.perf_counter()
+        with self.tracer.span("workflow.forecast", leads=cfg.leads):
+            state = self.consumer.read_window(
+                "analysis", slice(None), slice(None), fill_missing=False)
+            for lead in range(1, cfg.leads + 1):
+                state = step_model(state, cfg.dt)
+                self.producer.put_field(f"fcst{lead:02d}", state)
+                self.ckpt.save_sharded(lead, {"state": state})
+                stats.nbytes += 2 * state.nbytes
+            self.producer.commit()
+            restored = self.ckpt.restore(
+                cfg.leads, {"state": np.zeros(cfg.shape, np.float32)})
+            self.report.ckpt_roundtrip = bool(
+                np.array_equal(np.asarray(restored["state"]), state))
+        stats.wall_s = time.perf_counter() - t0
+        stats.tasks = cfg.leads
+
+    def _produce_one(self, j: int) -> Dict[str, object]:
+        cfg = self.cfg
+        rows, cols = cfg.shape
+        fields = cfg.field_names()
+        rng = np.random.default_rng(np.random.SeedSequence([cfg.seed, 23, j]))
+        digest = hashlib.sha256()
+        nbytes = 0
+        with self.tracer.span("workflow.task", stage="products", worker=j):
+            for _k in range(cfg.reads_per_reader):
+                name = fields[int(rng.integers(0, len(fields)))]
+                r0 = int(rng.integers(0, rows - 2))
+                r1 = int(rng.integers(r0 + 1, rows)) + 1
+                c0 = int(rng.integers(0, cols - 2))
+                c1 = int(rng.integers(c0 + 1, cols)) + 1
+                sel = (slice(r0, r1, int(rng.integers(1, 4))),
+                       slice(c0, c1, int(rng.integers(1, 4))))
+                window = self.consumer.read_window(name, *sel,
+                                                   fill_missing=False)
+                digest.update(f"{name}:{sel!r}".encode())
+                digest.update(window.tobytes())
+                nbytes += window.nbytes
+        return {"reader": j, "digest": digest.hexdigest(), "nbytes": nbytes}
+
+    def _products(self) -> None:
+        cfg = self.cfg
+        stats = self._stage("products")
+        for name in cfg.field_names():    # warm the open cache serially so
+            self.consumer.open_field(name)  # pool tasks share one metadata
+        t0 = time.perf_counter()
+        with self.tracer.span("workflow.products", readers=cfg.n_readers):
+            with ChunkExecutor(
+                    max_workers=min(cfg.n_readers, 16)) as pool:
+                results = pool.map_ordered(
+                    self._produce_one, range(cfg.n_readers),
+                    describe=lambda j: f"reader{j}")
+        stats.wall_s = time.perf_counter() - t0
+        stats.tasks = cfg.n_readers
+        stats.nbytes = sum(r["nbytes"] for r in results)
+        combined = hashlib.sha256(
+            "|".join(r["digest"] for r in results).encode())
+        self.report.digests["products"] = combined.hexdigest()
+
+    # -- audit ---------------------------------------------------------------
+    def _audit(self) -> None:
+        """Read every field back chunk-by-chunk (strict) and compare with
+        the locally recomputed expected state: a missing or different
+        chunk is a *lost chunk* — the zero-loss gate of the chaos run."""
+        cfg = self.cfg
+        rows, cols = cfg.shape
+        ch, cw = cfg.chunks
+        expected = dict(zip(cfg.field_names(), self._states))
+        for name, exp in expected.items():
+            got = np.zeros_like(exp)
+            lost = 0
+            for r0 in range(0, rows, ch):
+                for c0 in range(0, cols, cw):
+                    sel = (slice(r0, min(r0 + ch, rows)),
+                           slice(c0, min(c0 + cw, cols)))
+                    try:
+                        block = self.consumer.read_window(
+                            name, *sel, fill_missing=False)
+                    except KeyError:  # lint: disable=L009 -- not a retry: the missing chunk is counted as lost, never re-read
+                        lost += 1
+                        continue
+                    got[sel] = block
+                    if not np.array_equal(block, exp[sel]):
+                        lost += 1
+            self.report.lost_chunks += lost
+            self.report.digests[name] = hashlib.sha256(
+                got.tobytes()).hexdigest()
+
+    # -- driver --------------------------------------------------------------
+    def run(self) -> CycleReport:
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        self._open_clients()
+        try:
+            with self.tracer.span("workflow.cycle", backend=cfg.backend,
+                                  store=cfg.store, seed=cfg.seed):
+                self._assimilation()
+                self._forecast()
+                self._products()
+            self._audit()
+            snap = self.tracer.metrics.snapshot()
+            self.report.retries = snap.get("retry.attempts",
+                                           {}).get("value", 0)
+            self.report.giveups = snap.get("retry.giveups",
+                                           {}).get("value", 0)
+            for inj in (self.faults, self.crash_faults):
+                if inj is not None:
+                    self.report.faults_injected += inj.injected
+            waits = snap.get("lease.wait_us")
+            if waits:
+                self.report.lease_wait = {
+                    "count": waits["count"], "sum_us": waits["sum"],
+                    "max_us": waits["max"] or 0.0}
+            self.report.protocol_violations = \
+                self.producer.fdb.check_protocol()
+        finally:
+            self.report.wall_s = time.perf_counter() - t0
+            self._close_clients()
+        return self.report
+
+
+__all__ = ["CycleReport", "NWPCycle", "StageStats", "WorkflowConfig",
+           "analysis_truth", "assimilation_windows", "background",
+           "forecast_states", "step_model"]

@@ -9,8 +9,13 @@ just enough surface for the existing tests.
 """
 from __future__ import annotations
 
+import os
 import random
 from typing import Any, Callable, Sequence
+
+#: example stream seed — the suite-wide chaos knob (see tests/conftest.py)
+#: so a falsifying example replays with REPRO_TEST_SEED=<printed seed>
+_SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
 
 
 class _Strategy:
@@ -105,7 +110,7 @@ def given(*strategies: _Strategy) -> Callable:
         # (*args) signature, not the test's drawn-argument parameters, or it
         # would try to resolve them as fixtures.
         def wrapper(*args, **kw):
-            rng = random.Random(0)
+            rng = random.Random(_SEED)
             n = getattr(wrapper, "_fallback_max_examples", 20)
             for _ in range(n):
                 fn(*args, *(s.draw(rng) for s in strategies), **kw)

@@ -1,8 +1,64 @@
+import os
+
 import pytest
 
-from repro.core import reset_engines
+from repro.core import FDB, FDBConfig, reset_engines
 from repro.core.engine.meter import GLOBAL_METER
 from repro.obs.trace import GLOBAL_TRACER
+from repro.tensorstore import TensorStore
+
+#: the four simulated deployments every cross-backend suite sweeps —
+#: hoisted here so test modules share one parametrization (the `backend`
+#: fixture) instead of each carrying its own copy
+BACKENDS = ("daos", "rados", "posix", "s3")
+
+#: one knob reproduces any chaos failure: the seed below feeds
+#: FaultInjector coin flips and RetryPolicy jitter in the fault/workflow
+#: suites, and is printed in the pytest header — rerun with
+#: REPRO_TEST_SEED=<printed value> to replay the exact schedule
+TEST_SEED = int(os.environ.get("REPRO_TEST_SEED", "0"))
+
+
+def pytest_report_header(config):
+    return (f"REPRO_TEST_SEED={TEST_SEED} "
+            f"(chaos jitter seed; set the env var to reproduce)")
+
+
+@pytest.fixture(params=BACKENDS)
+def backend(request):
+    """Sweep all four simulated backends.  A test needing a subset
+    overrides with ``@pytest.mark.parametrize("backend", [...])``."""
+    return request.param
+
+
+@pytest.fixture
+def test_seed():
+    """The suite-wide chaos seed (``REPRO_TEST_SEED``, default 0)."""
+    return TEST_SEED
+
+
+@pytest.fixture
+def make_fdb(tmp_path):
+    """Factory for FDB clients on this test's private deployment root.
+    Config kwargs (``io_parallelism=...``) flow to :class:`FDBConfig`;
+    ``faults``/``retry``/``tracer`` flow to the client."""
+    def _make(backend, schema="tensor", *, faults=None, retry=None,
+              tracer=None, **cfg_kw):
+        cfg_kw.setdefault("root", str(tmp_path / "fdb"))
+        return FDB(FDBConfig(backend=backend, schema=schema, **cfg_kw),
+                   faults=faults, retry=retry, tracer=tracer)
+    return _make
+
+
+@pytest.fixture
+def make_store(make_fdb):
+    """Factory for ``(fdb, TensorStore)`` pairs on the shared test
+    deployment — the tensorstore suite's idiom."""
+    def _make(backend, array="a", writer="w0", **kw):
+        fdb = make_fdb(backend, **kw)
+        return fdb, TensorStore(fdb, {"store": "s", "array": array,
+                                      "writer": writer})
+    return _make
 
 
 @pytest.fixture(autouse=True)

@@ -33,19 +33,17 @@ from repro.obs.trace import GLOBAL_TRACER
 from repro.tensorstore import TensorStore
 from repro.tensorstore.executor import ChunkExecutor
 
-BACKENDS = ["daos", "rados", "posix", "s3"]
+from conftest import TEST_SEED
+
 BASE = {"store": "s", "array": "a", "writer": "w0"}
 
 
-def make_fdb(backend, tmp_path, **kw):
-    return FDB(FDBConfig(backend=backend, schema="tensor",
-                         root=str(tmp_path / "fdb")), **kw)
-
-
 def fast_retry(**kw):
-    """A policy that never really sleeps — unit tests run instantly."""
+    """A policy that never really sleeps — unit tests run instantly.
+    Jitter is pinned to the suite-wide ``REPRO_TEST_SEED`` so any
+    chaos schedule replays from one knob."""
     kw.setdefault("sleep", lambda _s: None)
-    kw.setdefault("seed", 0)
+    kw.setdefault("seed", TEST_SEED)
     return RetryPolicy(**kw)
 
 
@@ -153,16 +151,14 @@ def test_retry_on_retry_hook_aborts_the_loop():
 # the fault matrix: 4 backends x transient fault shapes, byte-identical
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", BACKENDS)
 @pytest.mark.parametrize("faulted_op", ["store.archive", "store.retrieve",
                                         "catalogue.flush"])
-def test_fault_matrix_transients_heal_byte_identical(backend, faulted_op,
-                                                     tmp_path):
+def test_fault_matrix_transients_heal_byte_identical(backend, faulted_op, tmp_path, make_fdb):
     """A scripted burst of transient faults on each data-path op class is
     healed by the facade retry: the array reads back exactly, and every
     chunk object is byte-identical to a fault-free reference write."""
-    inj = FaultInjector(seed=7)
-    fdb = make_fdb(backend, tmp_path, faults=inj, retry=fast_retry())
+    inj = FaultInjector(seed=TEST_SEED + 7)
+    fdb = make_fdb(backend, faults=inj, retry=fast_retry())
     x = np.random.default_rng(3).normal(size=(48, 32)).astype(np.float32)
     if faulted_op == "store.retrieve":
         arr = TensorStore(fdb, BASE).save(x, chunks=(16, 16))
@@ -183,11 +179,11 @@ def test_fault_matrix_transients_heal_byte_identical(backend, faulted_op,
     fdb.close()
 
 
-def test_permanent_fault_fails_the_write(tmp_path):
+def test_permanent_fault_fails_the_write(tmp_path, make_fdb):
     """Permanent errors must surface, not burn the retry budget."""
     inj = FaultInjector().fail("store.archive", first=1,
                                error=PermanentStorageError)
-    fdb = make_fdb("posix", tmp_path, faults=inj, retry=fast_retry())
+    fdb = make_fdb("posix", faults=inj, retry=fast_retry())
     with pytest.raises(PermanentStorageError):
         TensorStore(fdb, BASE).save(np.zeros((8, 8), np.float32),
                                     chunks=(4, 4))
@@ -199,8 +195,8 @@ def test_permanent_fault_fails_the_write(tmp_path):
 # lease TTL expiry, blocking acquisition, heartbeat
 # ---------------------------------------------------------------------------
 
-def test_lease_ttl_expiry_frees_range_for_second_writer(tmp_path):
-    fdb, fdb2 = make_fdb("daos", tmp_path), make_fdb("daos", tmp_path)
+def test_lease_ttl_expiry_frees_range_for_second_writer(tmp_path, make_fdb):
+    fdb, fdb2 = make_fdb("daos"), make_fdb("daos")
     a = fdb.session("A", lease_ttl=0.1)
     e1 = a.acquire_lease(BASE, "g0", 0, 4)
     b = fdb2.session("B")
@@ -216,8 +212,8 @@ def test_lease_ttl_expiry_frees_range_for_second_writer(tmp_path):
     fdb2.close()
 
 
-def test_blocking_acquire_times_out_then_succeeds_after_release(tmp_path):
-    fdb = make_fdb("posix", tmp_path)
+def test_blocking_acquire_times_out_then_succeeds_after_release(tmp_path, make_fdb):
+    fdb = make_fdb("posix")
     fdb.acquire_lease(BASE, "g0", 0, 4, owner="A")
     t0 = time.perf_counter()
     with pytest.raises(LeaseConflictError, match="timed out"):
@@ -238,10 +234,10 @@ def test_blocking_acquire_times_out_then_succeeds_after_release(tmp_path):
     fdb.close()
 
 
-def test_blocking_acquire_wakes_on_blocker_ttl_expiry(tmp_path):
+def test_blocking_acquire_wakes_on_blocker_ttl_expiry(tmp_path, make_fdb):
     """A blocked writer completes as soon as the holder's TTL lapses —
     no release, no coordinator intervention."""
-    fdb = make_fdb("posix", tmp_path)
+    fdb = make_fdb("posix")
     fdb.acquire_lease(BASE, "g0", 0, 4, owner="A", ttl=0.15)
     epoch = fdb.acquire_lease(BASE, "g0", 0, 4, owner="B", block=True,
                               timeout=5.0)
@@ -250,8 +246,8 @@ def test_blocking_acquire_wakes_on_blocker_ttl_expiry(tmp_path):
     fdb.close()
 
 
-def test_heartbeat_keeps_lease_alive_past_ttl(tmp_path):
-    fdb, fdb2 = make_fdb("s3", tmp_path), make_fdb("s3", tmp_path)
+def test_heartbeat_keeps_lease_alive_past_ttl(tmp_path, make_fdb):
+    fdb, fdb2 = make_fdb("s3"), make_fdb("s3")
     a = fdb.session("A", lease_ttl=0.12, heartbeat_interval=0.04)
     a.acquire_lease(BASE, "g0", 0, 4)
     b = fdb2.session("B")
@@ -265,8 +261,8 @@ def test_heartbeat_keeps_lease_alive_past_ttl(tmp_path):
     fdb2.close()
 
 
-def test_heartbeat_requires_ttl(tmp_path):
-    fdb = make_fdb("posix", tmp_path)
+def test_heartbeat_requires_ttl(tmp_path, make_fdb):
+    fdb = make_fdb("posix")
     with pytest.raises(ValueError, match="requires lease_ttl"):
         fdb.session("A", heartbeat_interval=0.1)
     fdb.close()
@@ -276,9 +272,7 @@ def test_heartbeat_requires_ttl(tmp_path):
 # crash recovery: the acceptance scenario, all four backends
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_crash_killed_writer_recover_second_writer_completes(backend,
-                                                             tmp_path):
+def test_crash_killed_writer_recover_second_writer_completes(backend, tmp_path, make_fdb):
     """Writer A archives its chunks, is killed at the injected crash point
     between archive and flush, and stops heartbeating; after its TTL
     lapses, ``fdb.recover()`` purges the expired lease and quarantines the
@@ -286,13 +280,13 @@ def test_crash_killed_writer_recover_second_writer_completes(backend,
     result is byte-identical to an uninterrupted run.  The whole trace
     passes ``fdb.check_protocol()`` — including the new recovery rule."""
     GLOBAL_TRACER.enable()
-    setup = make_fdb(backend, tmp_path)
+    setup = make_fdb(backend)
     x = np.random.default_rng(5).normal(size=(64, 48)).astype(np.float32)
     arr = TensorStore(setup, BASE).create(x.shape, x.dtype, chunks=(16, 16))
     setup.flush()
 
     inj = FaultInjector().crash_on("store.flush", call=1)
-    fdb_a = make_fdb(backend, tmp_path, faults=inj, retry=fast_retry())
+    fdb_a = make_fdb(backend, faults=inj, retry=fast_retry())
     sa = fdb_a.session("A", lease_ttl=0.2)
     aa = TensorStore(None, BASE, session=sa).open()
     plan = aa.write_plan((slice(0, 32), slice(None)), x[:32])
@@ -302,7 +296,7 @@ def test_crash_killed_writer_recover_second_writer_completes(backend,
     sa.abandon()                                # the process is dead
 
     time.sleep(0.45)                            # let the TTL lapse
-    fdb_b = make_fdb(backend, tmp_path)
+    fdb_b = make_fdb(backend)
     report = TensorStore(fdb_b, BASE).recover()
     assert any(e["owner"] == "A" for e in report.expired)
     assert sorted(c for q in report.quarantined
@@ -337,10 +331,10 @@ def test_crash_killed_writer_recover_second_writer_completes(backend,
     fdb_b.close()
 
 
-def test_recover_reports_stale_generations(tmp_path):
+def test_recover_reports_stale_generations(tmp_path, make_fdb):
     """Half-flipped reshard debris: chunks of a generation newer than the
     live metadata are reported (report-only quarantine)."""
-    fdb = make_fdb("posix", tmp_path)
+    fdb = make_fdb("posix")
     TensorStore(fdb, BASE).save(np.zeros(8, np.float32), chunks=(4,))
     # a g1 chunk landed and was flushed, but the metadata flip never ran:
     # the live generation is still 0
@@ -353,8 +347,8 @@ def test_recover_reports_stale_generations(tmp_path):
     fdb.close()
 
 
-def test_recover_on_healthy_scope_is_clean(tmp_path):
-    fdb = make_fdb("daos", tmp_path)
+def test_recover_on_healthy_scope_is_clean(tmp_path, make_fdb):
+    fdb = make_fdb("daos")
     TensorStore(fdb, BASE).save(np.zeros((8, 8), np.float32), chunks=(4, 4))
     report = TensorStore(fdb, BASE).recover()
     assert report.clean

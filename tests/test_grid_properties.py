@@ -1,0 +1,168 @@
+"""Property tests for the chunk-grid index math.
+
+The grid layer (`repro.tensorstore.grid`, `reshard.chunk_rectangles`) is
+pure geometry, so instead of hand-picked shapes we sweep randomised
+grids/selections and assert the *laws* the rest of the stack leans on:
+
+- ``normalize_read_key`` + ``intersecting`` reassemble exactly what numpy
+  fancy indexing returns — for strided, reversed, truncated and integer
+  keys alike — touching every output point exactly once;
+- ``normalize_key`` emits tight positive-step slices whose compact shape
+  matches numpy's;
+- ``linear_id`` is the row-major bijection the lease table's ``[lo, hi)``
+  chunk-id ranges assume;
+- ``merge_id_ranges`` produces the minimal disjoint cover of a chunk set;
+- ``chunk_rectangles`` partitions a grid into ≤window-sized rectangles;
+- ``write_plan``'s ``full`` flag is exact (a wrong True would skip a
+  required read-modify-write and destroy bytes).
+
+Runs under real hypothesis when installed (CI) and under the seeded
+deterministic shim in ``_hypothesis_fallback`` otherwise.
+"""
+import numpy as np
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                              # pragma: no cover
+    from _hypothesis_fallback import given, settings, st
+
+from repro.tensorstore.grid import ChunkGrid, merge_id_ranges
+from repro.tensorstore.reshard import chunk_rectangles
+
+
+def draw_grid(data, min_dim=0):
+    ndim = data.draw(st.integers(min_value=1, max_value=3))
+    shape = tuple(data.draw(st.integers(min_value=min_dim, max_value=9))
+                  for _ in range(ndim))
+    chunks = tuple(data.draw(st.integers(min_value=1, max_value=6))
+                   for _ in range(ndim))
+    return ChunkGrid(shape, chunks)
+
+
+def draw_key(data, grid, allow_neg_step=True, allow_int=True):
+    """A random ``__getitem__`` key: per-axis full/strided/reversed slices
+    or integer indices, with trailing axes optionally omitted."""
+    key = []
+    for size in grid.shape:
+        kinds = ["full", "slice", "strided"]
+        if allow_int and size:
+            kinds.append("int")
+        kind = data.draw(st.sampled_from(kinds))
+        if kind == "full":
+            key.append(slice(None))
+        elif kind == "int":
+            key.append(data.draw(st.integers(min_value=-size,
+                                             max_value=size - 1)))
+        else:
+            a = data.draw(st.integers(min_value=-size - 2, max_value=size + 2))
+            b = data.draw(st.integers(min_value=-size - 2, max_value=size + 2))
+            lo = 2 if kind == "strided" else 1
+            step = data.draw(st.integers(min_value=lo, max_value=4))
+            if allow_neg_step and data.draw(st.integers(min_value=0,
+                                                        max_value=1)):
+                step = -step
+            key.append(slice(a, b, step))
+    n = data.draw(st.integers(min_value=1, max_value=len(key)))
+    return tuple(key[:n])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_read_key_reassembles_numpy_exactly_once(data):
+    grid = draw_grid(data)
+    key = draw_key(data, grid)
+    arr = np.arange(max(1, int(np.prod(grid.shape))),
+                    dtype=np.int64)[:int(np.prod(grid.shape))]
+    arr = arr.reshape(grid.shape)
+    sel, squeeze, flips = grid.normalize_read_key(key)
+    out = np.empty(grid.selection_shape(sel), dtype=arr.dtype)
+    seen = np.zeros(out.shape, dtype=np.int32)
+    for idx, chunk_sel, out_sel in grid.intersecting(sel):
+        out[out_sel] = arr[grid.chunk_slices(idx)][chunk_sel]
+        seen[out_sel] += 1
+    assert (seen == 1).all()         # every output point scattered once
+    for ax in flips:
+        out = np.flip(out, axis=ax)
+    if squeeze:
+        out = out.reshape(tuple(s for ax, s in enumerate(out.shape)
+                                if ax not in squeeze))
+    np.testing.assert_array_equal(out, arr[key])
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_normalize_key_emits_tight_positive_slices(data):
+    grid = draw_grid(data)
+    key = draw_key(data, grid, allow_neg_step=False)
+    sel, squeeze = grid.normalize_key(key)
+    assert len(sel) == grid.ndim
+    for s, size in zip(sel, grid.shape):
+        assert s.step >= 1
+        assert 0 <= s.start <= s.stop <= size
+        pts = range(s.start, s.stop, s.step)
+        if len(pts):
+            # stop is normalised to last-selected-point + 1
+            assert s.stop == pts[-1] + 1
+        else:
+            assert s.stop == s.start
+    compact = tuple(n for ax, n in enumerate(grid.selection_shape(sel))
+                    if ax not in squeeze)
+    assert compact == np.empty(grid.shape, dtype=np.int8)[key].shape
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_linear_id_is_the_row_major_bijection(data):
+    grid = draw_grid(data)
+    ids = [grid.linear_id(idx) for idx in grid.all_indices()]
+    # row-major iteration must enumerate ids 0..count-1 in order — the
+    # contiguity that lets a row band lease as one [lo, hi) range
+    assert ids == list(range(grid.chunk_count))
+
+
+@settings(max_examples=80, deadline=None)
+@given(st.lists(st.integers(min_value=0, max_value=40), max_size=30))
+def test_merge_id_ranges_minimal_disjoint_cover(ids):
+    ranges = merge_id_ranges(ids)
+    union, prev_hi = set(), None
+    for lo, hi in ranges:
+        assert lo < hi
+        if prev_hi is not None:
+            assert lo > prev_hi      # sorted, disjoint AND non-adjacent
+        union.update(range(lo, hi))
+        prev_hi = hi
+    assert union == set(ids)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_chunk_rectangles_partition_within_window(data):
+    ndim = data.draw(st.integers(min_value=1, max_value=3))
+    n_chunks = tuple(data.draw(st.integers(min_value=1, max_value=5))
+                     for _ in range(ndim))
+    window = data.draw(st.integers(min_value=1, max_value=30))
+    count = np.zeros(n_chunks, dtype=np.int32)
+    for rect in chunk_rectangles(n_chunks, window):
+        size = 1
+        slc = []
+        for (lo, hi), n in zip(rect, n_chunks):
+            assert 0 <= lo < hi <= n
+            size *= hi - lo
+            slc.append(slice(lo, hi))
+        assert size <= window        # one batch fits one reshard window
+        count[tuple(slc)] += 1
+    assert (count == 1).all()        # exact partition: no gap, no overlap
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_write_plan_full_flag_is_exact(data):
+    grid = draw_grid(data)
+    key = draw_key(data, grid, allow_neg_step=False)
+    sel, _ = grid.normalize_key(key)
+    for idx, chunk_sel, _val_sel, full in grid.write_plan(sel):
+        covered = np.zeros(grid.chunk_shape(idx), dtype=bool)
+        covered[chunk_sel] = True
+        # a false positive here would skip the read-modify-write and
+        # destroy the chunk's unselected bytes
+        assert full == bool(covered.all())

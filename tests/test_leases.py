@@ -18,24 +18,17 @@ import pytest
 from repro.core import (FDB, FDBConfig, LeaseConflictError, StaleLeaseError)
 from repro.tensorstore import TensorStore
 
-BACKENDS = ["daos", "rados", "posix", "s3"]
 BASE = {"store": "s", "array": "a", "writer": "w0"}
-
-
-def make_fdb(backend, tmp_path, **kw):
-    return FDB(FDBConfig(backend=backend, schema="tensor",
-                         root=str(tmp_path / "fdb"), **kw))
 
 
 # ---------------------------------------------------------------------------
 # catalogue-level lease table contract
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_lease_table_contract(backend, tmp_path):
+def test_lease_table_contract(backend, tmp_path, make_fdb):
     """Acquire/conflict/idempotence/release/holders + epoch fencing, seen
     identically from two FDB clients of one deployment."""
-    fdb, fdb2 = make_fdb(backend, tmp_path), make_fdb(backend, tmp_path)
+    fdb, fdb2 = make_fdb(backend), make_fdb(backend)
     with fdb.session("A") as a:
         e1 = a.acquire_lease(BASE, "g0", 0, 4)
         assert a.acquire_lease(BASE, "g0", 0, 4) == e1   # idempotent
@@ -60,8 +53,8 @@ def test_lease_table_contract(backend, tmp_path):
     fdb2.close()
 
 
-def test_lease_identifier_requires_dataset_and_collocation(tmp_path):
-    fdb = make_fdb("daos", tmp_path)
+def test_lease_identifier_requires_dataset_and_collocation(tmp_path, make_fdb):
+    fdb = make_fdb("daos")
     with pytest.raises(KeyError, match="missing dims"):
         fdb.acquire_lease({"store": "s"}, "g0", 0, 1, owner="A")
     # element dims are ignored (leases cover ranges, not keys)
@@ -76,12 +69,11 @@ def test_lease_identifier_requires_dataset_and_collocation(tmp_path):
 # two writers, one array (the acceptance criterion)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_two_writers_disjoint_byte_identical(backend, tmp_path):
+def test_two_writers_disjoint_byte_identical(backend, tmp_path, make_fdb):
     """Two sessions writing disjoint chunk ranges of one array ==
     byte-identical to a single sequential writer — per chunk object, not
     just per read."""
-    fdb = make_fdb(backend, tmp_path)
+    fdb = make_fdb(backend)
     x = np.random.default_rng(0).normal(size=(64, 48)).astype(np.float32)
     ts = TensorStore(fdb, BASE)
     arr = ts.create(x.shape, x.dtype, chunks=(16, 16))
@@ -111,10 +103,10 @@ def test_two_writers_disjoint_byte_identical(backend, tmp_path):
     fdb.close()
 
 
-def test_overlapping_writers_rejected_at_plan_time(tmp_path):
+def test_overlapping_writers_rejected_at_plan_time(tmp_path, make_fdb):
     """The second writer fails fast — before any byte moves — and the
     array is untouched by the failed plan."""
-    fdb = make_fdb("daos", tmp_path)
+    fdb = make_fdb("daos")
     x = np.ones((32, 32), np.float32)
     arr = TensorStore(fdb, BASE).save(x, chunks=(8, 8))
     sa, sb = fdb.session("A"), fdb.session("B")
@@ -133,10 +125,10 @@ def test_overlapping_writers_rejected_at_plan_time(tmp_path):
     fdb.close()
 
 
-def test_partial_conflict_rolls_back_acquired_ranges(tmp_path):
+def test_partial_conflict_rolls_back_acquired_ranges(tmp_path, make_fdb):
     """A plan that conflicts on its second range must release the first —
     a failed plan leaves no leases behind."""
-    fdb = make_fdb("daos", tmp_path)
+    fdb = make_fdb("daos")
     arr = TensorStore(fdb, BASE).save(np.zeros(64, np.float32), chunks=(8,))
     sa, sb = fdb.session("A"), fdb.session("B")
     sb.acquire_lease(BASE, "g0", 6, 7)   # B pre-holds chunk 6
@@ -151,11 +143,11 @@ def test_partial_conflict_rolls_back_acquired_ranges(tmp_path):
     fdb.close()
 
 
-def test_sibling_plan_release_is_exact_range(tmp_path):
+def test_sibling_plan_release_is_exact_range(tmp_path, make_fdb):
     """A session may hold overlapping leases (two plans over intersecting
     windows); abandoning one plan must not sweep away its sibling's lease
     — holder-side release is exact-range."""
-    fdb = make_fdb("daos", tmp_path)
+    fdb = make_fdb("daos")
     arr = TensorStore(fdb, BASE).save(np.zeros(64, np.float32), chunks=(8,))
     sa = fdb.session("A")
     aa = TensorStore(None, BASE, session=sa).open()
@@ -177,11 +169,11 @@ def test_sibling_plan_release_is_exact_range(tmp_path):
 
 
 @pytest.mark.parametrize("backend", ["daos", "posix"])
-def test_stale_writer_fenced_after_reacquisition(backend, tmp_path):
+def test_stale_writer_fenced_after_reacquisition(backend, tmp_path, make_fdb):
     """The acceptance scenario: a writer whose lease was broken and
     re-acquired cannot commit its planned write — and the new holder's
     data survives untouched."""
-    fdb = make_fdb(backend, tmp_path)
+    fdb = make_fdb(backend)
     x = np.zeros((32, 32), np.float32)
     arr = TensorStore(fdb, BASE).save(x, chunks=(8, 8))
     sa, sb = fdb.session("A"), fdb.session("B")
@@ -205,10 +197,10 @@ def test_stale_writer_fenced_after_reacquisition(backend, tmp_path):
     fdb.close()
 
 
-def test_rmw_fetch_is_lease_fenced(tmp_path):
+def test_rmw_fetch_is_lease_fenced(tmp_path, make_fdb):
     """A stale writer aborts *before* its read-modify-write fetches — the
     lease gate guards the reads too, not only the archives."""
-    fdb = make_fdb("posix", tmp_path)
+    fdb = make_fdb("posix")
     x = np.arange(64, dtype=np.float32)
     arr = TensorStore(fdb, BASE).save(x, chunks=(8,))
     sa = fdb.session("A")
@@ -232,8 +224,8 @@ def test_rmw_fetch_is_lease_fenced(tmp_path):
 # per-session visibility (rule 3 barriers)
 # ---------------------------------------------------------------------------
 
-def test_per_session_dirty_and_flush(tmp_path):
-    fdb = make_fdb("posix", tmp_path)
+def test_per_session_dirty_and_flush(tmp_path, make_fdb):
+    fdb = make_fdb("posix")
     arr = TensorStore(fdb, BASE).save(np.zeros(32, np.float32), chunks=(8,))
     sa, sb = fdb.session("A"), fdb.session("B")
     aa = TensorStore(None, BASE, session=sa).open()
@@ -249,10 +241,10 @@ def test_per_session_dirty_and_flush(tmp_path):
     fdb.close()
 
 
-def test_session_close_flushes_then_releases(tmp_path):
+def test_session_close_flushes_then_releases(tmp_path, make_fdb):
     """Leases must not be released over unflushed chunks: close flushes
     first, so the next holder can never RMW not-yet-visible bytes."""
-    fdb = make_fdb("posix", tmp_path)
+    fdb = make_fdb("posix")
     arr = TensorStore(fdb, BASE).save(np.zeros(32, np.float32), chunks=(8,))
     sa = fdb.session("A")
     aa = TensorStore(None, BASE, session=sa).open()
@@ -268,10 +260,10 @@ def test_session_close_flushes_then_releases(tmp_path):
     fdb.close()
 
 
-def test_sessionless_store_unchanged(tmp_path):
+def test_sessionless_store_unchanged(tmp_path, make_fdb):
     """No session, no leases: the single-writer path neither acquires nor
     checks anything (plans report empty lease lists)."""
-    fdb = make_fdb("daos", tmp_path)
+    fdb = make_fdb("daos")
     arr = TensorStore(fdb, BASE).save(np.zeros(16, np.float32), chunks=(4,))
     plan = arr.write_plan((slice(None),), np.ones(16, np.float32))
     assert plan.session is None and plan.leases == []
@@ -280,8 +272,8 @@ def test_sessionless_store_unchanged(tmp_path):
     fdb.close()
 
 
-def test_reshard_rejected_in_session(tmp_path):
-    fdb = make_fdb("daos", tmp_path)
+def test_reshard_rejected_in_session(tmp_path, make_fdb):
+    fdb = make_fdb("daos")
     TensorStore(fdb, BASE).save(np.zeros((8, 8), np.float32), chunks=(4, 4))
     with fdb.session("A") as sa:
         arr = TensorStore(None, BASE, session=sa).open()
@@ -381,11 +373,11 @@ def test_save_sharded_requires_chunked(tmp_path):
 
 @pytest.mark.slow
 @pytest.mark.parametrize("backend", ["daos", "posix"])
-def test_two_thread_stress_one_array(backend, tmp_path):
+def test_two_thread_stress_one_array(backend, tmp_path, make_fdb):
     """Two real threads hammer disjoint halves of one array through their
     own sessions — interleaved plans, partial (RMW) windows, per-write
     commits — and the final state is exactly what a serial replay gives."""
-    fdb = make_fdb(backend, tmp_path, io_parallelism=4)
+    fdb = make_fdb(backend, io_parallelism=4)
     n, chunk = 256, 8
     x = np.zeros(n, np.float32)
     arr = TensorStore(fdb, BASE).save(x, chunks=(chunk,))

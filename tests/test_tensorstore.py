@@ -16,17 +16,9 @@ from repro.core.engine.meter import GLOBAL_METER
 from repro.tensorstore import (ChunkExecutor, ChunkGrid, TensorStore,
                                auto_chunks, get_codec)
 
-BACKENDS = ["daos", "rados", "posix", "s3"]
 
 #: engine op kinds that move object payload bytes on a read path
 DATA_READ_KINDS = {"array_read", "read", "http_get"}
-
-
-def make_store(backend, tmp_path, array="a", writer="w0", **kw):
-    fdb = FDB(FDBConfig(backend=backend, schema="tensor",
-                        root=str(tmp_path / "fdb"), **kw))
-    return fdb, TensorStore(fdb, {"store": "s", "array": array,
-                                  "writer": writer})
 
 
 def _data_reads(ops):
@@ -37,10 +29,9 @@ def _data_reads(ops):
 # roundtrip + partial reads (acceptance criteria)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_non_aligned_roundtrip(backend, tmp_path):
+def test_non_aligned_roundtrip(backend, tmp_path, make_store):
     """(37, 53) on a (16, 16) grid: every edge chunk is clipped."""
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     x = np.random.default_rng(0).normal(size=(37, 53)).astype(np.float32)
     ts.save(x, chunks=(16, 16))
     arr = ts.open()
@@ -50,9 +41,8 @@ def test_non_aligned_roundtrip(backend, tmp_path):
     fdb.close()
 
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_partial_read_touches_only_intersecting_chunks(backend, tmp_path):
-    fdb, ts = make_store(backend, tmp_path)
+def test_partial_read_touches_only_intersecting_chunks(backend, tmp_path, make_store):
+    fdb, ts = make_store(backend)
     x = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
     ts.save(x, chunks=(16, 16))          # 4 x 4 chunk grid, 1 KiB chunks
     arr = ts.open()
@@ -76,9 +66,8 @@ def test_partial_read_touches_only_intersecting_chunks(backend, tmp_path):
     fdb.close()
 
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_full_read_moves_all_bytes(backend, tmp_path):
-    fdb, ts = make_store(backend, tmp_path)
+def test_full_read_moves_all_bytes(backend, tmp_path, make_store):
+    fdb, ts = make_store(backend)
     x = np.random.default_rng(2).normal(size=(40, 40)).astype(np.float32)
     ts.save(x, chunks=(32, 32))
     arr = ts.open()
@@ -89,10 +78,10 @@ def test_full_read_moves_all_bytes(backend, tmp_path):
     fdb.close()
 
 
-def test_replace_semantics_same_layout(tmp_path):
+def test_replace_semantics_same_layout(tmp_path, make_store):
     """Re-saving with an unchanged layout transactionally replaces every
     chunk (FDB rule 5)."""
-    fdb, ts = make_store("daos", tmp_path)
+    fdb, ts = make_store("daos")
     ts.save(np.zeros((8, 8), np.float32), chunks=(4, 4))
     y = np.random.default_rng(3).normal(size=(8, 8)).astype(np.float32)
     ts.save(y, chunks=(4, 4))
@@ -100,11 +89,11 @@ def test_replace_semantics_same_layout(tmp_path):
     fdb.close()
 
 
-def test_layout_change_rejected_without_wipe(tmp_path):
+def test_layout_change_rejected_without_wipe(tmp_path, make_store):
     """A re-create with a different grid would strand old-grid chunk objects
     (no per-object delete in the FDB API) — it must be rejected."""
     from repro.tensorstore import LayoutMismatchError
-    fdb, ts = make_store("daos", tmp_path)
+    fdb, ts = make_store("daos")
     ts.save(np.zeros((8, 8), np.float32), chunks=(2, 2))
     with pytest.raises(LayoutMismatchError):
         ts.create((8, 8), np.float32, chunks=(4, 4))
@@ -149,8 +138,8 @@ def test_checkpoint_legacy_resave_shadows_chunked():
     ck2.close()
 
 
-def test_open_missing_array_raises(tmp_path):
-    fdb, ts = make_store("daos", tmp_path, array="nope")
+def test_open_missing_array_raises(tmp_path, make_store):
+    fdb, ts = make_store("daos", array="nope")
     assert not ts.exists()
     with pytest.raises(FileNotFoundError):
         ts.open()
@@ -161,11 +150,10 @@ def test_open_missing_array_raises(tmp_path):
 # chunk-aligned partial writes (arr[sel] = values)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_partial_write_roundtrip(backend, tmp_path):
+def test_partial_write_roundtrip(backend, tmp_path, make_store):
     """In-place assignment round-trips on every backend, including
     partially-covered edge chunks (read-modify-write)."""
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     x = np.random.default_rng(20).normal(size=(37, 53)).astype(np.float32)
     ts.save(x, chunks=(16, 16))
     arr = ts.open()
@@ -179,10 +167,10 @@ def test_partial_write_roundtrip(backend, tmp_path):
     fdb.close()
 
 
-def test_partial_write_full_chunks_skip_rmw(tmp_path):
+def test_partial_write_full_chunks_skip_rmw(tmp_path, make_store):
     """A chunk-aligned selection needs no read-modify-write: no data-read
     ops on the write path."""
-    fdb, ts = make_store("daos", tmp_path)
+    fdb, ts = make_store("daos")
     x = np.zeros((64, 64), np.float32)
     ts.save(x, chunks=(16, 16))
     arr = ts.open()
@@ -194,10 +182,10 @@ def test_partial_write_full_chunks_skip_rmw(tmp_path):
     fdb.close()
 
 
-def test_partial_write_into_created_empty_array(tmp_path):
+def test_partial_write_into_created_empty_array(tmp_path, make_store):
     """Chunks never written read as zeros (fill-value convention), so a
     created-but-unwritten array can be populated by partial writes."""
-    fdb, ts = make_store("rados", tmp_path)
+    fdb, ts = make_store("rados")
     arr = ts.create((10, 10), np.float32, chunks=(4, 4))
     arr[2:5, 2:5] = 9.0
     want = np.zeros((10, 10), np.float32)
@@ -214,8 +202,8 @@ def test_partial_write_into_created_empty_array(tmp_path):
     fdb.close()
 
 
-def test_partial_write_int_index_and_broadcast(tmp_path):
-    fdb, ts = make_store("posix", tmp_path)
+def test_partial_write_int_index_and_broadcast(tmp_path, make_store):
+    fdb, ts = make_store("posix")
     x = np.zeros((9, 7, 5), np.float32)
     ts.save(x, chunks=(4, 3, 2))
     arr = ts.open()
@@ -232,10 +220,10 @@ def test_partial_write_int_index_and_broadcast(tmp_path):
     fdb.close()
 
 
-def test_partial_write_sees_own_unflushed_chunks(tmp_path):
+def test_partial_write_sees_own_unflushed_chunks(tmp_path, make_store):
     """RMW fetches flush first (rule 3), so an archive-without-flush
     followed by a partial write must not lose the unflushed data."""
-    fdb, ts = make_store("posix", tmp_path)
+    fdb, ts = make_store("posix")
     x = np.full((8, 8), 3.0, np.float32)
     arr = ts.create(x.shape, x.dtype, chunks=(4, 4))
     arr.write(x, flush=False)             # archived, not yet committed
@@ -245,8 +233,8 @@ def test_partial_write_sees_own_unflushed_chunks(tmp_path):
     fdb.close()
 
 
-def test_partial_write_lossy_codec_requantises_within_bound(tmp_path):
-    fdb, ts = make_store("daos", tmp_path)
+def test_partial_write_lossy_codec_requantises_within_bound(tmp_path, make_store):
+    fdb, ts = make_store("daos")
     rng = np.random.default_rng(22)
     x = rng.normal(size=(256, 128)).astype(np.float32)
     ts.save(x, chunks=(128, 128), codec="field8")
@@ -264,11 +252,11 @@ def test_partial_write_lossy_codec_requantises_within_bound(tmp_path):
 # read planning + posix coalescing
 # ---------------------------------------------------------------------------
 
-def test_posix_adjacent_chunks_coalesce(tmp_path):
+def test_posix_adjacent_chunks_coalesce(tmp_path, make_store):
     """Acceptance: a full read of a posix array with >= 4 adjacent chunks
     per file issues fewer I/O ops than chunks fetched — one writer's chunks
     land adjacent in one data file and merge into single ranged reads."""
-    fdb, ts = make_store("posix", tmp_path)
+    fdb, ts = make_store("posix")
     v = np.arange(64, dtype=np.float32)
     ts.save(v, chunks=(8,))               # 8 adjacent chunks, one file
     arr = ts.open()
@@ -285,11 +273,11 @@ def test_posix_adjacent_chunks_coalesce(tmp_path):
     fdb.close()
 
 
-def test_object_store_reads_stay_object_granular(tmp_path):
+def test_object_store_reads_stay_object_granular(tmp_path, make_store):
     """No false coalescing on object backends: one op per chunk stays in
     flight (the object-store side of the paper's trade-off)."""
     for backend in ("daos", "rados", "s3"):
-        fdb, ts = make_store(backend, tmp_path, array=f"og-{backend}")
+        fdb, ts = make_store(backend, array=f"og-{backend}")
         x = np.zeros((64,), np.float32)
         ts.save(x, chunks=(8,))
         plan = ts.open().read_plan((slice(None),))
@@ -297,8 +285,8 @@ def test_object_store_reads_stay_object_granular(tmp_path):
         fdb.close()
 
 
-def test_read_plan_partial_window(tmp_path):
-    fdb, ts = make_store("posix", tmp_path)
+def test_read_plan_partial_window(tmp_path, make_store):
+    fdb, ts = make_store("posix")
     x = np.random.default_rng(23).normal(size=(64, 64)).astype(np.float32)
     ts.save(x, chunks=(16, 16))
     arr = ts.open()
@@ -317,11 +305,11 @@ def test_read_plan_partial_window(tmp_path):
 # write planning + posix write coalescing (the WritePlan mirror)
 # ---------------------------------------------------------------------------
 
-def test_posix_write_plan_coalesces(tmp_path):
+def test_posix_write_plan_coalesces(tmp_path, make_store):
     """Acceptance: posix write_ops for a multi-chunk write is strictly
     lower than the chunk count — one writer's chunks append into one data
     file, so the whole plan lands as a single batched store write."""
-    fdb, ts = make_store("posix", tmp_path)
+    fdb, ts = make_store("posix")
     v = np.arange(64, dtype=np.float32)
     arr = ts.create(v.shape, v.dtype, chunks=(8,))    # 8 chunks, one file
     plan = arr.write_plan((slice(None),), v)
@@ -340,22 +328,21 @@ def test_posix_write_plan_coalesces(tmp_path):
     fdb.close()
 
 
-def test_object_store_writes_stay_object_granular(tmp_path):
+def test_object_store_writes_stay_object_granular(tmp_path, make_store):
     """No false write coalescing on object backends: one archive op per
     chunk stays in flight (the other side of the paper's trade-off)."""
     for backend in ("daos", "rados", "s3"):
-        fdb, ts = make_store(backend, tmp_path, array=f"wog-{backend}")
+        fdb, ts = make_store(backend, array=f"wog-{backend}")
         arr = ts.create((64,), np.float32, chunks=(8,))
         plan = arr.write_plan((slice(None),), np.zeros(64, np.float32))
         assert plan.write_ops() == plan.n_chunks == 8
         fdb.close()
 
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_write_plan_read_plan_roundtrip(backend, tmp_path):
+def test_write_plan_read_plan_roundtrip(backend, tmp_path, make_store):
     """write_plan -> read_plan round-trips on every backend, including
     ragged edge chunks (batched encode falls back per shape group)."""
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     x = np.random.default_rng(40).normal(size=(37, 53)).astype(np.float32)
     arr = ts.create(x.shape, x.dtype, chunks=(16, 16))
     plan = arr.write_plan((slice(None), slice(None)), x)
@@ -367,10 +354,10 @@ def test_write_plan_read_plan_roundtrip(backend, tmp_path):
     fdb.close()
 
 
-def test_write_plan_partial_window_rmw_and_ops(tmp_path):
+def test_write_plan_partial_window_rmw_and_ops(tmp_path, make_store):
     """A window cutting through chunks: the plan reports its RMW split and
     still coalesces every re-archive into one posix write."""
-    fdb, ts = make_store("posix", tmp_path)
+    fdb, ts = make_store("posix")
     x = np.random.default_rng(41).normal(size=(64, 64)).astype(np.float32)
     ts.save(x, chunks=(16, 16))
     arr = ts.open()
@@ -409,12 +396,12 @@ def test_write_window_coalesces_store_writes(tmp_path):
     fs.close()
 
 
-def test_write_plan_flush_barrier_preserved(tmp_path):
+def test_write_plan_flush_barrier_preserved(tmp_path, make_store):
     """FDB rule 3 under batching: a second client sees nothing until the
     writer flushes, then sees everything — and execute(flush=True) is that
     barrier."""
     root = str(tmp_path / "fdb")
-    fdb, ts = make_store("posix", tmp_path)
+    fdb, ts = make_store("posix")
     x = np.arange(64, dtype=np.float32)
     arr = ts.create(x.shape, x.dtype, chunks=(8,))
     arr.write_plan((slice(None),), x).execute(flush=False)
@@ -505,11 +492,11 @@ def test_codec_batch_roundtrip_bound(bits):
         assert np.abs(d - a).max() <= bound
 
 
-def test_codec_batch_mixed_written_paths(tmp_path):
+def test_codec_batch_mixed_written_paths(tmp_path, make_store):
     """Chunks written per-chunk (old data) and batched (new data) decode
     together: the containers are identical, so a batched read of a
     mixed-provenance array just works."""
-    fdb, ts = make_store("posix", tmp_path)
+    fdb, ts = make_store("posix")
     x = np.random.default_rng(52).normal(size=(64, 64)).astype(np.float32)
     ts.save(x, chunks=(16, 16), codec="field16")      # batched write
     arr = ts.open()
@@ -552,17 +539,17 @@ def test_fdb_io_executor_not_shared_across_clients():
     b.close()
 
 
-def test_tensorstore_uses_fdb_executor(tmp_path):
-    fdb, ts = make_store("daos", tmp_path)
+def test_tensorstore_uses_fdb_executor(tmp_path, make_store):
+    fdb, ts = make_store("daos")
     assert ts.executor is fdb.io_executor
     fdb.close()
 
 
-def test_tensorstore_survives_executor_rebuild(tmp_path):
+def test_tensorstore_survives_executor_rebuild(tmp_path, make_store):
     """A store must not cache the client's executor: after an
     io_parallelism change rebuilds it, the store's next I/O must ride the
     fresh pool, not a shut-down one."""
-    fdb, ts = make_store("daos", tmp_path)
+    fdb, ts = make_store("daos")
     x = np.arange(64, dtype=np.float32)
     arr = ts.create(x.shape, x.dtype, chunks=(8,))
     arr.write(x)
@@ -669,8 +656,8 @@ def test_grid_write_plan_full_vs_partial():
          (slice(0, 5, 1), slice(0, 5, 1)), True)]
 
 
-def test_store_zero_length_dim_roundtrip(tmp_path):
-    fdb, ts = make_store("daos", tmp_path, array="empty")
+def test_store_zero_length_dim_roundtrip(tmp_path, make_store):
+    fdb, ts = make_store("daos", array="empty")
     x = np.zeros((0, 4), np.float32)
     ts.save(x, chunks=(2, 2))
     arr = ts.open()
@@ -679,8 +666,8 @@ def test_store_zero_length_dim_roundtrip(tmp_path):
     fdb.close()
 
 
-def test_indexing_edge_cases(tmp_path):
-    fdb, ts = make_store("daos", tmp_path)
+def test_indexing_edge_cases(tmp_path, make_store):
+    fdb, ts = make_store("daos")
     x = np.random.default_rng(4).normal(size=(9, 7, 5)).astype(np.float32)
     ts.save(x, chunks=(4, 3, 2))
     arr = ts.open()
@@ -699,8 +686,8 @@ def test_indexing_edge_cases(tmp_path):
     fdb.close()
 
 
-def test_scalar_and_1d_arrays(tmp_path):
-    fdb, ts = make_store("rados", tmp_path, array="scalar")
+def test_scalar_and_1d_arrays(tmp_path, make_store):
+    fdb, ts = make_store("rados", array="scalar")
     ts.save(np.float32(3.25))
     assert ts.open().read() == np.float32(3.25)
     ts2 = TensorStore(fdb, {"store": "s", "array": "vec", "writer": "w0"})
@@ -745,8 +732,8 @@ def test_codec_parity_on_off(backend, tmp_path):
     fdb.close()
 
 
-def test_quant_codec_falls_back_to_raw_for_ints_and_tiny_chunks(tmp_path):
-    fdb, ts = make_store("daos", tmp_path, array="ints")
+def test_quant_codec_falls_back_to_raw_for_ints_and_tiny_chunks(tmp_path, make_store):
+    fdb, ts = make_store("daos", array="ints")
     ints = np.arange(600, dtype=np.int32).reshape(30, 20)
     ts.save(ints, chunks=(16, 16), codec="field8")   # ineligible → raw marker
     np.testing.assert_array_equal(ts.open().read(), ints)
@@ -764,8 +751,8 @@ def test_codec_container_roundtrip_odd_tail():
     np.testing.assert_array_equal(y.reshape(-1)[(x.size // 128) * 128:], tail)
 
 
-def test_unknown_codec_rejected(tmp_path):
-    fdb, ts = make_store("daos", tmp_path)
+def test_unknown_codec_rejected(tmp_path, make_store):
+    fdb, ts = make_store("daos")
     with pytest.raises(ValueError):
         ts.create((4, 4), np.float32, codec="zstd")
     fdb.close()
@@ -811,7 +798,6 @@ def test_executor_propagates_client_context():
     ex.shutdown()
 
 
-@pytest.mark.parametrize("backend", BACKENDS)
 def test_archive_many_returns_locations(backend, tmp_path, nwp_identifier):
     schema = "nwp-posix" if backend == "posix" else "nwp-object"
     fdb = FDB(FDBConfig(backend=backend, schema=schema,
@@ -995,11 +981,10 @@ def test_lustre_sim_keyed_on_stripe_geometry(tmp_path):
 # strided selections (read + write paths)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_strided_read_roundtrip(backend, tmp_path):
+def test_strided_read_roundtrip(backend, tmp_path, make_store):
     """Positive-step selections match numpy on every backend, including
     steps larger than the chunk and offset starts."""
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     x = np.random.default_rng(60).normal(size=(37, 53)).astype(np.float32)
     ts.save(x, chunks=(16, 16))
     arr = ts.open()
@@ -1012,11 +997,10 @@ def test_strided_read_roundtrip(backend, tmp_path):
     fdb.close()
 
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_strided_write_roundtrip(backend, tmp_path):
+def test_strided_write_roundtrip(backend, tmp_path, make_store):
     """Strided assignment preserves the stride gaps (RMW) on every
     backend."""
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     x = np.random.default_rng(61).normal(size=(37, 53)).astype(np.float32)
     ts.save(x, chunks=(16, 16))
     arr = ts.open()
@@ -1031,10 +1015,10 @@ def test_strided_write_roundtrip(backend, tmp_path):
     fdb.close()
 
 
-def test_strided_read_skips_strided_over_chunks(tmp_path):
+def test_strided_read_skips_strided_over_chunks(tmp_path, make_store):
     """A step larger than the chunk touches only the chunks holding a
     selected point — observed via planned chunk count AND the meter."""
-    fdb, ts = make_store("daos", tmp_path)
+    fdb, ts = make_store("daos")
     x = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
     ts.save(x, chunks=(16, 16))          # 4 x 4 chunk grid
     arr = ts.open()
@@ -1051,11 +1035,10 @@ def test_strided_read_skips_strided_over_chunks(tmp_path):
     fdb.close()
 
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_negative_step_read_roundtrip(backend, tmp_path):
+def test_negative_step_read_roundtrip(backend, tmp_path, make_store):
     """Reversed reads on every backend: normalised to a positive-step plan
     plus one client-side flip, so results match numpy exactly."""
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     x = np.random.default_rng(11).normal(size=(37, 53)).astype(np.float32)
     ts.save(x, chunks=(16, 16))
     arr = ts.open()
@@ -1080,12 +1063,11 @@ def test_negative_step_read_roundtrip(backend, tmp_path):
     fdb.close()
 
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_negative_step_write_roundtrip(backend, tmp_path):
+def test_negative_step_write_roundtrip(backend, tmp_path, make_store):
     """Reversed assignment on every backend: the values flip client-side
     against the positive-step mirror plan, so results match numpy's
     reversed-assignment semantics exactly."""
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     rng = np.random.default_rng(63)
     x = rng.normal(size=(37, 53)).astype(np.float32)
     ts.save(x, chunks=(16, 16))
@@ -1116,10 +1098,10 @@ def test_negative_step_write_roundtrip(backend, tmp_path):
 
 
 @pytest.mark.parametrize("backend", ["daos", "posix"])
-def test_zero_length_selections(backend, tmp_path):
+def test_zero_length_selections(backend, tmp_path, make_store):
     """Empty selections are clean no-ops on read, write and reshard:
     empty arrays out, empty values in, zero planned I/O ops."""
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     x = np.arange(36, dtype=np.float32).reshape(6, 6)
     ts.save(x, chunks=(2, 2))
     arr = ts.open()
@@ -1145,12 +1127,12 @@ def test_zero_length_selections(backend, tmp_path):
 
 
 @pytest.mark.parametrize("backend", ["daos", "posix"])
-def test_garbage_report_after_reshard_and_recreate(backend, tmp_path):
+def test_garbage_report_after_reshard_and_recreate(backend, tmp_path, make_store):
     """garbage_report counts retained old-generation chunk bytes — the
     versioned-retain cost of reshards and on_mismatch='retain' re-creates
     (and only that: a fresh array reports zero garbage)."""
     from repro.tensorstore import GarbageReport
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     x = np.random.default_rng(5).normal(size=(32, 32)).astype(np.float32)
     arr = ts.save(x, chunks=(8, 8))              # 16 chunks x 256 B
     rep = ts.garbage_report()
@@ -1240,11 +1222,11 @@ def test_grid_strided_math():
 # RMW fetch coalescing + window-bounded write staging
 # ---------------------------------------------------------------------------
 
-def test_rmw_fetches_coalesce_on_posix(tmp_path):
+def test_rmw_fetches_coalesce_on_posix(tmp_path, make_store):
     """Partial-write RMW fetches route through a whole-chunk ReadPlan:
     adjacent posix chunks fetch as ONE ranged read, not one per chunk."""
     from repro.tensorstore import ReadPlan
-    fdb, ts = make_store("posix", tmp_path)
+    fdb, ts = make_store("posix")
     v = np.arange(64, dtype=np.float32)
     ts.save(v, chunks=(8,))              # 8 adjacent chunks, one file
     arr = ts.open()
@@ -1264,9 +1246,9 @@ def test_rmw_fetches_coalesce_on_posix(tmp_path):
     fdb.close()
 
 
-def test_read_plan_for_chunks_missing_fill(tmp_path):
+def test_read_plan_for_chunks_missing_fill(tmp_path, make_store):
     from repro.tensorstore import ReadPlan
-    fdb, ts = make_store("daos", tmp_path)
+    fdb, ts = make_store("daos")
     arr = ts.create((16,), np.float32, chunks=(4,))
     arr[0:4] = 7.0                       # only chunk 0 exists
     chunks = ReadPlan.for_chunks(arr, [(0,), (2,)]).read_chunks()
@@ -1308,12 +1290,11 @@ def test_write_plan_staged_by_executor_window(tmp_path):
 # resharding (ReshardPlan: plan-composed re-layout)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_reshard_byte_equality_roundtrip(backend, tmp_path):
+def test_reshard_byte_equality_roundtrip(backend, tmp_path, make_store):
     """Reshard must produce byte-identical data on the new grid vs a
     client-side reference rewrite — per chunk object, not just per read."""
     from repro.tensorstore import chunk_key, get_codec
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     x = np.random.default_rng(70).normal(size=(37, 53)).astype(np.float32)
     ts.save(x, chunks=(16, 16))
     arr = ts.open()
@@ -1332,10 +1313,10 @@ def test_reshard_byte_equality_roundtrip(backend, tmp_path):
     fdb.close()
 
 
-def test_reshard_posix_ops_below_naive(tmp_path):
+def test_reshard_posix_ops_below_naive(tmp_path, make_store):
     """Acceptance: reshard read/write op counts on posix stay strictly
     below the naive one-op-per-chunk rewrite, on the plan AND the meter."""
-    fdb, ts = make_store("posix", tmp_path)
+    fdb, ts = make_store("posix")
     x = np.random.default_rng(71).normal(size=(64, 64)).astype(np.float32)
     ts.save(x, chunks=(16, 16))          # 16 source chunks
     arr = ts.open()
@@ -1349,8 +1330,8 @@ def test_reshard_posix_ops_below_naive(tmp_path):
     fdb.close()
 
 
-def test_reshard_object_backends_stay_object_granular(tmp_path):
-    fdb, ts = make_store("daos", tmp_path)
+def test_reshard_object_backends_stay_object_granular(tmp_path, make_store):
+    fdb, ts = make_store("daos")
     x = np.zeros((64,), np.float32)
     ts.save(x, chunks=(8,))
     plan = ts.open().reshard_plan((16,))
@@ -1360,10 +1341,10 @@ def test_reshard_object_backends_stay_object_granular(tmp_path):
 
 
 @pytest.mark.parametrize("backend", ["posix", "rados"])
-def test_reshard_strided_subsample(backend, tmp_path):
+def test_reshard_strided_subsample(backend, tmp_path, make_store):
     """sel= reshards a strided sub-selection — the consumer-subsampled-grid
     pattern: shape becomes the selection's shape."""
-    fdb, ts = make_store(backend, tmp_path)
+    fdb, ts = make_store(backend)
     x = np.random.default_rng(72).normal(size=(40, 60)).astype(np.float32)
     ts.save(x, chunks=(16, 16))
     arr = ts.open()
@@ -1377,11 +1358,11 @@ def test_reshard_strided_subsample(backend, tmp_path):
     fdb.close()
 
 
-def test_reshard_bounded_staging(tmp_path):
+def test_reshard_bounded_staging(tmp_path, make_store):
     """The streaming property: a small window splits the reshard into many
     batches and peak staged bytes stay within one window of dest chunks."""
     from repro.tensorstore import chunk_rectangles
-    fdb, ts = make_store("posix", tmp_path)
+    fdb, ts = make_store("posix")
     x = np.arange(64 * 64, dtype=np.float32).reshape(64, 64)
     ts.save(x, chunks=(8, 8))
     arr = ts.open()
@@ -1401,12 +1382,12 @@ def test_reshard_bounded_staging(tmp_path):
     fdb.close()
 
 
-def test_reshard_flush_barrier_and_crash_safety(tmp_path):
+def test_reshard_flush_barrier_and_crash_safety(tmp_path, make_store):
     """Rule 3 through composition: a second client sees the OLD layout
     until the resharding writer flushes — a reshard interrupted before its
     commit barrier leaves the old layout fully intact."""
     root = str(tmp_path / "fdb")
-    fdb, ts = make_store("posix", tmp_path)
+    fdb, ts = make_store("posix")
     x = np.arange(64, dtype=np.float32)
     ts.save(x, chunks=(8,))
     arr = ts.open()
@@ -1426,8 +1407,8 @@ def test_reshard_flush_barrier_and_crash_safety(tmp_path):
     fdb.close()
 
 
-def test_reshard_noop_and_codec_change(tmp_path):
-    fdb, ts = make_store("daos", tmp_path)
+def test_reshard_noop_and_codec_change(tmp_path, make_store):
+    fdb, ts = make_store("daos")
     x = np.random.default_rng(73).normal(size=(256, 128)).astype(np.float32)
     ts.save(x, chunks=(128, 128))
     arr = ts.open()
@@ -1443,12 +1424,12 @@ def test_reshard_noop_and_codec_change(tmp_path):
     fdb.close()
 
 
-def test_create_on_mismatch_retain_bumps_generation(tmp_path):
+def test_create_on_mismatch_retain_bumps_generation(tmp_path, make_store):
     """The versioned-retain policy: a layout change under
     on_mismatch='retain' forks a fresh generation instead of raising, and
     old-generation chunks can never shadow the new grid."""
     from repro.tensorstore import LayoutMismatchError
-    fdb, ts = make_store("daos", tmp_path)
+    fdb, ts = make_store("daos")
     ts.save(np.full((8, 8), 3.0, np.float32), chunks=(2, 2))
     with pytest.raises(LayoutMismatchError):
         ts.create((8, 8), np.float32, chunks=(4, 4))
@@ -1597,12 +1578,11 @@ def test_checkpoint_resave_new_banding_bumps_generation():
 # ---------------------------------------------------------------------------
 
 @pytest.mark.slow
-@pytest.mark.parametrize("backend", BACKENDS)
-def test_sweep_chunk_sizes_roundtrip(backend, tmp_path):
+def test_sweep_chunk_sizes_roundtrip(backend, tmp_path, make_store):
     rng = np.random.default_rng(9)
     x = rng.normal(size=(257, 129)).astype(np.float32)
     for cs in (8, 32, 64, 128, 512):
-        fdb, ts = make_store(backend, tmp_path, array=f"sweep{cs}")
+        fdb, ts = make_store(backend, array=f"sweep{cs}")
         ts.save(x, chunks=(cs, cs))
         np.testing.assert_array_equal(ts.open().read(), x)
         fdb.close()

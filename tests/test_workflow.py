@@ -1,0 +1,152 @@
+"""Operational NWP workflow scenarios (repro.workflows).
+
+Tier-1 keeps the quick scenarios: one small clean cycle, the determinism
+contract across fresh deployments, the lease-contention accounting, the
+window/toy-model helpers, and one posix chaos gate.  The full
+cross-backend matrix and per-backend chaos gates are ``workflow``-marked
+(excluded from tier-1 by ``pytest.ini``; CI runs them as a dedicated
+step with ``-m workflow``).
+"""
+import dataclasses
+import hashlib
+
+import numpy as np
+import pytest
+
+from repro.workflows import (ChaosSchedule, NWPCycle, WorkflowConfig,
+                             analysis_truth, assimilation_windows,
+                             forecast_states, run_chaos_gate, step_model)
+
+
+def small_config(tmp_path, backend="posix", **kw):
+    kw.setdefault("shape", (32, 32))
+    kw.setdefault("chunks", (8, 8))
+    kw.setdefault("n_writers", 3)
+    kw.setdefault("halo", 3)
+    kw.setdefault("leads", 2)
+    kw.setdefault("n_shards", 2)
+    kw.setdefault("n_readers", 4)
+    kw.setdefault("reads_per_reader", 4)
+    return WorkflowConfig(backend=backend, root=str(tmp_path / "fdb"), **kw)
+
+
+# ---------------------------------------------------------------------------
+# stage-model helpers (pure functions)
+# ---------------------------------------------------------------------------
+
+def test_assimilation_windows_cover_grid_with_overlap():
+    cfg = WorkflowConfig(shape=(64, 64), n_writers=4, halo=4)
+    windows = assimilation_windows(cfg)
+    assert len(windows) == 4
+    covered = np.zeros(64, dtype=np.int32)
+    for lo, hi in windows:
+        assert 0 <= lo < hi <= 64
+        covered[lo:hi] += 1
+    assert (covered >= 1).all()              # no gap
+    # halo rows really are contested: neighbours share 2*halo rows
+    for (lo_a, hi_a), (lo_b, hi_b) in zip(windows, windows[1:]):
+        assert hi_a - lo_b == 2 * cfg.halo
+
+
+def test_truth_and_forecast_states_are_seed_deterministic():
+    a = WorkflowConfig(seed=7)
+    b = WorkflowConfig(seed=7)
+    assert np.array_equal(analysis_truth(a), analysis_truth(b))
+    assert not np.array_equal(analysis_truth(a),
+                              analysis_truth(WorkflowConfig(seed=8)))
+    states = forecast_states(a)
+    assert len(states) == a.leads + 1
+    assert np.array_equal(states[1], step_model(states[0], a.dt))
+    assert all(s.dtype == np.float32 for s in states)
+
+
+# ---------------------------------------------------------------------------
+# quick scenarios (tier-1)
+# ---------------------------------------------------------------------------
+
+def test_small_cycle_runs_clean(tmp_path):
+    report = NWPCycle(small_config(tmp_path)).run()
+    assert report.clean, report.protocol_violations
+    assert report.lost_chunks == 0
+    assert report.ckpt_roundtrip
+    # every field digest matches the locally recomputed expected state
+    cfg = small_config(tmp_path)
+    for name, state in zip(cfg.field_names(), forecast_states(cfg)):
+        assert report.digests[name] == hashlib.sha256(
+            state.tobytes()).hexdigest()
+    assert report.products_digest
+    for stage in ("assimilation", "forecast", "products"):
+        assert report.stages[stage].wall_s > 0
+        assert report.stages[stage].tasks > 0
+        assert report.stages[stage].nbytes > 0
+
+
+def test_assimilation_contention_is_accounted(tmp_path):
+    """Every writer runs with a blocking lease posture, so the
+    ``lease.wait_us`` histogram records each plan-time acquire — the
+    contention column the bench reports must be live."""
+    report = NWPCycle(small_config(tmp_path, n_writers=4, halo=6)).run()
+    assert report.clean
+    stats = report.stages["assimilation"]
+    assert stats.lease_waits > 0
+    assert stats.lease_wait_us >= 0.0
+    assert report.lease_wait.get("count", 0) >= stats.lease_waits
+
+
+def test_cycle_is_deterministic_across_deployments(tmp_path):
+    """The determinism contract: equal configs on two *fresh* deployments
+    produce byte-identical fields and products digests, regardless of
+    thread scheduling."""
+    a = NWPCycle(small_config(tmp_path / "a", backend="daos", seed=42)).run()
+    b = NWPCycle(small_config(tmp_path / "b", backend="daos", seed=42)).run()
+    assert a.clean and b.clean
+    assert a.digests == b.digests
+    c = NWPCycle(small_config(tmp_path / "c", backend="daos", seed=43)).run()
+    assert c.digests["analysis"] != a.digests["analysis"]
+
+
+def test_chaos_gate_posix(tmp_path):
+    """The headline robustness claim, tier-1 sized: the chaos run (fault
+    schedule + mid-cycle writer crash + recovery) must be byte-identical
+    to the fault-free run with zero lost chunks."""
+    result = run_chaos_gate(small_config(tmp_path))
+    assert result.ok, result.failures
+    assert result.chaos.crashed_writer is not None
+    assert result.chaos.faults_injected > 0
+    assert result.chaos.recovery["orphan_chunks"] >= 0
+    assert result.chaos.recovery["clean_after"]
+
+
+# ---------------------------------------------------------------------------
+# full matrix (workflow-marked; CI runs with -m workflow)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.workflow
+def test_cycle_all_backends(backend, tmp_path):
+    report = NWPCycle(small_config(tmp_path, backend=backend,
+                                   shape=(48, 48), chunks=(16, 16),
+                                   n_writers=4, halo=4, leads=3,
+                                   n_readers=6, reads_per_reader=6)).run()
+    assert report.clean, report.protocol_violations
+    assert report.lost_chunks == 0
+    assert report.ckpt_roundtrip
+    assert report.stages["assimilation"].lease_waits > 0
+
+
+@pytest.mark.workflow
+def test_cycle_rerun_same_deployment_is_identical(backend, tmp_path):
+    """Same deployment, two dataset namespaces: digests must agree —
+    namespace isolation plus determinism."""
+    cfg = small_config(tmp_path, backend=backend)
+    a = NWPCycle(dataclasses.replace(cfg, store="wf-a")).run()
+    b = NWPCycle(dataclasses.replace(cfg, store="wf-b")).run()
+    assert a.clean and b.clean
+    assert a.digests == b.digests
+
+
+@pytest.mark.workflow
+def test_chaos_gate_all_backends(backend, tmp_path):
+    result = run_chaos_gate(small_config(tmp_path, backend=backend),
+                            ChaosSchedule(seed=3, crash_writer=1))
+    assert result.ok, result.failures
+    assert result.chaos.crashed_writer == 1
