@@ -73,6 +73,11 @@ TINY_CONTENTION_WINDOWS = ("full",)
 #: therefore the retry/goodput columns) is reproducible run to run
 CHAOS_BACKENDS = ("posix", "daos")
 CHAOS_SEED = 1107
+#: many-reader serving suite: readers × backend × decoded-chunk cache
+READER_BACKENDS = ("posix", "daos")
+READER_COUNTS = (2, 4, 8)
+TINY_READER_COUNTS = (4,)
+READER_FIELDS = ("t2m", "u10", "msl")
 
 
 def _bench_tracer() -> Tracer:
@@ -214,7 +219,126 @@ def run(profile: str = "gcp", tiny: bool = False) -> List[Row]:
                 fdb.close()
                 shutil.rmtree(root, ignore_errors=True)
     rows.extend(contention_rows(profile, tiny))
+    rows.extend(reader_rows(profile, tiny))
     rows.extend(fault_rows(profile, tiny))
+    return rows
+
+
+def reader_rows(profile: str = "gcp", tiny: bool = False) -> List[Row]:
+    """Many-reader serving contention: N readers re-read overlapping row
+    bands of a 3-field tree through ONE shared ``ChunkedFieldStore``
+    client, with the decoded-chunk cache on vs off.  The cold open goes
+    through ``open_tree()`` — the consolidated-metadata fetch — so the
+    ``open_cost_us`` / ``open_ops`` columns price opening the whole tree
+    at one catalogue round-trip.  A single warm pass populates the cache,
+    then the timed concurrent re-read reports ``cache_hit_rate``,
+    per-reader latency and the metered backend ``reread_ops`` — 0 with
+    the cache on (hit chunks never reach the backend; asserted by the
+    check.sh cache smoke), one op train per window with it off."""
+    rows: List[Row] = []
+    from repro.data.pipeline import ChunkedFieldStore
+    shape, chunk, band = (256, 256), 32, 96
+    rng = np.random.default_rng(3)
+    fields = {name: rng.normal(size=shape).astype(np.float32)
+              for name in READER_FIELDS}
+    reader_axis = TINY_READER_COUNTS if tiny else READER_COUNTS
+
+    def window(i: int):
+        lo = (i * chunk) % (shape[0] - band)
+        return (slice(lo, lo + band), slice(None))
+
+    for backend in READER_BACKENDS:
+        for n_readers in reader_axis:
+            for cache_on in (False, True):
+                meter = Meter()
+                tracer = _bench_tracer()
+                reset_engines()
+                root = (f"/tmp/fdb-bench-ts-read-{backend}-{n_readers}-"
+                        f"{int(cache_on)}-{os.getpid()}")
+                shutil.rmtree(root, ignore_errors=True)
+                cfg = FDBConfig(backend=backend, schema="tensor", root=root)
+                # the simulated in-memory clusters are keyed per meter, so
+                # producer and consumer must share one to share the engine
+                prod = ChunkedFieldStore(store="bench", fdb_config=cfg,
+                                         meter=meter, cache_bytes=0)
+                for name, values in fields.items():
+                    prod.put_field(name, values, chunks=(chunk, chunk))
+                prod.commit()
+                prod.close()
+
+                cons = ChunkedFieldStore(
+                    store="bench", fdb_config=cfg, meter=meter,
+                    tracer=tracer,
+                    cache_bytes=(64 * 2 ** 20 if cache_on else 0))
+                ops0 = len(meter.snapshot())
+                t0 = time.perf_counter()
+                opened = cons.open_tree()
+                open_cost_us = (time.perf_counter() - t0) * 1e6
+                open_ops = len(meter.snapshot()) - ops0
+                assert set(opened) == set(READER_FIELDS)
+                # warm pass: one sweep of every reader's windows primes
+                # the shared cache (and the cache-off baseline's page
+                # layout) before the timed contention phase
+                for i in range(n_readers):
+                    for name in READER_FIELDS:
+                        cons.read_window(name, *window(i))
+
+                lat = [[] for _ in range(n_readers)]
+                errors: List[BaseException] = []
+
+                def reader(i: int) -> None:
+                    try:
+                        for name in READER_FIELDS:
+                            t1 = time.perf_counter()
+                            cons.read_window(name, *window(i))
+                            lat[i].append(time.perf_counter() - t1)
+                    except BaseException as e:  # noqa: BLE001
+                        errors.append(e)
+
+                mk = tracer.mark()
+                ops1 = len(meter.snapshot())
+                t0 = time.perf_counter()
+                threads = [threading.Thread(target=reader, args=(i,))
+                           for i in range(n_readers)]
+                for t in threads:
+                    t.start()
+                for t in threads:
+                    t.join()
+                wall = time.perf_counter() - t0
+                if errors:
+                    raise errors[0]
+                reread_ops = len(meter.snapshot()) - ops1
+                ph = _phase_extra(tracer, mk, wall)
+                snap = cons.fdb.metrics()
+                hits = snap.get("cache.hits", {}).get("value", 0)
+                misses = snap.get("cache.misses", {}).get("value", 0)
+                hit_rate = hits / (hits + misses) if hits + misses else 0.0
+                per_read = [u for per in lat for u in per]
+                mean_us = sum(per_read) / max(1, len(per_read)) * 1e6
+                max_us = max(per_read, default=0.0) * 1e6
+                m = model_run(meter.snapshot(), PROFILES[profile],
+                              server_nodes=SERVERS)
+                mode = "cache" if cache_on else "nocache"
+                rows.append(Row(
+                    f"tensorstore/{backend}/readers/r{n_readers}/{mode}",
+                    mean_us,
+                    f"hit_rate={hit_rate:.2f} open={open_cost_us:.0f}us/"
+                    f"{open_ops}ops reread_ops={reread_ops} "
+                    f"reader_max={max_us:.0f}us "
+                    f"modeled={m.read_bw / 2**30:.2f}GiB/s",
+                    extra={"backend": backend, "readers": n_readers,
+                           "cache": cache_on,
+                           "cache_hit_rate": round(hit_rate, 4),
+                           "open_cost_us": round(open_cost_us, 3),
+                           "open_ops": open_ops,
+                           "reread_ops": reread_ops,
+                           "reads": len(per_read),
+                           "reader_mean_us": round(mean_us, 3),
+                           "reader_max_us": round(max_us, 3),
+                           "modeled_read_gib_s": round(m.read_bw / 2**30,
+                                                       4), **ph}))
+                cons.close()
+                shutil.rmtree(root, ignore_errors=True)
     return rows
 
 

@@ -3,9 +3,14 @@
 Drives :class:`repro.workflows.NWPCycle` — concurrent leased assimilation
 writers, a strict-read forecast with sharded checkpoints, and a fan-out
 product-reader pool — on each simulated backend, and reports one row per
-stage: wall latency per task, payload throughput, and the lease-contention
+stage: wall latency per task, payload throughput, the lease-contention
 column (blocking acquires + total time queued on other writers' leases,
-from the ``lease.wait_us`` histogram).
+from the ``lease.wait_us`` histogram), and the **modeled at-scale
+bandwidth** columns — every client of the cycle shares one engine-op
+``Meter``, each stage's op-trace window feeds the calibrated cluster
+cost model (``model_run``), and the resulting write/read GiB/s +
+dominant-resource verdict ride next to the in-process numbers, the same
+methodology split the tensorstore bench uses (thesis §4.1).
 
 A final ``chaos_gate`` row per backend reruns the *identical* seeded
 cycle under a fault schedule plus a mid-cycle writer crash
@@ -19,7 +24,7 @@ import os
 import shutil
 from typing import List
 
-from repro.core import reset_engines
+from repro.core import Meter, PROFILES, model_run, reset_engines
 from repro.workflows import ChaosSchedule, NWPCycle, WorkflowConfig, \
     run_chaos_gate
 
@@ -27,6 +32,7 @@ from .common import Row
 
 BACKENDS = ["daos", "rados", "posix", "s3"]
 CHAOS_SEED = 1107
+SERVERS = 4
 
 #: full profile: a 96x96 grid, 6 overlapping writers, 3 leads, 8 readers
 FULL = dict(shape=(96, 96), chunks=(16, 16), n_writers=6, halo=6,
@@ -43,24 +49,37 @@ def _config(backend: str, tag: str, tiny: bool) -> WorkflowConfig:
                           **(TINY if tiny else FULL))
 
 
-def run(tiny: bool = False) -> List[Row]:
+def run(tiny: bool = False, profile: str = "gcp") -> List[Row]:
     rows: List[Row] = []
     for backend in BACKENDS:
         reset_engines()
-        report = NWPCycle(_config(backend, "clean", tiny)).run()
+        meter = Meter()
+        cycle = NWPCycle(_config(backend, "clean", tiny), meter=meter)
+        report = cycle.run()
         for stage, stats in report.stages.items():
+            # the stage's own op-trace window through the cluster model:
+            # what this stage's I/O would sustain on the profile hardware
+            m = model_run(cycle.stage_ops.get(stage, []),
+                          PROFILES[profile], server_nodes=SERVERS)
             rows.append(Row(
                 f"workflow/{backend}/{stage}",
                 stats.wall_s / max(1, stats.tasks) * 1e6,
                 f"{stats.mib_s:.1f}MiB/s tasks={stats.tasks} "
                 f"lease_waits={stats.lease_waits} "
-                f"lease_wait={stats.lease_wait_us / 1e3:.1f}ms",
+                f"lease_wait={stats.lease_wait_us / 1e3:.1f}ms "
+                f"modeled_w={m.write_bw / 2**30:.2f}GiB/s "
+                f"modeled_r={m.read_bw / 2**30:.2f}GiB/s "
+                f"dominant={m.dominant}",
                 extra={"backend": backend, "stage": stage,
                        "wall_us": round(stats.wall_s * 1e6, 1),
                        "mib_s": round(stats.mib_s, 3),
                        "nbytes": stats.nbytes, "tasks": stats.tasks,
                        "lease_waits": stats.lease_waits,
-                       "lease_wait_us": round(stats.lease_wait_us, 1)}))
+                       "lease_wait_us": round(stats.lease_wait_us, 1),
+                       "stage_ops": len(cycle.stage_ops.get(stage, [])),
+                       "modeled_write_gib_s": round(m.write_bw / 2**30, 4),
+                       "modeled_read_gib_s": round(m.read_bw / 2**30, 4),
+                       "modeled_dominant": m.dominant}))
         assert report.clean, (backend, report.protocol_violations)
         assert report.lost_chunks == 0, (backend, report.lost_chunks)
 

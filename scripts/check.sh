@@ -18,17 +18,25 @@
 #      cycle: assimilation -> forecast -> products) must report per-stage
 #      latency/throughput/lease-wait columns on all four backends and
 #      pass its per-backend chaos gate — the chaos rerun byte-identical
-#      to the fault-free cycle, zero lost chunks, protocol clean;
+#      to the fault-free cycle, zero lost chunks, protocol clean — plus
+#      modeled per-stage bandwidth columns from each stage's op-trace
+#      window; the many-reader serving rows must report cache_hit_rate/
+#      open_cost_us/per-reader latency, with cache-on rereads issuing
+#      ZERO backend ops;
 #   4. trace smoke — a traced chunked roundtrip on all four backends must
 #      record plan/io/codec spans (and record nothing with tracing off);
 #   5. chaos smoke — a writer crash-killed between archive and flush
 #      (InjectedCrash) must leave torn state that fdb.recover() fully
 #      mops up (expired lease purged, orphan intents quarantined) so a
 #      second writer completes byte-identical, protocol-clean;
-#   6. lint gate — the repo-invariant linter (repro.analysis.lint) in
+#   6. cache smoke — the decoded-chunk cache + consolidated open on the
+#      serving read path: opening a 3-array tree costs exactly one
+#      catalogue fetch (meter-asserted against a raw per-array open),
+#      and a cache-on reread is pure cache traffic — zero engine ops;
+#   7. lint gate — the repo-invariant linter (repro.analysis.lint) in
 #      strict mode: zero unsuppressed findings, zero unused suppressions
 #      (docs/analysis.md has the rule catalogue);
-#   7. docs gate — README.md/docs/*.md internal links resolve and the
+#   8. docs gate — README.md/docs/*.md internal links resolve and the
 #      fenced python quickstart blocks actually execute.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -67,6 +75,29 @@ assert all(r["lease_conflicts"] == 0 for r in cont), \
 pcont = [r for r in cont if r.get("backend") == "posix"]
 assert pcont and all(r["write_ops"] <= r["writers"] for r in pcont), \
     "posix contention coalescing regressed: more store writes than writers"
+
+# many-reader serving rows: the decoded-chunk cache must turn the timed
+# concurrent reread into pure cache traffic (zero metered backend ops,
+# nonzero hit rate) while the cache-off twin keeps paying per-window op
+# trains; every row must price the consolidated cold open and carry the
+# per-reader latency columns
+readers = [r for r in rows if "cache_hit_rate" in r]
+assert readers, "no many-reader serving rows"
+assert {r["backend"] for r in readers} >= {"posix", "daos"}, \
+    "reader rows missing a backend"
+for r in readers:
+    for col in ("open_cost_us", "open_ops", "reread_ops",
+                "reader_mean_us", "reader_max_us"):
+        assert col in r, f"missing reader column {col}: {r['name']}"
+ron = [r for r in readers if r["cache"]]
+roff = [r for r in readers if not r["cache"]]
+assert ron and roff, "reader rows missing a cache mode"
+assert all(r["reread_ops"] == 0 for r in ron), \
+    "CACHE MISS ON REREAD: cache-on readers issued backend ops"
+assert all(r["cache_hit_rate"] > 0 for r in ron), \
+    "cache-on readers recorded no cache hits"
+assert all(r["reread_ops"] > 0 for r in roff), \
+    "cache-off readers issued no backend ops: the baseline is dead"
 
 # chaos rows: the seeded fault schedule must have actually fired and the
 # retry layer must have healed every fault -- goodput under degradation
@@ -119,6 +150,11 @@ for backend in sorted(wf_backends):
         assert r["mib_s"] > 0, f"zero workflow throughput: {r['name']}"
         assert "lease_waits" in r and "lease_wait_us" in r, \
             f"missing lease-wait columns: {r['name']}"
+        assert r.get("stage_ops", 0) > 0, \
+            f"empty stage op-trace window: {r['name']}"
+        for col in ("modeled_write_gib_s", "modeled_read_gib_s",
+                    "modeled_dominant"):
+            assert col in r, f"missing modeled bandwidth column: {r['name']}"
     arow = [r for r in wf if r.get("backend") == backend
             and r.get("stage") == "assimilation"][0]
     assert arow["lease_waits"] > 0, \
@@ -248,6 +284,68 @@ setup.close(); fdb_a.close(); fdb_b.close()
 GLOBAL_TRACER.disable(); GLOBAL_TRACER.clear()
 print("chaos smoke OK: crash-killed writer recovered, rewrite "
       "byte-identical, protocol clean")
+PY
+
+# cache smoke: the serving read path's two levers, meter-asserted --
+# opening a multi-array tree costs exactly ONE catalogue fetch (the
+# consolidated-metadata open, priced against a raw per-array open), and
+# a cache-on reread of already-decoded windows issues ZERO engine ops
+PYTHONPATH=src${PYTHONPATH:+:$PYTHONPATH} python - <<'PY'
+import shutil
+import numpy as np
+from repro.core import FDB, FDBConfig, Meter, reset_engines
+from repro.data import ChunkedFieldStore
+from repro.tensorstore import TensorStore
+
+for backend in ("daos", "posix"):
+    reset_engines()
+    meter = Meter()           # shared: in-memory engines are keyed per meter
+    root = f"/tmp/cache-smoke-{backend}"
+    shutil.rmtree(root, ignore_errors=True)
+    cfg = FDBConfig(backend=backend, schema="tensor", root=root)
+    fields = {name: np.random.default_rng(i).normal(
+                  size=(64, 64)).astype(np.float32)
+              for i, name in enumerate(("t2m", "u10", "msl"))}
+    prod = ChunkedFieldStore(store="smoke", fdb_config=cfg, meter=meter,
+                             cache_bytes=0)
+    for name, v in fields.items():
+        prod.put_field(name, v, chunks=(16, 16))
+    prod.commit()
+    prod.close()
+
+    # consolidated open: the whole 3-array tree == one raw array open
+    cons = ChunkedFieldStore(store="smoke", fdb_config=cfg, meter=meter)
+    mark = len(meter.snapshot())
+    opened = cons.open_tree()
+    tree_ops = len(meter.snapshot()) - mark
+    assert set(opened) == set(fields), sorted(opened)
+    probe = FDB(cfg, meter=meter)
+    mark = len(meter.snapshot())
+    TensorStore(probe, {"store": "smoke", "array": "t2m",
+                        "writer": "prod0"}).open()
+    single_ops = len(meter.snapshot()) - mark
+    probe.close()
+    assert tree_ops == single_ops, \
+        f"{backend}: tree open cost {tree_ops} ops, one array {single_ops}"
+
+    # cache-on reread: zero engine ops, all hits
+    win = (slice(0, 48), slice(8, 56))
+    for name, v in fields.items():
+        np.testing.assert_array_equal(cons.read_window(name, *win),
+                                      v[win])
+    mark = len(meter.snapshot())
+    for name, v in fields.items():
+        np.testing.assert_array_equal(cons.read_window(name, *win),
+                                      v[win])
+    reread_ops = len(meter.snapshot()) - mark
+    assert reread_ops == 0, \
+        f"{backend}: cache-on reread issued {reread_ops} engine ops"
+    hits = cons.fdb.metrics()["cache.hits"]["value"]
+    assert hits > 0, f"{backend}: no cache hits recorded"
+    cons.close()
+    shutil.rmtree(root, ignore_errors=True)
+print("cache smoke OK: consolidated tree open == one fetch, "
+      "cache-on rereads are zero-op on daos + posix")
 PY
 
 # lint gate: repo invariants, strict (prints the suppression count)

@@ -67,7 +67,7 @@ LAYER_DAG: Dict[str, Set[str]] = {
     "sharding": {"models"},
     "models": {"configs", "sharding"},
     "train": {"core", "kernels", "models", "sharding", "tensorstore"},
-    "serve": {"models"},
+    "serve": {"models", "core", "data", "tensorstore"},
     "launch": {"configs", "core", "data", "models", "serve", "sharding",
                "train", "tensorstore"},
     # workflow drivers compose the storage facades end to end

@@ -130,6 +130,12 @@ class FDBConfig:
     #: batched-archive overlap depth (archive_many / tensorstore writes);
     #: <= 1 serializes archives
     io_parallelism: int = 8
+    #: decoded-chunk LRU cache budget for this client's readers
+    #: (``fdb.chunk_cache``); 0 disables the cache entirely — the default,
+    #: so op-count accounting stays exact unless serving opts in
+    #: (``ChunkedFieldStore`` turns it on)
+    chunk_cache_bytes: int = 0
+    chunk_cache_entries: int = 1024
 
     def resolved_schema(self) -> Schema:
         if isinstance(self.schema, Schema):
@@ -211,6 +217,7 @@ class FDB:
         self._dirty = False
         self._io_executor = None        # lazily built, see io_executor
         self._io_executor_size = 0
+        self._chunk_cache = None        # lazily built, see chunk_cache
         self._io_lock = NamedLock("fdb.io")
         #: serialises flush(): concurrent barriers (two writer sessions
         #: committing at once) would race the posix catalogue's
@@ -417,6 +424,29 @@ class FDB:
                 self._io_executor_size = size
             return ex
 
+    @property
+    def chunk_cache(self):
+        """This client's shared decoded-chunk LRU cache, or ``None`` when
+        ``config.chunk_cache_bytes`` is 0 (the default).  Read plans
+        consult it before resolving handles; write plans invalidate the
+        chunks they archive; :meth:`flush`'s clean path publishes them
+        and :meth:`wipe` drops the wiped dataset's entries."""
+        if self.config.chunk_cache_bytes <= 0:
+            return None
+        cache = self._chunk_cache
+        if cache is None:
+            # lint: disable=L001 -- documented cycle-breaker: lazy import so
+            # core never loads tensorstore at module import time
+            from repro.tensorstore.cache import ChunkCache
+            with self._io_lock:
+                cache = self._chunk_cache
+                if cache is None:
+                    cache = self._chunk_cache = ChunkCache(
+                        self.config.chunk_cache_bytes,
+                        self.config.chunk_cache_entries,
+                        metrics=self.tracer.metrics)
+        return cache
+
     def archive_many(self, items: Sequence[Tuple[Mapping[str, object],
                                                  BytesLike]],
                      parallelism: Optional[int] = None,
@@ -519,6 +549,10 @@ class FDB:
                 # flag) until the next flush — never clean-but-unpublished
                 self.catalogue.lease_table().clear_dirty_client(
                     self.client_id)
+                if self._chunk_cache is not None:
+                    # overwritten chunks are visible now: let readers
+                    # cache their fresh bytes again
+                    self._chunk_cache.publish_pending()
             # one store/catalogue flush publishes everything this *client*
             # archived, whichever session produced it — so every session's
             # barrier up to its captured marker is satisfied too
@@ -867,6 +901,9 @@ class FDB:
         for dataset in self._matching_datasets(dict(dataset_part)):
             self.store.wipe(dataset)
             self.catalogue.wipe(dataset)
+        if self._chunk_cache is not None:
+            self._chunk_cache.clear({str(k): str(v)
+                                     for k, v in dataset_part.items()})
 
     # -- observability -------------------------------------------------------
     def trace(self, since: int = 0) -> List[Span]:

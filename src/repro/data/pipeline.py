@@ -17,7 +17,7 @@ import numpy as np
 from repro.core import FDB, FDBConfig, Identifier, WriterSession
 from repro.core.schema import DATA_SCHEMA, TENSOR_SCHEMA
 from repro.tensorstore import (ChunkedArray, LayoutMismatchError,
-                               TensorStore)
+                               TensorStore, TreeCatalogue)
 
 
 class SyntheticTokens:
@@ -49,15 +49,23 @@ class ChunkedFieldStore:
                  fdb_config: Optional[FDBConfig] = None,
                  writer: str = "prod0", codec: str = "raw",
                  chunks: Optional[tuple] = None,
-                 tracer=None, faults=None, retry=None):
+                 tracer=None, faults=None, retry=None, meter=None,
+                 cache_bytes: int = 64 * 2 ** 20):
         cfg = fdb_config or FDBConfig(backend="daos")
+        import dataclasses
         if cfg.resolved_schema().name != "tensor":
-            import dataclasses
             cfg = dataclasses.replace(cfg, schema=TENSOR_SCHEMA)
-        # tracer/faults/retry pass straight through to the FDB client, so
-        # workflow drivers can observe and chaos-test the field path without
-        # reaching around the facade
-        self.fdb = FDB(cfg, tracer=tracer, faults=faults, retry=retry)
+        # the serving facade defaults the decoded-chunk cache ON (the raw
+        # FDB/TensorStore layers leave it off so op accounting stays
+        # exact); cache_bytes=0 opts out, and an explicit
+        # FDBConfig.chunk_cache_bytes wins
+        if cfg.chunk_cache_bytes == 0 and cache_bytes > 0:
+            cfg = dataclasses.replace(cfg, chunk_cache_bytes=cache_bytes)
+        # tracer/faults/retry/meter pass straight through to the FDB
+        # client, so workflow drivers can observe, chaos-test and
+        # cost-model the field path without reaching around the facade
+        self.fdb = FDB(cfg, meter=meter, tracer=tracer, faults=faults,
+                       retry=retry)
         self.store = store
         #: collocation key all producers share (the schema "writer" dim) —
         #: named writer_key so the :meth:`writer` session factory can keep
@@ -70,10 +78,17 @@ class ChunkedFieldStore:
         # a *different* consumer store must re-open after a producer
         # reshard (open_field(refresh=True)) — see reshard()
         self._opened: Dict[str, ChunkedArray] = {}
+        #: consolidated metadata for this store's dataset tree (the Zarr
+        #: ``.zmetadata`` idiom): creates/reshards through this facade keep
+        #: it fresh, and :meth:`open_tree` opens every field with ONE fetch
+        self.tree = TreeCatalogue(
+            self.fdb, {"store": store, "writer": writer},
+            member_dim="array")
 
     def _ts(self, name: str) -> TensorStore:
         return TensorStore(self.fdb, {"store": self.store, "array": name,
-                                      "writer": self.writer_key})
+                                      "writer": self.writer_key},
+                           tree=self.tree)
 
     # -- producer side -----------------------------------------------------
     def put_field(self, name: str, values: np.ndarray,
@@ -105,17 +120,57 @@ class ChunkedFieldStore:
 
     # -- consumer side -----------------------------------------------------
     def open_field(self, name: str, refresh: bool = False) -> ChunkedArray:
-        """Open (and cache) a field's chunked array.  ``refresh=True``
-        drops the cached open and re-reads the metadata — required for a
-        consumer to pick up another client's re-layout (``reshard``), since
-        versioned retain keeps the old generation's chunks readable and a
-        stale cached open would keep returning them."""
+        """Open (and cache) a field's chunked array.  The first open on a
+        fresh consumer loads the **consolidated metadata** once (one
+        fetch) and serves every subsequent field open from it — per-array
+        metadata fetches happen only for fields the consolidated object
+        does not know (written by code that does not maintain it, or by a
+        concurrent producer since the load).
+
+        ``refresh=True`` drops the cached open and re-reads the
+        authoritative per-array metadata — required for a consumer to pick
+        up another client's re-layout (``reshard``), since versioned
+        retain keeps the old generation's chunks readable and a stale
+        cached open would keep returning them; the consolidated mirror is
+        reloaded too."""
         if refresh:
             self._opened.pop(name, None)
+            arr = self._opened[name] = self._ts(name).open()
+            self.tree.load()    # resync the consolidated mirror as well
+            return arr
         arr = self._opened.get(name)
         if arr is None:
-            arr = self._opened[name] = self._ts(name).open()
+            if not self.tree.loaded:
+                self.tree.load()
+            meta = self.tree.get(name)
+            if meta is not None:        # consolidated hit: no fetch
+                arr = ChunkedArray(self._ts(name), meta)
+            else:                       # fall back to per-array metadata
+                arr = self._ts(name).open()
+            self._opened[name] = arr
         return arr
+
+    def open_tree(self, refresh: bool = False) -> Dict[str, ChunkedArray]:
+        """Open every field of this store's dataset tree with a **single**
+        consolidated-metadata fetch (the Zarr consolidated-open idiom) —
+        the serving cold-start path: N arrays, one round-trip.  Returns
+        ``{name: ChunkedArray}`` and primes the per-field open cache.
+        Fields written by clients that do not maintain the consolidated
+        object are absent — open them via :meth:`open_field`, which falls
+        back to the authoritative per-array metadata."""
+        if refresh or not self.tree.loaded:
+            self.tree.load()
+        out: Dict[str, ChunkedArray] = {}
+        for name in self.tree.names():
+            if name.startswith("."):
+                continue
+            meta = self.tree.get(name)
+            arr = self._opened.get(name)
+            if arr is None or arr.meta != meta:
+                arr = self._opened[name] = ChunkedArray(self._ts(name),
+                                                        meta)
+            out[name] = arr
+        return out
 
     def read_window(self, name: str, *selection,
                     fill_missing: bool = True) -> np.ndarray:
@@ -193,6 +248,12 @@ class ChunkedFieldStore:
     def wipe_field(self, name: str) -> None:
         self._opened.pop(name, None)
         self.fdb.wipe({"store": self.store, "array": name})
+        # the tree index lives in its own (store, array=".tree") dataset,
+        # so the wipe above never touches it — drop the member explicitly
+        # (loading first so an unloaded mirror can't leave a stale entry)
+        if not self.tree.loaded:
+            self.tree.load()
+        self.tree.forget(name)
 
     # -- multi-producer side ------------------------------------------------
     def writer(self, writer_id: str, lease_ttl: Optional[float] = None,

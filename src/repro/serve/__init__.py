@@ -1,3 +1,4 @@
 from .engine import ServeEngine, Request
+from .fields import FieldRequest, FieldServeEngine
 
-__all__ = ["ServeEngine", "Request"]
+__all__ = ["ServeEngine", "Request", "FieldRequest", "FieldServeEngine"]

@@ -14,10 +14,12 @@
 >>> arr.reshard((30, 420))               # stream onto a consumer chunk grid
 """
 from repro.core import LeaseConflictError, StaleLeaseError, WriterSession
+from .cache import ChunkCache
 from .codec import CODECS, Codec, FieldQuantCodec, RawCodec, get_codec
 from .executor import ChunkExecutor, default_executor, sized_executor
 from .grid import ChunkGrid, merge_id_ranges
-from .meta import META_CHUNK_KEY, ArrayMeta, auto_chunks
+from .meta import (META_CHUNK_KEY, TREE_ARRAY_KEY, ArrayMeta, TreeCatalogue,
+                   auto_chunks)
 from .reshard import ReshardPlan, chunk_rectangles
 from .store import (ChunkedArray, GarbageReport, LayoutMismatchError,
                     ReadPlan, TensorStore, WritePlan, chunk_key)
@@ -28,6 +30,7 @@ __all__ = [
     "LayoutMismatchError", "GarbageReport",
     "WriterSession", "LeaseConflictError", "StaleLeaseError",
     "ArrayMeta", "auto_chunks", "META_CHUNK_KEY",
+    "ChunkCache", "TreeCatalogue", "TREE_ARRAY_KEY",
     "ChunkGrid", "merge_id_ranges",
     "Codec", "RawCodec", "FieldQuantCodec", "CODECS", "get_codec",
     "ChunkExecutor", "default_executor", "sized_executor",

@@ -1,0 +1,192 @@
+"""Decoded-chunk LRU cache — the read-serving hot path.
+
+One :class:`ChunkCache` is shared by every reader of one FDB client
+(``fdb.chunk_cache``, built lazily when ``FDBConfig.chunk_cache_bytes``
+is nonzero): many concurrent consumers hammering the same forecast
+fields re-decode each chunk once, not per read.  Entries are **decoded**
+ndarrays keyed by ``(scope, generation, chunk_idx)`` where ``scope`` is
+the array's full base identifier — a reshard's generation flip simply
+stops producing the old keys, so stale layouts age out of the LRU
+without any cross-client coordination.
+
+Coherence contract (mirrors the ``ChunkedFieldStore`` metadata cache):
+
+* **own writes** — a :class:`~repro.tensorstore.store.WritePlan` that
+  archives a chunk *invalidates* its key and marks it **pending**: until
+  the client's next clean flush the key refuses ``put``s, so a read
+  between archive and flush re-fetches the still-visible old bytes
+  every time (FDB rule 3: archive-without-flush is not readable) and
+  never pins them past the barrier.  ``FDB.flush`` publishes the
+  pending set on its clean path.
+* **stale puts** — ``lookup`` hands out a per-key version *token*;
+  ``put`` is a no-op when the key was invalidated after the token was
+  issued.  This closes the fetch → concurrent overwrite → late-put race
+  without holding the cache lock across I/O.
+* **cross-client overwrites** under an unchanged layout are *not*
+  observed (same documented staleness window as the field store's
+  metadata cache); generation-bumping operations (``reshard``,
+  ``on_mismatch="retain"``) invalidate naturally via new keys, and
+  ``FDB.wipe`` drops every entry whose scope matches the wiped dataset.
+
+The cache is bytes- **and** entry-bounded (strict LRU on lookup-hit and
+put), stores non-writeable copies (readers copy on scatter, so a cached
+chunk can never be mutated through a returned window), and counts
+``cache.hits`` / ``cache.misses`` / ``cache.evicted_bytes`` into the
+client's :class:`~repro.obs.metrics.MetricsRegistry`.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from typing import Dict, Optional, Set, Tuple
+
+import numpy as np
+
+#: cache key: (array scope — sorted base-identifier items, layout
+#: generation, chunk grid index)
+CacheKey = Tuple[Tuple[Tuple[str, str], ...], int, Tuple[int, ...]]
+
+
+class ChunkCache:
+    """Bytes- and entry-bounded LRU of decoded chunks.
+
+    Thread-safe; the lock is held only for dict surgery (never across
+    I/O or decode).  ``metrics`` is a
+    :class:`~repro.obs.metrics.MetricsRegistry` (optional — omitting it
+    keeps the cache fully functional with local stats only).
+    """
+
+    def __init__(self, max_bytes: int, max_entries: int = 1024,
+                 metrics=None) -> None:
+        if max_bytes <= 0:
+            raise ValueError("ChunkCache needs max_bytes > 0; gate "
+                             "construction on the config instead")
+        self.max_bytes = int(max_bytes)
+        self.max_entries = int(max_entries)
+        self._data: "OrderedDict[CacheKey, np.ndarray]" = OrderedDict()
+        self._nbytes = 0
+        #: per-key invalidation counter — lookup tokens; persists across
+        #: eviction so a late put after an invalidate is always rejected
+        self._versions: Dict[CacheKey, int] = {}
+        #: keys archived-but-unflushed by this client (FDB rule 3):
+        #: refuse puts until the next clean flush publishes them
+        self._pending: Set[CacheKey] = set()
+        self._lock = threading.Lock()
+        self._metrics = metrics
+        self.hits = 0
+        self.misses = 0
+        self.evicted_bytes = 0
+
+    @staticmethod
+    def scope(base: Dict[str, str]) -> Tuple[Tuple[str, str], ...]:
+        """Canonical scope component of a key for one array's ``base``."""
+        return tuple(sorted(base.items()))
+
+    # -- read side -----------------------------------------------------------
+    def lookup(self, key: CacheKey):
+        """``(chunk_or_None, token)``; pass the token back to :meth:`put`."""
+        with self._lock:
+            chunk = self._data.get(key)
+            if chunk is not None:
+                self._data.move_to_end(key)
+                self.hits += 1
+            else:
+                self.misses += 1
+            token = self._versions.get(key, 0)
+        if self._metrics is not None:
+            name = "cache.hits" if chunk is not None else "cache.misses"
+            self._metrics.counter(name).inc()
+        return chunk, token
+
+    def put(self, key: CacheKey, chunk: np.ndarray, token: int) -> bool:
+        """Insert a decoded chunk fetched under ``token``.  Rejected (and
+        returns False) when the key is pending this client's flush or was
+        invalidated after the token was issued — the fetched bytes may
+        predate an overwrite."""
+        value = np.ascontiguousarray(chunk)
+        if value.nbytes > self.max_bytes:
+            return False
+        if value is chunk or value.base is not None:
+            value = value.copy()
+        value.setflags(write=False)
+        evicted = 0
+        with self._lock:
+            if key in self._pending or self._versions.get(key, 0) != token:
+                return False
+            old = self._data.pop(key, None)
+            if old is not None:
+                self._nbytes -= old.nbytes
+            self._data[key] = value
+            self._nbytes += value.nbytes
+            while self._data and (self._nbytes > self.max_bytes
+                                  or len(self._data) > self.max_entries):
+                _k, victim = self._data.popitem(last=False)
+                self._nbytes -= victim.nbytes
+                evicted += victim.nbytes
+        if evicted:
+            self.evicted_bytes += evicted
+            if self._metrics is not None:
+                self._metrics.counter("cache.evicted_bytes").inc(evicted)
+        return True
+
+    # -- write-side coherence ------------------------------------------------
+    def invalidate(self, key: CacheKey) -> None:
+        """An overwrite of ``key`` was archived (not yet flushed): drop
+        the entry, fence stale puts, and pend the key until the client's
+        next clean flush."""
+        with self._lock:
+            old = self._data.pop(key, None)
+            if old is not None:
+                self._nbytes -= old.nbytes
+            self._versions[key] = self._versions.get(key, 0) + 1
+            self._pending.add(key)
+
+    def publish_pending(self) -> None:
+        """The client's flush barrier committed: pending keys may be
+        cached again (their next fetch sees the new bytes)."""
+        with self._lock:
+            self._pending.clear()
+
+    def clear(self, match: Optional[Dict[str, str]] = None) -> None:
+        """Drop every entry (``match=None``) or every entry whose scope
+        carries all of ``match``'s key/value pairs — the ``FDB.wipe``
+        hook (wipes are dataset-granular, e.g. ``{"store":…,"array":…}``)."""
+        with self._lock:
+            if match is None:
+                self._data.clear()
+                self._nbytes = 0
+                self._pending.clear()
+                return
+            want = set(match.items())
+            for key in [k for k in self._data
+                        if want <= set(k[0])]:
+                self._nbytes -= self._data.pop(key).nbytes
+            self._pending -= {k for k in self._pending if want <= set(k[0])}
+
+    # -- introspection -------------------------------------------------------
+    @property
+    def nbytes(self) -> int:
+        return self._nbytes
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        with self._lock:
+            return key in self._data
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def stats(self) -> Dict[str, object]:
+        with self._lock:
+            return {"entries": len(self._data), "nbytes": self._nbytes,
+                    "hits": self.hits, "misses": self.misses,
+                    "hit_rate": self.hit_rate,
+                    "evicted_bytes": self.evicted_bytes,
+                    "pending": len(self._pending)}
+
+
+__all__ = ["CacheKey", "ChunkCache"]

@@ -159,6 +159,18 @@ class ChunkGrid:
                 stop = start + (count - 1) * step + 1 if count else start
                 sel.append(slice(start, stop, step))
             else:
+                if (isinstance(k, (list, tuple, set, frozenset))
+                        or getattr(k, "ndim", 0) != 0):
+                    # integer-array / boolean fancy indexing — not a
+                    # contiguous chunk selection, so the plan machinery
+                    # (range coalescing, chunk-range leases) cannot
+                    # express it; fail with the supported forms named
+                    raise TypeError(
+                        f"unsupported selection {k!r} on axis {axis}: "
+                        "tensorstore selections are integers, slices "
+                        "(strided, and negative-step on the read/write "
+                        "paths), or tuples thereof — integer-array and "
+                        "boolean (fancy) indexing are not supported")
                 i = int(k)
                 if i < 0:
                     i += size

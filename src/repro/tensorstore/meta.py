@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Tuple
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -28,6 +28,11 @@ from .grid import ChunkGrid
 
 #: reserved element-key value for the metadata object
 META_CHUNK_KEY = "meta"
+
+#: reserved *array name* for a dataset tree's consolidated-metadata
+#: catalogue (the ``.zmetadata`` analogue) — its own (store, array)
+#: dataset, so wiping a real field never takes the tree index with it
+TREE_ARRAY_KEY = ".tree"
 
 #: v1: unprefixed chunk keys; v2 adds generation-prefixed chunk keys
 FORMAT_VERSION = 2
@@ -95,6 +100,100 @@ class ArrayMeta:
         return ArrayMeta(shape=tuple(d["shape"]), dtype=d["dtype"],
                          chunks=tuple(d["chunks"]), codec=d.get("codec", "raw"),
                          generation=d.get("generation", 0))
+
+
+class TreeCatalogue:
+    """Zarr-style *consolidated metadata* for one dataset tree.
+
+    One catalogue object holds every member array's :class:`ArrayMeta`,
+    so opening a whole tree (a ``ChunkedFieldStore`` with N fields) costs
+    **one** fetch instead of one metadata round-trip per array.  It lives
+    under the reserved member name :data:`TREE_ARRAY_KEY` — its own
+    ``(store, array)`` dataset, so wiping a field's dataset never
+    destroys the index.
+
+    Writers keep it fresh: :meth:`~.store.TensorStore.create` and the
+    reshard metadata flip call :meth:`record` through the same client (or
+    session) that archived the per-array metadata, so the consolidated
+    copy rides the identical commit barrier.  Readers treat it as a hint
+    with a per-array fallback — a tree written by older code (or a
+    concurrently re-created array) just misses and falls back to the
+    authoritative per-array ``meta`` object.
+    """
+
+    VERSION = 1
+
+    def __init__(self, fdb, base: Dict[str, str], member_dim: str = "array",
+                 chunk_dim: Optional[str] = None) -> None:
+        self.fdb = fdb
+        #: every schema dim except the member (array) and chunk dims
+        self.base = {str(k): str(v) for k, v in base.items()
+                     if k != member_dim}
+        self.member_dim = member_dim
+        self.chunk_dim = chunk_dim or fdb.schema.element_dims[-1]
+        self._arrays: Dict[str, ArrayMeta] = {}
+        self.loaded = False
+
+    def _ident(self) -> Dict[str, str]:
+        return {**self.base, self.member_dim: TREE_ARRAY_KEY,
+                self.chunk_dim: META_CHUNK_KEY}
+
+    def _to_bytes(self) -> bytes:
+        arrays = {name: json.loads(meta.to_bytes().decode())
+                  for name, meta in sorted(self._arrays.items())}
+        return json.dumps({"version": self.VERSION, "arrays": arrays},
+                          separators=(",", ":")).encode()
+
+    # -- read side -----------------------------------------------------------
+    def load(self) -> bool:
+        """Fetch the consolidated object (one retrieve).  Returns False —
+        leaving the mirror empty — when it is absent or unparseable, which
+        callers treat as "fall back to per-array fetches"."""
+        self._arrays.clear()
+        self.loaded = True
+        try:
+            handle = self.fdb.retrieve(self._ident())
+            if handle.length() == 0:
+                return False
+            raw = handle.read()
+        except (KeyError, FileNotFoundError):
+            return False
+        try:
+            d = json.loads(raw.decode())
+            if d.get("version", 0) > self.VERSION:
+                return False
+            self._arrays = {
+                name: ArrayMeta.from_bytes(
+                    json.dumps(md, separators=(",", ":")).encode())
+                for name, md in d["arrays"].items()}
+        except (ValueError, KeyError, TypeError):
+            self._arrays.clear()
+            return False
+        return True
+
+    def get(self, name: str) -> Optional[ArrayMeta]:
+        """The mirrored metadata for member ``name`` (no I/O), or None."""
+        return self._arrays.get(name)
+
+    def names(self) -> List[str]:
+        return sorted(self._arrays)
+
+    # -- write side ----------------------------------------------------------
+    def record(self, name: str, meta: ArrayMeta, client=None) -> None:
+        """A member's metadata was (re)archived: mirror it and re-archive
+        the consolidated object through ``client`` (a session or the fdb),
+        so it rides the caller's commit barrier.  An unloaded mirror loads
+        first — otherwise a fresh client's first create would clobber the
+        members earlier clients recorded."""
+        if not self.loaded:
+            self.load()
+        self._arrays[name] = meta
+        (client or self.fdb).archive(self._ident(), self._to_bytes())
+
+    def forget(self, name: str, client=None) -> None:
+        """A member was wiped: drop it from the consolidated object."""
+        if self._arrays.pop(name, None) is not None:
+            (client or self.fdb).archive(self._ident(), self._to_bytes())
 
 
 def auto_chunks(shape: Tuple[int, ...], dtype,

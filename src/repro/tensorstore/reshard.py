@@ -242,9 +242,13 @@ class ReshardPlan:
             self.read_ops_executed = read_ops
             self.write_ops_executed = write_ops
             # the flip: one transactional metadata replace (rule 5) moves
-            # readers onto the new generation's chunk keys
+            # readers onto the new generation's chunk keys — a chunk
+            # cache needs no invalidation here (new generation, new keys)
             fdb.archive(store._ident(META_CHUNK_KEY),
                         self.dest_meta.to_bytes())
+            if store.tree is not None:
+                store.tree.record(store.base[store.tree.member_dim],
+                                  self.dest_meta, client=fdb)
             if flush:
                 fdb.flush()
         arr.meta = self.dest_meta

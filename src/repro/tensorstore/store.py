@@ -73,10 +73,11 @@ import numpy as np
 from repro.core import (FDB, FieldLocation, Identifier, LeaseConflictError,
                         MultiHandle, StaleLeaseError, WriterSession,
                         deadline_scope, group_mergeable)
+from .cache import ChunkCache
 from .codec import Codec, get_codec
 from .executor import ChunkExecutor
 from .grid import ChunkGrid, merge_id_ranges
-from .meta import META_CHUNK_KEY, ArrayMeta, auto_chunks
+from .meta import META_CHUNK_KEY, ArrayMeta, TreeCatalogue, auto_chunks
 
 Index = Tuple[int, ...]
 
@@ -119,7 +120,8 @@ class TensorStore:
     def __init__(self, fdb: Optional[FDB], base: Mapping[str, object],
                  chunk_dim: Optional[str] = None,
                  executor: Optional[ChunkExecutor] = None,
-                 session: Optional[WriterSession] = None):
+                 session: Optional[WriterSession] = None,
+                 tree: Optional[TreeCatalogue] = None):
         if session is not None:
             if fdb is None:
                 fdb = session.fdb
@@ -142,6 +144,11 @@ class TensorStore:
                            f"{missing} of schema {schema.name!r}")
         #: explicit executor, or None to track the FDB client's own
         self._executor = executor
+        #: consolidated-metadata catalogue for this array's dataset tree
+        #: (owned by the facade, e.g. ``ChunkedFieldStore``); when set,
+        #: metadata flips (create, reshard) mirror into it so whole-tree
+        #: opens stay one fetch
+        self.tree = tree
 
     @property
     def executor(self) -> ChunkExecutor:
@@ -221,6 +228,9 @@ class TensorStore:
                     f"different layout, or pass on_mismatch='retain' to "
                     f"version the old chunks out")
         self.client.archive(self._ident(META_CHUNK_KEY), meta.to_bytes())
+        if self.tree is not None:
+            self.tree.record(self.base[self.tree.member_dim], meta,
+                             client=self.client)
         return ChunkedArray(self, meta)
 
     def open(self) -> "ChunkedArray":
@@ -555,6 +565,13 @@ class WritePlan:
         array = self.array
         #: (chunk_idx, within_chunk_slices, value_slices, fully_covered)
         self.tasks = list(array.grid.write_plan(sel))
+        #: the client's decoded-chunk cache: every archived chunk is
+        #: invalidated (and pended until the flush barrier), so a reader
+        #: of this client can never be served bytes this write superseded
+        self._cache = store.fdb.chunk_cache
+        if self._cache is not None:
+            self._cache_scope = ChunkCache.scope(store.base)
+            self._cache_gen = array.meta.generation
         #: staging window: most chunks encoded/held at once (executor's
         #: in-flight bound, resolved at plan time)
         self.window = max(1, store.executor.max_in_flight)
@@ -780,6 +797,13 @@ class WritePlan:
                 self.session.mark_dirty_chunks(
                     self._lease_ident, self._lease_resource,
                     [lin[k] for k in ks])
+            if self._cache is not None:
+                # archived ≠ visible (rule 3): drop the superseded entry
+                # and pend the key until this client's flush publishes it
+                for k in ks:
+                    self._cache.invalidate(
+                        (self._cache_scope, self._cache_gen,
+                         tuple(self.tasks[stage[k]][0])))
             return batch_locs
 
         # the fencing gate runs per stage, right before its archives: a
@@ -834,6 +858,7 @@ class ReadPlan:
         #: selections are served from a positive-step (ascending) I/O plan
         self.flips = tuple(flips)
         self.tasks = list(array.grid.intersecting(sel))
+        self._bind_cache(array.store.fdb.chunk_cache)
         with self.tracer.span("plan.resolve", kind="read",
                               chunks=len(self.tasks)):
             self._resolve(fill_missing)
@@ -856,21 +881,74 @@ class ReadPlan:
              tuple(slice(0, n, 1) for n in array.grid.chunk_shape(idx)),
              None)
             for idx in indices]
+        # RMW fetches bypass the chunk cache entirely (no lookup, no
+        # populate): the fetched bytes are about to be patched and
+        # re-archived, so caching them would pin a doomed version
+        plan._bind_cache(None)
         with plan.tracer.span("plan.resolve", kind="chunks",
                               chunks=len(plan.tasks)):
             plan._resolve(fill_missing)
         return plan
 
+    def _bind_cache(self, cache: Optional[ChunkCache]) -> None:
+        """Attach the client's decoded-chunk cache (or None).  Hits are
+        collected during :meth:`_resolve` — cached chunks never resolve a
+        handle, so they are invisible to :meth:`read_ops` and issue no
+        backend ops at all."""
+        self._cache = cache
+        #: position → decoded chunk served from the cache
+        self._cached: dict = {}
+        #: position → cache version token for a post-fetch populate
+        self._tokens: dict = {}
+        if cache is not None:
+            self._cache_scope = ChunkCache.scope(self.array.store.base)
+            self._cache_gen = self.array.meta.generation
+
+    @property
+    def cache_hits(self) -> int:
+        """Chunks of this plan served from the decoded-chunk cache."""
+        return len(self._cached)
+
+    def _consult_cache(self) -> None:
+        if self._cache is None or not self.tasks:
+            return
+        with self.tracer.span("cache.lookup", chunks=len(self.tasks)) as sp:
+            for pos, task in enumerate(self.tasks):
+                key = (self._cache_scope, self._cache_gen, tuple(task[0]))
+                chunk, token = self._cache.lookup(key)
+                if chunk is not None:
+                    self._cached[pos] = chunk
+                else:
+                    self._tokens[pos] = token
+            if sp is not None:
+                sp.attrs["hits"] = len(self._cached)
+                sp.attrs["misses"] = len(self._tokens)
+
+    def _populate_cache(self, pos: int, chunk: np.ndarray) -> None:
+        """Offer a freshly decoded chunk to the cache (no-op when the key
+        was invalidated or pended since :meth:`_consult_cache` issued the
+        token — a concurrent overwrite wins)."""
+        token = self._tokens.get(pos) if self._cache is not None else None
+        if token is not None:
+            self._cache.put(
+                (self._cache_scope, self._cache_gen,
+                 tuple(self.tasks[pos][0])), chunk, token)
+
     def _resolve(self, fill_missing: bool) -> None:
         """Resolve every task's chunk to its backend handle and group
         coalescible handles into I/O batches (no data I/O)."""
         store = self.array.store
+        # cache consult FIRST: a hit never resolves a handle, so cached
+        # chunks are invisible to read_ops() and reach no backend at all
+        self._consult_cache()
         present: List[int] = []
         handles = []
         #: positions of chunks never written — they read as zeros (the same
         #: fill-value convention the write path patches onto), no I/O
         self.missing: List[int] = []
         for pos, (idx, _chunk_sel, _out_sel) in enumerate(self.tasks):
+            if pos in self._cached:
+                continue
             h = store.fdb.retrieve_handle(self.array.chunk_ident(idx))
             if h is None or h.length() == 0:
                 if not fill_missing:
@@ -905,6 +983,8 @@ class ReadPlan:
         for pos in self.missing:
             out[pos] = np.zeros(grid.chunk_shape(self.tasks[pos][0]),
                                 arr.dtype)
+        for pos, cached in self._cached.items():
+            out[pos] = cached.copy()    # cached entries are read-only
 
         def run_batch(positions: List[int], mh: MultiHandle) -> None:
             shapes = [grid.chunk_shape(self.tasks[pos][0])
@@ -914,6 +994,7 @@ class ReadPlan:
                                   codec=codec.name):
                 chunks = codec.decode_batch(parts, shapes, arr.dtype)
             for pos, chunk in zip(positions, chunks):
+                self._populate_cache(pos, chunk)
                 out[pos] = chunk if chunk.flags.writeable else chunk.copy()
 
         arr.store.executor.map_ordered(
@@ -954,6 +1035,9 @@ class ReadPlan:
             out = np.empty(grid.selection_shape(self.sel), arr.dtype)
             for pos in self.missing:
                 out[self.tasks[pos][2]] = 0
+            for pos, cached in self._cached.items():
+                _idx, chunk_sel, out_sel = self.tasks[pos]
+                out[out_sel] = cached[chunk_sel]
 
             def run_batch(positions: List[int], mh: MultiHandle) -> None:
                 # one coalesced read per batch, one batched decode
@@ -968,6 +1052,7 @@ class ReadPlan:
                                       codec=codec.name):
                     chunks = codec.decode_batch(parts, shapes, arr.dtype)
                 for pos, chunk in zip(positions, chunks):
+                    self._populate_cache(pos, chunk)
                     _idx, chunk_sel, out_sel = self.tasks[pos]
                     out[out_sel] = chunk[chunk_sel]
 

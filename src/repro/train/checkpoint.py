@@ -95,14 +95,15 @@ class FDBCheckpointer:
                  n_shards: int = 1, asynchronous: bool = False,
                  compress: bool = False, host: Optional[str] = None,
                  chunked: bool = True, shutdown_timeout: float = 5.0,
-                 tracer=None, faults=None, retry=None):
+                 tracer=None, faults=None, retry=None, meter=None):
         cfg = fdb_config or FDBConfig(backend="daos")
         if cfg.resolved_schema().name != "ckpt":
             import dataclasses
             cfg = dataclasses.replace(cfg, schema=CHECKPOINT_SCHEMA)
-        # tracer/faults/retry flow to the client so workflow forecast
-        # stages can trace + chaos-test sharded checkpoints end to end
-        self.fdb = FDB(cfg, tracer=tracer, faults=faults, retry=retry)
+        # tracer/faults/retry/meter flow to the client so workflow forecast
+        # stages can trace, chaos-test and cost-model sharded checkpoints
+        self.fdb = FDB(cfg, meter=meter, tracer=tracer, faults=faults,
+                       retry=retry)
         self.run = run
         self.n_shards = n_shards
         self.compress = compress

@@ -204,11 +204,17 @@ class NWPCycle:
 
     def __init__(self, config: WorkflowConfig, tracer: Optional[Tracer] = None,
                  faults=None, retry=None, crash_writer: Optional[int] = None,
-                 crash_faults=None):
+                 crash_faults=None, meter=None):
         self.cfg = config
         self.tracer = tracer if tracer is not None else Tracer(enabled=True)
         self.faults = faults
         self.retry = retry
+        #: optional engine-op meter shared by every client the cycle opens
+        #: (one meter ⇒ one simulated cluster); when set, each stage's op
+        #: trace window lands in :attr:`stage_ops` for the bench layer to
+        #: feed through the cluster cost model
+        self.meter = meter
+        self.stage_ops: Dict[str, list] = {}
         self.crash_writer = crash_writer
         self.crash_faults = crash_faults
         self.report = CycleReport(backend=config.backend, store=config.store,
@@ -224,15 +230,15 @@ class NWPCycle:
         self.producer = ChunkedFieldStore(
             store=cfg.store, fdb_config=cfg.fdb_config(), codec=cfg.codec,
             chunks=cfg.chunks, tracer=self.tracer, faults=self.faults,
-            retry=self.retry)
+            retry=self.retry, meter=self.meter)
         self.consumer = ChunkedFieldStore(
             store=cfg.store, fdb_config=cfg.fdb_config(), codec=cfg.codec,
             chunks=cfg.chunks, tracer=self.tracer, faults=self.faults,
-            retry=self.retry)
+            retry=self.retry, meter=self.meter)
         self.ckpt = FDBCheckpointer(
             run=f"{cfg.store}-fc", fdb_config=cfg.fdb_config(),
             n_shards=cfg.n_shards, chunked=True, tracer=self.tracer,
-            faults=self.faults, retry=self.retry)
+            faults=self.faults, retry=self.retry, meter=self.meter)
         if self.crash_writer is not None:
             # the doomed writer gets its own client: a crashed *process*
             # takes its whole connection with it, and its unflushed state
@@ -240,7 +246,8 @@ class NWPCycle:
             self._crash_store = ChunkedFieldStore(
                 store=cfg.store, fdb_config=cfg.fdb_config(),
                 codec=cfg.codec, chunks=cfg.chunks, tracer=self.tracer,
-                faults=self.crash_faults, retry=self.retry)
+                faults=self.crash_faults, retry=self.retry,
+                meter=self.meter)
 
     def _close_clients(self) -> None:
         for client in ("producer", "consumer", "ckpt"):
@@ -256,6 +263,16 @@ class NWPCycle:
     # -- stages --------------------------------------------------------------
     def _stage(self, name: str) -> StageStats:
         return self.report.stages.setdefault(name, StageStats())
+
+    def _op_mark(self) -> int:
+        """Start of a stage's engine-op window (no-op without a meter)."""
+        return len(self.meter.snapshot()) if self.meter is not None else 0
+
+    def _record_ops(self, stage: str, mark: int) -> None:
+        """Close a stage's op window: the slice of the shared meter's
+        trace this stage issued, the cost model's per-stage input."""
+        if self.meter is not None:
+            self.stage_ops[stage] = self.meter.snapshot()[mark:]
 
     def _assimilate_one(self, i: int) -> Dict[str, object]:
         cfg = self.cfg
@@ -317,6 +334,7 @@ class NWPCycle:
         metrics = self.tracer.metrics
         self.producer.put_field("analysis", background(cfg))
         self.producer.commit()
+        op0 = self._op_mark()
         w0, t0 = _lease_wait_totals(metrics), time.perf_counter()
         with self.tracer.span("workflow.assimilation",
                               writers=cfg.n_writers):
@@ -329,6 +347,7 @@ class NWPCycle:
                 self.report.crashed_writer = i
                 self._redrive(i)
         stats.wall_s = time.perf_counter() - t0
+        self._record_ops("assimilation", op0)
         stats.tasks = len(results) + len(crashed)
         stats.nbytes = sum(r["nbytes"] for r in results) + sum(
             self._truth[lo:hi].nbytes
@@ -340,6 +359,7 @@ class NWPCycle:
     def _forecast(self) -> None:
         cfg = self.cfg
         stats = self._stage("forecast")
+        op0 = self._op_mark()
         t0 = time.perf_counter()
         with self.tracer.span("workflow.forecast", leads=cfg.leads):
             state = self.consumer.read_window(
@@ -355,6 +375,7 @@ class NWPCycle:
             self.report.ckpt_roundtrip = bool(
                 np.array_equal(np.asarray(restored["state"]), state))
         stats.wall_s = time.perf_counter() - t0
+        self._record_ops("forecast", op0)
         stats.tasks = cfg.leads
 
     def _produce_one(self, j: int) -> Dict[str, object]:
@@ -385,6 +406,7 @@ class NWPCycle:
         stats = self._stage("products")
         for name in cfg.field_names():    # warm the open cache serially so
             self.consumer.open_field(name)  # pool tasks share one metadata
+        op0 = self._op_mark()
         t0 = time.perf_counter()
         with self.tracer.span("workflow.products", readers=cfg.n_readers):
             with ChunkExecutor(
@@ -393,6 +415,7 @@ class NWPCycle:
                     self._produce_one, range(cfg.n_readers),
                     describe=lambda j: f"reader{j}")
         stats.wall_s = time.perf_counter() - t0
+        self._record_ops("products", op0)
         stats.tasks = cfg.n_readers
         stats.nbytes = sum(r["nbytes"] for r in results)
         combined = hashlib.sha256(

@@ -1,0 +1,442 @@
+"""Decoded-chunk cache (PR 10): correctness of the read-side serving
+layer — LRU bounds, generation-aware invalidation, coherence with the
+FDB commit barrier, byte-identity with the cache off, consolidated
+metadata opens, and the fancy-indexing rejection contract.
+
+The coherence model under test: a cache entry is (scope, generation,
+chunk index)-keyed decoded bytes.  ``WritePlan`` *invalidates* a chunk's
+key on archive and marks it *pending* — lookups miss (re-fetching
+whatever the backend serves, exactly like a cache-less client) and puts
+are refused until this client's ``flush`` publishes the pending set.  So
+cache-on reads are byte-identical to cache-off reads at every point in
+the archive → flush lifecycle, whatever the simulated backend's
+unflushed-read behaviour, which is what the equality tests pin down.
+"""
+import numpy as np
+import pytest
+
+from repro.core import FDB, FDBConfig
+from repro.tensorstore import ChunkCache, TensorStore, TreeCatalogue
+from repro.tensorstore.cache import ChunkCache as _CC
+
+
+def _field(shape=(64, 64), seed=0):
+    return np.random.default_rng(seed).normal(size=shape).astype(np.float32)
+
+
+# -- the cache data structure itself ----------------------------------------
+
+class TestChunkCacheUnit:
+    def _key(self, i, gen=0):
+        return ((("store", "s"),), gen, (i, 0))
+
+    def test_put_lookup_roundtrip(self):
+        c = ChunkCache(1 << 20)
+        chunk = np.arange(16, dtype=np.float32).reshape(4, 4)
+        _, token = c.lookup(self._key(0))
+        c.put(self._key(0), chunk, token)
+        got, _ = c.lookup(self._key(0))
+        np.testing.assert_array_equal(got, chunk)
+        assert c.stats()["hits"] == 1 and c.stats()["misses"] == 1
+
+    def test_cached_chunks_are_immutable_copies(self):
+        c = ChunkCache(1 << 20)
+        chunk = np.ones((4, 4), np.float32)
+        _, token = c.lookup(self._key(0))
+        c.put(self._key(0), chunk, token)
+        chunk[:] = -1.0                       # mutate the caller's array
+        got, _ = c.lookup(self._key(0))
+        np.testing.assert_array_equal(got, np.ones((4, 4), np.float32))
+        with pytest.raises(ValueError):
+            got[0, 0] = 5.0                   # cache entries are read-only
+
+    def test_byte_bound_evicts_lru(self):
+        one_chunk = 4 * 4 * 4                 # float32 (4,4)
+        c = ChunkCache(max_bytes=3 * one_chunk)
+        for i in range(4):
+            _, token = c.lookup(self._key(i))
+            c.put(self._key(i), np.full((4, 4), i, np.float32), token)
+        assert len(c) == 3 and c.nbytes <= 3 * one_chunk
+        assert self._key(0) not in c          # oldest went first
+        assert c.stats()["evicted_bytes"] == one_chunk
+
+    def test_entry_bound(self):
+        c = ChunkCache(1 << 20, max_entries=2)
+        for i in range(5):
+            _, token = c.lookup(self._key(i))
+            c.put(self._key(i), np.ones((2, 2), np.float32), token)
+        assert len(c) == 2
+
+    def test_lookup_refreshes_lru_order(self):
+        one = 4 * 4 * 4
+        c = ChunkCache(max_bytes=2 * one)
+        for i in range(2):
+            _, token = c.lookup(self._key(i))
+            c.put(self._key(i), np.full((4, 4), i, np.float32), token)
+        c.lookup(self._key(0))                # 0 is now most recent
+        _, token = c.lookup(self._key(2))
+        c.put(self._key(2), np.full((4, 4), 2, np.float32), token)
+        assert self._key(0) in c and self._key(1) not in c
+
+    def test_oversized_value_rejected(self):
+        c = ChunkCache(max_bytes=8)
+        _, token = c.lookup(self._key(0))
+        c.put(self._key(0), np.ones((64, 64), np.float32), token)
+        assert len(c) == 0
+
+    def test_invalidate_pends_until_publish(self):
+        c = ChunkCache(1 << 20)
+        _, token = c.lookup(self._key(0))
+        c.put(self._key(0), np.ones((4, 4), np.float32), token)
+        c.invalidate(self._key(0))
+        got, token = c.lookup(self._key(0))
+        assert got is None
+        c.put(self._key(0), np.zeros((4, 4), np.float32), token)
+        assert self._key(0) not in c          # pending: put refused
+        c.publish_pending()
+        got, token = c.lookup(self._key(0))
+        assert got is None                    # still absent, but cacheable
+        c.put(self._key(0), np.zeros((4, 4), np.float32), token)
+        assert self._key(0) in c
+
+    def test_stale_token_put_refused(self):
+        """The fetch-old → invalidate → publish → stale-put race: a put
+        carrying a token from before an invalidation must be dropped."""
+        c = ChunkCache(1 << 20)
+        _, stale_token = c.lookup(self._key(0))
+        c.invalidate(self._key(0))            # bumps the key's version
+        c.publish_pending()
+        c.put(self._key(0), np.ones((4, 4), np.float32), stale_token)
+        assert self._key(0) not in c
+
+    def test_clear_by_scope_superset_match(self):
+        c = ChunkCache(1 << 20)
+        for scope in (("store", "a"), ("store", "b")):
+            key = ((scope,), 0, (0, 0))
+            _, token = c.lookup(key)
+            c.put(key, np.ones((2, 2), np.float32), token)
+        c.clear({"store": "a"})
+        assert ((("store", "a"),), 0, (0, 0)) not in c
+        assert ((("store", "b"),), 0, (0, 0)) in c
+
+    def test_zero_budget_rejected(self):
+        with pytest.raises(ValueError):
+            ChunkCache(0)
+        assert _CC is ChunkCache
+
+
+# -- cache-on vs cache-off byte identity, all four backends -----------------
+
+def _run_sequence(backend, root, cache_bytes):
+    """One archive → read → unflushed write → read → flush → read →
+    reshard → read lifecycle; returns every probe read's bytes."""
+    x = _field()
+    fdb = FDB(FDBConfig(backend=backend, schema="tensor", root=root,
+                        chunk_cache_bytes=cache_bytes))
+    ts = TensorStore(fdb, {"store": "s", "array": "a", "writer": "w"})
+    arr = ts.save(x, chunks=(16, 16))
+    probes = [arr[:, :].copy(), arr[:, :].copy()]   # cold + warm
+    arr.write_at((slice(0, 16), slice(0, 16)),
+                 -np.ones((16, 16), np.float32), flush=False)
+    probes.append(arr[:, :].copy())                  # between archive/flush
+    fdb.flush()
+    probes.append(arr[:, :].copy())                  # post-barrier
+    arr.reshard((32, 32))
+    probes.append(arr[:, :].copy())                  # post-re-layout
+    probes.append(arr[::2, ::4].copy())              # strided through cache
+    fdb.close()
+    return probes
+
+
+def test_cache_on_equals_cache_off(backend, tmp_path):
+    """The coherence contract: with the decoded-chunk cache on, every
+    read returns byte-identically what a cache-less client reads, at
+    every point of the archive → flush → reshard lifecycle."""
+    off = _run_sequence(backend, str(tmp_path / "off"), 0)
+    from repro.core import reset_engines
+    reset_engines()                 # fresh simulated cluster for run two
+    on = _run_sequence(backend, str(tmp_path / "on"), 1 << 20)
+    for i, (a, b) in enumerate(zip(off, on)):
+        np.testing.assert_array_equal(a, b, err_msg=f"probe {i}")
+
+
+def test_cached_reread_hits_no_backend(make_fdb):
+    """The tentpole's headline: a fully cached re-read issues ZERO
+    backend ops — no catalogue lookups, no store reads, no meter
+    traffic — and reports its hits on the plan."""
+    fdb = make_fdb("daos", chunk_cache_bytes=1 << 20)
+    ts = TensorStore(fdb, {"store": "s", "array": "a", "writer": "w"})
+    x = _field()
+    arr = ts.save(x, chunks=(16, 16))
+    np.testing.assert_array_equal(arr[:, :], x)      # warm the cache
+    m0 = len(fdb.meter.snapshot())
+    plan = arr.read_plan((slice(None), slice(None)))
+    assert plan.read_ops() == 0
+    assert plan.cache_hits == 16
+    np.testing.assert_array_equal(plan.execute(), x)
+    assert len(fdb.meter.snapshot()) == m0
+    snap = fdb.metrics()
+    assert snap["cache.hits"]["value"] >= 16
+
+
+def test_read_your_writes_within_session(make_fdb):
+    """A writer client's own reads see its committed writes through the
+    cache: write → flush → read returns the new bytes from a re-fetch,
+    and only then do they become cacheable."""
+    fdb = make_fdb("rados", chunk_cache_bytes=1 << 20)
+    ts = TensorStore(fdb, {"store": "s", "array": "a", "writer": "w"})
+    x = _field()
+    arr = ts.save(x, chunks=(16, 16))
+    np.testing.assert_array_equal(arr[:, :], x)
+    y = x.copy()
+    y[16:32, 0:16] = 7.0
+    arr[16:32, 0:16] = np.full((16, 16), 7.0, np.float32)  # commits
+    np.testing.assert_array_equal(arr[:, :], y)
+    # the rewritten chunk re-caches after the barrier: reread = all hits
+    plan = arr.read_plan((slice(16, 32), slice(0, 16)))
+    plan.execute()
+    plan2 = arr.read_plan((slice(16, 32), slice(0, 16)))
+    assert plan2.cache_hits == 1
+    np.testing.assert_array_equal(plan2.execute(), y[16:32, 0:16])
+
+
+def test_reshard_generation_invalidates(make_fdb):
+    """A re-layout bumps the generation, so old cached chunks can never
+    serve the new grid: post-reshard reads are correct and the new
+    generation's chunks cache independently."""
+    fdb = make_fdb("posix", chunk_cache_bytes=1 << 20)
+    ts = TensorStore(fdb, {"store": "s", "array": "a", "writer": "w"})
+    x = _field()
+    arr = ts.save(x, chunks=(16, 16))
+    np.testing.assert_array_equal(arr[:, :], x)      # gen-0 fully cached
+    arr.reshard((32, 32))
+    assert arr.meta.generation == 1
+    np.testing.assert_array_equal(arr[:, :], x)
+    plan = arr.read_plan((slice(None), slice(None)))
+    assert plan.cache_hits == plan.n_chunks == 4     # new-gen entries
+    np.testing.assert_array_equal(plan.execute(), x)
+
+
+def test_cross_client_invalidation_via_flush(make_fdb):
+    """Two clients on one deployment share the per-client caches only
+    through the storage: client B's cached chunk goes stale when client
+    A rewrites and flushes, and B sees the new bytes after re-opening
+    its plan on the bumped metadata (same generation, so B must not
+    serve its stale entry blindly — the write went through A, so B's
+    cache was never invalidated: this pins the documented limitation
+    that B's *same-generation* windows re-serve cached bytes until its
+    cache ages them out, exactly like any client-side cache)."""
+    fdb_a = make_fdb("daos")
+    fdb_b = make_fdb("daos", chunk_cache_bytes=1 << 20)
+    base = {"store": "s", "array": "a", "writer": "w"}
+    x = _field()
+    arr_a = TensorStore(fdb_a, base).save(x, chunks=(16, 16))
+    arr_b = TensorStore(fdb_b, base).open()
+    np.testing.assert_array_equal(arr_b[:, :], x)
+    y = x.copy()
+    y[0:16, 0:16] = -3.0
+    arr_a[0:16, 0:16] = np.full((16, 16), -3.0, np.float32)
+    # B's cache is a *client-side* cache: its warm window still serves
+    # the old bytes (documented), while uncached windows see the new
+    np.testing.assert_array_equal(arr_b[0:16, 0:16], x[0:16, 0:16])
+    fdb_b.chunk_cache.clear({})          # drop everything → re-fetch
+    np.testing.assert_array_equal(arr_b[:, :], y)
+
+
+def test_wipe_clears_cache(make_fdb):
+    fdb = make_fdb("s3", chunk_cache_bytes=1 << 20)
+    ts = TensorStore(fdb, {"store": "s", "array": "a", "writer": "w"})
+    x = _field()
+    arr = ts.save(x, chunks=(16, 16))
+    np.testing.assert_array_equal(arr[:, :], x)
+    assert len(fdb.chunk_cache) > 0
+    fdb.wipe({"store": "s", "array": "a"})
+    assert len(fdb.chunk_cache) == 0
+
+
+def test_bounded_memory_under_sweep(make_fdb):
+    """Reading far more data than the budget keeps the cache within its
+    byte bound and counts the evictions."""
+    chunk_bytes = 16 * 16 * 4
+    fdb = make_fdb("daos", chunk_cache_bytes=4 * chunk_bytes)
+    ts = TensorStore(fdb, {"store": "s", "array": "a", "writer": "w"})
+    x = _field((128, 128), seed=5)
+    arr = ts.save(x, chunks=(16, 16))                # 64 chunks
+    np.testing.assert_array_equal(arr[:, :], x)
+    cache = fdb.chunk_cache
+    assert cache.nbytes <= 4 * chunk_bytes
+    assert len(cache) <= 4
+    assert cache.stats()["evicted_bytes"] > 0
+    np.testing.assert_array_equal(arr[:, :], x)      # still correct
+
+
+def test_rmw_bypasses_cache(make_fdb):
+    """Read-modify-write pre-fetches must come from storage, never the
+    cache — a stale decoded chunk under an RMW would resurrect old
+    bytes into a fresh write."""
+    fdb = make_fdb("daos", chunk_cache_bytes=1 << 20)
+    ts = TensorStore(fdb, {"store": "s", "array": "a", "writer": "w"})
+    x = _field()
+    arr = ts.save(x, chunks=(16, 16))
+    np.testing.assert_array_equal(arr[:, :], x)      # cache everything
+    y = x.copy()
+    y[4:12, 4:12] = 9.0                              # partial chunk: RMW
+    arr[4:12, 4:12] = np.full((8, 8), 9.0, np.float32)
+    fdb.chunk_cache.clear({})
+    np.testing.assert_array_equal(arr[:, :], y)
+
+
+def test_cache_off_by_default_at_fdb(make_fdb):
+    fdb = make_fdb("daos")
+    assert fdb.chunk_cache is None
+
+
+# -- consolidated metadata (TreeCatalogue) ----------------------------------
+
+class TestConsolidatedOpen:
+    def _mk_store(self, backend, root, **kw):
+        from repro.data.pipeline import ChunkedFieldStore
+        return ChunkedFieldStore(
+            store="nwp", fdb_config=FDBConfig(backend=backend,
+                                              schema="tensor", root=root),
+            **kw)
+
+    def test_open_tree_single_fetch(self, tmp_path):
+        """Opening an N-array tree costs exactly one catalogue fetch:
+        the op count of ``open_tree`` equals that of a single raw
+        metadata retrieve, independent of how many fields exist."""
+        from repro.core import Meter
+        root = str(tmp_path / "fdb")
+        meter = Meter()
+        prod = self._mk_store("posix", root, meter=meter, cache_bytes=0)
+        fields = {f"f{i}": _field(seed=i) for i in range(5)}
+        for name, values in fields.items():
+            prod.put_field(name, values, chunks=(16, 16))
+        prod.commit()
+        prod.close()
+        cons = self._mk_store("posix", root, meter=meter, cache_bytes=0)
+        m0 = len(meter.snapshot())
+        opened = cons.open_tree()
+        tree_ops = len(meter.snapshot()) - m0
+        assert set(opened) == set(fields)
+        # baseline: ONE raw per-array metadata retrieve on an equally
+        # fresh client — the consolidated open must cost the same
+        fresh = self._mk_store("posix", root, meter=meter, cache_bytes=0)
+        m1 = len(meter.snapshot())
+        fresh._ts("f0").open()
+        single_ops = len(meter.snapshot()) - m1
+        assert tree_ops == single_ops
+        for name, values in fields.items():
+            np.testing.assert_array_equal(opened[name][:, :], values)
+        prod.close(), cons.close(), fresh.close()
+
+    def test_open_field_serves_from_consolidated(self, tmp_path):
+        from repro.core import Meter
+        root = str(tmp_path / "fdb")
+        meter = Meter()
+        prod = self._mk_store("daos", root, meter=meter)
+        prod.put_field("t2m", _field(), chunks=(16, 16))
+        prod.put_field("u10", _field(seed=2), chunks=(16, 16))
+        prod.commit()
+        cons = self._mk_store("daos", root, meter=meter)
+        cons.open_field("t2m")                       # loads the tree once
+        m0 = len(meter.snapshot())
+        cons.open_field("u10")                       # consolidated hit
+        assert len(meter.snapshot()) == m0           # ZERO further ops
+        prod.close(), cons.close()
+
+    def test_stale_tree_falls_back_per_array(self, tmp_path):
+        """A field the consolidated object does not know (written by a
+        client that bypasses the tree) still opens via the authoritative
+        per-array metadata."""
+        root = str(tmp_path / "fdb")
+        store = self._mk_store("rados", root)
+        store.put_field("known", _field(), chunks=(16, 16))
+        store.commit()
+        rogue = FDB(FDBConfig(backend="rados", schema="tensor", root=root))
+        TensorStore(rogue, {"store": "nwp", "array": "rogue",
+                            "writer": "prod0"}).save(_field(seed=9),
+                                                     chunks=(16, 16))
+        rogue.close()
+        cons = self._mk_store("rados", root)
+        assert "rogue" not in cons.open_tree()
+        arr = cons.open_field("rogue")               # per-array fallback
+        assert arr.shape == (64, 64)
+        store.close(), cons.close()
+
+    def test_reshard_updates_tree(self, tmp_path):
+        root = str(tmp_path / "fdb")
+        prod = self._mk_store("posix", root)
+        prod.put_field("t2m", _field(), chunks=(16, 16))
+        prod.commit()
+        prod.reshard("t2m", (32, 32))
+        cons = self._mk_store("posix", root)
+        arr = cons.open_tree()["t2m"]
+        assert arr.meta.chunks == (32, 32)
+        assert arr.meta.generation == 1
+        np.testing.assert_array_equal(arr[:, :], _field())
+        prod.close(), cons.close()
+
+    def test_wipe_forgets_member_keeps_tree(self, tmp_path):
+        root = str(tmp_path / "fdb")
+        store = self._mk_store("daos", root)
+        store.put_field("a", _field(), chunks=(16, 16))
+        store.put_field("b", _field(seed=1), chunks=(16, 16))
+        store.commit()
+        store.wipe_field("a")
+        cons = self._mk_store("daos", root)
+        assert sorted(cons.open_tree()) == ["b"]
+        store.close(), cons.close()
+
+    def test_catalogue_survives_unrelated_client(self, make_fdb):
+        """record() on a fresh client must merge, not clobber, members
+        recorded by earlier clients (the load-before-first-record
+        rule)."""
+        fdb = make_fdb("daos")
+        base = {"store": "s", "writer": "w"}
+        t1 = TreeCatalogue(fdb, base)
+        TensorStore(fdb, {**base, "array": "one"},
+                    tree=t1).save(_field(), chunks=(16, 16))
+        fdb.flush()
+        t2 = TreeCatalogue(fdb, base)                # unloaded mirror
+        TensorStore(fdb, {**base, "array": "two"},
+                    tree=t2).save(_field(seed=1), chunks=(16, 16))
+        fdb.flush()
+        t3 = TreeCatalogue(fdb, base)
+        assert t3.load() and t3.names() == ["one", "two"]
+
+
+# -- fancy-selection rejection (satellite) ----------------------------------
+
+class TestFancyIndexingRejected:
+    @pytest.fixture
+    def arr(self, make_store):
+        fdb, ts = make_store("daos")
+        return ts.save(_field(), chunks=(16, 16))
+
+    @pytest.mark.parametrize("key", [
+        ([0, 2, 4], slice(None)),
+        (np.array([0, 1]), slice(None)),
+        (slice(None), (1, 2, 3)),
+        (np.ones(64, dtype=bool), slice(None)),
+    ])
+    def test_read_raises_typeerror(self, arr, key):
+        with pytest.raises(TypeError, match="fancy"):
+            arr[key]
+
+    def test_write_raises_typeerror(self, arr):
+        with pytest.raises(TypeError, match="integer-array"):
+            arr[[0, 1], :] = np.zeros((2, 64), np.float32)
+
+    def test_reshard_sel_raises_typeerror(self, arr):
+        with pytest.raises(TypeError, match="not supported"):
+            arr.reshard((8, 8), sel=([0, 1], slice(None)))
+
+    def test_message_names_supported_forms(self, arr):
+        with pytest.raises(TypeError, match="integers, slices"):
+            arr[{1, 2}, :]
+
+    def test_scalar_ndarray_index_still_works(self, arr):
+        """0-d integer arrays quack like ints and stay supported."""
+        x = _field()
+        np.testing.assert_array_equal(arr[np.int64(3), :], x[3, :])
